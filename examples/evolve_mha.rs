@@ -1,0 +1,46 @@
+//! End-to-end driver (the repository's headline experiment): run the full
+//! AVO evolution on multi-head attention — the paper's 7-day / 40-version
+//! run, compressed — and print the Figure 3/5/6 results from the evolved
+//! lineage, validating the final kernel's algorithmic projection against
+//! the PJRT oracle artifacts when available.
+//!
+//!   cargo run --release --example evolve_mha
+//!
+//! The run is deterministic (seed 42) and recorded in EXPERIMENTS.md.
+
+use avo::repro;
+use avo::runtime::{default_artifact_dir, max_abs_diff, PjrtRuntime};
+
+fn main() -> anyhow::Result<()> {
+    println!("== AVO end-to-end: evolving MHA from the naive seed (seed 42) ==");
+    let t0 = std::time::Instant::now();
+    let report = repro::paper_run();
+    println!("{} in {:.1?}", report.summary(), t0.elapsed());
+    for note in &report.interventions {
+        println!("  supervisor: {note}");
+    }
+
+    println!("\n{}", repro::stats(&report));
+    println!("{}", repro::fig56(&report, true));
+    println!("{}", repro::fig56(&report, false));
+
+    let best = report.lineage.best().expect("non-empty lineage");
+    println!("final kernel (v{}):\n{}", report.lineage.len() - 1, best.source);
+    println!("{}", repro::fig3(&best.spec));
+
+    // Close the loop through PJRT: the evolved kernel's algorithmic class
+    // is realized by the Pallas artifact; check it against the oracle.
+    let dir = default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        let mut rt = PjrtRuntime::new(&dir)?;
+        let inputs = rt.random_inputs("mha_causal", 42)?;
+        let out = rt.execute_f32("mha_causal", &inputs)?;
+        let oracle = rt.execute_f32("ref_mha_causal", &inputs)?;
+        let err = max_abs_diff(&out[0], &oracle[0]);
+        println!("PJRT cross-check (causal MHA artifact vs oracle): max err {err:.2e}");
+        assert!(err < 2e-4);
+    } else {
+        println!("(artifacts not built — run `make artifacts` for the PJRT cross-check)");
+    }
+    Ok(())
+}

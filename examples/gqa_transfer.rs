@@ -1,0 +1,39 @@
+//! GQA transfer (§4.3): adapt the evolved MHA kernel to grouped-query
+//! attention with a short autonomous agent run (the paper's "30 minutes of
+//! additional autonomous adaptation") and print Figure 4.
+//!
+//!   cargo run --release --example gqa_transfer [--fast]
+
+use avo::coordinator::{EvolutionDriver, RunConfig};
+use avo::repro;
+
+fn main() {
+    println!("== GQA transfer: evolve MHA, then adapt ==");
+    // 1. The MHA evolution (or reuse the reference evolved genome with
+    //    --fast to skip the search).
+    let fast = std::env::args().any(|a| a == "--fast");
+    let evolved = if fast {
+        avo::baselines::evolved_genome()
+    } else {
+        let report = repro::paper_run();
+        println!("MHA run: {}", report.summary());
+        report.lineage.best().unwrap().spec.clone()
+    };
+
+    // 2. Short adaptation runs per GQA group size (kv=4 -> group 8,
+    //    kv=8 -> group 4; the Qwen3 configurations).
+    let mut adapted = evolved.clone();
+    for kv in [4u32, 8] {
+        let driver = EvolutionDriver::new(RunConfig { seed: 43, ..RunConfig::default() });
+        let report = driver.transfer_to_gqa(evolved.clone(), kv);
+        println!(
+            "transfer kv_heads={kv} (group {}): {}",
+            32 / kv,
+            report.summary()
+        );
+        adapted = report.lineage.best().unwrap().spec.clone();
+    }
+
+    // 3. Figure 4 from the adapted kernel.
+    println!("\n{}", repro::fig4(&adapted));
+}

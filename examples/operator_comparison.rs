@@ -1,0 +1,54 @@
+//! Quantifying Figure 1: the agentic variation operator vs the prior-work
+//! interfaces (single-turn generate, fixed Plan-Execute-Summarize), each
+//! given the SAME scoring-function budget, from the same seed kernel.
+//!
+//!   cargo run --release --example operator_comparison [--budget N]
+
+use avo::agent::{
+    AvoAgent, AvoConfig, FixedPipelineOperator, SingleTurnOperator, VariationOperator,
+};
+use avo::evolution::Lineage;
+use avo::kernelspec::KernelSpec;
+use avo::score::{mha_suite, Evaluator};
+
+fn run_with_budget(op: &mut dyn VariationOperator, budget: usize) -> (f64, usize) {
+    let eval = Evaluator::new(mha_suite());
+    let mut lineage = Lineage::new();
+    let seed = KernelSpec::naive();
+    let score = eval.evaluate(&seed);
+    lineage.seed(seed, score, "seed");
+    let (mut used, mut step) = (0usize, 0usize);
+    while used < budget {
+        step += 1;
+        used += op.step(&mut lineage, &eval, step).evaluations.max(1);
+    }
+    (lineage.best_geomean(), lineage.len() - 1)
+}
+
+fn main() {
+    let budget: usize = std::env::args()
+        .skip_while(|a| a != "--budget")
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300);
+    println!("== operator comparison: equal budget of {budget} evaluations ==");
+    println!("{:<16} {:>6} {:>18} {:>9}", "operator", "seed", "best geomean", "commits");
+    for seed in [11u64, 42, 77] {
+        let mut avo_op = AvoAgent::new(AvoConfig::default(), seed);
+        let mut single = SingleTurnOperator::new(seed);
+        let mut fixed = FixedPipelineOperator::new(seed);
+        let (g_avo, c_avo) = run_with_budget(&mut avo_op, budget);
+        let (g_st, c_st) = run_with_budget(&mut single, budget);
+        let (g_fp, c_fp) = run_with_budget(&mut fixed, budget);
+        println!("{:<16} {seed:>6} {g_avo:>14.1} TFLOPS {c_avo:>8}", "AVO (agentic)");
+        println!("{:<16} {seed:>6} {g_st:>14.1} TFLOPS {c_st:>8}", "single-turn");
+        println!("{:<16} {seed:>6} {g_fp:>14.1} TFLOPS {c_fp:>8}", "fixed-pipeline");
+        println!();
+        assert!(g_avo > g_st && g_avo > g_fp, "AVO must win at equal budget");
+    }
+    println!(
+        "AVO wins at every seed — the operator interface, not the primitives,\n\
+         accounts for the gap (all three share the same edit catalogue,\n\
+         knowledge base, scoring function, and update rule)."
+    );
+}

@@ -1,0 +1,51 @@
+//! Quickstart: load the AOT-compiled evolved attention kernel (Pallas →
+//! HLO text, built once by `make artifacts`), execute it via PJRT from
+//! Rust, verify against the exported jnp oracle artifact, and print the
+//! simulator's TFLOPS estimate for the paper's benchmark shapes.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use avo::baselines;
+use avo::runtime::{default_artifact_dir, max_abs_diff, PjrtRuntime};
+use avo::score::{mha_suite, Evaluator};
+
+fn main() -> anyhow::Result<()> {
+    println!("== AVO quickstart ==");
+    let dir = default_artifact_dir();
+    let mut rt = PjrtRuntime::new(&dir)?;
+    println!(
+        "PJRT platform: {} ({} artifacts)",
+        rt.platform(),
+        rt.manifest().entries.len()
+    );
+
+    // 1. Execute the evolved kernel and the oracle on the same inputs.
+    for tag in ["noncausal", "causal"] {
+        let name = format!("mha_{tag}");
+        let inputs = rt.random_inputs(&name, 42)?;
+        let out = rt.execute_f32(&name, &inputs)?;
+        let oracle = rt.execute_f32(&format!("ref_mha_{tag}"), &inputs)?;
+        let err = max_abs_diff(&out[0], &oracle[0]);
+        println!(
+            "{name:<16} {} elements, max |evolved - oracle| = {err:.2e}  {}",
+            out[0].len(),
+            if err < 2e-4 { "OK" } else { "MISMATCH" }
+        );
+        assert!(err < 2e-4);
+    }
+
+    // 2. Score the evolved genome on the paper's benchmark suite.
+    let eval = Evaluator::new(mha_suite());
+    let score = eval.evaluate(&baselines::evolved_genome());
+    println!("\nevolved kernel, paper suite (simulated B200 TFLOPS):");
+    for (name, t) in &score.per_config {
+        println!("  {name:<16} {t:8.1}");
+    }
+    println!(
+        "geomean {:.1} (causal {:.1} / non-causal {:.1})",
+        score.geomean(),
+        score.geomean_causal(),
+        score.geomean_noncausal()
+    );
+    Ok(())
+}

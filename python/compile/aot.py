@@ -1,0 +1,193 @@
+"""AOT compile path: lower L2 graphs (which call the L1 Pallas kernels) to
+HLO **text** artifacts the Rust PJRT runtime loads at startup.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` and
+NOT a serialized ``HloModuleProto``: jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+``xla = 0.1.6`` crate binds) rejects (``proto.id() <= INT_MAX``).  The text
+parser on the Rust side (``HloModuleProto::from_text_file``) reassigns ids
+and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Artifacts are sized for CPU execution (they prove the three layers compose
+and let Rust cross-check the functional simulator's numerics); the paper's
+full 32k-token benchmark shapes are priced by the Layer-3 cycle model.
+
+Usage:  python -m compile.aot [--out DIR]
+Python runs ONCE here; the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import attention as attn
+
+# The algorithmic projection of the evolved AVO genome (v40): single-pass
+# exp2 softmax (v13), branchless rescale (v20), bitmask causal masking +
+# early exit (v8).  Micro-architectural fields live in the Rust genome.
+EVOLVED_VARIANT = dict(
+    softmax_mode="single_pass",
+    rescale_mode="branchless",
+    masking_mode="bitmask",
+    early_exit=True,
+)
+
+# The FA4-design algorithmic projection: two-pass softmax, guarded rescale.
+FA4_VARIANT = dict(
+    softmax_mode="two_pass",
+    rescale_mode="guarded",
+    masking_mode="arith",
+    early_exit=True,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _attn_cfg(causal: bool, q_heads: int = 4, kv_heads: int = 4):
+    return model.AttentionConfig(
+        batch=1,
+        q_heads=q_heads,
+        kv_heads=kv_heads,
+        seq_len=512,
+        head_dim=64,
+        causal=causal,
+        dtype="float32",  # f32 artifacts: keeps the Rust Literal path simple
+    )
+
+
+def _variant_for(cfg: model.AttentionConfig, fields: dict) -> attn.KernelVariant:
+    return attn.KernelVariant(
+        block_q=min(128, cfg.seq_len),
+        block_k=min(128, cfg.seq_len),
+        causal=cfg.causal,
+        **fields,
+    )
+
+
+def build_entries():
+    """(name, lowered-fn, example-args, metadata) for every artifact."""
+    entries = []
+
+    for causal in (False, True):
+        tag = "causal" if causal else "noncausal"
+
+        # Evolved kernel, MHA.
+        cfg = _attn_cfg(causal)
+        spec = [
+            jax.ShapeDtypeStruct(cfg.q_shape(), cfg.jnp_dtype()),
+            jax.ShapeDtypeStruct(cfg.kv_shape(), cfg.jnp_dtype()),
+            jax.ShapeDtypeStruct(cfg.kv_shape(), cfg.jnp_dtype()),
+        ]
+        entries.append(
+            (
+                f"mha_{tag}",
+                model.attention_forward(cfg, _variant_for(cfg, EVOLVED_VARIANT)),
+                spec,
+                {"kind": "attention", "variant": "evolved", **cfg.__dict__},
+            )
+        )
+        # FA4-design kernel, MHA (baseline artifact for A/B in examples).
+        entries.append(
+            (
+                f"mha_fa4_{tag}",
+                model.attention_forward(cfg, _variant_for(cfg, FA4_VARIANT)),
+                spec,
+                {"kind": "attention", "variant": "fa4", **cfg.__dict__},
+            )
+        )
+        # Oracle (pure jnp, no Pallas) for Rust-side cross-checking.
+        entries.append(
+            (
+                f"ref_mha_{tag}",
+                model.attention_reference_forward(cfg),
+                spec,
+                {"kind": "reference", "variant": "oracle", **cfg.__dict__},
+            )
+        )
+
+        # GQA: group sizes 8 and 4 (Qwen3-30B-A3B / Qwen3-8B shapes, scaled
+        # to CPU-runnable head counts; group structure preserved).
+        for g, (qh, kvh) in (("g8", (8, 1)), ("g4", (8, 2))):
+            gcfg = _attn_cfg(causal, q_heads=qh, kv_heads=kvh)
+            gspec = [
+                jax.ShapeDtypeStruct(gcfg.q_shape(), gcfg.jnp_dtype()),
+                jax.ShapeDtypeStruct(gcfg.kv_shape(), gcfg.jnp_dtype()),
+                jax.ShapeDtypeStruct(gcfg.kv_shape(), gcfg.jnp_dtype()),
+            ]
+            entries.append(
+                (
+                    f"gqa_{g}_{tag}",
+                    model.attention_forward(
+                        gcfg, _variant_for(gcfg, EVOLVED_VARIANT)
+                    ),
+                    gspec,
+                    {"kind": "attention", "variant": "evolved", **gcfg.__dict__},
+                )
+            )
+            entries.append(
+                (
+                    f"ref_gqa_{g}_{tag}",
+                    model.attention_reference_forward(gcfg),
+                    gspec,
+                    {"kind": "reference", "variant": "oracle", **gcfg.__dict__},
+                )
+            )
+
+    # Transformer block for the end-to-end workload.
+    bcfg = model.BlockConfig()
+    entries.append(
+        (
+            "block",
+            model.transformer_block(bcfg),
+            model.block_arg_shapes(bcfg),
+            {"kind": "block", **bcfg.__dict__},
+        )
+    )
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {}
+    for name, fn, spec, meta in build_entries():
+        lowered = jax.jit(fn).lower(*spec)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in spec
+            ],
+            "meta": meta,
+            "hlo_bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')} "
+          f"({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

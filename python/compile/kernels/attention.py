@@ -1,0 +1,289 @@
+"""Layer-1 Pallas flash-attention forward kernel, parameterized by the
+evolvable algorithm choices of the AVO genome.
+
+Every *algorithmic* degree of freedom the Rust-side kernel genome
+(``rust/src/kernelspec``) can select is realized here as a real Pallas code
+path and verified against the pure-jnp oracle in ``ref.py``:
+
+  * ``block_q`` / ``block_k``     — tile sizes (the HBM<->VMEM schedule the
+                                    paper expressed with threadblocks + TMA
+                                    is expressed here with BlockSpec + an
+                                    in-kernel K-block loop),
+  * ``softmax_mode``              — ``two_pass`` (classic online softmax:
+                                    max update, then exponentiate, then sum)
+                                    vs ``single_pass`` (the v13 "restructured
+                                    single-pass" exp2-fused variant),
+  * ``rescale_mode``              — ``guarded`` (v19: conditional branch
+                                    that skips the accumulator rescale when
+                                    the running max is unchanged) vs
+                                    ``branchless`` (v20: always-multiply with
+                                    a predicated-select factor of 1.0),
+  * ``masking_mode``              — ``arith`` (additive -inf masking) vs
+                                    ``bitmask`` (boolean block-mask select,
+                                    the v8 variant),
+  * ``early_exit``                — causal: bound the K-block loop at the
+                                    diagonal instead of masking the fully
+                                    masked tail blocks,
+  * grouped-query attention       — KV-head broadcast via the BlockSpec
+                                    index map (q head h reads kv head
+                                    h // group).
+
+Kernels are lowered with ``interpret=True`` — CPU PJRT cannot execute
+Mosaic custom-calls; real-TPU throughput is *not* measured here but priced
+by the Layer-3 cycle model (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+SOFTMAX_MODES = ("two_pass", "single_pass")
+RESCALE_MODES = ("branchless", "guarded")
+MASKING_MODES = ("arith", "bitmask")
+
+_LOG2E = math.log2(math.e)
+_NEG_INF = float(-1e30)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelVariant:
+    """Algorithmic configuration of one attention kernel implementation.
+
+    This is the Python-side projection of the Rust ``KernelSpec`` genome:
+    only the fields that change the *algorithm* (and therefore must be
+    proven correct against the oracle) appear here; purely
+    micro-architectural fields (fence kinds, register splits, pipeline
+    overlap flags) live in the genome and are priced by the L3 simulator.
+    """
+
+    block_q: int = 128
+    block_k: int = 128
+    causal: bool = False
+    softmax_mode: str = "two_pass"
+    rescale_mode: str = "branchless"
+    masking_mode: str = "arith"
+    early_exit: bool = True
+
+    def validate(self, seq_len: int, head_dim: int) -> None:
+        if self.block_q <= 0 or self.block_k <= 0:
+            raise ValueError("block sizes must be positive")
+        if seq_len % self.block_q != 0:
+            raise ValueError(
+                f"seq_len {seq_len} not divisible by block_q {self.block_q}"
+            )
+        if seq_len % self.block_k != 0:
+            raise ValueError(
+                f"seq_len {seq_len} not divisible by block_k {self.block_k}"
+            )
+        if self.softmax_mode not in SOFTMAX_MODES:
+            raise ValueError(f"unknown softmax_mode {self.softmax_mode}")
+        if self.rescale_mode not in RESCALE_MODES:
+            raise ValueError(f"unknown rescale_mode {self.rescale_mode}")
+        if self.masking_mode not in MASKING_MODES:
+            raise ValueError(f"unknown masking_mode {self.masking_mode}")
+        if head_dim <= 0:
+            raise ValueError("head_dim must be positive")
+
+
+def _mask_scores(
+    s: jnp.ndarray,
+    q_start: jnp.ndarray,
+    k_start: jnp.ndarray,
+    variant: KernelVariant,
+) -> jnp.ndarray:
+    """Apply the causal mask to one (block_q, block_k) score tile."""
+    rows = q_start + lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    cols = k_start + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    keep = rows >= cols
+    if variant.masking_mode == "bitmask":
+        # v8-style: boolean block mask + select.
+        return jnp.where(keep, s, _NEG_INF)
+    # Arithmetic masking: additive large-negative term.  Same semantics,
+    # different instruction mix (priced differently by the L3 model).
+    return s + (1.0 - keep.astype(s.dtype)) * _NEG_INF
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, variant: KernelVariant,
+                      scale: float, num_k_blocks: int):
+    """One grid step: a single (batch, q-head, Q-block) program."""
+    block_q = variant.block_q
+    block_k = variant.block_k
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (block_q, d)
+    q_block_idx = pl.program_id(2)
+    q_start = q_block_idx * block_q
+
+    head_dim = q.shape[-1]
+    m0 = jnp.full((block_q,), _NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, head_dim), dtype=jnp.float32)
+
+    if variant.causal and variant.early_exit:
+        # Bound the loop at the diagonal: K blocks strictly above the last
+        # query row of this tile are fully masked and never touched.
+        hi = lax.div(q_start + block_q + block_k - 1, block_k)
+    else:
+        hi = num_k_blocks
+
+    def body(j, carry):
+        m, l, acc = carry
+        k_start = j * block_k
+        kb = k_ref[0, 0, pl.ds(k_start, block_k), :].astype(jnp.float32)
+        vb = v_ref[0, 0, pl.ds(k_start, block_k), :].astype(jnp.float32)
+
+        s = q @ kb.T  # (block_q, block_k), fp32 on the MXU analog
+        if variant.causal:
+            s = _mask_scores(s, q_start, k_start, variant)
+
+        if variant.softmax_mode == "single_pass":
+            # v13: exp2-fused single-pass update.  Work in log2 space so the
+            # exponentiation and the rescale factor share one transcendental
+            # form; numerically equivalent to two_pass up to fp rounding.
+            s2 = s * _LOG2E
+            m_new = jnp.maximum(m, jnp.max(s2, axis=-1))
+            p = jnp.exp2(s2 - m_new[:, None])
+            alpha = jnp.exp2(m - m_new)
+        else:
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[:, None])
+            alpha = jnp.exp(m - m_new)
+
+        p_sum = jnp.sum(p, axis=-1)
+        pv = p @ vb  # (block_q, d)
+
+        if variant.rescale_mode == "branchless":
+            # v20: always multiply; predicated select substitutes 1.0 when
+            # no rescale is required (alpha == 1 exactly when m unchanged,
+            # but the explicit select mirrors the kernel's predicated path).
+            factor = jnp.where(m_new > m, alpha, 1.0)
+            acc = acc * factor[:, None] + pv
+            l = l * factor + p_sum
+        else:
+            # v19: guarded path — branch around the rescale entirely when no
+            # row's running max changed (lax.cond == the warp-synchronizing
+            # branch the paper describes).
+            need = jnp.any(m_new > m)
+
+            def rescaled(_):
+                return acc * alpha[:, None] + pv, l * alpha + p_sum
+
+            def skipped(_):
+                return acc + pv, l + p_sum
+
+            acc, l = lax.cond(need, rescaled, skipped, operand=None)
+
+        return m_new, l, acc
+
+    m, l, acc = lax.fori_loop(0, hi, body, (m0, l0, acc0))
+
+    # Epilogue: normalize.  l > 0 always holds for causal square / unmasked
+    # attention (every row sees at least its own key block).
+    out = acc / l[:, None]
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    variant: KernelVariant | None = None,
+    *,
+    scale: float | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Tiled flash-attention forward via ``pl.pallas_call``.
+
+    Shapes: q (B, Hq, N, D); k, v (B, Hkv, N, D) with Hq % Hkv == 0 (GQA
+    broadcast handled by the K/V BlockSpec index maps).
+    """
+    if variant is None:
+        variant = KernelVariant()
+    b, hq, nq, d = q.shape
+    _, hkv, nk, _ = k.shape
+    if hq % hkv != 0:
+        raise ValueError(f"q heads {hq} not a multiple of kv heads {hkv}")
+    if variant.causal and nq != nk:
+        raise ValueError("causal attention requires nq == nk")
+    variant.validate(nq, d)
+    if nk % variant.block_k != 0:
+        raise ValueError(f"kv seq_len {nk} not divisible by block_k")
+
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    num_q_blocks = nq // variant.block_q
+    num_k_blocks = nk // variant.block_k
+
+    grid = (b, hq, num_q_blocks)
+
+    q_spec = pl.BlockSpec(
+        (1, 1, variant.block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)
+    )
+    # GQA: query head hi reads kv head hi // group.  The whole K/V sequence
+    # for that head is staged per grid step; the in-kernel pl.ds loop is the
+    # analog of the paper's TMA K-block streaming.
+    kv_spec = pl.BlockSpec(
+        (1, 1, nk, d), lambda bi, hi, qi: (bi, hi // group, 0, 0)
+    )
+    o_spec = pl.BlockSpec(
+        (1, 1, variant.block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)
+    )
+
+    kernel = functools.partial(
+        _attention_kernel,
+        variant=variant,
+        scale=scale,
+        num_k_blocks=num_k_blocks,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def mha(q, k, v, *, causal=False, variant=None, **kw):
+    """Multi-head attention convenience wrapper (Hq == Hkv)."""
+    if variant is None:
+        variant = KernelVariant(causal=causal)
+    elif variant.causal != causal:
+        variant = dataclasses.replace(variant, causal=causal)
+    return flash_attention(q, k, v, variant, **kw)
+
+
+def gqa(q, k, v, *, causal=False, variant=None, **kw):
+    """Grouped-query attention wrapper (Hq > Hkv allowed)."""
+    return mha(q, k, v, causal=causal, variant=variant, **kw)
+
+
+def all_variants(causal: bool, block_q: int = 64, block_k: int = 64):
+    """Enumerate every algorithmic variant combination (for test sweeps)."""
+    out = []
+    for sm in SOFTMAX_MODES:
+        for rm in RESCALE_MODES:
+            for mm in MASKING_MODES:
+                for ee in (False, True):
+                    if ee and not causal:
+                        continue  # early_exit is causal-only
+                    out.append(
+                        KernelVariant(
+                            block_q=block_q,
+                            block_k=block_k,
+                            causal=causal,
+                            softmax_mode=sm,
+                            rescale_mode=rm,
+                            masking_mode=mm,
+                            early_exit=ee,
+                        )
+                    )
+    return out

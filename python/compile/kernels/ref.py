@@ -1,0 +1,90 @@
+"""Pure-jnp oracle for attention correctness.
+
+This is the ground-truth implementation every Pallas kernel variant in
+``attention.py`` is verified against (pytest + hypothesis).  It mirrors the
+paper's reference: O = softmax(Q K^T / sqrt(d)) V, with optional causal
+masking and grouped-query head broadcasting.  All arithmetic is performed in
+float32 regardless of the input dtype, matching the fp32 accumulation the
+evolved kernels (and FlashAttention) use internally.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_reference(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Naive attention over (batch, heads, seq, head_dim) tensors.
+
+    Supports grouped-query attention: ``k``/``v`` may have fewer heads than
+    ``q`` as long as ``q_heads % kv_heads == 0``; KV heads are broadcast over
+    the query-head groups (group g = q_head // (q_heads // kv_heads)).
+
+    Args:
+      q: queries, shape (B, Hq, Nq, D).
+      k: keys, shape (B, Hkv, Nk, D).
+      v: values, shape (B, Hkv, Nk, D).
+      causal: apply a lower-triangular mask (query i attends to keys <= i;
+        we require Nq == Nk for causal).
+      scale: score scale; defaults to 1/sqrt(D).
+
+    Returns:
+      Output of shape (B, Hq, Nq, D) in the dtype of ``q``.
+    """
+    b, hq, nq, d = q.shape
+    bk, hkv, nk, dk = k.shape
+    assert b == bk and d == dk, "q/k shape mismatch"
+    assert hq % hkv == 0, "q heads must be a multiple of kv heads"
+    if causal:
+        assert nq == nk, "causal reference requires square attention"
+
+    group = hq // hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((nq, nk), dtype=bool))
+        scores = jnp.where(mask[None, None, :, :], scores, -jnp.inf)
+
+    # Numerically stable softmax in fp32.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    # Guard fully-masked rows (cannot occur for causal square, but keeps the
+    # oracle total for arbitrary masks).
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(scores - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p / l, vf)
+    return out.astype(q.dtype)
+
+
+def attention_flops(
+    batch: int,
+    q_heads: int,
+    seq_len: int,
+    head_dim: int,
+    *,
+    causal: bool = False,
+) -> float:
+    """Matmul FLOPs of attention forward, per the FA benchmark convention.
+
+    4 * B * H * N^2 * D for non-causal (QK^T and PV each 2*N^2*D), halved
+    for causal.  This is the numerator of every TFLOPS figure in the paper.
+    """
+    flops = 4.0 * batch * q_heads * seq_len * seq_len * head_dim
+    return flops / 2.0 if causal else flops

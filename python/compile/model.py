@@ -1,0 +1,163 @@
+"""Layer-2 JAX model: the compute graphs that get AOT-lowered to HLO.
+
+The paper evaluates forward-pass *prefill* attention, so the primary L2
+graph is the attention forward itself (MHA and GQA, causal / non-causal)
+calling the Layer-1 Pallas kernel.  A small transformer block (pre-LN
+attention + MLP with residuals) is also exported so the end-to-end example
+can drive a realistic multi-op workload through the Rust PJRT runtime.
+
+Everything here runs at *build time only* — ``aot.py`` lowers these
+functions once to HLO text; the Rust coordinator executes the artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import attention as attn
+from compile.kernels import ref as ref_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    """Shape family of one benchmark configuration (paper §4.1)."""
+
+    batch: int = 1
+    q_heads: int = 16
+    kv_heads: int = 16
+    seq_len: int = 1024
+    head_dim: int = 128
+    causal: bool = False
+    dtype: str = "bfloat16"
+
+    @property
+    def group(self) -> int:
+        return self.q_heads // self.kv_heads
+
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def q_shape(self):
+        return (self.batch, self.q_heads, self.seq_len, self.head_dim)
+
+    def kv_shape(self):
+        return (self.batch, self.kv_heads, self.seq_len, self.head_dim)
+
+    def flops(self) -> float:
+        return ref_mod.attention_flops(
+            self.batch,
+            self.q_heads,
+            self.seq_len,
+            self.head_dim,
+            causal=self.causal,
+        )
+
+
+def attention_forward(
+    cfg: AttentionConfig, variant: attn.KernelVariant | None = None
+) -> Callable:
+    """Build the attention forward fn for one config (closed over variant)."""
+    if variant is None:
+        variant = attn.KernelVariant(
+            block_q=min(128, cfg.seq_len),
+            block_k=min(128, cfg.seq_len),
+            causal=cfg.causal,
+        )
+
+    def fwd(q, k, v):
+        return (attn.flash_attention(q, k, v, variant),)
+
+    return fwd
+
+
+def attention_reference_forward(cfg: AttentionConfig) -> Callable:
+    """Oracle forward for the same config — exported so the Rust runtime can
+    cross-check kernel artifacts without any Python on the request path."""
+
+    def fwd(q, k, v):
+        return (ref_mod.attention_reference(q, k, v, causal=cfg.causal),)
+
+    return fwd
+
+
+# ---------------------------------------------------------------------------
+# Transformer block (for the end-to-end example workload)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    """Pre-LN transformer block sized for the e2e driver."""
+
+    batch: int = 1
+    q_heads: int = 8
+    kv_heads: int = 8
+    seq_len: int = 512
+    head_dim: int = 64
+    mlp_ratio: int = 4
+    causal: bool = True
+    dtype: str = "float32"
+
+    @property
+    def d_model(self) -> int:
+        return self.q_heads * self.head_dim
+
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def _layer_norm(x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps)
+
+
+def transformer_block(cfg: BlockConfig, variant: attn.KernelVariant | None = None) -> Callable:
+    """Pre-LN block: x + Attn(LN(x)); then x + MLP(LN(x)).
+
+    Weights are explicit arguments (wq, wk, wv, wo, w1, w2) so the AOT
+    artifact is a pure function the Rust side can feed.
+    """
+    if variant is None:
+        variant = attn.KernelVariant(
+            block_q=min(64, cfg.seq_len),
+            block_k=min(64, cfg.seq_len),
+            causal=cfg.causal,
+        )
+    h, hk, d = cfg.q_heads, cfg.kv_heads, cfg.head_dim
+    dm = cfg.d_model
+
+    def fwd(x, wq, wk, wv, wo, w1, w2):
+        b, n, _ = x.shape
+        y = _layer_norm(x)
+        q = (y @ wq).reshape(b, n, h, d).transpose(0, 2, 1, 3)
+        k = (y @ wk).reshape(b, n, hk, d).transpose(0, 2, 1, 3)
+        v = (y @ wv).reshape(b, n, hk, d).transpose(0, 2, 1, 3)
+        o = attn.flash_attention(q, k, v, variant)
+        o = o.transpose(0, 2, 1, 3).reshape(b, n, dm)
+        x = x + o @ wo
+        y = _layer_norm(x)
+        x = x + jax.nn.gelu(y @ w1) @ w2
+        return (x,)
+
+    return fwd
+
+
+def block_arg_shapes(cfg: BlockConfig):
+    """ShapeDtypeStructs for the transformer-block artifact (AOT + tests)."""
+    dt = cfg.jnp_dtype()
+    dm = cfg.d_model
+    dff = dm * cfg.mlp_ratio
+    return [
+        jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len, dm), dt),  # x
+        jax.ShapeDtypeStruct((dm, dm), dt),  # wq
+        jax.ShapeDtypeStruct((dm, cfg.kv_heads * cfg.head_dim), dt),  # wk
+        jax.ShapeDtypeStruct((dm, cfg.kv_heads * cfg.head_dim), dt),  # wv
+        jax.ShapeDtypeStruct((dm, dm), dt),  # wo
+        jax.ShapeDtypeStruct((dm, dff), dt),  # w1
+        jax.ShapeDtypeStruct((dff, dm), dt),  # w2
+    ]

@@ -1,0 +1,90 @@
+"""L2 model tests: transformer block numerics + config accounting."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import attention as attn
+from compile.kernels.ref import attention_reference
+
+
+def _block_inputs(cfg, seed=0):
+    shapes = model.block_arg_shapes(cfg)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(shapes))
+    return [
+        jax.random.normal(k, s.shape, s.dtype) * 0.05
+        for k, s in zip(keys, shapes)
+    ]
+
+
+def _block_reference(cfg, x, wq, wk, wv, wo, w1, w2):
+    """Same block computed with the oracle attention (no Pallas)."""
+    b, n, _ = x.shape
+    h, hk, d = cfg.q_heads, cfg.kv_heads, cfg.head_dim
+    y = model._layer_norm(x)
+    q = (y @ wq).reshape(b, n, h, d).transpose(0, 2, 1, 3)
+    k = (y @ wk).reshape(b, n, hk, d).transpose(0, 2, 1, 3)
+    v = (y @ wv).reshape(b, n, hk, d).transpose(0, 2, 1, 3)
+    o = attention_reference(q, k, v, causal=cfg.causal)
+    o = o.transpose(0, 2, 1, 3).reshape(b, n, cfg.d_model)
+    x = x + o @ wo
+    y = model._layer_norm(x)
+    return x + jax.nn.gelu(y @ w1) @ w2
+
+
+@pytest.mark.parametrize("causal", [False, True], ids=["noncausal", "causal"])
+def test_transformer_block_matches_reference(causal):
+    cfg = model.BlockConfig(seq_len=128, q_heads=4, head_dim=32,
+                            kv_heads=4, causal=causal)
+    args = _block_inputs(cfg)
+    (out,) = model.transformer_block(cfg)(*args)
+    ref = _block_reference(cfg, *args)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+
+
+def test_transformer_block_gqa():
+    cfg = model.BlockConfig(seq_len=128, q_heads=8, kv_heads=2, head_dim=32)
+    args = _block_inputs(cfg, seed=1)
+    (out,) = model.transformer_block(cfg)(*args)
+    ref = _block_reference(cfg, *args)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+
+
+def test_block_is_jittable():
+    cfg = model.BlockConfig(seq_len=64, q_heads=2, head_dim=32, kv_heads=2)
+    args = _block_inputs(cfg, seed=2)
+    (eager,) = model.transformer_block(cfg)(*args)
+    (jitted,) = jax.jit(model.transformer_block(cfg))(*args)
+    assert float(jnp.max(jnp.abs(eager - jitted))) < 1e-5
+
+
+def test_attention_forward_uses_variant():
+    cfg = model.AttentionConfig(batch=1, q_heads=2, kv_heads=2, seq_len=128,
+                                head_dim=32, causal=True, dtype="float32")
+    var = attn.KernelVariant(block_q=64, block_k=64, causal=True,
+                             softmax_mode="single_pass")
+    fn = model.attention_forward(cfg, var)
+    q = jax.random.normal(jax.random.PRNGKey(0), cfg.q_shape())
+    k = jax.random.normal(jax.random.PRNGKey(1), cfg.kv_shape())
+    v = jax.random.normal(jax.random.PRNGKey(2), cfg.kv_shape())
+    (out,) = fn(q, k, v)
+    ref = attention_reference(q, k, v, causal=True)
+    assert float(jnp.max(jnp.abs(out - ref))) < 5e-5
+
+
+def test_attention_config_accessors():
+    cfg = model.AttentionConfig(batch=8, q_heads=32, kv_heads=4,
+                                seq_len=4096, head_dim=128, causal=True)
+    assert cfg.group == 8
+    assert cfg.q_shape() == (8, 32, 4096, 128)
+    assert cfg.kv_shape() == (8, 4, 4096, 128)
+    assert cfg.flops() == 4.0 * 8 * 32 * 4096**2 * 128 / 2
+
+
+def test_block_config_d_model():
+    cfg = model.BlockConfig(q_heads=8, head_dim=64)
+    assert cfg.d_model == 512
+    shapes = model.block_arg_shapes(cfg)
+    assert shapes[0].shape == (cfg.batch, cfg.seq_len, 512)
+    assert shapes[5].shape == (512, 2048)

@@ -1,0 +1,25 @@
+//! Bench for Figure 3: times the full MHA-suite evaluation of the evolved
+//! kernel and each baseline genome (the end-to-end scoring path behind
+//! every Fig. 3 cell), then prints the regenerated figure rows.
+
+use avo::baselines;
+use avo::benchkit::Bench;
+use avo::kernelspec::KernelSpec;
+use avo::repro;
+use avo::score::{mha_suite, Evaluator};
+
+fn main() {
+    let eval = Evaluator::new(mha_suite());
+    let mut b = Bench::new("fig3_mha");
+    for (name, spec) in [
+        ("evolved", baselines::evolved_genome()),
+        ("fa4_design", baselines::fa4_genome()),
+        ("cudnn_class", baselines::cudnn_genome()),
+        ("naive_seed", KernelSpec::naive()),
+    ] {
+        b.case(&format!("suite_eval/{name}"), || eval.evaluate(&spec));
+    }
+    b.case("fig3_render", || repro::fig3(&baselines::evolved_genome()));
+    b.finish();
+    println!("\n{}", repro::fig3(&baselines::evolved_genome()));
+}

@@ -1,0 +1,24 @@
+//! Bench for Figure 4: times GQA-suite evaluation (both group sizes) and
+//! the 30-minute-analog transfer run, then prints the regenerated figure.
+
+use avo::baselines;
+use avo::benchkit::Bench;
+use avo::coordinator::{EvolutionDriver, RunConfig};
+use avo::repro;
+use avo::score::{gqa_suite, Evaluator};
+
+fn main() {
+    let mut b = Bench::new("fig4_gqa");
+    for kv in [4u32, 8] {
+        let eval = Evaluator::new(gqa_suite(kv));
+        b.case(&format!("suite_eval/g{}", 32 / kv), || {
+            eval.evaluate(&baselines::evolved_genome())
+        });
+    }
+    b.case("transfer_run/g8", || {
+        let driver = EvolutionDriver::new(RunConfig { seed: 43, ..RunConfig::default() });
+        driver.transfer_to_gqa(baselines::evolved_genome(), 4)
+    });
+    b.finish();
+    println!("\n{}", repro::fig4(&baselines::evolved_genome()));
+}

@@ -1,0 +1,22 @@
+//! Bench for Figures 5/6: times the full seeded evolution run (the 7-day
+//! analog) and the trajectory extraction, then prints both figures.
+//! AVO_BENCH_QUICK=1 shortens the timing loop (the run itself is seconds).
+
+use avo::benchkit::Bench;
+use avo::coordinator::EvolutionDriver;
+use avo::repro;
+
+fn main() {
+    let mut b = Bench::new("fig5_trajectory").with_iters(0, 3);
+    b.case("paper_run_40_commits", || {
+        EvolutionDriver::new(repro::paper_run_config()).run()
+    });
+    let report = repro::paper_run();
+    b.case("trajectory_extract", || {
+        (report.lineage.trajectory(true), report.lineage.trajectory(false))
+    });
+    b.finish();
+    println!("\n{}", repro::fig56(&report, true));
+    println!("{}", repro::fig56(&report, false));
+    println!("{}", repro::stats(&report));
+}

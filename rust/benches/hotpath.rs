@@ -1,0 +1,48 @@
+//! Hot-path microbenchmarks (the §Perf targets in EXPERIMENTS.md):
+//! the scoring function decomposed — structural validation, functional
+//! correctness execution, cycle model, full suite evaluation, parallel
+//! batch throughput — plus store/json costs.
+
+use avo::baselines;
+use avo::benchkit::Bench;
+use avo::coordinator::EvalPool;
+use avo::json::ToJson;
+use avo::kernelspec::KernelSpec;
+use avo::score::{mha_suite, BenchConfig, Evaluator};
+use avo::sim::{functional, machine::MachineSpec, pipeline};
+
+fn main() {
+    let eval = Evaluator::new(mha_suite());
+    let spec = baselines::evolved_genome();
+    let m = MachineSpec::b200();
+    let cfg = BenchConfig::mha(1, 32768, true);
+
+    let mut b = Bench::new("hotpath").with_iters(3, 30);
+    b.case("validate", || spec.validate());
+    b.case("functional_check", || functional::check(&spec, true, 1, 1));
+    b.case("cycle_model_one_cell", || pipeline::simulate(&spec, &cfg, &m));
+    b.case("suite_evaluate_full", || eval.evaluate(&spec));
+    b.case("profile_report", || {
+        avo::sim::profile::profile(&pipeline::simulate(&spec, &cfg, &m))
+    });
+    b.case("spec_json_roundtrip", || {
+        let j = spec.to_json().compact();
+        avo::json::parse(&j).unwrap()
+    });
+    b.case("content_hash", || spec.content_hash());
+
+    let specs: Vec<KernelSpec> = (0..64)
+        .map(|i| {
+            let mut s = baselines::evolved_genome();
+            s.kv_pipeline_depth = 1 + (i % 4) as u32;
+            s
+        })
+        .collect();
+    let pool = EvalPool::new(
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    );
+    b.case("pool_batch_64", || pool.evaluate_batch(&eval, &specs));
+    let seq = EvalPool::new(1);
+    b.case("seq_batch_64", || seq.evaluate_batch(&eval, &specs));
+    b.finish();
+}

@@ -1,0 +1,52 @@
+//! Bench for the Fig. 1 operator comparison: times one variation step of
+//! each operator (the per-step cost of agentic vs single-turn vs
+//! fixed-pipeline variation) and a short equal-budget race.
+
+use avo::agent::{
+    AvoAgent, AvoConfig, FixedPipelineOperator, SingleTurnOperator, VariationOperator,
+};
+use avo::benchkit::Bench;
+use avo::evolution::Lineage;
+use avo::kernelspec::KernelSpec;
+use avo::score::{mha_suite, Evaluator};
+
+fn seeded_lineage(eval: &Evaluator) -> Lineage {
+    let mut lineage = Lineage::new();
+    let seed = KernelSpec::naive();
+    let score = eval.evaluate(&seed);
+    lineage.seed(seed, score, "seed");
+    lineage
+}
+
+fn main() {
+    let eval = Evaluator::new(mha_suite());
+    let mut b = Bench::new("operator_compare");
+
+    b.case("step/avo", || {
+        let mut lineage = seeded_lineage(&eval);
+        let mut op = AvoAgent::new(AvoConfig::default(), 1);
+        op.step(&mut lineage, &eval, 1)
+    });
+    b.case("step/single_turn", || {
+        let mut lineage = seeded_lineage(&eval);
+        let mut op = SingleTurnOperator::new(1);
+        op.step(&mut lineage, &eval, 1)
+    });
+    b.case("step/fixed_pipeline", || {
+        let mut lineage = seeded_lineage(&eval);
+        let mut op = FixedPipelineOperator::new(1);
+        op.step(&mut lineage, &eval, 1)
+    });
+
+    b.case("race_120_evals/avo", || {
+        let mut lineage = seeded_lineage(&eval);
+        let mut op = AvoAgent::new(AvoConfig::default(), 5);
+        let (mut used, mut step) = (0, 0);
+        while used < 120 {
+            step += 1;
+            used += op.step(&mut lineage, &eval, step).evaluations.max(1);
+        }
+        lineage.best_geomean()
+    });
+    b.finish();
+}

@@ -1,0 +1,22 @@
+//! Bench for Table 1: times the before/after simulation of each named
+//! optimization (the ablation measurement path), then prints the table.
+
+use avo::baselines::ablations;
+use avo::benchkit::Bench;
+use avo::repro;
+use avo::score::{mha_suite, Evaluator};
+
+fn main() {
+    let eval = Evaluator::new(mha_suite());
+    let mut b = Bench::new("table1_ablations");
+    for (name, (before, after)) in [
+        ("branchless_rescale", ablations::branchless_rescale()),
+        ("correction_overlap", ablations::correction_overlap()),
+        ("register_rebalance", ablations::register_rebalance()),
+    ] {
+        b.case(&format!("{name}/before"), || eval.evaluate(&before));
+        b.case(&format!("{name}/after"), || eval.evaluate(&after));
+    }
+    b.finish();
+    println!("\n{}", repro::table1());
+}

@@ -1,0 +1,321 @@
+//! Baselines: the FA4-design and cuDNN-class genome anchors, the paper's
+//! measured baseline curves, and the FA4-paper-reported numbers used by
+//! Appendix A / Figure 7.
+//!
+//! cuDNN is closed source; the paper treats it as an opaque measured curve
+//! and so do we (`cudnn_measured`).  FlashAttention-4's *design* is
+//! described in the paper's §2.2 and §5.3 in enough detail to encode as a
+//! point in our genome space (`fa4_genome`); its simulated curve is
+//! asserted (rust/tests/calibration.rs) to land within a few percent of the
+//! measured anchors, which is what makes Table-1-style ablations meaningful.
+//!
+//! Anchor values are digitized from the paper's Figures 3 and 7 (the paper
+//! publishes exact percentage gains and the 1668 TFLOPS headline; the
+//! per-config values below are consistent with every stated percentage).
+
+use crate::kernelspec::{
+    FenceKind, KernelSpec, MaskingMode, RegisterPlan, RescaleMode, Scheduling, SoftmaxMode,
+};
+
+/// FlashAttention-4's design point (§2.2): warp specialization with dual
+/// Q-stage pipelining, 192/80/48 register split, branched rescale guarded
+/// by a warp vote with a blocking fence, correction serialized at the
+/// MMA boundary.
+pub fn fa4_genome() -> KernelSpec {
+    KernelSpec {
+        block_q: 128,
+        block_k: 128,
+        softmax_mode: SoftmaxMode::TwoPass,
+        rescale_mode: RescaleMode::Guarded,
+        masking_mode: MaskingMode::Arith,
+        early_exit: true,
+        q_stages: 2,
+        kv_pipeline_depth: 2,
+        qk_pv_interleave: true,
+        correction_overlap: false,
+        fence_kind: FenceKind::Blocking,
+        softmax_packed: true,
+        epilogue_async: true,
+        scheduling: Scheduling::PerTile,
+        registers: RegisterPlan::fa4(),
+    }
+}
+
+/// A cuDNN-class genome: the same family of optimizations, slightly better
+/// tuned (used for design-space comparisons; figures use `cudnn_measured`).
+pub fn cudnn_genome() -> KernelSpec {
+    let mut s = fa4_genome();
+    s.scheduling = Scheduling::Persistent;
+    s.softmax_mode = SoftmaxMode::SinglePass;
+    s.correction_overlap = true;
+    s
+}
+
+/// The evolved v40 genome the 7-day AVO run converges to: single-pass exp2
+/// softmax (v13), bitmask causal masking + QK/PV interleave (v8),
+/// branchless rescale + non-blocking fence (v20), correction/MMA overlap
+/// (v30), rebalanced 184/88/56 registers (v33), persistent scheduling,
+/// packed softmax fragments.
+pub fn evolved_genome() -> KernelSpec {
+    KernelSpec {
+        block_q: 128,
+        block_k: 128,
+        softmax_mode: SoftmaxMode::SinglePass,
+        rescale_mode: RescaleMode::Branchless,
+        masking_mode: MaskingMode::Bitmask,
+        early_exit: true,
+        q_stages: 2,
+        kv_pipeline_depth: 2,
+        qk_pv_interleave: true,
+        correction_overlap: true,
+        fence_kind: FenceKind::NonBlocking,
+        softmax_packed: true,
+        epilogue_async: true,
+        scheduling: Scheduling::Persistent,
+        registers: RegisterPlan::rebalanced(),
+    }
+}
+
+/// Table 1 ablation states: (before, after) genome pairs for each named
+/// optimization, reconstructed at the lineage state in which the paper
+/// measured them.
+pub mod ablations {
+    use super::*;
+
+    /// v19 -> v20: branchless accumulator rescaling + lighter fence.
+    /// Lineage state at v19: v8 (interleave+bitmask) and v13 (single-pass)
+    /// already adopted; overlap, packing, rebalance, persistent not yet.
+    pub fn branchless_rescale() -> (KernelSpec, KernelSpec) {
+        let mut before = evolved_genome();
+        before.correction_overlap = false;
+        before.softmax_packed = false;
+        before.scheduling = Scheduling::PerTile;
+        before.registers = RegisterPlan::fa4();
+        before.rescale_mode = RescaleMode::Guarded;
+        before.fence_kind = FenceKind::Blocking;
+        let mut after = before.clone();
+        after.rescale_mode = RescaleMode::Branchless;
+        after.fence_kind = FenceKind::NonBlocking;
+        (before, after)
+    }
+
+    /// v29 -> v30: correction/MMA pipeline overlap.
+    /// Lineage state at v29: v20 adopted, packing adopted; rebalance not.
+    pub fn correction_overlap() -> (KernelSpec, KernelSpec) {
+        let mut before = evolved_genome();
+        before.correction_overlap = false;
+        before.registers = RegisterPlan::fa4();
+        let mut after = before.clone();
+        after.correction_overlap = true;
+        (before, after)
+    }
+
+    /// v32 -> v33: register rebalancing across warp groups.
+    pub fn register_rebalance() -> (KernelSpec, KernelSpec) {
+        let mut before = evolved_genome();
+        before.registers = RegisterPlan::fa4();
+        let after = evolved_genome();
+        (before, after)
+    }
+}
+
+/// A measured baseline curve: TFLOPS per sequence length (4k, 8k, 16k, 32k
+/// at 32k total tokens).
+#[derive(Debug, Clone, Copy)]
+pub struct AnchorCurve {
+    pub seq_lens: [u32; 4],
+    pub tflops: [f64; 4],
+}
+
+impl AnchorCurve {
+    pub fn get(&self, seq_len: u32) -> Option<f64> {
+        self.seq_lens
+            .iter()
+            .position(|&n| n == seq_len)
+            .map(|i| self.tflops[i])
+    }
+
+    pub fn geomean(&self) -> f64 {
+        crate::score::geomean(self.tflops.iter().copied())
+    }
+}
+
+const SEQS: [u32; 4] = [4096, 8192, 16384, 32768];
+
+/// cuDNN 9.19.1 measured on the paper's B200 testbed (Fig. 3, digitized).
+pub fn cudnn_measured(causal: bool) -> AnchorCurve {
+    AnchorCurve {
+        seq_lens: SEQS,
+        tflops: if causal {
+            // AVO gains +0.4% .. +3.5% against these (Fig. 3 causal).
+            [1444.0, 1500.0, 1529.0, 1536.0]
+        } else {
+            // AVO within noise at 4k/8k, +1.8/+2.4% at 16k/32k.
+            [1585.0, 1618.0, 1621.0, 1629.0]
+        },
+    }
+}
+
+/// FlashAttention-4 (commit 71bf77c) measured on the paper's testbed.
+pub fn fa4_measured(causal: bool) -> AnchorCurve {
+    AnchorCurve {
+        seq_lens: SEQS,
+        tflops: if causal {
+            // AVO gains +5.0% .. +10.5% against these (Fig. 3 causal).
+            [1381.0, 1439.0, 1444.0, 1439.0]
+        } else {
+            [1540.0, 1582.0, 1601.0, 1611.0]
+        },
+    }
+}
+
+/// AVO's measured curves (Fig. 3; the 1668 TFLOPS headline is nc @ 32k).
+pub fn avo_measured(causal: bool) -> AnchorCurve {
+    AnchorCurve {
+        seq_lens: SEQS,
+        tflops: if causal {
+            [1450.0, 1520.0, 1560.0, 1590.0]
+        } else {
+            [1580.0, 1620.0, 1650.0, 1668.0]
+        },
+    }
+}
+
+/// cuDNN / FA4 numbers **as reported in the FA4 paper** (Appendix A,
+/// Fig. 7): slightly different system conditions than the AVO testbed.
+/// AVO vs these: nc +1.4..3.4% (cuDNN), +2.3..3.9% (FA4);
+///               c  +3.6..7.5% (cuDNN), +3.7..8.8% (FA4).
+pub fn cudnn_fa4_reported(causal: bool) -> (AnchorCurve, AnchorCurve) {
+    if causal {
+        (
+            AnchorCurve { seq_lens: SEQS, tflops: [1349.0, 1459.0, 1500.0, 1535.0] },
+            AnchorCurve { seq_lens: SEQS, tflops: [1333.0, 1445.0, 1488.0, 1530.0] },
+        )
+    } else {
+        (
+            AnchorCurve { seq_lens: SEQS, tflops: [1528.0, 1585.0, 1610.0, 1630.0] },
+            AnchorCurve { seq_lens: SEQS, tflops: [1521.0, 1570.0, 1600.0, 1620.0] },
+        )
+    }
+}
+
+/// GQA measured anchors (Fig. 4): cuDNN and FA4 per group size.
+/// AVO (after the 30-minute adaptation): causal up to +7.0% over cuDNN and
+/// +9.3% over FA4; non-causal up to +6.0% / +4.5%.
+pub fn gqa_anchors(kv_heads: u32, causal: bool) -> (AnchorCurve, AnchorCurve) {
+    // Group 8 (kv=4) and group 4 (kv=8) behave similarly; group 8 slightly
+    // lower for the baselines (less KV parallelism in their schedules).
+    let drop = if kv_heads == 4 { 0.985 } else { 1.0 };
+    let scale = |c: AnchorCurve, f: f64| AnchorCurve {
+        seq_lens: c.seq_lens,
+        tflops: [
+            c.tflops[0] * f,
+            c.tflops[1] * f,
+            c.tflops[2] * f,
+            c.tflops[3] * f,
+        ],
+    };
+    if causal {
+        (
+            scale(AnchorCurve { seq_lens: SEQS, tflops: [1415.0, 1472.0, 1495.0, 1502.0] }, drop),
+            scale(AnchorCurve { seq_lens: SEQS, tflops: [1390.0, 1432.0, 1448.0, 1445.0] }, drop),
+        )
+    } else {
+        (
+            scale(AnchorCurve { seq_lens: SEQS, tflops: [1550.0, 1590.0, 1601.0, 1605.0] }, drop),
+            scale(AnchorCurve { seq_lens: SEQS, tflops: [1555.0, 1596.0, 1615.0, 1622.0] }, drop),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn genomes_are_valid() {
+        fa4_genome().validate().unwrap();
+        cudnn_genome().validate().unwrap();
+        evolved_genome().validate().unwrap();
+        for (b, a) in [
+            ablations::branchless_rescale(),
+            ablations::correction_overlap(),
+            ablations::register_rebalance(),
+        ] {
+            b.validate().unwrap();
+            a.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn evolved_differs_from_fa4_in_named_optimizations() {
+        let (fa4, evo) = (fa4_genome(), evolved_genome());
+        assert_ne!(fa4.rescale_mode, evo.rescale_mode);
+        assert_ne!(fa4.fence_kind, evo.fence_kind);
+        assert_ne!(fa4.correction_overlap, evo.correction_overlap);
+        assert_ne!(fa4.registers, evo.registers);
+    }
+
+    #[test]
+    fn anchors_encode_published_percentages_causal() {
+        // Fig. 3 causal: AVO vs cuDNN in +0.4..3.5%, vs FA4 in +5.0..10.5%.
+        let avo = avo_measured(true);
+        let cudnn = cudnn_measured(true);
+        let fa4 = fa4_measured(true);
+        for i in 0..4 {
+            let vs_cudnn = avo.tflops[i] / cudnn.tflops[i] - 1.0;
+            let vs_fa4 = avo.tflops[i] / fa4.tflops[i] - 1.0;
+            assert!((0.004..=0.0355).contains(&vs_cudnn), "cudnn[{i}]={vs_cudnn}");
+            assert!((0.049..=0.106).contains(&vs_fa4), "fa4[{i}]={vs_fa4}");
+        }
+    }
+
+    #[test]
+    fn anchors_encode_published_percentages_noncausal() {
+        // Fig. 3 non-causal: within noise at short seq; +1.8/+2.4% at
+        // 16k/32k over cuDNN.
+        let avo = avo_measured(false);
+        let cudnn = cudnn_measured(false);
+        for (i, expect) in [(2usize, 0.018), (3usize, 0.024)] {
+            let gain = avo.tflops[i] / cudnn.tflops[i] - 1.0;
+            assert!((gain - expect).abs() < 0.003, "gain[{i}]={gain}");
+        }
+        let short = (avo.tflops[0] / cudnn.tflops[0] - 1.0).abs();
+        assert!(short < 0.01, "short-seq should be within noise: {short}");
+    }
+
+    #[test]
+    fn headline_is_1668() {
+        assert_eq!(avo_measured(false).get(32768), Some(1668.0));
+    }
+
+    #[test]
+    fn fig7_reported_percentages() {
+        // Appendix A: causal +3.6..7.5% over reported cuDNN, +3.7..8.8%
+        // over reported FA4, largest at short sequences.
+        let avo = avo_measured(true);
+        let (cudnn, fa4) = cudnn_fa4_reported(true);
+        for i in 0..4 {
+            let vs_cudnn = avo.tflops[i] / cudnn.tflops[i] - 1.0;
+            let vs_fa4 = avo.tflops[i] / fa4.tflops[i] - 1.0;
+            assert!((0.035..=0.076).contains(&vs_cudnn), "cudnn[{i}]={vs_cudnn}");
+            assert!((0.036..=0.089).contains(&vs_fa4), "fa4[{i}]={vs_fa4}");
+        }
+        let g0 = avo.tflops[0] / cudnn.tflops[0];
+        let g3 = avo.tflops[3] / cudnn.tflops[3];
+        assert!(g0 > g3, "largest gains at shorter sequences");
+    }
+
+    #[test]
+    fn gqa_anchor_gains() {
+        // Fig. 4 ceilings: causal up to +7.0% (cuDNN) / +9.3% (FA4).
+        for kv in [4u32, 8] {
+            let (cudnn, fa4) = gqa_anchors(kv, true);
+            let best_cudnn = (0..4)
+                .map(|i| 1502.0 * 1.07 / cudnn.tflops[i])
+                .fold(f64::MIN, f64::max);
+            assert!(best_cudnn > 1.0); // anchors leave headroom for AVO
+            assert!(fa4.geomean() < cudnn.geomean() * 1.02);
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Minimal benchmark harness (criterion is not vendored in the offline
+//! image): warmup + timed iterations with mean / std / min reporting.
+//! Benches under `rust/benches/` are `harness = false` binaries built on
+//! this module, so `cargo bench` works end to end.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub std: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.3?} ±{:>9.3?}  (min {:>9.3?}, n={})",
+            self.name, self.mean, self.std, self.min, self.iters
+        )
+    }
+}
+
+/// A named group of benchmark cases.
+pub struct Bench {
+    group: String,
+    warmup: usize,
+    iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // Honor a quick mode for CI-style runs.
+        let quick = std::env::var("AVO_BENCH_QUICK").is_ok();
+        Bench {
+            group: group.to_string(),
+            warmup: if quick { 1 } else { 3 },
+            iters: if quick { 5 } else { 15 },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_iters(mut self, warmup: usize, iters: usize) -> Self {
+        self.warmup = warmup;
+        self.iters = iters.max(1);
+        self
+    }
+
+    /// Time a closure; a `std::hint::black_box` guards the return value.
+    pub fn case<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed());
+        }
+        let mean_ns =
+            samples.iter().map(|d| d.as_nanos() as f64).sum::<f64>() / samples.len() as f64;
+        let var = samples
+            .iter()
+            .map(|d| (d.as_nanos() as f64 - mean_ns).powi(2))
+            .sum::<f64>()
+            / samples.len() as f64;
+        let result = BenchResult {
+            name: format!("{}/{}", self.group, name),
+            iters: self.iters,
+            mean: Duration::from_nanos(mean_ns as u64),
+            std: Duration::from_nanos(var.sqrt() as u64),
+            min: samples.iter().min().copied().unwrap_or_default(),
+        };
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Print all case reports.
+    pub fn finish(self) -> Vec<BenchResult> {
+        println!("== bench group: {} ==", self.group);
+        for r in &self.results {
+            println!("  {}", r.report());
+        }
+        self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_measures_and_reports() {
+        let mut b = Bench::new("test").with_iters(1, 3);
+        let r = b.case("sleep", || std::thread::sleep(Duration::from_micros(200)));
+        assert!(r.mean >= Duration::from_micros(150));
+        assert_eq!(r.iters, 3);
+        let all = b.finish();
+        assert_eq!(all.len(), 1);
+        assert!(all[0].report().contains("test/sleep"));
+    }
+
+    #[test]
+    fn results_accumulate() {
+        let mut b = Bench::new("g").with_iters(0, 2);
+        b.case("a", || 1 + 1);
+        b.case("b", || 2 + 2);
+        assert_eq!(b.finish().len(), 2);
+    }
+}

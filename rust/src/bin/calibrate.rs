@@ -1,0 +1,83 @@
+//! Calibration probe: prints simulated curves for the anchor genomes and
+//! the Table-1 ablation deltas next to the paper's published targets.
+//! Used interactively while fitting MachineSpec's *calibrated* constants;
+//! the acceptance bands are asserted in rust/tests/calibration.rs.
+
+use avo::baselines::{self, ablations};
+use avo::kernelspec::KernelSpec;
+use avo::score::{geomean, mha_suite, BenchConfig, Evaluator, SEQ_LENS, TOTAL_TOKENS};
+
+fn curve(ev: &Evaluator, spec: &KernelSpec, causal: bool) -> Vec<f64> {
+    SEQ_LENS
+        .iter()
+        .map(|&n| {
+            let cfg = BenchConfig::mha(TOTAL_TOKENS / n, n, causal);
+            ev.report(spec, &cfg).tflops
+        })
+        .collect()
+}
+
+fn show(name: &str, sim: &[f64], anchor: Option<[f64; 4]>) {
+    print!("{name:<22}");
+    for t in sim {
+        print!(" {t:7.1}");
+    }
+    if let Some(a) = anchor {
+        print!("   |");
+        for (s, t) in sim.iter().zip(a) {
+            print!(" {t:6.0}({:+5.1}%)", 100.0 * (s / t - 1.0));
+        }
+    }
+    println!();
+}
+
+fn main() {
+    let ev = Evaluator::new(mha_suite());
+    println!("== MHA curves (TFLOPS @ seq 4k/8k/16k/32k; right: anchor + sim error) ==");
+    for causal in [false, true] {
+        let tag = if causal { "causal" } else { "noncausal" };
+        println!("-- {tag} --");
+        show(
+            &format!("evolved/{tag}"),
+            &curve(&ev, &baselines::evolved_genome(), causal),
+            Some(baselines::avo_measured(causal).tflops),
+        );
+        show(
+            &format!("fa4/{tag}"),
+            &curve(&ev, &baselines::fa4_genome(), causal),
+            Some(baselines::fa4_measured(causal).tflops),
+        );
+        show(
+            &format!("cudnn/{tag}"),
+            &curve(&ev, &baselines::cudnn_genome(), causal),
+            Some(baselines::cudnn_measured(causal).tflops),
+        );
+        show(
+            &format!("naive/{tag}"),
+            &curve(&ev, &KernelSpec::naive(), causal),
+            None,
+        );
+    }
+
+    println!("\n== Table 1 ablations (geomean delta vs preceding version) ==");
+    let cases: [(&str, (KernelSpec, KernelSpec), f64, f64); 3] = [
+        ("branchless rescale (v19->v20)", ablations::branchless_rescale(), 8.1, 1.6),
+        ("correction overlap (v29->v30)", ablations::correction_overlap(), 1.1, 0.4),
+        ("register rebalance (v32->v33)", ablations::register_rebalance(), 2.1, 0.0),
+    ];
+    for (name, (before, after), t_nc, t_c) in cases {
+        for (causal, target) in [(false, t_nc), (true, t_c)] {
+            let g = |s: &KernelSpec| {
+                geomean(SEQ_LENS.iter().map(|&n| {
+                    let cfg = BenchConfig::mha(TOTAL_TOKENS / n, n, causal);
+                    ev.report(s, &cfg).tflops
+                }))
+            };
+            let delta = 100.0 * (g(&after) / g(&before) - 1.0);
+            println!(
+                "{name:<32} {:<9} sim {delta:+6.2}%   paper {target:+6.1}%",
+                if causal { "causal" } else { "noncausal" },
+            );
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! `repro` — regenerate every table and figure of the paper's evaluation
+//! section (see DESIGN.md §Per-experiment index).
+//!
+//!   repro fig3|fig4|fig5|fig6|fig7|table1|stats|all [--from-run]
+//!
+//! By default figures use the reference evolved genome (fast path, no
+//! search); `--from-run` re-runs the full seeded 40-commit evolution and
+//! reports from its lineage, exactly as EXPERIMENTS.md records.
+
+use avo::baselines;
+use avo::repro;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let what = args.first().map(|s| s.as_str()).unwrap_or("all");
+    let from_run = args.iter().any(|a| a == "--from-run");
+
+    let needs_run = from_run || matches!(what, "fig5" | "fig6" | "stats" | "all");
+    let report = if needs_run {
+        eprintln!("running seeded 40-commit evolution (deterministic, seed 42)...");
+        Some(repro::paper_run())
+    } else {
+        None
+    };
+    let evolved = report
+        .as_ref()
+        .filter(|_| from_run)
+        .and_then(|r| r.lineage.best().map(|c| c.spec.clone()))
+        .unwrap_or_else(baselines::evolved_genome);
+
+    let mut sections: Vec<String> = Vec::new();
+    if matches!(what, "fig3" | "all") {
+        sections.push(repro::fig3(&evolved));
+    }
+    if matches!(what, "fig4" | "all") {
+        sections.push(repro::fig4(&evolved));
+    }
+    if let Some(r) = &report {
+        if matches!(what, "fig5" | "all") {
+            sections.push(repro::fig56(r, true));
+        }
+        if matches!(what, "fig6" | "all") {
+            sections.push(repro::fig56(r, false));
+        }
+        if matches!(what, "stats" | "all") {
+            sections.push(repro::stats(r));
+        }
+    }
+    if matches!(what, "table1" | "all") {
+        sections.push(repro::table1());
+    }
+    if matches!(what, "fig7" | "all") {
+        sections.push(repro::fig7(&evolved));
+    }
+    if sections.is_empty() {
+        eprintln!("usage: repro fig3|fig4|fig5|fig6|fig7|table1|stats|all [--from-run]");
+        std::process::exit(2);
+    }
+    for s in sections {
+        println!("{s}");
+    }
+}

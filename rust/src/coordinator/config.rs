@@ -1,0 +1,151 @@
+//! Run configuration: defaults mirror the paper's 7-day MHA run (40
+//! committed versions, >500 internal directions), parseable from a simple
+//! `key = value` config file and overridable from the CLI.
+
+use crate::agent::AvoConfig;
+use crate::supervisor::SupervisorConfig;
+
+/// Which variation operator drives the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OperatorKind {
+    Avo,
+    SingleTurn,
+    FixedPipeline,
+}
+
+impl std::str::FromStr for OperatorKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "avo" => Ok(OperatorKind::Avo),
+            "single_turn" | "single-turn" => Ok(OperatorKind::SingleTurn),
+            "fixed_pipeline" | "fixed-pipeline" | "pes" => Ok(OperatorKind::FixedPipeline),
+            other => Err(format!("unknown operator '{other}'")),
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub operator: OperatorKind,
+    pub seed: u64,
+    /// Stop after this many committed versions (the paper: 40)...
+    pub target_commits: usize,
+    /// ...or after this many variation steps, whichever first.
+    pub max_steps: usize,
+    /// GQA transfer suite (None = MHA evolution).
+    pub gqa_kv_heads: Option<u32>,
+    pub agent: AvoConfig,
+    pub supervisor: SupervisorConfig,
+    /// Worker threads for parallel candidate evaluation.
+    pub eval_workers: usize,
+    /// Where to persist the lineage (None = in-memory only).
+    pub lineage_path: Option<std::path::PathBuf>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            operator: OperatorKind::Avo,
+            seed: 42,
+            target_commits: 40,
+            max_steps: 400,
+            gqa_kv_heads: None,
+            agent: AvoConfig::default(),
+            supervisor: SupervisorConfig::default(),
+            eval_workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+            lineage_path: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse `key = value` lines (TOML-subset; '#' comments allowed).
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut cfg = RunConfig::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let (k, v) = (k.trim(), v.trim().trim_matches('"'));
+            let bad = |e: &dyn std::fmt::Display| format!("line {}: {e}", lineno + 1);
+            match k {
+                "operator" => cfg.operator = v.parse().map_err(|e: String| bad(&e))?,
+                "seed" => cfg.seed = v.parse().map_err(|e| bad(&e))?,
+                "target_commits" => cfg.target_commits = v.parse().map_err(|e| bad(&e))?,
+                "max_steps" => cfg.max_steps = v.parse().map_err(|e| bad(&e))?,
+                "gqa_kv_heads" => cfg.gqa_kv_heads = Some(v.parse().map_err(|e| bad(&e))?),
+                "eval_workers" => cfg.eval_workers = v.parse().map_err(|e| bad(&e))?,
+                "lineage_path" => cfg.lineage_path = Some(v.into()),
+                "inner_budget" => cfg.agent.inner_budget = v.parse().map_err(|e| bad(&e))?,
+                "repair_budget" => cfg.agent.repair_budget = v.parse().map_err(|e| bad(&e))?,
+                "crossover_prob" => {
+                    cfg.agent.crossover_prob = v.parse().map_err(|e| bad(&e))?
+                }
+                "stall_window" => {
+                    cfg.supervisor.stall_window = v.parse().map_err(|e| bad(&e))?
+                }
+                "cycle_threshold" => {
+                    cfg.supervisor.cycle_threshold = v.parse().map_err(|e| bad(&e))?
+                }
+                other => return Err(format!("line {}: unknown key '{other}'", lineno + 1)),
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_mirror_paper() {
+        let c = RunConfig::default();
+        assert_eq!(c.target_commits, 40);
+        assert_eq!(c.operator, OperatorKind::Avo);
+        assert!(c.gqa_kv_heads.is_none());
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let cfg = RunConfig::parse(
+            "operator = single_turn\n\
+             seed = 7          # comment\n\
+             target_commits = 12\n\
+             gqa_kv_heads = 4\n\
+             inner_budget = 9\n\
+             stall_window = 6\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.operator, OperatorKind::SingleTurn);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.target_commits, 12);
+        assert_eq!(cfg.gqa_kv_heads, Some(4));
+        assert_eq!(cfg.agent.inner_budget, 9);
+        assert_eq!(cfg.supervisor.stall_window, 6);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_key() {
+        assert!(RunConfig::parse("bogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_bad_value() {
+        assert!(RunConfig::parse("seed = banana\n").is_err());
+        assert!(RunConfig::parse("operator = sideways\n").is_err());
+    }
+}

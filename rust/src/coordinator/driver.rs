@@ -1,0 +1,210 @@
+//! The evolution driver: runs a variation operator under supervisor
+//! control until the commit target or step budget is reached — the
+//! coordinator's equivalent of the paper's 7-day continuous loop (§3.3).
+
+use crate::agent::{
+    AvoAgent, FixedPipelineOperator, SingleTurnOperator, VariationOperator,
+};
+use crate::coordinator::config::{OperatorKind, RunConfig};
+use crate::coordinator::metrics::Metrics;
+use crate::evolution::Lineage;
+use crate::kernelspec::KernelSpec;
+use crate::score::{gqa_suite, mha_suite, Evaluator};
+use crate::supervisor::Supervisor;
+
+/// Result of a full run.
+pub struct RunReport {
+    pub lineage: Lineage,
+    pub metrics: Metrics,
+    /// Supervisor intervention notes, in order.
+    pub interventions: Vec<String>,
+    pub steps: usize,
+}
+
+impl RunReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "{} commits, best geomean {:.1} TFLOPS, {} steps, {} evaluations, \
+             {} directions explored, {} interventions",
+            self.lineage.len(),
+            self.lineage.best_geomean(),
+            self.steps,
+            self.metrics.counter("evaluations"),
+            self.metrics.counter("directions_explored"),
+            self.interventions.len(),
+        )
+    }
+}
+
+/// The driver.
+pub struct EvolutionDriver {
+    pub config: RunConfig,
+}
+
+impl EvolutionDriver {
+    pub fn new(config: RunConfig) -> Self {
+        EvolutionDriver { config }
+    }
+
+    fn make_operator(&self) -> Box<dyn VariationOperator> {
+        match self.config.operator {
+            OperatorKind::Avo => {
+                Box::new(AvoAgent::new(self.config.agent.clone(), self.config.seed))
+            }
+            OperatorKind::SingleTurn => {
+                Box::new(SingleTurnOperator::new(self.config.seed))
+            }
+            OperatorKind::FixedPipeline => {
+                Box::new(FixedPipelineOperator::new(self.config.seed))
+            }
+        }
+    }
+
+    pub fn evaluator(&self) -> Evaluator {
+        let suite = match self.config.gqa_kv_heads {
+            Some(kv) => gqa_suite(kv),
+            None => mha_suite(),
+        };
+        Evaluator::new(suite)
+    }
+
+    /// Run evolution from a seed genome.
+    pub fn run_from(&self, seed_spec: KernelSpec, seed_message: &str) -> RunReport {
+        let eval = self.evaluator();
+        let mut operator = self.make_operator();
+        let mut supervisor = Supervisor::new(self.config.supervisor.clone());
+        let mut metrics = Metrics::new();
+        let mut lineage = Lineage::new();
+
+        let score = metrics.time("evaluate", || eval.evaluate(&seed_spec));
+        assert!(
+            score.is_correct(),
+            "seed genome must be correct: {:?}",
+            score.failure
+        );
+        lineage.seed(seed_spec, score, seed_message);
+        metrics.incr("evaluations", 1);
+
+        let mut interventions = Vec::new();
+        let mut steps = 0;
+        while lineage.len() < self.config.target_commits + 1
+            && steps < self.config.max_steps
+        {
+            steps += 1;
+            let outcome =
+                metrics.time("variation_step", || operator.step(&mut lineage, &eval, steps));
+            metrics.incr("evaluations", outcome.evaluations as u64);
+            metrics.incr("directions_explored", outcome.directions.len() as u64);
+            if outcome.committed.is_some() {
+                metrics.incr("commits", 1);
+            }
+            metrics.incr(
+                "repairs",
+                outcome
+                    .actions
+                    .iter()
+                    .filter(|a| matches!(a, crate::agent::AgentAction::Diagnose { .. }))
+                    .count() as u64,
+            );
+            if let Some(directive) = supervisor.observe(&outcome, &lineage) {
+                metrics.incr("interventions", 1);
+                interventions.push(directive.note.clone());
+                operator.apply_directive(&directive);
+            }
+        }
+
+        if let Some(path) = &self.config.lineage_path {
+            lineage.save(path).expect("persist lineage");
+        }
+        RunReport { lineage, metrics, interventions, steps }
+    }
+
+    /// The paper's main MHA run: evolve from the naive seed.
+    pub fn run(&self) -> RunReport {
+        self.run_from(KernelSpec::naive(), "seed x0: naive tiled attention")
+    }
+
+    /// The GQA transfer (§4.3): a short adaptation run seeded from an
+    /// evolved MHA genome, scored on the GQA suite.
+    pub fn transfer_to_gqa(&self, evolved: KernelSpec, kv_heads: u32) -> RunReport {
+        let mut cfg = self.config.clone();
+        cfg.gqa_kv_heads = Some(kv_heads);
+        // 30 minutes of autonomous effort ~ a handful of variation steps.
+        cfg.target_commits = 4;
+        cfg.max_steps = 12;
+        let driver = EvolutionDriver::new(cfg);
+        driver.run_from(evolved, "transfer seed: evolved MHA kernel")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_config(seed: u64) -> RunConfig {
+        RunConfig {
+            seed,
+            target_commits: 8,
+            max_steps: 40,
+            ..RunConfig::default()
+        }
+    }
+
+    #[test]
+    fn driver_reaches_commit_target() {
+        let report = EvolutionDriver::new(small_config(5)).run();
+        assert!(report.lineage.len() >= 5, "only {} commits", report.lineage.len());
+        assert!(report.metrics.counter("evaluations") > 8);
+        assert!(report.lineage.best_geomean() > 600.0);
+    }
+
+    #[test]
+    fn driver_is_deterministic() {
+        let a = EvolutionDriver::new(small_config(9)).run();
+        let b = EvolutionDriver::new(small_config(9)).run();
+        assert_eq!(a.lineage.len(), b.lineage.len());
+        assert_eq!(a.steps, b.steps);
+        assert!((a.lineage.best_geomean() - b.lineage.best_geomean()).abs() < 1e-9);
+        let ids_a: Vec<_> = a.lineage.versions().iter().map(|c| c.id).collect();
+        let ids_b: Vec<_> = b.lineage.versions().iter().map(|c| c.id).collect();
+        assert_eq!(ids_a, ids_b);
+    }
+
+    #[test]
+    fn gqa_transfer_improves_or_holds() {
+        let driver = EvolutionDriver::new(small_config(3));
+        let report = driver.transfer_to_gqa(crate::baselines::evolved_genome(), 4);
+        // Seeded from the evolved kernel: GQA suite scores must be at least
+        // the seed's (the Update rule guarantees monotonicity).
+        let seed_g = report.lineage.versions()[0].score.geomean();
+        assert!(report.lineage.best_geomean() >= seed_g);
+        // The transfer suite must be the GQA group-8 configuration.
+        for (name, _) in &report.lineage.versions()[0].score.per_config {
+            assert!(name.starts_with("gqa_g8_"), "{name}");
+        }
+    }
+
+    #[test]
+    fn baseline_operators_run_under_driver() {
+        for op in [OperatorKind::SingleTurn, OperatorKind::FixedPipeline] {
+            let mut cfg = small_config(2);
+            cfg.operator = op;
+            cfg.target_commits = 3;
+            let report = EvolutionDriver::new(cfg).run();
+            assert!(report.lineage.len() >= 1);
+        }
+    }
+
+    #[test]
+    fn lineage_persists_when_configured() {
+        let dir = std::env::temp_dir().join(format!("avo_drv_{}", std::process::id()));
+        let path = dir.join("lineage.json");
+        let mut cfg = small_config(1);
+        cfg.target_commits = 3;
+        cfg.lineage_path = Some(path.clone());
+        let report = EvolutionDriver::new(cfg).run();
+        let loaded = Lineage::load(&path).unwrap();
+        assert_eq!(loaded.len(), report.lineage.len());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

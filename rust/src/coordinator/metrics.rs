@@ -1,0 +1,108 @@
+//! Run metrics: counters and timers the driver reports at the end of a run
+//! (the paper's §4.4 scale statistics: directions explored, commits,
+//! interventions, evaluations).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::json::{Json, ToJson};
+
+/// A simple metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: BTreeMap<&'static str, u64>,
+    timers: BTreeMap<&'static str, Duration>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&mut self, name: &'static str, by: u64) {
+        *self.counters.entry(name).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Time a closure under a named timer.
+    pub fn time<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        *self.timers.entry(name).or_insert(Duration::ZERO) += start.elapsed();
+        out
+    }
+
+    pub fn elapsed(&self, name: &str) -> Duration {
+        self.timers.get(name).copied().unwrap_or(Duration::ZERO)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            (
+                "counters",
+                Json::obj_from(
+                    self.counters
+                        .iter()
+                        .map(|(k, v)| (k.to_string(), v.to_json())),
+                ),
+            ),
+            (
+                "timers_ms",
+                Json::obj_from(self.timers.iter().map(|(k, v)| {
+                    (k.to_string(), Json::Num(v.as_secs_f64() * 1e3))
+                })),
+            ),
+        ])
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::from("== metrics ==\n");
+        for (k, v) in &self.counters {
+            s.push_str(&format!("  {k:<28} {v}\n"));
+        }
+        for (k, v) in &self.timers {
+            s.push_str(&format!("  {k:<28} {:.1} ms\n", v.as_secs_f64() * 1e3));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::new();
+        m.incr("evals", 3);
+        m.incr("evals", 2);
+        assert_eq!(m.counter("evals"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn timers_accumulate_and_return_value() {
+        let mut m = Metrics::new();
+        let x = m.time("work", || {
+            std::thread::sleep(Duration::from_millis(2));
+            42
+        });
+        assert_eq!(x, 42);
+        assert!(m.elapsed("work") >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn json_and_text_reports() {
+        let mut m = Metrics::new();
+        m.incr("commits", 40);
+        let j = m.to_json();
+        assert_eq!(
+            j.get("counters").unwrap().get("commits").unwrap().as_u64(),
+            Some(40)
+        );
+        assert!(m.report().contains("commits"));
+    }
+}

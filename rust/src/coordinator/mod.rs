@@ -1,0 +1,17 @@
+//! Layer-3 coordinator: the evolution driver that ties operator, evaluator,
+//! supervisor, lineage, metrics, and persistence together, plus the
+//! parallel evaluation pool.
+//!
+//! The request path is pure Rust: Python ran once at `make artifacts`.
+//! (The async runtime that would normally be tokio is an in-tree worker
+//! pool — see Cargo.toml; the offline image vendors only the xla closure.)
+
+pub mod config;
+pub mod driver;
+pub mod metrics;
+pub mod pool;
+
+pub use config::RunConfig;
+pub use driver::{EvolutionDriver, RunReport};
+pub use metrics::Metrics;
+pub use pool::EvalPool;

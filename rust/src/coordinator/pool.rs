@@ -1,0 +1,96 @@
+//! Parallel evaluation pool: scores a batch of candidates across worker
+//! threads.  This is the coordinator's throughput substrate — the agent's
+//! inner loop is sequential by nature (each proposal conditions on the last
+//! result), but suite evaluation fans out per benchmark configuration, and
+//! the repro/bench harnesses score many genomes at once.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::kernelspec::KernelSpec;
+use crate::score::{Evaluator, Score};
+
+/// A scoped worker pool over the evaluator.
+pub struct EvalPool {
+    workers: usize,
+}
+
+impl EvalPool {
+    pub fn new(workers: usize) -> Self {
+        EvalPool { workers: workers.max(1) }
+    }
+
+    /// Evaluate candidates in parallel; result order matches input order.
+    pub fn evaluate_batch(&self, eval: &Evaluator, specs: &[KernelSpec]) -> Vec<Score> {
+        if specs.len() <= 1 || self.workers == 1 {
+            return specs.iter().map(|s| eval.evaluate(s)).collect();
+        }
+        let eval = Arc::new(eval.clone());
+        let (tx, rx) = mpsc::channel::<(usize, Score)>();
+        let next = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers.min(specs.len()) {
+                let tx = tx.clone();
+                let eval = Arc::clone(&eval);
+                let next = Arc::clone(&next);
+                let specs = &specs;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= specs.len() {
+                        break;
+                    }
+                    let score = eval.evaluate(&specs[i]);
+                    if tx.send((i, score)).is_err() {
+                        break;
+                    }
+                });
+            }
+        });
+        drop(tx);
+        let mut out: Vec<Option<Score>> = vec![None; specs.len()];
+        for (i, s) in rx {
+            out[i] = Some(s);
+        }
+        out.into_iter().map(|s| s.expect("worker died")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::score::mha_suite;
+
+    #[test]
+    fn batch_matches_sequential() {
+        let eval = Evaluator::new(mha_suite());
+        let specs = vec![
+            KernelSpec::naive(),
+            crate::baselines::fa4_genome(),
+            crate::baselines::evolved_genome(),
+            crate::baselines::cudnn_genome(),
+        ];
+        let pool = EvalPool::new(4);
+        let par = pool.evaluate_batch(&eval, &specs);
+        let seq: Vec<Score> = specs.iter().map(|s| eval.evaluate(s)).collect();
+        assert_eq!(par.len(), seq.len());
+        for (p, s) in par.iter().zip(&seq) {
+            assert_eq!(p.per_config, s.per_config);
+        }
+    }
+
+    #[test]
+    fn single_worker_degenerate() {
+        let eval = Evaluator::new(mha_suite());
+        let pool = EvalPool::new(1);
+        let out = pool.evaluate_batch(&eval, &[KernelSpec::naive()]);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].is_correct());
+    }
+
+    #[test]
+    fn empty_batch() {
+        let eval = Evaluator::new(mha_suite());
+        let pool = EvalPool::new(4);
+        assert!(pool.evaluate_batch(&eval, &[]).is_empty());
+    }
+}

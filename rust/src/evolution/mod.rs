@@ -1,0 +1,318 @@
+//! Population management: the single-lineage evolutionary regime the paper
+//! evaluates (§3.3), built on the content-addressed commit store.
+//!
+//! `P_{t+1} = Update(P_t, (x_{t+1}, f(x_{t+1})))` — the Update rule appends
+//! a candidate iff it passed correctness and matched-or-improved the
+//! running-best geomean, exactly the paper's commit criterion ("we persist
+//! a new committed version only when it passes correctness checks and
+//! matches or improves the benchmark score relative to the best committed
+//! version so far").
+
+use std::path::Path;
+
+use crate::json::{Json, ToJson};
+use crate::kernelspec::KernelSpec;
+use crate::score::Score;
+use crate::store::{Commit, CommitId, CommitStore, StoreError};
+
+/// Why a candidate was not committed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Rejection {
+    /// Failed correctness (score gated to zero).
+    Incorrect,
+    /// Correct but worse than the running best geomean.
+    NoImprovement { candidate: f64, best: f64 },
+}
+
+/// The committed lineage plus running-best bookkeeping.
+#[derive(Debug, Default, Clone)]
+pub struct Lineage {
+    pub store: CommitStore,
+    head: Option<CommitId>,
+    best: Option<(CommitId, f64)>,
+}
+
+impl Lineage {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Seed the lineage with x_0 (committed unconditionally, as the paper
+    /// seeds from a working baseline implementation).
+    pub fn seed(&mut self, spec: KernelSpec, score: Score, message: &str) -> CommitId {
+        assert!(self.store.is_empty(), "seed on non-empty lineage");
+        let g = score.geomean();
+        let id = self
+            .store
+            .commit(spec, score, None, message.to_string(), 0)
+            .expect("seed commit");
+        self.head = Some(id);
+        self.best = Some((id, g));
+        id
+    }
+
+    /// The Update rule.  Returns Ok(commit id) on acceptance.
+    pub fn update(
+        &mut self,
+        spec: KernelSpec,
+        score: Score,
+        message: &str,
+        step: usize,
+    ) -> Result<CommitId, Rejection> {
+        if !score.is_correct() {
+            return Err(Rejection::Incorrect);
+        }
+        let g = score.geomean();
+        let best = self.best_geomean();
+        if g < best {
+            return Err(Rejection::NoImprovement { candidate: g, best });
+        }
+        // Equal-score commits are allowed (the paper's plateaus "refine
+        // implementation details without measurably changing performance")
+        // but only for genomes the lineage has not seen — otherwise a
+        // neutral edit pair could ping-pong forever.
+        let strictly_better = g > best * (1.0 + 1e-12);
+        if !strictly_better && self.store.iter().any(|c| c.spec == spec) {
+            return Err(Rejection::NoImprovement { candidate: g, best });
+        }
+        match self.store.commit(spec, score, self.head, message.to_string(), step) {
+            Ok(id) => {
+                self.head = Some(id);
+                if g >= best {
+                    self.best = Some((id, g));
+                }
+                Ok(id)
+            }
+            // Same content re-proposed: treat as no improvement.
+            Err(StoreError::Duplicate(_)) => {
+                Err(Rejection::NoImprovement { candidate: g, best })
+            }
+            Err(e) => panic!("lineage commit failed: {e}"),
+        }
+    }
+
+    pub fn head(&self) -> Option<&Commit> {
+        self.head.and_then(|id| self.store.get(id))
+    }
+
+    pub fn best(&self) -> Option<&Commit> {
+        self.best.and_then(|(id, _)| self.store.get(id))
+    }
+
+    pub fn best_geomean(&self) -> f64 {
+        self.best.map(|(_, g)| g).unwrap_or(0.0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    /// All committed versions in order (v0 = seed).
+    pub fn versions(&self) -> Vec<&Commit> {
+        self.store.iter().collect()
+    }
+
+    /// The trajectory the paper's Figures 5/6 plot: per committed version,
+    /// (version index, per-config TFLOPS, running-best geomean) restricted
+    /// to causal or non-causal cells.
+    pub fn trajectory(&self, causal: bool) -> Vec<TrajectoryPoint> {
+        let mut running_best = 0.0f64;
+        self.store
+            .iter()
+            .enumerate()
+            .map(|(v, c)| {
+                let g = if causal {
+                    c.score.geomean_causal()
+                } else {
+                    c.score.geomean_noncausal()
+                };
+                let is_new_best = g > running_best;
+                running_best = running_best.max(g);
+                TrajectoryPoint {
+                    version: v,
+                    step: c.step,
+                    geomean: g,
+                    running_best,
+                    is_new_best,
+                    per_config: c
+                        .score
+                        .per_config
+                        .iter()
+                        .filter(|(n, _)| n.contains(if causal { "_c_" } else { "_nc_" }))
+                        .cloned()
+                        .collect(),
+                }
+            })
+            .collect()
+    }
+
+    /// Export the trajectory as JSON (consumed by the repro harness).
+    pub fn trajectory_json(&self, causal: bool) -> Json {
+        Json::arr(self.trajectory(causal).into_iter().map(|p| {
+            Json::obj([
+                ("version", p.version.to_json()),
+                ("step", p.step.to_json()),
+                ("geomean", p.geomean.to_json()),
+                ("running_best", p.running_best.to_json()),
+                ("is_new_best", p.is_new_best.to_json()),
+                (
+                    "per_config",
+                    Json::obj_from(
+                        p.per_config
+                            .iter()
+                            .map(|(n, t)| (n.clone(), Json::Num(*t))),
+                    ),
+                ),
+            ])
+        }))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), StoreError> {
+        self.store.save(path)
+    }
+
+    /// Rebuild a lineage (head/best bookkeeping included) from a store.
+    pub fn from_store(store: CommitStore) -> Self {
+        let head = store.last().map(|c| c.id);
+        let best = store
+            .iter()
+            .map(|c| (c.id, c.score.geomean()))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        Lineage { store, head, best }
+    }
+
+    pub fn load(path: &Path) -> Result<Self, StoreError> {
+        Ok(Self::from_store(CommitStore::load(path)?))
+    }
+}
+
+/// One point of the Figure-5/6 trajectory.
+#[derive(Debug, Clone)]
+pub struct TrajectoryPoint {
+    pub version: usize,
+    pub step: usize,
+    pub geomean: f64,
+    pub running_best: f64,
+    pub is_new_best: bool,
+    pub per_config: Vec<(String, f64)>,
+}
+
+impl Json {
+    /// Build an object from owned (key, value) pairs.
+    pub fn obj_from(entries: impl IntoIterator<Item = (String, Json)>) -> Json {
+        Json::Obj(entries.into_iter().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::score::{mha_suite, Evaluator};
+
+    fn ev() -> Evaluator {
+        Evaluator::new(mha_suite())
+    }
+
+    fn seeded() -> Lineage {
+        let mut l = Lineage::new();
+        let spec = KernelSpec::naive();
+        let score = ev().evaluate(&spec);
+        l.seed(spec, score, "seed x0");
+        l
+    }
+
+    #[test]
+    fn seed_establishes_best() {
+        let l = seeded();
+        assert_eq!(l.len(), 1);
+        assert!(l.best_geomean() > 0.0);
+        assert_eq!(l.head().unwrap().step, 0);
+    }
+
+    #[test]
+    fn update_accepts_improvement() {
+        let mut l = seeded();
+        let better = crate::baselines::evolved_genome();
+        let score = ev().evaluate(&better);
+        let g = score.geomean();
+        let id = l.update(better, score, "big jump", 1).unwrap();
+        assert_eq!(l.len(), 2);
+        assert_eq!(l.best().unwrap().id, id);
+        assert!((l.best_geomean() - g).abs() < 1e-9);
+    }
+
+    #[test]
+    fn update_rejects_regression() {
+        let mut l = seeded();
+        let better = crate::baselines::evolved_genome();
+        let score = ev().evaluate(&better);
+        l.update(better, score, "jump", 1).unwrap();
+        // Now try to commit the (much slower) naive spec again.
+        let naive_score = ev().evaluate(&KernelSpec::naive());
+        let err = l.update(KernelSpec::naive(), naive_score, "regress", 2);
+        assert!(matches!(err, Err(Rejection::NoImprovement { .. })));
+        assert_eq!(l.len(), 2);
+    }
+
+    #[test]
+    fn update_rejects_incorrect() {
+        let mut l = seeded();
+        let mut bad = crate::baselines::evolved_genome();
+        bad.rescale_mode = crate::kernelspec::RescaleMode::Guarded; // + nonblocking = race
+        let score = ev().evaluate(&bad);
+        assert_eq!(l.update(bad, score, "racy", 1), Err(Rejection::Incorrect));
+    }
+
+    #[test]
+    fn running_best_is_monotone_in_trajectory() {
+        let mut l = seeded();
+        // Walk a few intermediate genomes of increasing quality.
+        let mut spec = KernelSpec::naive();
+        spec.kv_pipeline_depth = 2;
+        let s = ev().evaluate(&spec);
+        l.update(spec.clone(), s, "double buffer", 1).unwrap();
+        spec.q_stages = 2;
+        let s = ev().evaluate(&spec);
+        l.update(spec.clone(), s, "dual q", 2).unwrap();
+        for causal in [false, true] {
+            let traj = l.trajectory(causal);
+            assert_eq!(traj.len(), 3);
+            for w in traj.windows(2) {
+                assert!(w[1].running_best >= w[0].running_best - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn trajectory_json_shape() {
+        let l = seeded();
+        let j = l.trajectory_json(true);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert!(arr[0].get("running_best").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            arr[0].get("per_config").unwrap().as_obj().unwrap().len(),
+            4 // 4 causal cells
+        );
+    }
+
+    #[test]
+    fn save_load_preserves_best() {
+        let mut l = seeded();
+        let better = crate::baselines::evolved_genome();
+        let score = ev().evaluate(&better);
+        l.update(better, score, "jump", 1).unwrap();
+        let dir = std::env::temp_dir().join(format!("avo_lin_{}", std::process::id()));
+        let path = dir.join("l.json");
+        l.save(&path).unwrap();
+        let loaded = Lineage::load(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert!((loaded.best_geomean() - l.best_geomean()).abs() < 1e-9);
+        assert_eq!(loaded.head().unwrap().id, l.head().unwrap().id);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,299 @@
+//! The mutation catalogue: every legal edit to the genome, grouped by the
+//! optimization *direction* it pursues.
+//!
+//! Directions are the vocabulary shared by the profiler's bottleneck report
+//! ([`crate::sim::profile`]), the knowledge base's edit hints
+//! ([`crate::knowledge`]), and the agent's memory of what has been tried —
+//! mirroring how the paper's agent moves between "optimization directions"
+//! (>500 explored over the 7-day run).
+
+
+use super::{
+    FenceKind, KernelSpec, MaskingMode, RescaleMode, Scheduling, SoftmaxMode, BLOCK_SIZES,
+};
+
+/// An optimization direction — the unit of agent exploration and of the
+/// supervisor's unproductive-cycle accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Direction {
+    /// Tile-size tuning (block_q / block_k).
+    Tiling,
+    /// TMA staging depth, dual Q-stage, async epilogue.
+    Pipelining,
+    /// Online-softmax formulation (single-pass, packed fragments).
+    SoftmaxAlgo,
+    /// Causal-mask realization (bitmask, early exit).
+    Masking,
+    /// Warp synchronization & memory ordering (rescale strategy, fences).
+    Synchronization,
+    /// Cross-warp-group overlap (correction/MMA).
+    Overlap,
+    /// Register allocation across warp groups.
+    Registers,
+    /// CTA scheduling policy.
+    Scheduling,
+    /// QK/PV MMA issue order.
+    MmaIssue,
+}
+
+impl Direction {
+    pub const ALL: [Direction; 9] = [
+        Direction::Tiling,
+        Direction::Pipelining,
+        Direction::SoftmaxAlgo,
+        Direction::Masking,
+        Direction::Synchronization,
+        Direction::Overlap,
+        Direction::Registers,
+        Direction::Scheduling,
+        Direction::MmaIssue,
+    ];
+}
+
+impl std::fmt::Display for Direction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// How an edit changes the genome (the "patch" the agent writes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EditKind {
+    SetBlockQ(u32),
+    SetBlockK(u32),
+    SetSoftmaxMode(SoftmaxMode),
+    SetRescaleMode(RescaleMode),
+    SetMaskingMode(MaskingMode),
+    SetEarlyExit(bool),
+    SetQStages(u32),
+    SetPipelineDepth(u32),
+    SetInterleave(bool),
+    SetCorrectionOverlap(bool),
+    SetFence(FenceKind),
+    SetPacked(bool),
+    SetEpilogueAsync(bool),
+    SetScheduling(Scheduling),
+    /// Move warp-registers between groups (deltas are per-warp).
+    ShiftRegisters { softmax: i32, correction: i32, other: i32 },
+}
+
+/// A catalogued edit: the patch plus its direction and a human-readable
+/// rationale (what the agent would write in its commit message).
+#[derive(Debug, Clone)]
+pub struct Edit {
+    pub kind: EditKind,
+    pub direction: Direction,
+    pub rationale: &'static str,
+}
+
+impl Edit {
+    /// Apply the patch, producing the candidate genome.  Application is
+    /// total — invalid results are caught by `KernelSpec::validate`, which
+    /// is exactly how the paper's agent experiences a compile error.
+    pub fn apply(&self, spec: &KernelSpec) -> KernelSpec {
+        let mut s = spec.clone();
+        match self.kind {
+            EditKind::SetBlockQ(v) => s.block_q = v,
+            EditKind::SetBlockK(v) => s.block_k = v,
+            EditKind::SetSoftmaxMode(m) => s.softmax_mode = m,
+            EditKind::SetRescaleMode(m) => s.rescale_mode = m,
+            EditKind::SetMaskingMode(m) => s.masking_mode = m,
+            EditKind::SetEarlyExit(b) => s.early_exit = b,
+            EditKind::SetQStages(v) => s.q_stages = v,
+            EditKind::SetPipelineDepth(v) => s.kv_pipeline_depth = v,
+            EditKind::SetInterleave(b) => s.qk_pv_interleave = b,
+            EditKind::SetCorrectionOverlap(b) => s.correction_overlap = b,
+            EditKind::SetFence(k) => s.fence_kind = k,
+            EditKind::SetPacked(b) => s.softmax_packed = b,
+            EditKind::SetEpilogueAsync(b) => s.epilogue_async = b,
+            EditKind::SetScheduling(p) => s.scheduling = p,
+            EditKind::ShiftRegisters { softmax, correction, other } => {
+                s.registers.softmax = add_clamped(s.registers.softmax, softmax);
+                s.registers.correction = add_clamped(s.registers.correction, correction);
+                s.registers.other = add_clamped(s.registers.other, other);
+            }
+        }
+        s
+    }
+
+    /// Is the edit a no-op on this genome (already at the target value)?
+    pub fn is_noop(&self, spec: &KernelSpec) -> bool {
+        self.apply(spec) == *spec
+    }
+}
+
+fn add_clamped(base: u32, delta: i32) -> u32 {
+    let v = base as i64 + delta as i64;
+    v.clamp(0, 512) as u32
+}
+
+/// The full mutation catalogue.
+pub fn all_edits() -> Vec<Edit> {
+    let mut out = Vec::new();
+    let e = |kind, direction, rationale| Edit { kind, direction, rationale };
+
+    for &b in &BLOCK_SIZES {
+        out.push(e(EditKind::SetBlockQ(b), Direction::Tiling,
+                   "retile Q to change MMA shape / occupancy trade-off"));
+        out.push(e(EditKind::SetBlockK(b), Direction::Tiling,
+                   "retile K to change score-tile width and smem pressure"));
+    }
+
+    out.push(e(EditKind::SetQStages(2), Direction::Pipelining,
+               "dual Q-stage: two Q-tiles in flight per CTA (FA4 design)"));
+    out.push(e(EditKind::SetQStages(1), Direction::Pipelining,
+               "single Q-stage: halve smem staging, simpler handoffs"));
+    for d in 1..=4u32 {
+        out.push(e(EditKind::SetPipelineDepth(d), Direction::Pipelining,
+                   "retune TMA staging depth to hide K/V load latency"));
+    }
+    out.push(e(EditKind::SetEpilogueAsync(true), Direction::Pipelining,
+               "overlap output TMA store with the next tile's prologue"));
+    out.push(e(EditKind::SetEpilogueAsync(false), Direction::Pipelining,
+               "serialize epilogue (diagnostic simplification)"));
+
+    out.push(e(EditKind::SetSoftmaxMode(SoftmaxMode::SinglePass), Direction::SoftmaxAlgo,
+               "restructure to single-pass exp2-fused online softmax (v13)"));
+    out.push(e(EditKind::SetSoftmaxMode(SoftmaxMode::TwoPass), Direction::SoftmaxAlgo,
+               "revert to classic two-pass online softmax"));
+    out.push(e(EditKind::SetPacked(true), Direction::SoftmaxAlgo,
+               "process score fragments with packed 2-wide arithmetic; \
+                lowers peak register demand"));
+    out.push(e(EditKind::SetPacked(false), Direction::SoftmaxAlgo,
+               "unpack softmax arithmetic (diagnostic)"));
+
+    out.push(e(EditKind::SetMaskingMode(MaskingMode::Bitmask), Direction::Masking,
+               "precompute block bitmask; enables masked-block fast paths (v8)"));
+    out.push(e(EditKind::SetMaskingMode(MaskingMode::Arith), Direction::Masking,
+               "additive -inf masking (simplest correct form)"));
+    out.push(e(EditKind::SetEarlyExit(true), Direction::Masking,
+               "bound causal K loop at the diagonal: skip fully-masked blocks"));
+    out.push(e(EditKind::SetEarlyExit(false), Direction::Masking,
+               "iterate all K blocks (diagnostic)"));
+
+    out.push(e(EditKind::SetRescaleMode(RescaleMode::Branchless), Direction::Synchronization,
+               "branchless speculative rescale: predicated select of 1.0 \
+                removes the per-iteration warp vote (v20)"));
+    out.push(e(EditKind::SetRescaleMode(RescaleMode::Guarded), Direction::Synchronization,
+               "guard rescale behind a warp-uniform branch (skips work)"));
+    out.push(e(EditKind::SetFence(FenceKind::NonBlocking), Direction::Synchronization,
+               "relax correction-path fence to ordering-only; safe only \
+                under warp-uniform control flow"));
+    out.push(e(EditKind::SetFence(FenceKind::Blocking), Direction::Synchronization,
+               "full write-drain fence (always safe)"));
+
+    out.push(e(EditKind::SetCorrectionOverlap(true), Direction::Overlap,
+               "start normalizing stage A while stage B's PV GEMM runs (v30)"));
+    out.push(e(EditKind::SetCorrectionOverlap(false), Direction::Overlap,
+               "serialize correction after both PV GEMMs (diagnostic)"));
+
+    out.push(e(EditKind::SetInterleave(true), Direction::MmaIssue,
+               "interleave QK and PV MMA issue to keep the tensor-core pipe \
+                full across iterations (v8)"));
+    out.push(e(EditKind::SetInterleave(false), Direction::MmaIssue,
+               "serialize QK then PV (diagnostic)"));
+
+    for (s, c, o) in [
+        (-8, 8, 8),   // v33: the discovered rebalance
+        (-16, 16, 16),
+        (-8, 16, 0),
+        (8, -8, -8),
+        (0, 8, 8),    // overflows the budget: a repairable mistake
+        (-24, 24, 24),
+        (0, -8, 8),
+        (-8, 0, 16),
+    ] {
+        out.push(e(
+            EditKind::ShiftRegisters { softmax: s, correction: c, other: o },
+            Direction::Registers,
+            "rebalance warp-registers toward the spilling group",
+        ));
+    }
+
+    out.push(e(EditKind::SetScheduling(Scheduling::Persistent), Direction::Scheduling,
+               "persistent CTAs: balance the causal triangle across SMs"));
+    out.push(e(EditKind::SetScheduling(Scheduling::PerTile), Direction::Scheduling,
+               "per-tile CTAs: rely on the hardware scheduler"));
+
+    out
+}
+
+/// Catalogue restricted to one direction (what KB retrieval hands back).
+pub fn edits_in_direction(dir: Direction) -> Vec<Edit> {
+    all_edits().into_iter().filter(|e| e.direction == dir).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalogue_covers_every_direction() {
+        let edits = all_edits();
+        for d in Direction::ALL {
+            assert!(
+                edits.iter().any(|e| e.direction == d),
+                "no edits for direction {d:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn apply_set_block_q() {
+        let s = KernelSpec::naive();
+        let e = Edit {
+            kind: EditKind::SetBlockQ(128),
+            direction: Direction::Tiling,
+            rationale: "",
+        };
+        assert_eq!(e.apply(&s).block_q, 128);
+    }
+
+    #[test]
+    fn noop_detection() {
+        let s = KernelSpec::naive();
+        let e = Edit {
+            kind: EditKind::SetBlockQ(s.block_q),
+            direction: Direction::Tiling,
+            rationale: "",
+        };
+        assert!(e.is_noop(&s));
+    }
+
+    #[test]
+    fn v33_rebalance_reaches_published_plan() {
+        let mut s = KernelSpec::naive(); // starts at FA4 192/80/48
+        let e = Edit {
+            kind: EditKind::ShiftRegisters { softmax: -8, correction: 8, other: 8 },
+            direction: Direction::Registers,
+            rationale: "",
+        };
+        s = e.apply(&s);
+        assert_eq!(s.registers, super::super::RegisterPlan::rebalanced());
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn register_overflow_edit_is_catchable() {
+        let s = KernelSpec::naive();
+        let e = Edit {
+            kind: EditKind::ShiftRegisters { softmax: 0, correction: 8, other: 8 },
+            direction: Direction::Registers,
+            rationale: "",
+        };
+        let bad = e.apply(&s);
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn shift_clamps_at_zero() {
+        let mut s = KernelSpec::naive();
+        s.registers.other = 24;
+        let e = Edit {
+            kind: EditKind::ShiftRegisters { softmax: 0, correction: 0, other: -100 },
+            direction: Direction::Registers,
+            rationale: "",
+        };
+        assert_eq!(e.apply(&s).registers.other, 0); // then caught by validate
+    }
+}

@@ -1,0 +1,244 @@
+//! JSON round-tripping for the genome (persistence + content hashing).
+
+use crate::json::{FromJson, Json, ToJson};
+
+use super::{
+    FenceKind, KernelSpec, MaskingMode, RegisterPlan, RescaleMode, Scheduling, SoftmaxMode,
+    SpecError,
+};
+
+macro_rules! enum_json {
+    ($ty:ident { $($variant:ident => $name:literal),+ $(,)? }) => {
+        impl ToJson for $ty {
+            fn to_json(&self) -> Json {
+                Json::Str(match self { $($ty::$variant => $name),+ }.to_string())
+            }
+        }
+        impl FromJson for $ty {
+            fn from_json(v: &Json) -> Result<Self, String> {
+                match v.as_str() {
+                    $(Some($name) => Ok($ty::$variant),)+
+                    other => Err(format!(
+                        concat!("bad ", stringify!($ty), ": {:?}"), other
+                    )),
+                }
+            }
+        }
+    };
+}
+
+enum_json!(SoftmaxMode { TwoPass => "two_pass", SinglePass => "single_pass" });
+enum_json!(RescaleMode { Guarded => "guarded", Branchless => "branchless" });
+enum_json!(FenceKind { Blocking => "blocking", NonBlocking => "non_blocking" });
+enum_json!(MaskingMode { Arith => "arith", Bitmask => "bitmask" });
+enum_json!(Scheduling { PerTile => "per_tile", Persistent => "persistent" });
+
+impl ToJson for RegisterPlan {
+    fn to_json(&self) -> Json {
+        Json::obj([
+            ("softmax", self.softmax.to_json()),
+            ("correction", self.correction.to_json()),
+            ("other", self.other.to_json()),
+        ])
+    }
+}
+
+impl FromJson for RegisterPlan {
+    fn from_json(v: &Json) -> Result<Self, String> {
+        let field = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_u64)
+                .map(|x| x as u32)
+                .ok_or_else(|| format!("RegisterPlan missing {k}"))
+        };
+        Ok(RegisterPlan {
+            softmax: field("softmax")?,
+            correction: field("correction")?,
+            other: field("other")?,
+        })
+    }
+}
+
+impl ToJson for KernelSpec {
+    fn to_json(&self) -> Json {
+        Json::obj([
+            ("block_q", self.block_q.to_json()),
+            ("block_k", self.block_k.to_json()),
+            ("softmax_mode", self.softmax_mode.to_json()),
+            ("rescale_mode", self.rescale_mode.to_json()),
+            ("masking_mode", self.masking_mode.to_json()),
+            ("early_exit", self.early_exit.to_json()),
+            ("q_stages", self.q_stages.to_json()),
+            ("kv_pipeline_depth", self.kv_pipeline_depth.to_json()),
+            ("qk_pv_interleave", self.qk_pv_interleave.to_json()),
+            ("correction_overlap", self.correction_overlap.to_json()),
+            ("fence_kind", self.fence_kind.to_json()),
+            ("softmax_packed", self.softmax_packed.to_json()),
+            ("epilogue_async", self.epilogue_async.to_json()),
+            ("scheduling", self.scheduling.to_json()),
+            ("registers", self.registers.to_json()),
+        ])
+    }
+}
+
+impl FromJson for KernelSpec {
+    fn from_json(v: &Json) -> Result<Self, String> {
+        let num = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_u64)
+                .map(|x| x as u32)
+                .ok_or_else(|| format!("KernelSpec missing {k}"))
+        };
+        let boolean = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_bool)
+                .ok_or_else(|| format!("KernelSpec missing {k}"))
+        };
+        let sub = |k: &str| v.get(k).ok_or_else(|| format!("KernelSpec missing {k}"));
+        Ok(KernelSpec {
+            block_q: num("block_q")?,
+            block_k: num("block_k")?,
+            softmax_mode: SoftmaxMode::from_json(sub("softmax_mode")?)?,
+            rescale_mode: RescaleMode::from_json(sub("rescale_mode")?)?,
+            masking_mode: MaskingMode::from_json(sub("masking_mode")?)?,
+            early_exit: boolean("early_exit")?,
+            q_stages: num("q_stages")?,
+            kv_pipeline_depth: num("kv_pipeline_depth")?,
+            qk_pv_interleave: boolean("qk_pv_interleave")?,
+            correction_overlap: boolean("correction_overlap")?,
+            fence_kind: FenceKind::from_json(sub("fence_kind")?)?,
+            softmax_packed: boolean("softmax_packed")?,
+            epilogue_async: boolean("epilogue_async")?,
+            scheduling: Scheduling::from_json(sub("scheduling")?)?,
+            registers: RegisterPlan::from_json(sub("registers")?)?,
+        })
+    }
+}
+
+impl ToJson for SpecError {
+    fn to_json(&self) -> Json {
+        match self {
+            SpecError::BadBlockShape { block_q, block_k } => Json::obj([
+                ("kind", Json::Str("bad_block_shape".into())),
+                ("block_q", block_q.to_json()),
+                ("block_k", block_k.to_json()),
+            ]),
+            SpecError::RegisterBudgetExceeded { total } => Json::obj([
+                ("kind", Json::Str("register_budget_exceeded".into())),
+                ("total", total.to_json()),
+            ]),
+            SpecError::RegisterUnderMinimum { group, regs } => Json::obj([
+                ("kind", Json::Str("register_under_minimum".into())),
+                ("group", Json::Str(group.to_string())),
+                ("regs", regs.to_json()),
+            ]),
+            SpecError::SmemOverflow { bytes, limit } => Json::obj([
+                ("kind", Json::Str("smem_overflow".into())),
+                ("bytes", bytes.to_json()),
+                ("limit", limit.to_json()),
+            ]),
+            SpecError::OverlapRequiresDualQ => {
+                Json::obj([("kind", Json::Str("overlap_requires_dual_q".into()))])
+            }
+            SpecError::BitmaskTooWide { block_k } => Json::obj([
+                ("kind", Json::Str("bitmask_too_wide".into())),
+                ("block_k", block_k.to_json()),
+            ]),
+            SpecError::BadPipelineDepth { depth } => Json::obj([
+                ("kind", Json::Str("bad_pipeline_depth".into())),
+                ("depth", depth.to_json()),
+            ]),
+            SpecError::BadQStages { stages } => Json::obj([
+                ("kind", Json::Str("bad_q_stages".into())),
+                ("stages", stages.to_json()),
+            ]),
+        }
+    }
+}
+
+impl FromJson for SpecError {
+    fn from_json(v: &Json) -> Result<Self, String> {
+        let num = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_u64)
+                .map(|x| x as u32)
+                .ok_or_else(|| format!("SpecError missing {k}"))
+        };
+        match v.get("kind").and_then(Json::as_str) {
+            Some("bad_block_shape") => Ok(SpecError::BadBlockShape {
+                block_q: num("block_q")?,
+                block_k: num("block_k")?,
+            }),
+            Some("register_budget_exceeded") => {
+                Ok(SpecError::RegisterBudgetExceeded { total: num("total")? })
+            }
+            Some("register_under_minimum") => {
+                let group = match v.get("group").and_then(Json::as_str) {
+                    Some("softmax") => "softmax",
+                    Some("correction") => "correction",
+                    Some("other") => "other",
+                    g => return Err(format!("bad group {g:?}")),
+                };
+                Ok(SpecError::RegisterUnderMinimum { group, regs: num("regs")? })
+            }
+            Some("smem_overflow") => Ok(SpecError::SmemOverflow {
+                bytes: num("bytes")?,
+                limit: num("limit")?,
+            }),
+            Some("overlap_requires_dual_q") => Ok(SpecError::OverlapRequiresDualQ),
+            Some("bitmask_too_wide") => {
+                Ok(SpecError::BitmaskTooWide { block_k: num("block_k")? })
+            }
+            Some("bad_pipeline_depth") => {
+                Ok(SpecError::BadPipelineDepth { depth: num("depth")? })
+            }
+            Some("bad_q_stages") => Ok(SpecError::BadQStages { stages: num("stages")? }),
+            other => Err(format!("bad SpecError kind {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::{parse, FromJson, ToJson};
+
+    #[test]
+    fn spec_json_roundtrip() {
+        for spec in [
+            KernelSpec::naive(),
+            crate::baselines::fa4_genome(),
+            crate::baselines::evolved_genome(),
+        ] {
+            let text = spec.to_json().pretty();
+            let back = KernelSpec::from_json(&parse(&text).unwrap()).unwrap();
+            assert_eq!(spec, back);
+        }
+    }
+
+    #[test]
+    fn missing_field_rejected() {
+        let mut j = KernelSpec::naive().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("fence_kind");
+        }
+        assert!(KernelSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn bad_enum_rejected() {
+        let mut j = KernelSpec::naive().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("fence_kind".into(), Json::Str("sideways".into()));
+        }
+        assert!(KernelSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn hash_stable_across_roundtrip() {
+        let spec = crate::baselines::evolved_genome();
+        let back =
+            KernelSpec::from_json(&parse(&spec.to_json().compact()).unwrap()).unwrap();
+        assert_eq!(spec.content_hash(), back.content_hash());
+    }
+}

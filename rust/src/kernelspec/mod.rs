@@ -1,0 +1,425 @@
+//! The kernel genome: a typed representation of one attention-kernel
+//! implementation — the `x_i` of the paper's population.
+//!
+//! The paper's agent edits CUDA source with inline PTX; what evolution
+//! *observes* of those edits is (a) whether the kernel is still correct and
+//! (b) how fast it runs.  The genome captures every degree of freedom the
+//! paper's §5 analysis shows the agent manipulating, split into the
+//! *algorithmic* fields (realized 1:1 by the Pallas kernel in
+//! `python/compile/kernels/attention.py` and verified against the jnp
+//! oracle) and the *micro-architectural* fields (priced by the cycle model
+//! in [`crate::sim::pipeline`] and semantically checked by
+//! [`crate::sim::functional`], which actually corrupts results under hazard
+//! combinations such as a non-blocking fence on a divergent path).
+
+mod edits;
+mod json_impl;
+mod source;
+
+pub use edits::{Edit, EditKind, all_edits, edits_in_direction, Direction};
+pub use source::to_source;
+
+
+/// Online-softmax formulation (§5 / v13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SoftmaxMode {
+    /// Classic two-pass per K-block: max update, exponentiate, then sum.
+    TwoPass,
+    /// v13: restructured single-pass computation (exp2-fused max+sum).
+    SinglePass,
+}
+
+/// Accumulator-rescale strategy in the correction path (§5.1 / v19→v20).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RescaleMode {
+    /// v19: conditional branch skips the rescale when the running maximum
+    /// is unchanged — costs a warp-synchronizing vote every iteration.
+    Guarded,
+    /// v20: branchless speculative path — always multiply, predicated
+    /// select substitutes 1.0; removes warp divergence in the correction
+    /// path, enabling the lighter fence.
+    Branchless,
+}
+
+/// Memory fence used on the correction path (§5.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FenceKind {
+    /// Stalls until all pending memory writes complete.
+    Blocking,
+    /// Merely enforces ordering; **only safe when the whole warp follows
+    /// the same control flow** (i.e. with [`RescaleMode::Branchless`]) —
+    /// otherwise the functional simulator races and corrupts the output.
+    NonBlocking,
+}
+
+/// Causal-mask realization (v8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MaskingMode {
+    /// Additive large-negative term on masked scores.
+    Arith,
+    /// v8: precomputed boolean block bitmask + predicated select; required
+    /// for correctness when QK/PV interleaving reorders the mask point.
+    Bitmask,
+}
+
+/// CTA scheduling policy across the (batch, head, Q-tile) work grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheduling {
+    /// One CTA per tile, hardware scheduler; causal tiles of different cost
+    /// quantize into waves (tail imbalance).
+    PerTile,
+    /// Persistent CTAs pulling tiles from a global counter; balances the
+    /// causal triangle across SMs.
+    Persistent,
+}
+
+/// Register allocation per warp group, in warp-registers out of the 2048
+/// the SM partitions across groups (§5.3): 8 softmax warps, 4 correction
+/// warps, 4 load/epilogue warps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RegisterPlan {
+    pub softmax: u32,
+    pub correction: u32,
+    pub other: u32,
+}
+
+impl RegisterPlan {
+    pub const WARPS_SOFTMAX: u32 = 8;
+    pub const WARPS_CORRECTION: u32 = 4;
+    pub const WARPS_OTHER: u32 = 4;
+    pub const SM_BUDGET: u32 = 2048;
+
+    /// Total warp-registers consumed out of the per-SM budget.
+    pub fn total(&self) -> u32 {
+        Self::WARPS_SOFTMAX * self.softmax
+            + Self::WARPS_CORRECTION * self.correction
+            + Self::WARPS_OTHER * self.other
+    }
+
+    /// FlashAttention-4's published split (§5.3).
+    pub fn fa4() -> Self {
+        RegisterPlan { softmax: 192, correction: 80, other: 48 }
+    }
+
+    /// The v33 rebalanced split discovered by the agent.
+    pub fn rebalanced() -> Self {
+        RegisterPlan { softmax: 184, correction: 88, other: 56 }
+    }
+}
+
+/// One attention-kernel implementation (the genome).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct KernelSpec {
+    // --- algorithmic (mirrored by the Pallas kernel) ---
+    pub block_q: u32,
+    pub block_k: u32,
+    pub softmax_mode: SoftmaxMode,
+    pub rescale_mode: RescaleMode,
+    pub masking_mode: MaskingMode,
+    /// Causal only: bound the K loop at the diagonal instead of masking
+    /// fully-masked tail blocks.
+    pub early_exit: bool,
+
+    // --- micro-architectural (priced by the cycle model) ---
+    /// Q-tiles processed concurrently per CTA (FA4's dual Q-stage = 2).
+    pub q_stages: u32,
+    /// K/V TMA staging depth (double/triple buffering).
+    pub kv_pipeline_depth: u32,
+    /// v8: issue the next QK GEMM while the current PV GEMM drains.
+    pub qk_pv_interleave: bool,
+    /// v30: let the correction warp normalize stage A while stage B's PV
+    /// GEMM runs (requires `q_stages == 2`).
+    pub correction_overlap: bool,
+    /// Fence on the correction path.
+    pub fence_kind: FenceKind,
+    /// Softmax processes score fragments with packed 2-wide arithmetic —
+    /// lowers peak register demand (what made v33's rebalance viable).
+    pub softmax_packed: bool,
+    /// Overlap the output epilogue (TMA store) with the next tile's work.
+    pub epilogue_async: bool,
+    pub scheduling: Scheduling,
+    pub registers: RegisterPlan,
+}
+
+/// Structural validation failure — the "compile error" class.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpecError {
+    /// Block sizes must be in the supported power-of-two set.
+    BadBlockShape { block_q: u32, block_k: u32 },
+    /// Register plan exceeds the 2048 warp-register SM budget.
+    RegisterBudgetExceeded { total: u32 },
+    /// A warp group was given fewer registers than the ABI minimum (24).
+    RegisterUnderMinimum { group: &'static str, regs: u32 },
+    /// Shared-memory staging exceeds the 228 KiB SM limit.
+    SmemOverflow { bytes: u32, limit: u32 },
+    /// Correction/MMA overlap requires the dual Q-stage pipeline.
+    OverlapRequiresDualQ,
+    /// The block bitmask predicate file holds 128 columns max.
+    BitmaskTooWide { block_k: u32 },
+    /// Pipeline depth out of the supported 1..=4 range.
+    BadPipelineDepth { depth: u32 },
+    /// Q-stage count out of the supported 1..=2 range.
+    BadQStages { stages: u32 },
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecError::BadBlockShape { block_q, block_k } => {
+                write!(f, "unsupported block shape {block_q}x{block_k}")
+            }
+            SpecError::RegisterBudgetExceeded { total } => {
+                write!(f, "register plan uses {total} > 2048 warp-registers")
+            }
+            SpecError::RegisterUnderMinimum { group, regs } => {
+                write!(f, "{group} warp group below ABI minimum: {regs} < 24")
+            }
+            SpecError::SmemOverflow { bytes, limit } => {
+                write!(f, "smem staging {bytes} B exceeds {limit} B")
+            }
+            SpecError::OverlapRequiresDualQ => {
+                write!(f, "correction/MMA overlap requires q_stages == 2")
+            }
+            SpecError::BitmaskTooWide { block_k } => {
+                write!(f, "bitmask masking limited to block_k <= 128, got {block_k}")
+            }
+            SpecError::BadPipelineDepth { depth } => {
+                write!(f, "kv_pipeline_depth {depth} outside 1..=4")
+            }
+            SpecError::BadQStages { stages } => {
+                write!(f, "q_stages {stages} outside 1..=2")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// Supported tile extents (MXU/tensor-core aligned powers of two).
+pub const BLOCK_SIZES: [u32; 4] = [32, 64, 128, 256];
+
+/// Shared-memory limit per SM (Blackwell-class), bytes.
+pub const SMEM_LIMIT: u32 = 228 * 1024;
+
+/// Head dimension the paper benchmarks (fixed across all experiments).
+pub const HEAD_DIM: u32 = 128;
+
+impl KernelSpec {
+    /// The seed program `x_0`: a deliberately naive but correct kernel —
+    /// single Q-stage, unbuffered loads, guarded rescale with a blocking
+    /// fence, arithmetic masking, FA4's register split.
+    pub fn naive() -> Self {
+        KernelSpec {
+            block_q: 64,
+            block_k: 64,
+            softmax_mode: SoftmaxMode::TwoPass,
+            rescale_mode: RescaleMode::Guarded,
+            masking_mode: MaskingMode::Arith,
+            early_exit: false,
+            q_stages: 1,
+            kv_pipeline_depth: 1,
+            qk_pv_interleave: false,
+            correction_overlap: false,
+            fence_kind: FenceKind::Blocking,
+            softmax_packed: false,
+            epilogue_async: false,
+            scheduling: Scheduling::PerTile,
+            registers: RegisterPlan::fa4(),
+        }
+    }
+
+    /// Shared-memory staging footprint in bytes: Q tiles for each Q-stage
+    /// plus K+V blocks for each pipeline stage (bf16).  Score tiles and
+    /// accumulators live in Blackwell's tensor memory (TMEM), not smem.
+    pub fn smem_bytes(&self) -> u32 {
+        let d = HEAD_DIM;
+        let q = self.q_stages * self.block_q * d * 2;
+        let kv = self.kv_pipeline_depth * 2 * self.block_k * d * 2;
+        q + kv
+    }
+
+    /// Structural validation — every error is a distinct diagnosis class
+    /// the agent's repair table understands.
+    pub fn validate(&self) -> Result<(), SpecError> {
+        if !BLOCK_SIZES.contains(&self.block_q) || !BLOCK_SIZES.contains(&self.block_k) {
+            return Err(SpecError::BadBlockShape {
+                block_q: self.block_q,
+                block_k: self.block_k,
+            });
+        }
+        if !(1..=2).contains(&self.q_stages) {
+            return Err(SpecError::BadQStages { stages: self.q_stages });
+        }
+        if !(1..=4).contains(&self.kv_pipeline_depth) {
+            return Err(SpecError::BadPipelineDepth { depth: self.kv_pipeline_depth });
+        }
+        for (group, regs) in [
+            ("softmax", self.registers.softmax),
+            ("correction", self.registers.correction),
+            ("other", self.registers.other),
+        ] {
+            if regs < 24 {
+                return Err(SpecError::RegisterUnderMinimum { group, regs });
+            }
+        }
+        let total = self.registers.total();
+        if total > RegisterPlan::SM_BUDGET {
+            return Err(SpecError::RegisterBudgetExceeded { total });
+        }
+        if self.correction_overlap && self.q_stages != 2 {
+            return Err(SpecError::OverlapRequiresDualQ);
+        }
+        if self.masking_mode == MaskingMode::Bitmask && self.block_k > 128 {
+            return Err(SpecError::BitmaskTooWide { block_k: self.block_k });
+        }
+        let smem = self.smem_bytes();
+        if smem > SMEM_LIMIT {
+            return Err(SpecError::SmemOverflow { bytes: smem, limit: SMEM_LIMIT });
+        }
+        Ok(())
+    }
+
+    /// Stable content hash (FNV-1a over the canonical JSON encoding) —
+    /// the commit id basis in [`crate::store`].
+    pub fn content_hash(&self) -> u64 {
+        use crate::json::ToJson;
+        let bytes = self.to_json().compact();
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in bytes.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    /// Uniform crossover: each field from one of the two parents, chosen by
+    /// the given bit source (the agent passes its RNG).  Mirrors the paper's
+    /// agent porting a mechanism from an earlier lineage member.
+    pub fn crossover(&self, other: &KernelSpec, rng: &mut crate::prng::Rng) -> KernelSpec {
+        macro_rules! pick {
+            ($field:ident) => {
+                if rng.chance(0.5) { self.$field } else { other.$field }
+            };
+        }
+        KernelSpec {
+            block_q: pick!(block_q),
+            block_k: pick!(block_k),
+            softmax_mode: pick!(softmax_mode),
+            rescale_mode: pick!(rescale_mode),
+            masking_mode: pick!(masking_mode),
+            early_exit: pick!(early_exit),
+            q_stages: pick!(q_stages),
+            kv_pipeline_depth: pick!(kv_pipeline_depth),
+            qk_pv_interleave: pick!(qk_pv_interleave),
+            correction_overlap: pick!(correction_overlap),
+            fence_kind: pick!(fence_kind),
+            softmax_packed: pick!(softmax_packed),
+            epilogue_async: pick!(epilogue_async),
+            scheduling: pick!(scheduling),
+            registers: pick!(registers),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_is_valid() {
+        KernelSpec::naive().validate().unwrap();
+    }
+
+    #[test]
+    fn fa4_register_plan_fills_budget_exactly() {
+        assert_eq!(RegisterPlan::fa4().total(), 2048);
+        assert_eq!(RegisterPlan::rebalanced().total(), 2048);
+    }
+
+    #[test]
+    fn rejects_register_overflow() {
+        let mut s = KernelSpec::naive();
+        s.registers = RegisterPlan { softmax: 200, correction: 100, other: 48 };
+        assert!(matches!(
+            s.validate(),
+            Err(SpecError::RegisterBudgetExceeded { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_register_under_minimum() {
+        let mut s = KernelSpec::naive();
+        s.registers = RegisterPlan { softmax: 192, correction: 16, other: 48 };
+        assert!(matches!(
+            s.validate(),
+            Err(SpecError::RegisterUnderMinimum { group: "correction", .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_block_shape() {
+        let mut s = KernelSpec::naive();
+        s.block_q = 100;
+        assert!(matches!(s.validate(), Err(SpecError::BadBlockShape { .. })));
+    }
+
+    #[test]
+    fn rejects_overlap_without_dual_q() {
+        let mut s = KernelSpec::naive();
+        s.correction_overlap = true;
+        assert_eq!(s.validate(), Err(SpecError::OverlapRequiresDualQ));
+        s.q_stages = 2;
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_wide_bitmask() {
+        let mut s = KernelSpec::naive();
+        s.masking_mode = MaskingMode::Bitmask;
+        s.block_k = 256;
+        assert_eq!(s.validate(), Err(SpecError::BitmaskTooWide { block_k: 256 }));
+    }
+
+    #[test]
+    fn rejects_smem_overflow() {
+        let mut s = KernelSpec::naive();
+        s.block_q = 256;
+        s.block_k = 256;
+        s.q_stages = 2;
+        s.kv_pipeline_depth = 4;
+        // 2*256*128*2 + 4*2*256*128*2 = 131072 + 524288 > 228 KiB
+        assert!(matches!(s.validate(), Err(SpecError::SmemOverflow { .. })));
+    }
+
+    #[test]
+    fn content_hash_is_stable_and_sensitive() {
+        let a = KernelSpec::naive();
+        let mut b = a.clone();
+        assert_eq!(a.content_hash(), b.content_hash());
+        b.block_q = 128;
+        assert_ne!(a.content_hash(), b.content_hash());
+    }
+
+    #[test]
+    fn crossover_fields_come_from_parents() {
+        let mut rng = crate::prng::Rng::new(3);
+        let a = KernelSpec::naive();
+        let mut b = a.clone();
+        b.block_q = 128;
+        b.softmax_mode = SoftmaxMode::SinglePass;
+        for _ in 0..32 {
+            let c = a.crossover(&b, &mut rng);
+            assert!(c.block_q == a.block_q || c.block_q == b.block_q);
+            assert!(
+                c.softmax_mode == a.softmax_mode || c.softmax_mode == b.softmax_mode
+            );
+        }
+    }
+
+    #[test]
+    fn smem_accounting() {
+        let s = KernelSpec::naive(); // 1 q-stage, depth 1, 64x64
+        // q: 64*128*2 = 16384; kv: 2*64*128*2 = 32768
+        assert_eq!(s.smem_bytes(), 16384 + 32768);
+    }
+}

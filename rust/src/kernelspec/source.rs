@@ -1,0 +1,128 @@
+//! Pseudo-CUDA rendering of a genome — the inspectable "source code" form
+//! of each lineage member, so a committed version reads like the kernel the
+//! paper's agent would have written (and so diffs between versions are
+//! reviewable in the action log / commit store).
+
+use super::{FenceKind, KernelSpec, MaskingMode, RescaleMode, Scheduling, SoftmaxMode};
+
+/// Render the genome as annotated pseudo-CUDA.
+pub fn to_source(spec: &KernelSpec) -> String {
+    let mut s = String::with_capacity(2048);
+    let r = &spec.registers;
+    s.push_str("// auto-rendered from KernelSpec — pseudo-CUDA, Blackwell-class\n");
+    s.push_str(&format!(
+        "__global__ __launch_bounds__({}) void attn_fwd(Params p) {{\n",
+        32 * (8 + 4 + 4)
+    ));
+    s.push_str(&format!(
+        "  // warp groups: softmax x8 @{}r, correction x4 @{}r, load/epilogue x4 @{}r\n",
+        r.softmax, r.correction, r.other
+    ));
+    s.push_str(&format!(
+        "  constexpr int BLOCK_Q = {}, BLOCK_K = {}, HEAD_DIM = 128;\n",
+        spec.block_q, spec.block_k
+    ));
+    s.push_str(&format!(
+        "  constexpr int Q_STAGES = {}, KV_STAGES = {};\n",
+        spec.q_stages, spec.kv_pipeline_depth
+    ));
+    match spec.scheduling {
+        Scheduling::Persistent => s.push_str(
+            "  for (int tile = atomicAdd(&p.tile_counter, 1); tile < p.num_tiles;\n       tile = atomicAdd(&p.tile_counter, 1)) {\n",
+        ),
+        Scheduling::PerTile => s.push_str("  { int tile = blockIdx.x;  // one CTA per tile\n"),
+    }
+    let hi = if spec.early_exit {
+        "num_kblocks_on_or_below_diagonal(tile)"
+    } else {
+        "p.num_k_blocks"
+    };
+    s.push_str(&format!("    for (int j = 0; j < {hi}; ++j) {{\n"));
+    s.push_str("      tma_load(kv_stage[j % KV_STAGES], p.K, p.V, j);\n");
+    if spec.qk_pv_interleave {
+        s.push_str("      mma_issue_interleaved(S[j], Q, K[j], O, P[j-1], V[j-1]); // QK | PV\n");
+    } else {
+        s.push_str("      mma_qk(S[j], Q, K[j]);\n");
+    }
+    match spec.masking_mode {
+        MaskingMode::Bitmask => s.push_str(
+            "      uint64_t mask = causal_block_bitmask(tile, j);  // v8 fast path\n      S[j] = select(mask, S[j], -INF);\n",
+        ),
+        MaskingMode::Arith => {
+            s.push_str("      S[j] += (col > row) ? -INF : 0.f;  // arithmetic mask\n")
+        }
+    }
+    match spec.softmax_mode {
+        SoftmaxMode::SinglePass => s.push_str(
+            "      online_softmax_singlepass_exp2(S[j], m, l);     // v13\n",
+        ),
+        SoftmaxMode::TwoPass => s.push_str(
+            "      m_new = rowmax(S[j], m); P = exp(S[j] - m_new); l = rescale(l) + rowsum(P);\n",
+        ),
+    }
+    if spec.softmax_packed {
+        s.push_str("      // packed 2-wide fragment arithmetic (low register peak)\n");
+    }
+    match spec.rescale_mode {
+        RescaleMode::Guarded => s.push_str(
+            "      if (__any_sync(FULL_MASK, m_new > m)) {          // v19 branch\n        O *= exp(m - m_new);\n      }\n",
+        ),
+        RescaleMode::Branchless => s.push_str(
+            "      float alpha = (m_new > m) ? exp(m - m_new) : 1.f; // v20 branchless\n      O *= alpha;\n",
+        ),
+    }
+    match spec.fence_kind {
+        FenceKind::Blocking => s.push_str("      __threadfence();        // blocking drain\n"),
+        FenceKind::NonBlocking => {
+            s.push_str("      fence_acq_rel_cta();    // ordering-only (v20)\n")
+        }
+    }
+    if spec.correction_overlap {
+        s.push_str(
+            "      correction_warp_begin(stage_a);  // overlaps stage B PV GEMM (v30)\n",
+        );
+    }
+    if !spec.qk_pv_interleave {
+        s.push_str("      mma_pv(O, P, V[j]);\n");
+    }
+    s.push_str("    }\n");
+    if spec.epilogue_async {
+        s.push_str("    tma_store_async(p.O, O / l);  // overlapped epilogue\n");
+    } else {
+        s.push_str("    store(p.O, O / l);\n");
+    }
+    s.push_str("  }\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::KernelSpec;
+    use super::*;
+
+    #[test]
+    fn renders_naive() {
+        let src = to_source(&KernelSpec::naive());
+        assert!(src.contains("BLOCK_Q = 64"));
+        assert!(src.contains("__threadfence"));
+        assert!(src.contains("__any_sync")); // guarded rescale
+        assert!(!src.contains("v30"));
+    }
+
+    #[test]
+    fn renders_evolved_features() {
+        let s = crate::baselines::evolved_genome();
+        let src = to_source(&s);
+        assert!(src.contains("v13"));
+        assert!(src.contains("v20 branchless"));
+        assert!(src.contains("v30"));
+        assert!(src.contains("bitmask"));
+    }
+
+    #[test]
+    fn distinct_specs_render_distinctly() {
+        let a = to_source(&KernelSpec::naive());
+        let b = to_source(&crate::baselines::fa4_genome());
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,46 @@
+//! # AVO — Agentic Variation Operators for Autonomous Evolutionary Search
+//!
+//! Full-system reproduction of the AVO paper (CS.LG 2026) on the
+//! Rust + JAX + Pallas three-layer stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: an evolutionary
+//!   search coordinator whose variation operator is an autonomous agent
+//!   ([`agent::AvoAgent`]) that profiles the current best kernel, consults a
+//!   knowledge base ([`knowledge`]) and the full lineage ([`evolution`]),
+//!   proposes edits to a typed kernel genome ([`kernelspec::KernelSpec`]),
+//!   evaluates them against the scoring function ([`score`]), diagnoses and
+//!   repairs failures, and commits improvements — supervised against stalls
+//!   and unproductive cycles ([`supervisor`]).
+//! * **Layer 2/1 (build-time Python)** — a parameterized Pallas
+//!   flash-attention kernel realizing the genome's algorithmic space,
+//!   AOT-lowered to HLO text artifacts the [`runtime`] executes via PJRT.
+//! * **Hardware substrate** — the paper evolves CUDA kernels on B200 with a
+//!   profiler; we reproduce that substrate with a cycle-approximate
+//!   Blackwell-class simulator ([`sim`]) that prices exactly the
+//!   micro-architectural dimensions the paper's §5 analysis manipulates
+//!   (fences, pipeline overlap, register pressure) and *actually
+//!   miscomputes* under the hazard combinations an incorrect kernel would
+//!   race on ([`sim::functional`]).
+//!
+//! See `DESIGN.md` for the substitution table and the per-experiment index
+//! mapping every figure/table of the paper to a module + bench target.
+
+pub mod agent;
+pub mod baselines;
+pub mod benchkit;
+pub mod coordinator;
+pub mod evolution;
+pub mod json;
+pub mod kernelspec;
+pub mod knowledge;
+pub mod prng;
+pub mod repro;
+pub mod runtime;
+pub mod score;
+pub mod sim;
+pub mod store;
+pub mod supervisor;
+
+pub use kernelspec::KernelSpec;
+pub use score::{BenchConfig, Evaluator, Score};
+pub use sim::machine::MachineSpec;

@@ -1,0 +1,175 @@
+//! `avo` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands (hand-rolled parser; clap is not vendored offline):
+//!   evolve    run the AVO evolution loop (the paper's main experiment)
+//!   transfer  adapt an evolved MHA lineage to GQA (§4.3)
+//!   compare   AVO vs single-turn vs fixed-pipeline at equal budget
+//!   show      print a lineage file (versions, scores, sources)
+//!   profile   print the profiler report for a genome on one config
+//!
+//! Examples:
+//!   avo evolve --seed 42 --commits 40 --out runs/mha
+//!   avo evolve --config runs/mha.cfg
+//!   avo transfer --lineage runs/mha/lineage.json --kv-heads 4
+//!   avo compare --budget 240
+//!   avo show --lineage runs/mha/lineage.json
+
+use std::path::PathBuf;
+
+use avo::coordinator::{config::OperatorKind, EvolutionDriver, RunConfig};
+use avo::evolution::Lineage;
+use avo::kernelspec::KernelSpec;
+use avo::score::{mha_suite, BenchConfig, Evaluator};
+use avo::sim::profile::profile;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: avo <evolve|transfer|compare|show|profile> [flags]\n\
+         \n\
+         evolve   --seed N --commits N --steps N --operator avo|single_turn|pes\n\
+         \u{20}         --config FILE --out DIR\n\
+         transfer --lineage FILE --kv-heads 4|8 --seed N --out DIR\n\
+         compare  --budget N --seed N\n\
+         show     --lineage FILE [--sources]\n\
+         profile  --causal --seq N"
+    );
+    std::process::exit(2)
+}
+
+struct Flags(Vec<String>);
+
+impl Flags {
+    fn get(&self, name: &str) -> Option<&str> {
+        self.0
+            .iter()
+            .position(|a| a == name)
+            .and_then(|i| self.0.get(i + 1))
+            .map(|s| s.as_str())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.0.iter().any(|a| a == name)
+    }
+
+    fn parse<T: std::str::FromStr>(&self, name: &str) -> Option<T> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+    }
+    let cmd = args.remove(0);
+    let flags = Flags(args);
+
+    match cmd.as_str() {
+        "evolve" => {
+            let mut cfg = match flags.get("--config") {
+                Some(path) => RunConfig::load(std::path::Path::new(path))
+                    .map_err(|e| anyhow::anyhow!(e))?,
+                None => RunConfig::default(),
+            };
+            if let Some(s) = flags.parse("--seed") {
+                cfg.seed = s;
+            }
+            if let Some(c) = flags.parse("--commits") {
+                cfg.target_commits = c;
+            }
+            if let Some(s) = flags.parse("--steps") {
+                cfg.max_steps = s;
+            }
+            if let Some(op) = flags.get("--operator") {
+                cfg.operator = op.parse::<OperatorKind>().map_err(|e| anyhow::anyhow!(e))?;
+            }
+            let out_dir = flags.get("--out").map(PathBuf::from);
+            if let Some(dir) = &out_dir {
+                std::fs::create_dir_all(dir)?;
+                cfg.lineage_path = Some(dir.join("lineage.json"));
+            }
+            let report = EvolutionDriver::new(cfg).run();
+            println!("{}", report.summary());
+            for note in &report.interventions {
+                println!("  supervisor: {note}");
+            }
+            println!("{}", report.metrics.report());
+            if let Some(dir) = &out_dir {
+                std::fs::write(
+                    dir.join("trajectory_causal.json"),
+                    report.lineage.trajectory_json(true).pretty(),
+                )?;
+                std::fs::write(
+                    dir.join("trajectory_noncausal.json"),
+                    report.lineage.trajectory_json(false).pretty(),
+                )?;
+                println!("wrote lineage + trajectories to {}", dir.display());
+            }
+        }
+        "transfer" => {
+            let lineage_path = flags.get("--lineage").unwrap_or_else(|| usage());
+            let kv: u32 = flags.parse("--kv-heads").unwrap_or(4);
+            let lineage = Lineage::load(std::path::Path::new(lineage_path))
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let evolved = lineage.best().expect("empty lineage").spec.clone();
+            let mut cfg = RunConfig::default();
+            if let Some(s) = flags.parse("--seed") {
+                cfg.seed = s;
+            }
+            if let Some(dir) = flags.get("--out") {
+                std::fs::create_dir_all(dir)?;
+                cfg.lineage_path = Some(PathBuf::from(dir).join("gqa_lineage.json"));
+            }
+            let report = EvolutionDriver::new(cfg).transfer_to_gqa(evolved, kv);
+            println!("GQA transfer (kv_heads={kv}): {}", report.summary());
+        }
+        "compare" => {
+            let budget: usize = flags.parse("--budget").unwrap_or(240);
+            let seed: u64 = flags.parse("--seed").unwrap_or(42);
+            for op in [
+                OperatorKind::Avo,
+                OperatorKind::SingleTurn,
+                OperatorKind::FixedPipeline,
+            ] {
+                let cfg = RunConfig {
+                    operator: op,
+                    seed,
+                    target_commits: usize::MAX / 2,
+                    max_steps: budget,
+                    ..RunConfig::default()
+                };
+                let report = EvolutionDriver::new(cfg).run();
+                println!("{op:?}: {}", report.summary());
+            }
+        }
+        "show" => {
+            let path = flags.get("--lineage").unwrap_or_else(|| usage());
+            let lineage =
+                Lineage::load(std::path::Path::new(path)).map_err(|e| anyhow::anyhow!("{e}"))?;
+            for c in lineage.versions() {
+                println!(
+                    "v{:<3} {:016x} geomean {:8.1}  {}",
+                    c.step,
+                    c.id.0,
+                    c.score.geomean(),
+                    c.message
+                );
+                if flags.has("--sources") {
+                    println!("{}", c.source);
+                }
+            }
+        }
+        "profile" => {
+            let causal = flags.has("--causal");
+            let seq: u32 = flags.parse("--seq").unwrap_or(32768);
+            let eval = Evaluator::new(mha_suite());
+            let cfg = BenchConfig::mha((32768 / seq).max(1), seq, causal);
+            let spec = KernelSpec::naive();
+            println!("{}", profile(&eval.report(&spec, &cfg)).to_text());
+            let evolved = avo::baselines::evolved_genome();
+            println!("{}", profile(&eval.report(&evolved, &cfg)).to_text());
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

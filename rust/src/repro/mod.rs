@@ -1,0 +1,331 @@
+//! Figure/table regeneration harness: one function per table and figure of
+//! the paper's evaluation section (see DESIGN.md §Per-experiment index).
+//! The `repro` binary prints these; the criterion-style benches time their
+//! underlying evaluation paths.
+
+use crate::baselines::{self, ablations, AnchorCurve};
+use crate::coordinator::{EvolutionDriver, RunConfig, RunReport};
+use crate::kernelspec::KernelSpec;
+use crate::prng::Rng;
+use crate::score::{
+    geomean, gqa_suite, mha_suite, BenchConfig, Evaluator, SEQ_LENS, TOTAL_TOKENS,
+};
+
+/// The paper's main run configuration (seed chosen once, recorded in
+/// EXPERIMENTS.md; 40 commits like the 7-day run).
+pub fn paper_run_config() -> RunConfig {
+    RunConfig { seed: 42, target_commits: 40, max_steps: 400, ..RunConfig::default() }
+}
+
+/// Run (or re-run) the main MHA evolution — deterministic given the seed.
+pub fn paper_run() -> RunReport {
+    EvolutionDriver::new(paper_run_config()).run()
+}
+
+/// Simulated AVO curve for one masking regime, with the 10x-repeat
+/// mean +/- std protocol of §4.1.
+pub fn avo_curve(spec: &KernelSpec, causal: bool, repeats: usize) -> Vec<(u32, f64, f64)> {
+    let ev = Evaluator::new(mha_suite());
+    let sigma = ev.machine.noise_rel_sigma;
+    let mut rng = Rng::new(0xF163_5EED);
+    SEQ_LENS
+        .iter()
+        .map(|&n| {
+            let cfg = BenchConfig::mha(TOTAL_TOKENS / n, n, causal);
+            let base = ev.report(spec, &cfg).tflops;
+            let samples: Vec<f64> = (0..repeats.max(1))
+                .map(|_| base * (1.0 + sigma * rng.normal()))
+                .collect();
+            let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+            let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+                / samples.len() as f64;
+            (n, mean, var.sqrt())
+        })
+        .collect()
+}
+
+fn row(label: &str, values: &[f64]) -> String {
+    let mut s = format!("  {label:<26}");
+    for v in values {
+        s.push_str(&format!(" {v:8.1}"));
+    }
+    s.push('\n');
+    s
+}
+
+fn anchor_row(label: &str, c: &AnchorCurve) -> String {
+    row(label, &c.tflops)
+}
+
+/// Figure 3: MHA forward prefill TFLOPS, causal + non-causal.
+/// `evolved` is the final kernel of an evolution run (pass
+/// `baselines::evolved_genome()` to reproduce without re-running).
+pub fn fig3(evolved: &KernelSpec) -> String {
+    let mut out = String::from(
+        "== Figure 3: MHA forward prefill (B200, hd=128, 16 heads, BF16; \
+         batch x seq = 32k tokens) ==\n",
+    );
+    for causal in [false, true] {
+        out.push_str(&format!(
+            "-- {} --            seq:     4096     8192    16384    32768\n",
+            if causal { "causal   " } else { "non-causal" }
+        ));
+        out.push_str(&anchor_row("cuDNN 9.19.1 (measured)", &baselines::cudnn_measured(causal)));
+        out.push_str(&anchor_row("FA4 71bf77c  (measured)", &baselines::fa4_measured(causal)));
+        let curve = avo_curve(evolved, causal, 10);
+        let mut s = format!("  {:<26}", "AVO (ours, simulated)");
+        for (_, mean, std) in &curve {
+            s.push_str(&format!(" {mean:6.1}±{std:3.1}"));
+        }
+        out.push_str(&s);
+        out.push('\n');
+        // Gain lines like the paper's text.
+        let cudnn = baselines::cudnn_measured(causal);
+        let fa4 = baselines::fa4_measured(causal);
+        let gains = |b: &AnchorCurve| -> (f64, f64) {
+            let mut lo = f64::MAX;
+            let mut hi = f64::MIN;
+            for (i, (_, mean, _)) in curve.iter().enumerate() {
+                let g = 100.0 * (mean / b.tflops[i] - 1.0);
+                lo = lo.min(g);
+                hi = hi.max(g);
+            }
+            (lo, hi)
+        };
+        let (clo, chi) = gains(&cudnn);
+        let (flo, fhi) = gains(&fa4);
+        out.push_str(&format!(
+            "  vs cuDNN: {clo:+.1}%..{chi:+.1}%   vs FA4: {flo:+.1}%..{fhi:+.1}%\n",
+        ));
+    }
+    out
+}
+
+/// Figure 4: GQA TFLOPS after the 30-minute transfer, both group sizes.
+pub fn fig4(adapted: &KernelSpec) -> String {
+    let mut out = String::from(
+        "== Figure 4: GQA forward prefill (32 Q heads, hd=128, BF16) ==\n",
+    );
+    for kv in [4u32, 8] {
+        for causal in [false, true] {
+            let (cudnn, fa4) = baselines::gqa_anchors(kv, causal);
+            out.push_str(&format!(
+                "-- group {} (kv={kv}) {} -- seq:     4096     8192    16384    32768\n",
+                32 / kv,
+                if causal { "causal" } else { "non-causal" }
+            ));
+            out.push_str(&anchor_row("cuDNN (measured)", &cudnn));
+            out.push_str(&anchor_row("FA4   (measured)", &fa4));
+            let ev = Evaluator::new(gqa_suite(kv));
+            let sim: Vec<f64> = SEQ_LENS
+                .iter()
+                .map(|&n| {
+                    let cfg = BenchConfig::gqa(TOTAL_TOKENS / n, n, kv, causal);
+                    ev.report(adapted, &cfg).tflops
+                })
+                .collect();
+            out.push_str(&row("AVO (adapted, simulated)", &sim));
+            let best_cudnn = sim
+                .iter()
+                .zip(cudnn.tflops)
+                .map(|(s, a)| 100.0 * (s / a - 1.0))
+                .fold(f64::MIN, f64::max);
+            let best_fa4 = sim
+                .iter()
+                .zip(fa4.tflops)
+                .map(|(s, a)| 100.0 * (s / a - 1.0))
+                .fold(f64::MIN, f64::max);
+            out.push_str(&format!(
+                "  max gain vs cuDNN {best_cudnn:+.1}%, vs FA4 {best_fa4:+.1}%\n"
+            ));
+        }
+    }
+    out
+}
+
+/// Figures 5/6: the evolution trajectory of a run (running-best geomean,
+/// per-config series, baseline hlines, new-best markers).
+pub fn fig56(report: &RunReport, causal: bool) -> String {
+    let tag = if causal { "5 (causal)" } else { "6 (non-causal)" };
+    let mut out = format!(
+        "== Figure {tag}: AVO evolution trajectory over {} committed versions ==\n",
+        report.lineage.len()
+    );
+    let cudnn = baselines::cudnn_measured(causal).geomean();
+    let fa4 = baselines::fa4_measured(causal).geomean();
+    out.push_str(&format!(
+        "baseline geomeans: cuDNN {cudnn:.0}, FA4 {fa4:.0} TFLOPS\n\
+         ver   geomean  run-best  new?   4k      8k      16k     32k\n",
+    ));
+    for p in report.lineage.trajectory(causal) {
+        let per: Vec<f64> = SEQ_LENS
+            .iter()
+            .map(|n| {
+                p.per_config
+                    .iter()
+                    .find(|(name, _)| name.ends_with(&n.to_string()))
+                    .map(|(_, t)| *t)
+                    .unwrap_or(0.0)
+            })
+            .collect();
+        out.push_str(&format!(
+            "v{:<3} {:8.1} {:9.1}  {}  {:7.1} {:7.1} {:7.1} {:7.1}\n",
+            p.version,
+            p.geomean,
+            p.running_best,
+            if p.is_new_best { "*" } else { " " },
+            per[0],
+            per[1],
+            per[2],
+            per[3],
+        ));
+    }
+    let final_best = report
+        .lineage
+        .trajectory(causal)
+        .last()
+        .map(|p| p.running_best)
+        .unwrap_or(0.0);
+    out.push_str(&format!(
+        "final running-best {final_best:.1} TFLOPS ({}, {} vs cuDNN {cudnn:.0} / FA4 {fa4:.0})\n",
+        if final_best > cudnn { "beats cuDNN" } else { "below cuDNN" },
+        if final_best > fa4 { "beats FA4" } else { "below FA4" },
+    ));
+    out
+}
+
+/// Table 1: ablations of the three named optimizations.
+pub fn table1() -> String {
+    let ev = Evaluator::new(mha_suite());
+    let mut out = String::from(
+        "== Table 1: agent-discovered optimizations (geomean gain vs preceding \
+         version) ==\n  optimization                          versions   non-causal  causal   \
+         (paper nc / c)\n",
+    );
+    let cases = [
+        ("Branchless accumulator rescaling", "v19->v20", ablations::branchless_rescale(), "+8.1% / +1.6%"),
+        ("Correction/MMA pipeline overlap", "v29->v30", ablations::correction_overlap(), "+1.1% / +0.4%"),
+        ("Register rebalancing (warp groups)", "v32->v33", ablations::register_rebalance(), "+2.1% / ~0%"),
+    ];
+    for (name, vers, (before, after), paper) in cases {
+        let g = |spec: &KernelSpec, causal: bool| {
+            geomean(SEQ_LENS.iter().map(|&n| {
+                let cfg = BenchConfig::mha(TOTAL_TOKENS / n, n, causal);
+                ev.report(spec, &cfg).tflops
+            }))
+        };
+        let nc = 100.0 * (g(&after, false) / g(&before, false) - 1.0);
+        let c = 100.0 * (g(&after, true) / g(&before, true) - 1.0);
+        out.push_str(&format!(
+            "  {name:<37} {vers:<9} {nc:+9.1}% {c:+8.1}%   ({paper})\n"
+        ));
+    }
+    out
+}
+
+/// Figure 7 (Appendix A): AVO vs the FA4-paper-reported baseline numbers.
+pub fn fig7(evolved: &KernelSpec) -> String {
+    let mut out = String::from(
+        "== Figure 7 (App. A): AVO vs FA4-paper-reported cuDNN/FA4 ==\n",
+    );
+    for causal in [false, true] {
+        let (cudnn, fa4) = baselines::cudnn_fa4_reported(causal);
+        out.push_str(&format!(
+            "-- {} --            seq:     4096     8192    16384    32768\n",
+            if causal { "causal   " } else { "non-causal" }
+        ));
+        out.push_str(&anchor_row("cuDNN (FA4-paper reported)", &cudnn));
+        out.push_str(&anchor_row("FA4   (FA4-paper reported)", &fa4));
+        let curve = avo_curve(evolved, causal, 10);
+        let sim: Vec<f64> = curve.iter().map(|(_, m, _)| *m).collect();
+        out.push_str(&row("AVO (ours, simulated)", &sim));
+        let lohi = |b: &AnchorCurve| {
+            let gains: Vec<f64> = sim
+                .iter()
+                .zip(b.tflops)
+                .map(|(s, a)| 100.0 * (s / a - 1.0))
+                .collect();
+            (
+                gains.iter().copied().fold(f64::MAX, f64::min),
+                gains.iter().copied().fold(f64::MIN, f64::max),
+            )
+        };
+        let (clo, chi) = lohi(&cudnn);
+        let (flo, fhi) = lohi(&fa4);
+        out.push_str(&format!(
+            "  vs reported cuDNN: {clo:+.1}%..{chi:+.1}%   vs reported FA4: {flo:+.1}%..{fhi:+.1}%\n"
+        ));
+    }
+    out
+}
+
+/// §4.4 scale statistics of a run.
+pub fn stats(report: &RunReport) -> String {
+    format!(
+        "== §4.4 scale of exploration ==\n\
+         committed versions          {}\n\
+         variation steps             {}\n\
+         internal evaluations        {}\n\
+         optimization directions     {}\n\
+         diagnose/repair cycles      {}\n\
+         supervisor interventions    {}\n\
+         best geomean                {:.1} TFLOPS\n",
+        report.lineage.len(),
+        report.steps,
+        report.metrics.counter("evaluations"),
+        report.metrics.counter("directions_explored"),
+        report.metrics.counter("repairs"),
+        report.interventions.len(),
+        report.lineage.best_geomean(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_contains_paper_structure() {
+        let text = fig3(&baselines::evolved_genome());
+        assert!(text.contains("cuDNN"));
+        assert!(text.contains("FA4"));
+        assert!(text.contains("non-causal"));
+        assert!(text.contains("vs cuDNN"));
+        // 4 seq columns present.
+        assert!(text.contains("32768"));
+    }
+
+    #[test]
+    fn table1_reproduces_signs_and_magnitudes() {
+        let t = table1();
+        assert!(t.contains("Branchless"));
+        // The nc branchless gain must print as a positive high-single-digit.
+        let line = t.lines().find(|l| l.contains("Branchless")).unwrap();
+        assert!(line.contains("+8.") || line.contains("+7."), "{line}");
+    }
+
+    #[test]
+    fn fig7_reports_reported_baselines() {
+        let t = fig7(&baselines::evolved_genome());
+        assert!(t.contains("FA4-paper reported"));
+        assert!(t.contains("vs reported cuDNN"));
+    }
+
+    #[test]
+    fn fig4_has_both_groups() {
+        let t = fig4(&baselines::evolved_genome());
+        assert!(t.contains("group 8"));
+        assert!(t.contains("group 4"));
+        assert!(t.contains("max gain"));
+    }
+
+    #[test]
+    fn avo_curve_noise_protocol() {
+        let c = avo_curve(&baselines::evolved_genome(), true, 10);
+        assert_eq!(c.len(), 4);
+        for (_, mean, std) in c {
+            assert!(mean > 0.0);
+            assert!(std > 0.0 && std < mean * 0.02);
+        }
+    }
+}

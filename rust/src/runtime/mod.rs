@@ -1,0 +1,236 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts (produced once by
+//! `python/compile/aot.py`) and executes them from Rust — no Python on the
+//! request path.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): jax >=
+//! 0.5 serializes protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids.  See DESIGN.md and
+//! /opt/xla-example/README.md.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::json::{parse, Json};
+
+/// Declared argument of an artifact (from manifest.json).
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+}
+
+/// The artifact manifest (shape/dtype contract between aot.py and Rust).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: HashMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let json = parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let obj = json.as_obj().ok_or_else(|| anyhow!("manifest not an object"))?;
+        let mut entries = HashMap::new();
+        for (name, rec) in obj {
+            let file = rec
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{name}: missing file"))?
+                .to_string();
+            let args = rec
+                .get("args")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing args"))?
+                .iter()
+                .map(|a| {
+                    let shape = a
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("{name}: bad shape"))?
+                        .iter()
+                        .map(|d| d.as_u64().map(|x| x as usize))
+                        .collect::<Option<Vec<_>>>()
+                        .ok_or_else(|| anyhow!("{name}: bad dim"))?;
+                    let dtype = a
+                        .get("dtype")
+                        .and_then(Json::as_str)
+                        .unwrap_or("float32")
+                        .to_string();
+                    Ok(ArgSpec { shape, dtype })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                ArtifactMeta { name: name.clone(), file, args },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+}
+
+/// The PJRT runtime: a CPU client plus lazily compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU-PJRT runtime over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        let manifest = Manifest::load(artifact_dir)?;
+        Ok(PjrtRuntime { client, manifest, executables: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (once) and cache the named artifact.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let path = self.manifest.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on f32 input buffers (shapes from the manifest).
+    /// Returns the flattened f32 outputs of the result tuple.
+    pub fn execute_f32(&mut self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.ensure_compiled(name)?;
+        let meta = self.manifest.entries.get(name).unwrap().clone();
+        if inputs.len() != meta.args.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                meta.args.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (arg, data) in meta.args.iter().zip(inputs) {
+            if arg.dtype != "float32" {
+                return Err(anyhow!("{name}: only f32 artifacts supported, got {}", arg.dtype));
+            }
+            if data.len() != arg.elements() {
+                return Err(anyhow!(
+                    "{name}: arg size mismatch: {} vs {}",
+                    data.len(),
+                    arg.elements()
+                ));
+            }
+            let dims: Vec<i64> = arg.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = self.executables.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        let elems = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        elems
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// Deterministic pseudo-random inputs for an artifact (for smoke tests
+    /// and cross-checking; standard-normal via the crate PRNG).
+    pub fn random_inputs(&self, name: &str, seed: u64) -> Result<Vec<Vec<f32>>> {
+        let meta = self
+            .manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let mut rng = crate::prng::Rng::new(seed);
+        Ok(meta
+            .args
+            .iter()
+            .map(|a| (0..a.elements()).map(|_| rng.normal() as f32 * 0.5).collect())
+            .collect())
+    }
+}
+
+/// Max |a - b| over two buffers.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+/// Default artifact directory (workspace-relative).
+pub fn default_artifact_dir() -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_loads_if_artifacts_built() {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.entries.contains_key("mha_causal"));
+        assert!(m.entries.contains_key("ref_mha_causal"));
+        let meta = &m.entries["mha_causal"];
+        assert_eq!(meta.args.len(), 3);
+        assert_eq!(meta.args[0].shape, vec![1, 4, 512, 64]);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.0, 2.5]), 0.5);
+        assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,146 @@
+//! JSON round-tripping for scores (commit-store persistence).
+
+use crate::json::{FromJson, Json, ToJson};
+use crate::kernelspec::SpecError;
+use crate::sim::functional::ErrorClass;
+
+use super::{Failure, Score};
+
+impl ToJson for ErrorClass {
+    fn to_json(&self) -> Json {
+        Json::Str(
+            match self {
+                ErrorClass::FenceRace => "fence_race",
+                ErrorClass::MaskOrdering => "mask_ordering",
+                ErrorClass::EpilogueRace => "epilogue_race",
+                ErrorClass::NumericMismatch => "numeric_mismatch",
+            }
+            .into(),
+        )
+    }
+}
+
+impl FromJson for ErrorClass {
+    fn from_json(v: &Json) -> Result<Self, String> {
+        match v.as_str() {
+            Some("fence_race") => Ok(ErrorClass::FenceRace),
+            Some("mask_ordering") => Ok(ErrorClass::MaskOrdering),
+            Some("epilogue_race") => Ok(ErrorClass::EpilogueRace),
+            Some("numeric_mismatch") => Ok(ErrorClass::NumericMismatch),
+            other => Err(format!("bad ErrorClass {other:?}")),
+        }
+    }
+}
+
+impl ToJson for Failure {
+    fn to_json(&self) -> Json {
+        match self {
+            Failure::Invalid(e) => Json::obj([
+                ("kind", Json::Str("invalid".into())),
+                ("error", e.to_json()),
+            ]),
+            Failure::Incorrect(c) => Json::obj([
+                ("kind", Json::Str("incorrect".into())),
+                ("class", c.to_json()),
+            ]),
+        }
+    }
+}
+
+impl FromJson for Failure {
+    fn from_json(v: &Json) -> Result<Self, String> {
+        match v.get("kind").and_then(Json::as_str) {
+            Some("invalid") => Ok(Failure::Invalid(SpecError::from_json(
+                v.get("error").ok_or("Failure missing error")?,
+            )?)),
+            Some("incorrect") => Ok(Failure::Incorrect(ErrorClass::from_json(
+                v.get("class").ok_or("Failure missing class")?,
+            )?)),
+            other => Err(format!("bad Failure kind {other:?}")),
+        }
+    }
+}
+
+impl ToJson for Score {
+    fn to_json(&self) -> Json {
+        Json::obj([
+            (
+                "per_config",
+                Json::arr(self.per_config.iter().map(|(n, t)| {
+                    Json::obj([("name", Json::Str(n.clone())), ("tflops", t.to_json())])
+                })),
+            ),
+            (
+                "failure",
+                match &self.failure {
+                    Some(f) => f.to_json(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+impl FromJson for Score {
+    fn from_json(v: &Json) -> Result<Self, String> {
+        let per_config = v
+            .get("per_config")
+            .and_then(Json::as_arr)
+            .ok_or("Score missing per_config")?
+            .iter()
+            .map(|e| {
+                let name = e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or("per_config entry missing name")?
+                    .to_string();
+                let tflops = e
+                    .get("tflops")
+                    .and_then(Json::as_f64)
+                    .ok_or("per_config entry missing tflops")?;
+                Ok::<_, String>((name, tflops))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let failure = match v.get("failure") {
+            None | Some(Json::Null) => None,
+            Some(f) => Some(Failure::from_json(f)?),
+        };
+        Ok(Score { per_config, failure })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+    use crate::kernelspec::KernelSpec;
+    use crate::score::{mha_suite, Evaluator};
+
+    #[test]
+    fn score_roundtrip_ok() {
+        let s = Evaluator::new(mha_suite()).evaluate(&KernelSpec::naive());
+        let back = Score::from_json(&parse(&s.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(s.per_config.len(), back.per_config.len());
+        for (a, b) in s.per_config.iter().zip(&back.per_config) {
+            assert_eq!(a.0, b.0);
+            assert!((a.1 - b.1).abs() < 1e-9);
+        }
+        assert!(back.failure.is_none());
+    }
+
+    #[test]
+    fn score_roundtrip_failures() {
+        let ev = Evaluator::new(mha_suite());
+        let mut bad = KernelSpec::naive();
+        bad.fence_kind = crate::kernelspec::FenceKind::NonBlocking;
+        let s = ev.evaluate(&bad);
+        let back = Score::from_json(&parse(&s.to_json().compact()).unwrap()).unwrap();
+        assert_eq!(s.failure, back.failure);
+
+        let mut invalid = KernelSpec::naive();
+        invalid.block_q = 100;
+        let s = ev.evaluate(&invalid);
+        let back = Score::from_json(&parse(&s.to_json().compact()).unwrap()).unwrap();
+        assert_eq!(s.failure, back.failure);
+    }
+}

@@ -1,0 +1,356 @@
+//! The scoring function **f** of the paper (§3.1): an n-dimensional vector,
+//! one entry per benchmark configuration, with correctness gating —
+//! `f_j(x) = 0` for every j if the candidate fails correctness, else the
+//! simulated TFLOPS of configuration j.
+
+
+mod json_impl;
+
+use crate::kernelspec::{KernelSpec, SpecError};
+use crate::prng::Rng;
+use crate::sim::functional::{self, ErrorClass};
+use crate::sim::machine::MachineSpec;
+use crate::sim::pipeline::{self, CycleReport};
+
+/// One benchmark configuration (paper §4.1: head_dim 128, BF16, total
+/// tokens fixed at 32k by trading batch against sequence length).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BenchConfig {
+    pub name: String,
+    pub batch: u32,
+    pub q_heads: u32,
+    pub kv_heads: u32,
+    pub seq_len: u32,
+    pub head_dim: u32,
+    pub causal: bool,
+}
+
+/// The paper's sequence-length sweep (total tokens fixed at 32768).
+pub const SEQ_LENS: [u32; 4] = [4096, 8192, 16384, 32768];
+pub const TOTAL_TOKENS: u32 = 32768;
+
+impl BenchConfig {
+    /// MHA cell: 16 heads, head_dim 128 (paper §4.2).
+    pub fn mha(batch: u32, seq_len: u32, causal: bool) -> Self {
+        BenchConfig {
+            name: format!("mha_{}_{}", if causal { "c" } else { "nc" }, seq_len),
+            batch,
+            q_heads: 16,
+            kv_heads: 16,
+            seq_len,
+            head_dim: 128,
+            causal,
+        }
+    }
+
+    /// GQA cell: 32 query heads, `kv_heads` in {4 (group 8), 8 (group 4)}
+    /// — the Qwen3-30B-A3B / Qwen3-8B configurations (paper §4.3).
+    pub fn gqa(batch: u32, seq_len: u32, kv_heads: u32, causal: bool) -> Self {
+        BenchConfig {
+            name: format!(
+                "gqa_g{}_{}_{}",
+                32 / kv_heads,
+                if causal { "c" } else { "nc" },
+                seq_len
+            ),
+            batch,
+            q_heads: 32,
+            kv_heads,
+            seq_len,
+            head_dim: 128,
+            causal,
+        }
+    }
+
+    pub fn group(&self) -> u32 {
+        self.q_heads / self.kv_heads
+    }
+
+    /// FLOPs by the FA benchmark convention (4·B·H·N²·D, halved causal).
+    pub fn flops(&self) -> f64 {
+        let f = 4.0
+            * self.batch as f64
+            * self.q_heads as f64
+            * (self.seq_len as f64).powi(2)
+            * self.head_dim as f64;
+        if self.causal {
+            f / 2.0
+        } else {
+            f
+        }
+    }
+}
+
+/// The 8-cell MHA suite the evolution run is scored on: 4 sequence lengths
+/// x {causal, non-causal}, batch chosen to hold 32k total tokens.
+pub fn mha_suite() -> Vec<BenchConfig> {
+    let mut v = Vec::new();
+    for causal in [true, false] {
+        for n in SEQ_LENS {
+            v.push(BenchConfig::mha(TOTAL_TOKENS / n, n, causal));
+        }
+    }
+    v
+}
+
+/// GQA suite for one group size (kv_heads = 4 -> group 8; 8 -> group 4).
+pub fn gqa_suite(kv_heads: u32) -> Vec<BenchConfig> {
+    let mut v = Vec::new();
+    for causal in [true, false] {
+        for n in SEQ_LENS {
+            v.push(BenchConfig::gqa(TOTAL_TOKENS / n, n, kv_heads, causal));
+        }
+    }
+    v
+}
+
+/// Why a candidate scored zero.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Failure {
+    /// Structural validation error (the "compile error").
+    Invalid(SpecError),
+    /// Functional check failed with a diagnosis class.
+    Incorrect(ErrorClass),
+}
+
+impl std::fmt::Display for Failure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Failure::Invalid(e) => write!(f, "invalid: {e}"),
+            Failure::Incorrect(c) => write!(f, "incorrect: {c}"),
+        }
+    }
+}
+
+/// Score vector for one candidate across a suite.
+#[derive(Debug, Clone)]
+pub struct Score {
+    /// (config name, TFLOPS) per suite cell; 0.0 if gated by failure.
+    pub per_config: Vec<(String, f64)>,
+    /// None if the candidate passed; Some(failure) if every f_j was gated
+    /// to zero.
+    pub failure: Option<Failure>,
+}
+
+impl Score {
+    pub fn failed(failure: Failure, suite: &[BenchConfig]) -> Self {
+        Score {
+            per_config: suite.iter().map(|c| (c.name.clone(), 0.0)).collect(),
+            failure: Some(failure),
+        }
+    }
+
+    pub fn is_correct(&self) -> bool {
+        self.failure.is_none()
+    }
+
+    /// Geometric mean over all configs (0 if gated).
+    pub fn geomean(&self) -> f64 {
+        geomean(self.per_config.iter().map(|(_, t)| *t))
+    }
+
+    /// Geometric mean over the causal ("_c_") cells only.
+    pub fn geomean_causal(&self) -> f64 {
+        geomean(
+            self.per_config
+                .iter()
+                .filter(|(n, _)| n.contains("_c_"))
+                .map(|(_, t)| *t),
+        )
+    }
+
+    /// Geometric mean over the non-causal ("_nc_") cells only.
+    pub fn geomean_noncausal(&self) -> f64 {
+        geomean(
+            self.per_config
+                .iter()
+                .filter(|(n, _)| n.contains("_nc_"))
+                .map(|(_, t)| *t),
+        )
+    }
+
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.per_config
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, t)| *t)
+    }
+}
+
+/// Geomean of an iterator; empty -> 0, any zero -> 0.
+pub fn geomean(xs: impl Iterator<Item = f64>) -> f64 {
+    let mut log_sum = 0.0;
+    let mut n = 0usize;
+    for x in xs {
+        if x <= 0.0 {
+            return 0.0;
+        }
+        log_sum += x.ln();
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        (log_sum / n as f64).exp()
+    }
+}
+
+/// The evaluator binds a machine model to a benchmark suite.
+#[derive(Debug, Clone)]
+pub struct Evaluator {
+    pub machine: MachineSpec,
+    pub suite: Vec<BenchConfig>,
+    /// Relative noise sigma per measurement (0 inside evolution for
+    /// determinism; the repro harness enables it for the 10x protocol).
+    pub noise_sigma: f64,
+    /// Functional-check seed (fixed per run).
+    pub functional_seed: u64,
+}
+
+impl Evaluator {
+    pub fn new(suite: Vec<BenchConfig>) -> Self {
+        Evaluator {
+            machine: MachineSpec::b200(),
+            suite,
+            noise_sigma: 0.0,
+            functional_seed: 0x5EED,
+        }
+    }
+
+    pub fn with_noise(mut self, sigma: f64) -> Self {
+        self.noise_sigma = sigma;
+        self
+    }
+
+    /// Full scoring: validate -> functional check (per masking regime and
+    /// group actually present in the suite) -> cycle model per config.
+    pub fn evaluate(&self, spec: &KernelSpec) -> Score {
+        self.evaluate_noisy(spec, &mut None)
+    }
+
+    /// As [`Self::evaluate`] but with an optional RNG for measurement noise.
+    pub fn evaluate_noisy(&self, spec: &KernelSpec, rng: &mut Option<&mut Rng>) -> Score {
+        if let Err(e) = spec.validate() {
+            return Score::failed(Failure::Invalid(e), &self.suite);
+        }
+        // Functional check over the distinct (causal, group) regimes in the
+        // suite — the paper's correctness reference run.
+        let mut regimes: Vec<(bool, u32)> = self
+            .suite
+            .iter()
+            .map(|c| (c.causal, c.group()))
+            .collect();
+        regimes.sort_unstable();
+        regimes.dedup();
+        for (causal, group) in regimes {
+            if let Err(class) =
+                functional::check(spec, causal, group as usize, self.functional_seed)
+            {
+                return Score::failed(Failure::Incorrect(class), &self.suite);
+            }
+        }
+        let per_config = self
+            .suite
+            .iter()
+            .map(|c| {
+                let r = pipeline::simulate(spec, c, &self.machine);
+                let mut t = r.tflops;
+                if self.noise_sigma > 0.0 {
+                    if let Some(rng) = rng.as_deref_mut() {
+                        t *= 1.0 + self.noise_sigma * rng.normal();
+                    }
+                }
+                (c.name.clone(), t)
+            })
+            .collect();
+        Score { per_config, failure: None }
+    }
+
+    /// Cycle report for one cell (profiling path; assumes validity).
+    pub fn report(&self, spec: &KernelSpec, cfg: &BenchConfig) -> CycleReport {
+        pipeline::simulate(spec, cfg, &self.machine)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelspec::{FenceKind, KernelSpec};
+
+    #[test]
+    fn suite_shapes_hold_total_tokens() {
+        for c in mha_suite() {
+            assert_eq!(c.batch * c.seq_len, TOTAL_TOKENS);
+            assert_eq!(c.q_heads, 16);
+        }
+        assert_eq!(mha_suite().len(), 8);
+    }
+
+    #[test]
+    fn gqa_suite_group_sizes() {
+        for c in gqa_suite(4) {
+            assert_eq!(c.group(), 8);
+        }
+        for c in gqa_suite(8) {
+            assert_eq!(c.group(), 4);
+        }
+    }
+
+    #[test]
+    fn evaluate_naive_all_positive() {
+        let ev = Evaluator::new(mha_suite());
+        let s = ev.evaluate(&KernelSpec::naive());
+        assert!(s.is_correct());
+        assert!(s.per_config.iter().all(|(_, t)| *t > 0.0));
+        assert!(s.geomean() > 0.0);
+    }
+
+    #[test]
+    fn correctness_gates_all_configs_to_zero() {
+        let ev = Evaluator::new(mha_suite());
+        let mut s = KernelSpec::naive();
+        s.fence_kind = FenceKind::NonBlocking; // FenceRace hazard
+        let score = ev.evaluate(&s);
+        assert!(!score.is_correct());
+        assert!(score.per_config.iter().all(|(_, t)| *t == 0.0));
+        assert_eq!(score.geomean(), 0.0);
+    }
+
+    #[test]
+    fn invalid_spec_gates_with_invalid_failure() {
+        let ev = Evaluator::new(mha_suite());
+        let mut s = KernelSpec::naive();
+        s.block_q = 100;
+        let score = ev.evaluate(&s);
+        assert!(matches!(score.failure, Some(Failure::Invalid(_))));
+    }
+
+    #[test]
+    fn geomean_split_views() {
+        let ev = Evaluator::new(mha_suite());
+        let s = ev.evaluate(&crate::baselines::evolved_genome());
+        let (c, nc, all) = (s.geomean_causal(), s.geomean_noncausal(), s.geomean());
+        assert!(c > 0.0 && nc > 0.0);
+        assert!(all > c.min(nc) && all < c.max(nc));
+    }
+
+    #[test]
+    fn geomean_edge_cases() {
+        assert_eq!(geomean([].into_iter()), 0.0);
+        assert_eq!(geomean([2.0, 0.0].into_iter()), 0.0);
+        assert!((geomean([2.0, 8.0].into_iter()) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noise_is_deterministic_given_seed() {
+        let ev = Evaluator::new(mha_suite()).with_noise(0.004);
+        let spec = crate::baselines::evolved_genome();
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        let s1 = ev.evaluate_noisy(&spec, &mut Some(&mut r1));
+        let s2 = ev.evaluate_noisy(&spec, &mut Some(&mut r2));
+        assert_eq!(s1.per_config, s2.per_config);
+        let clean = ev.evaluate(&spec);
+        assert_ne!(s1.per_config, clean.per_config);
+    }
+}

@@ -1,0 +1,18 @@
+//! Hardware substrate: the Blackwell-class simulator that replaces the
+//! paper's B200 testbed (see DESIGN.md §Substitutions).
+//!
+//! * [`machine`] — the machine description and calibrated cost constants;
+//! * [`functional`] — numerical execution of the genome's algorithm
+//!   (correctness verdicts, with genuine corruption under hazards);
+//! * [`pipeline`] — the cycle model (throughput verdicts);
+//! * [`profile`] — the profiler report the agent consumes.
+
+pub mod functional;
+pub mod machine;
+pub mod pipeline;
+pub mod profile;
+
+pub use functional::{check, ErrorClass};
+pub use machine::MachineSpec;
+pub use pipeline::{simulate, CycleReport};
+pub use profile::{profile, ProfileReport};

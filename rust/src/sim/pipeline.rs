@@ -1,0 +1,484 @@
+//! Cycle-approximate performance model: prices one kernel genome on one
+//! benchmark configuration, producing cycles, TFLOPS, and the per-stage
+//! breakdown the profiler report is built from.
+//!
+//! Model structure (per K-block iteration of one Q-tile):
+//!
+//! ```text
+//!   mma_chain   = QK GEMM + PV GEMM (+ dependency bubble unless interleaved)
+//!   vec_chain   = softmax (+ mask work on masked iterations) + sync
+//!   correction  = accumulator rescale (+ register-spill stalls)
+//!
+//!   q_stages=1:             iter = mma_chain + vec_chain + correction + fence + handoff
+//!   q_stages=2, no overlap: iter = max(mma_chain, vec_chain) + correction + fence + handoff
+//!   q_stages=2, overlap:    iter = max(mma_chain, vec_chain + (1-phi)*corr_compute)
+//!                                  + visible_spills + fence + handoff
+//! ```
+//!
+//! The `max()` between the MMA and vector chains is what produces the
+//! paper's *discrete jumps*: an optimization only pays off once it moves
+//! the critical path, which is also why the same edit can be worth +8% on
+//! one side of a crossover and ~0% on the other (Table 1's causal vs
+//! non-causal asymmetries).  K/V TMA traffic is hidden behind compute once
+//! the staging depth is >= 2; causal kernels see a mix of unmasked and
+//! masked (diagonal) iterations plus a dual-path dispatch drain when they
+//! combine branchless unmasked paths with branched masked ones (§5.1).
+//! Tile scheduling uses the classic makespan bound `total/SMs + max_tile`
+//! (per-tile CTAs) or `total/SMs + avg_tile` (persistent CTAs).
+
+
+use crate::kernelspec::{
+    FenceKind, KernelSpec, MaskingMode, RescaleMode, Scheduling, SoftmaxMode,
+};
+use crate::score::BenchConfig;
+use crate::sim::machine::MachineSpec;
+
+/// Per-stage cycle totals over the whole launch (for profiling).
+#[derive(Debug, Clone, Default)]
+pub struct Breakdown {
+    pub mma_qk: f64,
+    pub mma_pv: f64,
+    pub mma_bubble: f64,
+    pub softmax: f64,
+    pub masking: f64,
+    pub correction: f64,
+    pub sync: f64,
+    pub fence: f64,
+    pub handoff: f64,
+    pub spill_softmax: f64,
+    pub spill_correction: f64,
+    pub spill_other: f64,
+    pub tma_exposed: f64,
+    pub prologue: f64,
+    pub epilogue: f64,
+    pub tail_waste: f64,
+    /// Cycles the vector chain spent hidden under the MMA chain (or vice
+    /// versa) — idle headroom the profiler reports per warp group.
+    pub mma_idle: f64,
+    pub vector_idle: f64,
+}
+
+/// Register pressure per warp group: demand vs allocation.
+#[derive(Debug, Clone, Default)]
+pub struct RegisterPressure {
+    pub softmax_demand: u32,
+    pub correction_demand: u32,
+    pub other_demand: u32,
+    pub softmax_spill: u32,
+    pub correction_spill: u32,
+    pub other_spill: u32,
+}
+
+/// Full result of pricing one (spec, config) cell.
+#[derive(Debug, Clone)]
+pub struct CycleReport {
+    pub total_cycles: f64,
+    pub seconds: f64,
+    pub tflops: f64,
+    pub flops: f64,
+    pub breakdown: Breakdown,
+    pub pressure: RegisterPressure,
+    pub tiles: u64,
+    pub iterations: u64,
+}
+
+/// MMA efficiency of a tile extent (fraction of systolic-array utilization;
+/// 128-aligned tiles map perfectly, small tiles underfill).
+fn tile_eff(extent: u32) -> f64 {
+    match extent {
+        256 => 1.0,
+        128 => 1.0,
+        64 => 0.97,
+        32 => 0.88,
+        _ => 0.75,
+    }
+}
+
+/// Register demand model (per-warp registers) for each warp group.
+pub fn register_demand(spec: &KernelSpec) -> (u32, u32, u32) {
+    let softmax = {
+        let base = 40 + spec.block_k / 2;
+        let mode = if spec.softmax_mode == SoftmaxMode::TwoPass { 48 } else { 24 };
+        let packed = if spec.softmax_packed { 40 } else { 0 };
+        (base + mode).saturating_sub(packed)
+    };
+    let correction = {
+        let mut d = 28 + crate::kernelspec::HEAD_DIM / 4; // 60
+        if spec.q_stages == 2 {
+            d += 12;
+        }
+        if spec.correction_overlap {
+            d += 17; // live values held across the overlapped PV GEMM
+        }
+        d
+    };
+    let other = {
+        let mut d = 24 + 8 * spec.kv_pipeline_depth;
+        if spec.epilogue_async {
+            d += 12;
+        }
+        d
+    };
+    (softmax, correction, other)
+}
+
+/// Price one genome on one benchmark configuration.
+pub fn simulate(spec: &KernelSpec, cfg: &BenchConfig, m: &MachineSpec) -> CycleReport {
+    let bq = spec.block_q as f64;
+    let bk = spec.block_k as f64;
+    let d = cfg.head_dim as f64;
+
+    let dual_q = spec.q_stages == 2;
+
+    // ---------------- per-iteration stage costs -------------------------
+    let mma_rate = m.mma_flops_per_cycle() * m.mma_issue_efficiency;
+    let eff = tile_eff(spec.block_q) * tile_eff(spec.block_k);
+    let mma_qk = 2.0 * bq * bk * d / (mma_rate * eff);
+    let mma_pv = mma_qk;
+    let bubble = if spec.qk_pv_interleave { 0.0 } else { m.mma_dependency_bubble };
+    let mma_chain = mma_qk + mma_pv + bubble;
+
+    let elems = bq * bk;
+    let packed_speedup = if spec.softmax_packed { 1.25 } else { 1.0 };
+    let softmax = match spec.softmax_mode {
+        SoftmaxMode::TwoPass => {
+            elems * 24.0 / (m.vec_ops_per_cycle * packed_speedup)
+                + elems * 1.5 / m.sfu_ops_per_cycle
+        }
+        SoftmaxMode::SinglePass => {
+            elems * 18.0 / (m.vec_ops_per_cycle * packed_speedup)
+                + elems * 1.5 / m.exp2_ops_per_cycle
+        }
+    };
+
+    // Mask work on masked (diagonal) iterations only.
+    let mask_cost = match spec.masking_mode {
+        MaskingMode::Bitmask => elems * 1.0 / m.vec_ops_per_cycle,
+        MaskingMode::Arith => elems * 2.5 / m.vec_ops_per_cycle,
+    };
+
+    let corr_compute = bq * d * 1.45 / m.vec_ops_per_cycle;
+
+    // Synchronization of the correction path, per iteration (serializes at
+    // the warp-group boundary, i.e. outside the mma/vector overlap):
+    //   guarded    — a CTA-wide vote every iteration, plus the fence drain
+    //                on rescale events only (the branch skips it otherwise);
+    //                rescale events are rarer along the causal triangle.
+    //   branchless — a cheap predicated select plus the fence every
+    //                iteration; causal kernels additionally pay the
+    //                dual-path dispatch drain (the paper's masked key
+    //                blocks retain the branched logic).
+    let fence_raw = match spec.fence_kind {
+        FenceKind::Blocking => m.fence_blocking_cycles,
+        FenceKind::NonBlocking => m.fence_nonblocking_cycles,
+    };
+    let rescale_freq = if cfg.causal {
+        m.rescale_freq_causal
+    } else {
+        m.rescale_freq_noncausal
+    };
+    let (sync, fence, dual_path) = match spec.rescale_mode {
+        RescaleMode::Guarded => (m.guarded_vote_cycles, fence_raw * rescale_freq, 0.0),
+        RescaleMode::Branchless => (
+            m.branchless_pred_cycles,
+            fence_raw,
+            if cfg.causal { m.causal_dual_path_cycles } else { 0.0 },
+        ),
+    };
+
+    // Register spills.
+    let (dem_s, dem_c, dem_o) = register_demand(spec);
+    let spill = |demand: u32, alloc: u32| demand.saturating_sub(alloc);
+    let sp_s = spill(dem_s, spec.registers.softmax);
+    let sp_c = spill(dem_c, spec.registers.correction);
+    let sp_o = spill(dem_o, spec.registers.other);
+    let spill_s_cyc = sp_s as f64 * m.spill_cycles_per_reg;
+    let spill_c_cyc = sp_c as f64 * m.spill_cycles_per_reg;
+    // Load/epilogue-group spills surface partially on the iteration path.
+    let spill_o_cyc = sp_o as f64 * m.spill_cycles_per_reg * 0.3;
+
+    let softmax_total = softmax + spill_s_cyc;
+
+    // Spill visibility on the correction path (largely hidden for causal).
+    let spill_vis = if cfg.causal { m.causal_spill_visibility } else { 1.0 };
+
+    // ---------------- iteration assembly --------------------------------
+    // `masked`: does this iteration carry mask work (diagonal block)?
+    let iter_cycles = |masked: bool| -> (f64, Breakdown) {
+        let mut b = Breakdown::default();
+        let vec_chain = softmax_total + if masked { mask_cost } else { 0.0 };
+        let corr = corr_compute + spill_c_cyc * spill_vis;
+        let total;
+        if dual_q {
+            if spec.correction_overlap {
+                // v30: correction of stage A runs under stage B's PV GEMM.
+                // Non-causal: the correction *compute* rides the vector
+                // chain's slack under the MMA chain; causal kernels
+                // re-serialize (1 - phi) of it on the masked path.  Spill
+                // stalls on the correction warp stay on the critical path
+                // either way — after the overlap the correction warp is on
+                // the execution critical path (paper 5.3), which is exactly
+                // what made the v33 register rebalance profitable.
+                let phi = m.overlap_hide_fraction
+                    * if cfg.causal { m.causal_overlap_attenuation } else { 1.0 };
+                let (vec_full, serial_corr) = if cfg.causal {
+                    (vec_chain, (1.0 - phi) * corr_compute)
+                } else {
+                    (vec_chain + (1.0 - phi) * corr_compute, 0.0)
+                };
+                let visible_spill = spill_c_cyc * spill_vis;
+                total = mma_chain.max(vec_full) + serial_corr + visible_spill
+                    + sync + fence + dual_path + spill_o_cyc + m.handoff_cycles;
+                b.correction = serial_corr + visible_spill
+                    + if cfg.causal { 0.0 } else { (1.0 - phi) * corr_compute };
+                if mma_chain >= vec_full {
+                    b.vector_idle = mma_chain - vec_full;
+                } else {
+                    b.mma_idle = vec_full - mma_chain;
+                }
+            } else {
+                total = mma_chain.max(vec_chain) + corr + sync + fence + dual_path
+                    + spill_o_cyc + m.handoff_cycles;
+                b.correction = corr;
+                if mma_chain >= vec_chain {
+                    b.vector_idle = mma_chain - vec_chain;
+                } else {
+                    b.mma_idle = vec_chain - mma_chain;
+                }
+            }
+        } else {
+            total = mma_chain + vec_chain + corr + sync + fence + dual_path
+                + spill_o_cyc + m.handoff_cycles;
+            b.correction = corr;
+        }
+        b.mma_qk = mma_qk;
+        b.mma_pv = mma_pv;
+        b.mma_bubble = bubble;
+        b.softmax = softmax;
+        b.masking = if masked { mask_cost } else { 0.0 };
+        b.sync = sync + dual_path;
+        b.fence = fence;
+        b.handoff = m.handoff_cycles;
+        b.spill_softmax = spill_s_cyc;
+        b.spill_correction = spill_c_cyc * spill_vis;
+        b.spill_other = spill_o_cyc;
+        (total, b)
+    };
+
+    let (iter_unmasked, bd_unmasked) = iter_cycles(false);
+    let (iter_masked, bd_masked) = iter_cycles(true);
+
+    // ---------------- TMA exposure --------------------------------------
+    let kv_bytes_per_iter = 2.0 * bk * d * 2.0; // K + V blocks, bf16
+    let depth = spec.kv_pipeline_depth as f64;
+    let tma_cycles = kv_bytes_per_iter / m.kv_bytes_per_cycle()
+        * (1.0 - 0.02 * (depth - 1.0).min(3.0));
+    let tma_exposed_per_iter = if spec.kv_pipeline_depth == 1 {
+        // Unbuffered: the load latency and transfer serialize with compute.
+        tma_cycles + m.tma_latency_cycles * 0.5
+    } else {
+        (tma_cycles - iter_unmasked).max(0.0) // hidden unless BW-bound
+    };
+    let iter_unmasked = iter_unmasked + tma_exposed_per_iter;
+    let iter_masked = iter_masked + tma_exposed_per_iter;
+
+    // ---------------- tiles and iteration counts ------------------------
+    let n_q_tiles = (cfg.seq_len as u64).div_ceil(spec.block_q as u64);
+    let n_k_blocks = (cfg.seq_len as u64).div_ceil(spec.block_k as u64);
+    let tiles = cfg.batch as u64 * cfg.q_heads as u64 * n_q_tiles;
+
+    // Per-tile prologue/epilogue.
+    let prologue = bq * d * 2.0 / m.hbm_bytes_per_cycle() + 200.0;
+    let epilogue_raw = bq * d * 2.0 / m.hbm_bytes_per_cycle()
+        + bq * d * 2.0 / m.vec_ops_per_cycle;
+    let epilogue = if spec.epilogue_async { epilogue_raw * 0.15 } else { epilogue_raw };
+
+    // Iterations per tile + per-tile cost.  For causal kernels, tile i
+    // (by Q position) covers blocks 0..=diag(i); without early exit it runs
+    // all K blocks, paying mask work on every block past the diagonal.
+    let blocks_per_q_tile = |ti: u64| -> (u64, u64) {
+        if !cfg.causal {
+            return (n_k_blocks, 0);
+        }
+        let q_hi = (ti + 1) * spec.block_q as u64; // exclusive row bound
+        let diag_block = (q_hi - 1) / spec.block_k as u64; // last live block
+        let live = diag_block + 1;
+        // Diagonal blocks needing mask work: those straddling the boundary.
+        let masked = (spec.block_q as u64).div_ceil(spec.block_k as u64).max(1);
+        if spec.early_exit {
+            (live, masked.min(live))
+        } else {
+            // All blocks run; fully-masked tail blocks still pay mask work.
+            let tail = n_k_blocks - live;
+            (n_k_blocks, (masked.min(live)) + tail)
+        }
+    };
+
+    let mut total_work = 0.0; // sum of tile costs, cycles
+    let mut max_tile = 0.0f64;
+    let mut iterations: u64 = 0;
+    let mut agg = Breakdown::default();
+    let per_head_tiles = n_q_tiles;
+    for ti in 0..per_head_tiles {
+        let (live, masked) = blocks_per_q_tile(ti);
+        let unmasked = live - masked.min(live);
+        let cost = prologue
+            + epilogue
+            + unmasked as f64 * iter_unmasked
+            + masked.min(live) as f64 * iter_masked;
+        let copies = (tiles / per_head_tiles) as f64;
+        total_work += cost * copies;
+        max_tile = max_tile.max(cost);
+        iterations += live * (tiles / per_head_tiles);
+        // Aggregate breakdown (scaled by copies).
+        let acc = |agg: &mut Breakdown, b: &Breakdown, k: f64| {
+            agg.mma_qk += b.mma_qk * k;
+            agg.mma_pv += b.mma_pv * k;
+            agg.mma_bubble += b.mma_bubble * k;
+            agg.softmax += b.softmax * k;
+            agg.masking += b.masking * k;
+            agg.correction += b.correction * k;
+            agg.sync += b.sync * k;
+            agg.fence += b.fence * k;
+            agg.handoff += b.handoff * k;
+            agg.spill_softmax += b.spill_softmax * k;
+            agg.spill_correction += b.spill_correction * k;
+            agg.spill_other += b.spill_other * k;
+            agg.mma_idle += b.mma_idle * k;
+            agg.vector_idle += b.vector_idle * k;
+        };
+        acc(&mut agg, &bd_unmasked, unmasked as f64 * copies);
+        acc(&mut agg, &bd_masked, masked.min(live) as f64 * copies);
+        agg.prologue += prologue * copies;
+        agg.epilogue += epilogue * copies;
+        agg.tma_exposed += tma_exposed_per_iter * live as f64 * copies;
+    }
+
+    // ---------------- scheduling / makespan ------------------------------
+    let sms = m.sms as f64;
+    let avg_tile = total_work / tiles as f64;
+    let makespan = match spec.scheduling {
+        Scheduling::PerTile => total_work / sms + max_tile,
+        Scheduling::Persistent => total_work / sms + avg_tile,
+    };
+    agg.tail_waste = (makespan - total_work / sms) * sms;
+
+    let flops = cfg.flops();
+    let seconds = m.cycles_to_seconds(makespan);
+    CycleReport {
+        total_cycles: makespan,
+        seconds,
+        tflops: flops / seconds / 1e12,
+        flops,
+        breakdown: agg,
+        pressure: RegisterPressure {
+            softmax_demand: dem_s,
+            correction_demand: dem_c,
+            other_demand: dem_o,
+            softmax_spill: sp_s,
+            correction_spill: sp_c,
+            other_spill: sp_o,
+        },
+        tiles,
+        iterations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelspec::KernelSpec;
+    use crate::score::BenchConfig;
+
+    fn cfg(causal: bool) -> BenchConfig {
+        BenchConfig::mha(1, 32768, causal)
+    }
+
+    #[test]
+    fn naive_is_much_slower_than_evolved() {
+        let m = MachineSpec::b200();
+        let naive = simulate(&KernelSpec::naive(), &cfg(false), &m);
+        let evolved = simulate(&crate::baselines::evolved_genome(), &cfg(false), &m);
+        assert!(evolved.tflops > naive.tflops * 1.5,
+                "evolved {} vs naive {}", evolved.tflops, naive.tflops);
+    }
+
+    #[test]
+    fn tflops_below_peak() {
+        let m = MachineSpec::b200();
+        for causal in [false, true] {
+            let r = simulate(&crate::baselines::evolved_genome(), &cfg(causal), &m);
+            assert!(r.tflops < m.peak_bf16_tflops);
+            assert!(r.tflops > 800.0, "implausibly slow: {}", r.tflops);
+        }
+    }
+
+    #[test]
+    fn causal_early_exit_matters() {
+        let m = MachineSpec::b200();
+        let mut s = crate::baselines::evolved_genome();
+        let with = simulate(&s, &cfg(true), &m);
+        s.early_exit = false;
+        let without = simulate(&s, &cfg(true), &m);
+        // Without the diagonal bound the kernel does ~2x the iterations for
+        // the same (halved) FLOPs convention.
+        assert!(with.tflops > without.tflops * 1.6);
+        assert!(without.iterations > with.iterations);
+    }
+
+    #[test]
+    fn pipeline_depth_hides_tma() {
+        let m = MachineSpec::b200();
+        let mut s = crate::baselines::evolved_genome();
+        s.kv_pipeline_depth = 2;
+        let buffered = simulate(&s, &cfg(false), &m);
+        s.kv_pipeline_depth = 1;
+        let unbuffered = simulate(&s, &cfg(false), &m);
+        assert!(buffered.tflops > unbuffered.tflops * 1.1);
+    }
+
+    #[test]
+    fn dual_q_overlaps_vector_and_mma() {
+        let m = MachineSpec::b200();
+        let mut s = crate::baselines::evolved_genome();
+        s.q_stages = 2;
+        let dual = simulate(&s, &cfg(false), &m);
+        s.q_stages = 1;
+        s.correction_overlap = false; // overlap requires dual-Q
+        let single = simulate(&s, &cfg(false), &m);
+        assert!(dual.tflops > single.tflops * 1.2);
+    }
+
+    #[test]
+    fn spills_reported_when_underallocated() {
+        let m = MachineSpec::b200();
+        let mut s = crate::baselines::evolved_genome();
+        s.registers.correction = 64;
+        s.registers.softmax = 200; // keep budget legal
+        let r = simulate(&s, &cfg(false), &m);
+        assert!(r.pressure.correction_spill > 0);
+        assert!(r.breakdown.spill_correction > 0.0);
+    }
+
+    #[test]
+    fn persistent_scheduling_reduces_tail_for_causal() {
+        let m = MachineSpec::b200();
+        let mut s = crate::baselines::evolved_genome();
+        s.scheduling = Scheduling::Persistent;
+        let p = simulate(&s, &cfg(true), &m);
+        s.scheduling = Scheduling::PerTile;
+        let t = simulate(&s, &cfg(true), &m);
+        assert!(p.tflops >= t.tflops);
+    }
+
+    #[test]
+    fn flops_accounting_matches_convention() {
+        let m = MachineSpec::b200();
+        let r = simulate(&KernelSpec::naive(), &cfg(false), &m);
+        let c = cfg(false);
+        assert_eq!(r.flops, 4.0 * c.batch as f64 * c.q_heads as f64
+                   * (c.seq_len as f64).powi(2) * c.head_dim as f64);
+        let rc = simulate(&KernelSpec::naive(), &cfg(true), &m);
+        assert_eq!(rc.flops, r.flops / 2.0);
+    }
+}

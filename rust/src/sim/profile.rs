@@ -1,0 +1,226 @@
+//! Profiler report: the structured "nsight output" the AVO agent reads at
+//! the start of each variation step to pick its optimization direction.
+//!
+//! The paper's agent "examines multiple prior implementations ... comparing
+//! their profiling characteristics to identify bottlenecks"; this module
+//! turns a [`CycleReport`] into exactly that: a ranked list of bottlenecks,
+//! each tagged with the [`Direction`] whose edits could relieve it.
+
+
+use crate::kernelspec::Direction;
+use crate::sim::pipeline::CycleReport;
+
+/// One ranked bottleneck: a share of total cycles attributable to a cause
+/// the mutation catalogue can act on.
+#[derive(Debug, Clone)]
+pub struct Bottleneck {
+    pub direction: Direction,
+    /// Fraction of total cycles attributed to this cause.
+    pub share: f64,
+    /// Human-readable profiler line (what the agent "reads").
+    pub note: String,
+}
+
+/// Full profiler report for one (spec, config) cell.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    pub tflops: f64,
+    pub total_cycles: f64,
+    pub bottlenecks: Vec<Bottleneck>,
+    /// Spilled registers per warp group (softmax, correction, other).
+    pub spills: (u32, u32, u32),
+    /// Idle share of the MMA pipe and the vector units.
+    pub mma_idle_share: f64,
+    pub vector_idle_share: f64,
+}
+
+/// Build the ranked bottleneck report from a cycle report.
+pub fn profile(report: &CycleReport) -> ProfileReport {
+    let b = &report.breakdown;
+    // Total attributed cycles (per-SM aggregate); shares are relative.
+    let attributed = b.mma_qk + b.mma_pv + b.mma_bubble + b.softmax + b.masking
+        + b.correction + b.sync + b.fence + b.handoff + b.spill_softmax
+        + b.spill_correction + b.spill_other + b.tma_exposed + b.prologue
+        + b.epilogue + b.tail_waste + b.mma_idle + b.vector_idle;
+    let attributed = attributed.max(1.0);
+    let share = |x: f64| x / attributed;
+
+    let mut bn = vec![
+        Bottleneck {
+            direction: Direction::Synchronization,
+            share: share(b.sync + b.fence),
+            note: format!(
+                "sync+fence overhead {:.1}% (vote/pred {:.0}, fence {:.0} cyc/launch-avg)",
+                100.0 * share(b.sync + b.fence), b.sync, b.fence
+            ),
+        },
+        Bottleneck {
+            direction: Direction::SoftmaxAlgo,
+            share: share(b.softmax + b.spill_softmax),
+            note: format!(
+                "softmax warps {:.1}% of cycles (vector-unit bound: {})",
+                100.0 * share(b.softmax + b.spill_softmax),
+                b.mma_idle > b.vector_idle
+            ),
+        },
+        Bottleneck {
+            direction: Direction::Overlap,
+            share: share(b.correction),
+            note: format!(
+                "correction warp serialized for {:.1}% (idle while PV GEMM runs)",
+                100.0 * share(b.correction)
+            ),
+        },
+        Bottleneck {
+            direction: Direction::Registers,
+            share: share(b.spill_correction + b.spill_other + b.spill_softmax),
+            note: format!(
+                "local-memory spills: softmax {} / correction {} / other {} regs",
+                report.pressure.softmax_spill,
+                report.pressure.correction_spill,
+                report.pressure.other_spill
+            ),
+        },
+        Bottleneck {
+            direction: Direction::MmaIssue,
+            share: share(b.mma_bubble),
+            note: format!(
+                "tensor-core dependency bubbles {:.1}%",
+                100.0 * share(b.mma_bubble)
+            ),
+        },
+        Bottleneck {
+            direction: Direction::Masking,
+            share: share(b.masking),
+            note: format!("mask work {:.1}%", 100.0 * share(b.masking)),
+        },
+        Bottleneck {
+            direction: Direction::Pipelining,
+            share: share(b.tma_exposed + b.mma_idle + b.vector_idle * 0.5),
+            note: format!(
+                "exposed TMA {:.1}%, cross-unit idle (mma {:.1}%, vector {:.1}%)",
+                100.0 * share(b.tma_exposed),
+                100.0 * share(b.mma_idle),
+                100.0 * share(b.vector_idle)
+            ),
+        },
+        Bottleneck {
+            direction: Direction::Scheduling,
+            share: share(b.tail_waste),
+            note: format!(
+                "wave-tail waste {:.1}% (makespan imbalance)",
+                100.0 * share(b.tail_waste)
+            ),
+        },
+        Bottleneck {
+            direction: Direction::Tiling,
+            share: share(b.prologue + b.epilogue) * 0.6
+                + share(b.mma_qk + b.mma_pv) * 0.05,
+            note: format!(
+                "tile prologue/epilogue {:.1}%",
+                100.0 * share(b.prologue + b.epilogue)
+            ),
+        },
+    ];
+    bn.sort_by(|a, b| b.share.partial_cmp(&a.share).unwrap());
+
+    ProfileReport {
+        tflops: report.tflops,
+        total_cycles: report.total_cycles,
+        bottlenecks: bn,
+        spills: (
+            report.pressure.softmax_spill,
+            report.pressure.correction_spill,
+            report.pressure.other_spill,
+        ),
+        mma_idle_share: share(b.mma_idle),
+        vector_idle_share: share(b.vector_idle),
+    }
+}
+
+impl ProfileReport {
+    /// Render the report as profiler-style text (agent-readable, logged).
+    pub fn to_text(&self) -> String {
+        let mut s = format!(
+            "== profile: {:.0} TFLOPS, {:.2e} cycles ==\n",
+            self.tflops, self.total_cycles
+        );
+        for (i, b) in self.bottlenecks.iter().enumerate() {
+            s.push_str(&format!(
+                "  #{:<2} [{:<15}] {:>5.1}%  {}\n",
+                i + 1,
+                b.direction.to_string(),
+                b.share * 100.0,
+                b.note
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::score::BenchConfig;
+    use crate::sim::machine::MachineSpec;
+    use crate::sim::pipeline::simulate;
+
+    #[test]
+    fn bottlenecks_ranked_descending() {
+        let r = simulate(
+            &crate::kernelspec::KernelSpec::naive(),
+            &BenchConfig::mha(1, 32768, false),
+            &MachineSpec::b200(),
+        );
+        let p = profile(&r);
+        for w in p.bottlenecks.windows(2) {
+            assert!(w[0].share >= w[1].share);
+        }
+    }
+
+    #[test]
+    fn naive_kernel_flags_pipelining_or_sync() {
+        // The naive kernel (depth 1, single Q-stage, blocking fence) must
+        // surface Pipelining or Synchronization near the top.
+        let r = simulate(
+            &crate::kernelspec::KernelSpec::naive(),
+            &BenchConfig::mha(1, 32768, false),
+            &MachineSpec::b200(),
+        );
+        let p = profile(&r);
+        let top3: Vec<_> = p.bottlenecks.iter().take(3).map(|b| b.direction).collect();
+        assert!(
+            top3.contains(&crate::kernelspec::Direction::Pipelining)
+                || top3.contains(&crate::kernelspec::Direction::Synchronization),
+            "top3 = {top3:?}"
+        );
+    }
+
+    #[test]
+    fn spilling_kernel_flags_registers() {
+        let mut s = crate::baselines::evolved_genome();
+        s.registers.correction = 48;
+        s.registers.softmax = 216;
+        let r = simulate(&s, &BenchConfig::mha(1, 32768, false), &MachineSpec::b200());
+        let p = profile(&r);
+        assert!(p.spills.1 > 0);
+        let reg_rank = p
+            .bottlenecks
+            .iter()
+            .position(|b| b.direction == crate::kernelspec::Direction::Registers)
+            .unwrap();
+        assert!(reg_rank < 5, "registers ranked {reg_rank}");
+    }
+
+    #[test]
+    fn report_renders() {
+        let r = simulate(
+            &crate::baselines::evolved_genome(),
+            &BenchConfig::mha(1, 4096, true),
+            &MachineSpec::b200(),
+        );
+        let text = profile(&r).to_text();
+        assert!(text.contains("TFLOPS"));
+        assert!(text.lines().count() >= 9);
+    }
+}

