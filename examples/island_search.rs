@@ -1,0 +1,66 @@
+//! Island-model search demo: run the AVO agent as a 4-island archipelago
+//! with elite migration and a shared content-addressed evaluation cache,
+//! and compare migration policies at the same per-island budget.
+//!
+//!   cargo run --release --example island_search [--islands N]
+
+use avo::coordinator::{EvolutionDriver, RunConfig};
+use avo::islands::MigrationPolicy;
+
+fn main() {
+    let islands: usize = std::env::args()
+        .skip_while(|a| a != "--islands")
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+
+    println!("== AVO island-model search: {islands} islands ==");
+    for policy in [
+        MigrationPolicy::Ring,
+        MigrationPolicy::BroadcastBest,
+        MigrationPolicy::RandomPairs,
+    ] {
+        let mut cfg = RunConfig {
+            seed: 42,
+            target_commits: 10,
+            max_steps: 60,
+            ..RunConfig::default()
+        };
+        cfg.topology.islands = islands;
+        cfg.topology.migration = policy;
+        cfg.topology.migrate_every = 2;
+
+        let t0 = std::time::Instant::now();
+        let report = EvolutionDriver::new(cfg).run();
+        println!("\n-- migration = {policy} ({:.2?}) --", t0.elapsed());
+        println!("{}", report.summary());
+        for isl in &report.islands {
+            println!(
+                "  island {}: {:3} commits, best {:7.1} TFLOPS, {:3} steps, \
+                 {} migrants in / {} accepted",
+                isl.id,
+                isl.lineage.len(),
+                isl.lineage.best_geomean(),
+                isl.steps,
+                isl.metrics.counter("migrants_received"),
+                isl.metrics.counter("migrants_accepted"),
+            );
+        }
+        let (h, m) = (
+            report.metrics.counter("eval_cache_hits"),
+            report.metrics.counter("eval_cache_misses"),
+        );
+        println!(
+            "  eval cache: {h} hits / {m} misses — {:.0}% of evaluations deduplicated",
+            100.0 * h as f64 / (h + m).max(1) as f64
+        );
+        println!(
+            "  global best lineage head: {}",
+            report
+                .lineage
+                .head()
+                .map(|c| c.message.clone())
+                .unwrap_or_default()
+        );
+    }
+}

@@ -1,0 +1,77 @@
+//! Island-model scaling: wall-clock and best-geomean of one sequential
+//! lineage vs an N-island archipelago at the SAME total variation-step
+//! budget (the N-island run splits the budget N ways, so any win comes
+//! from parallel wall-clock, migration, and cache-level deduplication —
+//! not from extra evaluations).
+//!
+//!   cargo bench --bench island_scaling
+//!   AVO_BENCH_QUICK=1 cargo bench --bench island_scaling   # CI-sized
+
+use avo::benchkit::Bench;
+use avo::coordinator::{EvolutionDriver, RunConfig, RunReport};
+use avo::islands::MigrationPolicy;
+
+const TOTAL_STEPS: usize = 96;
+const SEED: u64 = 42;
+
+fn config(islands: usize, policy: MigrationPolicy) -> RunConfig {
+    let mut cfg = RunConfig {
+        seed: SEED,
+        // Budget purely by steps: the commit target never binds.
+        target_commits: usize::MAX / 2,
+        max_steps: TOTAL_STEPS / islands,
+        ..RunConfig::default()
+    };
+    cfg.topology.islands = islands;
+    cfg.topology.migration = policy;
+    cfg.topology.migrate_every = 2;
+    cfg
+}
+
+fn run(islands: usize, policy: MigrationPolicy) -> RunReport {
+    EvolutionDriver::new(config(islands, policy)).run()
+}
+
+fn main() {
+    let mut b = Bench::new("island_scaling").with_iters(1, 3);
+
+    b.case("1_island_96_steps", || run(1, MigrationPolicy::Ring));
+    b.case("4_islands_24_steps_ring", || run(4, MigrationPolicy::Ring));
+    b.case("4_islands_24_steps_broadcast", || {
+        run(4, MigrationPolicy::BroadcastBest)
+    });
+    b.finish();
+
+    // Quality at equal evaluation budget (one representative run each;
+    // runs are deterministic, so this is the value every iteration saw).
+    let single = run(1, MigrationPolicy::Ring);
+    let ring = run(4, MigrationPolicy::Ring);
+    let broadcast = run(4, MigrationPolicy::BroadcastBest);
+    println!("\n== equal-budget quality ({TOTAL_STEPS} total steps, seed {SEED}) ==");
+    for (name, r) in [
+        ("1 island", &single),
+        ("4 islands / ring", &ring),
+        ("4 islands / broadcast_best", &broadcast),
+    ] {
+        println!(
+            "  {name:<28} best geomean {:8.1} TFLOPS  ({} evaluations, \
+             cache {} hits / {} misses)",
+            r.lineage.best_geomean(),
+            r.metrics.counter("evaluations"),
+            r.metrics.counter("eval_cache_hits"),
+            r.metrics.counter("eval_cache_misses"),
+        );
+    }
+    let best_island = ring.lineage.best_geomean().max(broadcast.lineage.best_geomean());
+    println!(
+        "  island best {} single-lineage best ({:.1} vs {:.1})",
+        if best_island >= single.lineage.best_geomean() { ">=" } else { "<" },
+        best_island,
+        single.lineage.best_geomean()
+    );
+    assert!(
+        ring.metrics.counter("eval_cache_hits") > 0
+            && broadcast.metrics.counter("eval_cache_hits") > 0,
+        "N-island runs must deduplicate through the shared EvalCache"
+    );
+}

@@ -21,6 +21,7 @@ use std::collections::HashMap;
 
 use crate::agent::{diagnose, AgentAction, StepOutcome, VariationOperator};
 use crate::evolution::Lineage;
+use crate::islands::Migrant;
 use crate::kernelspec::{Direction, Edit, KernelSpec};
 use crate::knowledge::KnowledgeBase;
 use crate::prng::Rng;
@@ -78,6 +79,10 @@ pub struct AvoAgent {
     memory: HashMap<Direction, DirMemory>,
     /// Supervisor boost, decayed each step.
     boosted: Vec<Direction>,
+    /// Elites received from other islands, consumed as crossover donors
+    /// (oldest first).  Empty outside island-model runs, so the sequential
+    /// regime draws exactly the same PRNG stream as before.
+    migrants: Vec<Migrant>,
 }
 
 impl AvoAgent {
@@ -88,6 +93,7 @@ impl AvoAgent {
             rng: Rng::new(seed),
             memory: HashMap::new(),
             boosted: Vec::new(),
+            migrants: Vec::new(),
         }
     }
 
@@ -296,8 +302,24 @@ impl VariationOperator for AvoAgent {
                 });
             }
 
-            // 3. Propose: crossover or catalogue edit.
-            let candidate = if lineage.len() > 3 && self.rng.chance(self.config.crossover_prob)
+            // 3. Propose: crossover (cross-island migrant first, then local
+            //    lineage member) or catalogue edit.  The migrant branch
+            //    draws no randomness when the pool is empty, keeping the
+            //    sequential regime's PRNG stream untouched.  Migrants are
+            //    consulted more eagerly than local donors (floored at 0.3)
+            //    — but crossover_prob = 0 is an explicit no-crossover
+            //    ablation and disables the migrant path too.
+            let migrant_prob = if self.config.crossover_prob > 0.0 {
+                self.config.crossover_prob.max(0.3)
+            } else {
+                0.0
+            };
+            let candidate = if !self.migrants.is_empty() && self.rng.chance(migrant_prob)
+            {
+                let donor = self.migrants.remove(0);
+                out.actions.push(AgentAction::Crossover { with: donor.commit });
+                best.spec.crossover(&donor.spec, &mut self.rng)
+            } else if lineage.len() > 3 && self.rng.chance(self.config.crossover_prob)
             {
                 let versions = lineage.versions();
                 let donor = versions[self.rng.below(versions.len())];
@@ -394,6 +416,16 @@ impl VariationOperator for AvoAgent {
         out
     }
 
+    fn receive_migrants(&mut self, migrants: &[Migrant]) {
+        self.migrants.extend(migrants.iter().cloned());
+        // Keep only the freshest few: stale elites from slow islands stop
+        // being useful once the local lineage has moved past them.
+        if self.migrants.len() > 8 {
+            let drop = self.migrants.len() - 8;
+            self.migrants.drain(..drop);
+        }
+    }
+
     fn apply_directive(&mut self, directive: &Directive) {
         for d in &directive.ban {
             self.memory.entry(*d).or_default().banned_for = directive.ban_steps;
@@ -475,6 +507,55 @@ mod tests {
         agent.apply_directive(&directive);
         assert_eq!(agent.memory[&Direction::Tiling].banned_for, 4);
         assert_eq!(agent.boosted, vec![Direction::Registers]);
+    }
+
+    #[test]
+    fn migrants_feed_the_crossover_path() {
+        let eval = crate::score::Evaluator::new(crate::score::mha_suite());
+        let mut cfg = AvoConfig::default();
+        cfg.crossover_prob = 1.0; // migrant branch taken deterministically
+        let mut agent = AvoAgent::new(cfg, 21);
+        let mut lineage = Lineage::new();
+        let seed = crate::kernelspec::KernelSpec::naive();
+        let s = eval.evaluate(&seed);
+        lineage.seed(seed, s, "seed");
+        let donor_spec = crate::baselines::evolved_genome();
+        let donor_score = eval.evaluate(&donor_spec);
+        let donor_id = crate::store::CommitId(0xBEEF);
+        agent.receive_migrants(&[Migrant {
+            from_island: 1,
+            commit: donor_id,
+            spec: donor_spec,
+            score: donor_score,
+        }]);
+        let out = agent.step(&mut lineage, &eval, 1);
+        assert!(
+            out.actions
+                .iter()
+                .any(|a| matches!(a, AgentAction::Crossover { with } if *with == donor_id)),
+            "migrant donor never consulted"
+        );
+        // Pool drains as donors are consumed.
+        assert!(agent.migrants.is_empty());
+    }
+
+    #[test]
+    fn migrant_pool_is_bounded() {
+        let mut agent = AvoAgent::new(AvoConfig::default(), 3);
+        let eval = crate::score::Evaluator::new(crate::score::mha_suite());
+        let spec = crate::kernelspec::KernelSpec::naive();
+        let score = eval.evaluate(&spec);
+        for i in 0..20 {
+            agent.receive_migrants(&[Migrant {
+                from_island: i,
+                commit: crate::store::CommitId(i as u64),
+                spec: spec.clone(),
+                score: score.clone(),
+            }]);
+        }
+        assert_eq!(agent.migrants.len(), 8);
+        // Oldest dropped first: the survivors are the freshest 8.
+        assert_eq!(agent.migrants[0].from_island, 12);
     }
 
     #[test]

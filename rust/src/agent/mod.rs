@@ -21,6 +21,7 @@ pub use avo::{AvoAgent, AvoConfig};
 pub use baseline_ops::{FixedPipelineOperator, SingleTurnOperator};
 
 use crate::evolution::Lineage;
+use crate::islands::Migrant;
 use crate::kernelspec::Direction;
 use crate::score::{Evaluator, Failure};
 use crate::store::CommitId;
@@ -68,6 +69,11 @@ pub trait VariationOperator {
     /// Supervisor hook (no-op for baseline operators, which have no
     /// self-supervision channel — part of what Fig. 1 contrasts).
     fn apply_directive(&mut self, _directive: &crate::supervisor::Directive) {}
+    /// Island-model hook: elites arriving from other islands at a
+    /// migration barrier.  Operators that consult the lineage (AVO's
+    /// crossover) use these as cross-island donors; baseline operators
+    /// ignore them by default.
+    fn receive_migrants(&mut self, _migrants: &[Migrant]) {}
 }
 
 #[cfg(test)]

@@ -3,6 +3,8 @@
 //! `key = value` config file and overridable from the CLI.
 
 use crate::agent::AvoConfig;
+use crate::islands::MigrationPolicy;
+use crate::score::{gqa_suite, mha_suite, Evaluator};
 use crate::supervisor::SupervisorConfig;
 
 /// Which variation operator drives the run.
@@ -25,6 +27,35 @@ impl std::str::FromStr for OperatorKind {
     }
 }
 
+/// Shape of the search: how many concurrent lineages, and how they
+/// exchange elites.  The default (1 island) is the paper's sequential
+/// regime; budgets in [`RunConfig`] are per island.
+#[derive(Debug, Clone)]
+pub struct SearchTopology {
+    /// Number of concurrent lineages (1 = the paper's single lineage).
+    pub islands: usize,
+    /// How elites travel between islands at migration barriers.
+    pub migration: MigrationPolicy,
+    /// Commits an island lands between consecutive migration barriers.
+    /// (A stalled island still syncs after 4x this many steps, so it can
+    /// receive migrants rather than exhaust its budget alone.)
+    pub migrate_every: usize,
+    /// Worker threads driving islands (0 = one per island, machine-capped).
+    /// Archive contents are identical for every worker count.
+    pub workers: usize,
+}
+
+impl Default for SearchTopology {
+    fn default() -> Self {
+        SearchTopology {
+            islands: 1,
+            migration: MigrationPolicy::Ring,
+            migrate_every: 4,
+            workers: 0,
+        }
+    }
+}
+
 /// Full run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -38,6 +69,8 @@ pub struct RunConfig {
     pub gqa_kv_heads: Option<u32>,
     pub agent: AvoConfig,
     pub supervisor: SupervisorConfig,
+    /// Island-model topology (1 island = the paper's sequential lineage).
+    pub topology: SearchTopology,
     /// Worker threads for parallel candidate evaluation.
     pub eval_workers: usize,
     /// Where to persist the lineage (None = in-memory only).
@@ -54,6 +87,7 @@ impl Default for RunConfig {
             gqa_kv_heads: None,
             agent: AvoConfig::default(),
             supervisor: SupervisorConfig::default(),
+            topology: SearchTopology::default(),
             eval_workers: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(4),
@@ -83,6 +117,16 @@ impl RunConfig {
                 "max_steps" => cfg.max_steps = v.parse().map_err(|e| bad(&e))?,
                 "gqa_kv_heads" => cfg.gqa_kv_heads = Some(v.parse().map_err(|e| bad(&e))?),
                 "eval_workers" => cfg.eval_workers = v.parse().map_err(|e| bad(&e))?,
+                "islands" => cfg.topology.islands = v.parse().map_err(|e| bad(&e))?,
+                "migration" => {
+                    cfg.topology.migration = v.parse().map_err(|e: String| bad(&e))?
+                }
+                "migrate_every" => {
+                    cfg.topology.migrate_every = v.parse().map_err(|e| bad(&e))?
+                }
+                "island_workers" => {
+                    cfg.topology.workers = v.parse().map_err(|e| bad(&e))?
+                }
                 "lineage_path" => cfg.lineage_path = Some(v.into()),
                 "inner_budget" => cfg.agent.inner_budget = v.parse().map_err(|e| bad(&e))?,
                 "repair_budget" => cfg.agent.repair_budget = v.parse().map_err(|e| bad(&e))?,
@@ -105,6 +149,15 @@ impl RunConfig {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
         Self::parse(&text)
     }
+
+    /// The evaluator this configuration's runs are scored against.
+    pub fn evaluator(&self) -> Evaluator {
+        let suite = match self.gqa_kv_heads {
+            Some(kv) => gqa_suite(kv),
+            None => mha_suite(),
+        };
+        Evaluator::new(suite)
+    }
 }
 
 #[cfg(test)]
@@ -117,6 +170,25 @@ mod tests {
         assert_eq!(c.target_commits, 40);
         assert_eq!(c.operator, OperatorKind::Avo);
         assert!(c.gqa_kv_heads.is_none());
+        // The default topology is the paper's single sequential lineage.
+        assert_eq!(c.topology.islands, 1);
+        assert_eq!(c.topology.migration, MigrationPolicy::Ring);
+    }
+
+    #[test]
+    fn parse_topology_keys() {
+        let cfg = RunConfig::parse(
+            "islands = 4\n\
+             migration = broadcast_best\n\
+             migrate_every = 3\n\
+             island_workers = 2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.topology.islands, 4);
+        assert_eq!(cfg.topology.migration, MigrationPolicy::BroadcastBest);
+        assert_eq!(cfg.topology.migrate_every, 3);
+        assert_eq!(cfg.topology.workers, 2);
+        assert!(RunConfig::parse("migration = sideways\n").is_err());
     }
 
     #[test]

@@ -1,6 +1,9 @@
-//! The evolution driver: runs a variation operator under supervisor
-//! control until the commit target or step budget is reached — the
-//! coordinator's equivalent of the paper's 7-day continuous loop (§3.3).
+//! The evolution driver: the coordinator's equivalent of the paper's
+//! 7-day continuous loop (§3.3), generalized to the island model.  The
+//! actual loop lives in [`crate::islands::Archipelago`]; a default
+//! [`RunConfig`] (one island) reproduces the sequential single-lineage
+//! regime bit-for-bit, so the paper's experiment is the N=1 special case
+//! rather than a parallel code path.
 
 use crate::agent::{
     AvoAgent, FixedPipelineOperator, SingleTurnOperator, VariationOperator,
@@ -8,22 +11,40 @@ use crate::agent::{
 use crate::coordinator::config::{OperatorKind, RunConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::evolution::Lineage;
+use crate::islands::{Archipelago, IslandReport};
 use crate::kernelspec::KernelSpec;
-use crate::score::{gqa_suite, mha_suite, Evaluator};
-use crate::supervisor::Supervisor;
+use crate::score::Evaluator;
 
-/// Result of a full run.
+/// Construct the configured variation operator with an explicit PRNG seed
+/// (the archipelago derives one per island from the run seed).
+pub(crate) fn build_operator(
+    config: &RunConfig,
+    seed: u64,
+) -> Box<dyn VariationOperator + Send> {
+    match config.operator {
+        OperatorKind::Avo => Box::new(AvoAgent::new(config.agent.clone(), seed)),
+        OperatorKind::SingleTurn => Box::new(SingleTurnOperator::new(seed)),
+        OperatorKind::FixedPipeline => Box::new(FixedPipelineOperator::new(seed)),
+    }
+}
+
+/// Result of a full run.  `lineage`, `metrics`, `interventions`, and
+/// `steps` aggregate across islands (the lineage is the globally best
+/// island's archive); `islands` carries the per-island detail.
 pub struct RunReport {
     pub lineage: Lineage,
     pub metrics: Metrics,
-    /// Supervisor intervention notes, in order.
+    /// Supervisor intervention notes from every island, in island order.
     pub interventions: Vec<String>,
+    /// Total variation steps across all islands.
     pub steps: usize,
+    /// Per-island reports (length 1 for the sequential regime).
+    pub islands: Vec<IslandReport>,
 }
 
 impl RunReport {
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} commits, best geomean {:.1} TFLOPS, {} steps, {} evaluations, \
              {} directions explored, {} interventions",
             self.lineage.len(),
@@ -32,7 +53,23 @@ impl RunReport {
             self.metrics.counter("evaluations"),
             self.metrics.counter("directions_explored"),
             self.interventions.len(),
-        )
+        );
+        if self.islands.len() > 1 {
+            let per_island: Vec<String> = self
+                .islands
+                .iter()
+                .map(|i| format!("{:.0}", i.lineage.best_geomean()))
+                .collect();
+            s.push_str(&format!(
+                "; {} islands (bests [{}]), {} migrants, cache {} hits / {} misses",
+                self.islands.len(),
+                per_island.join(", "),
+                self.metrics.counter("migrants_received"),
+                self.metrics.counter("eval_cache_hits"),
+                self.metrics.counter("eval_cache_misses"),
+            ));
+        }
+        s
     }
 }
 
@@ -46,77 +83,13 @@ impl EvolutionDriver {
         EvolutionDriver { config }
     }
 
-    fn make_operator(&self) -> Box<dyn VariationOperator> {
-        match self.config.operator {
-            OperatorKind::Avo => {
-                Box::new(AvoAgent::new(self.config.agent.clone(), self.config.seed))
-            }
-            OperatorKind::SingleTurn => {
-                Box::new(SingleTurnOperator::new(self.config.seed))
-            }
-            OperatorKind::FixedPipeline => {
-                Box::new(FixedPipelineOperator::new(self.config.seed))
-            }
-        }
-    }
-
     pub fn evaluator(&self) -> Evaluator {
-        let suite = match self.config.gqa_kv_heads {
-            Some(kv) => gqa_suite(kv),
-            None => mha_suite(),
-        };
-        Evaluator::new(suite)
+        self.config.evaluator()
     }
 
     /// Run evolution from a seed genome.
     pub fn run_from(&self, seed_spec: KernelSpec, seed_message: &str) -> RunReport {
-        let eval = self.evaluator();
-        let mut operator = self.make_operator();
-        let mut supervisor = Supervisor::new(self.config.supervisor.clone());
-        let mut metrics = Metrics::new();
-        let mut lineage = Lineage::new();
-
-        let score = metrics.time("evaluate", || eval.evaluate(&seed_spec));
-        assert!(
-            score.is_correct(),
-            "seed genome must be correct: {:?}",
-            score.failure
-        );
-        lineage.seed(seed_spec, score, seed_message);
-        metrics.incr("evaluations", 1);
-
-        let mut interventions = Vec::new();
-        let mut steps = 0;
-        while lineage.len() < self.config.target_commits + 1
-            && steps < self.config.max_steps
-        {
-            steps += 1;
-            let outcome =
-                metrics.time("variation_step", || operator.step(&mut lineage, &eval, steps));
-            metrics.incr("evaluations", outcome.evaluations as u64);
-            metrics.incr("directions_explored", outcome.directions.len() as u64);
-            if outcome.committed.is_some() {
-                metrics.incr("commits", 1);
-            }
-            metrics.incr(
-                "repairs",
-                outcome
-                    .actions
-                    .iter()
-                    .filter(|a| matches!(a, crate::agent::AgentAction::Diagnose { .. }))
-                    .count() as u64,
-            );
-            if let Some(directive) = supervisor.observe(&outcome, &lineage) {
-                metrics.incr("interventions", 1);
-                interventions.push(directive.note.clone());
-                operator.apply_directive(&directive);
-            }
-        }
-
-        if let Some(path) = &self.config.lineage_path {
-            lineage.save(path).expect("persist lineage");
-        }
-        RunReport { lineage, metrics, interventions, steps }
+        Archipelago::new(self.config.clone()).run_from(seed_spec, seed_message)
     }
 
     /// The paper's main MHA run: evolve from the naive seed.
@@ -206,5 +179,28 @@ mod tests {
         let loaded = Lineage::load(&path).unwrap();
         assert_eq!(loaded.len(), report.lineage.len());
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn single_lineage_report_has_one_island() {
+        let report = EvolutionDriver::new(small_config(4)).run();
+        assert_eq!(report.islands.len(), 1);
+        assert_eq!(report.islands[0].steps, report.steps);
+        let ids_global: Vec<_> = report.lineage.versions().iter().map(|c| c.id).collect();
+        let ids_island: Vec<_> =
+            report.islands[0].lineage.versions().iter().map(|c| c.id).collect();
+        assert_eq!(ids_global, ids_island);
+    }
+
+    #[test]
+    fn multi_island_driver_run() {
+        let mut cfg = small_config(7);
+        cfg.target_commits = 5;
+        cfg.topology.islands = 3;
+        cfg.topology.migrate_every = 2;
+        let report = EvolutionDriver::new(cfg).run();
+        assert_eq!(report.islands.len(), 3);
+        assert!(report.metrics.counter("eval_cache_hits") > 0);
+        assert!(report.summary().contains("islands"));
     }
 }

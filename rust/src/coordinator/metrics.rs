@@ -39,6 +39,17 @@ impl Metrics {
         self.timers.get(name).copied().unwrap_or(Duration::ZERO)
     }
 
+    /// Fold another registry into this one (summing counters and timers) —
+    /// how per-island metrics aggregate into the run report.
+    pub fn merge(&mut self, other: &Metrics) {
+        for (&k, &v) in &other.counters {
+            *self.counters.entry(k).or_insert(0) += v;
+        }
+        for (&k, &v) in &other.timers {
+            *self.timers.entry(k).or_insert(Duration::ZERO) += v;
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj([
             (
@@ -92,6 +103,21 @@ mod tests {
         });
         assert_eq!(x, 42);
         assert!(m.elapsed("work") >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn merge_sums_counters_and_timers() {
+        let mut a = Metrics::new();
+        a.incr("evals", 3);
+        a.time("work", || std::thread::sleep(Duration::from_millis(1)));
+        let mut b = Metrics::new();
+        b.incr("evals", 4);
+        b.incr("commits", 1);
+        b.time("work", || std::thread::sleep(Duration::from_millis(1)));
+        a.merge(&b);
+        assert_eq!(a.counter("evals"), 7);
+        assert_eq!(a.counter("commits"), 1);
+        assert!(a.elapsed("work") >= Duration::from_millis(2));
     }
 
     #[test]

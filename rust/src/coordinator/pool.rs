@@ -93,4 +93,59 @@ mod tests {
         let pool = EvalPool::new(4);
         assert!(pool.evaluate_batch(&eval, &[]).is_empty());
     }
+
+    #[test]
+    fn more_workers_than_specs() {
+        let eval = Evaluator::new(mha_suite());
+        let pool = EvalPool::new(16);
+        let specs = vec![KernelSpec::naive(), crate::baselines::evolved_genome()];
+        let out = pool.evaluate_batch(&eval, &specs);
+        assert_eq!(out.len(), 2);
+        for (o, s) in out.iter().zip(&specs) {
+            assert_eq!(o.per_config, eval.evaluate(s).per_config);
+        }
+    }
+
+    #[test]
+    fn result_order_matches_input_order() {
+        // Distinguishable specs in a deliberately non-monotone order: the
+        // output must line up index-for-index regardless of which worker
+        // finishes first.
+        let eval = Evaluator::new(mha_suite());
+        let specs = vec![
+            crate::baselines::evolved_genome(),
+            KernelSpec::naive(),
+            crate::baselines::fa4_genome(),
+            KernelSpec::naive(),
+            crate::baselines::evolved_genome(),
+        ];
+        let out = EvalPool::new(3).evaluate_batch(&eval, &specs);
+        assert_eq!(out.len(), specs.len());
+        assert_eq!(out[1].per_config, out[3].per_config);
+        assert_eq!(out[0].per_config, out[4].per_config);
+        assert!(out[0].geomean() > out[1].geomean());
+        assert!(out[2].geomean() > out[1].geomean());
+    }
+
+    #[test]
+    fn zero_workers_clamps_to_one() {
+        let eval = Evaluator::new(mha_suite());
+        let out = EvalPool::new(0).evaluate_batch(&eval, &[KernelSpec::naive()]);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].is_correct());
+    }
+
+    #[test]
+    fn pool_routes_through_shared_cache() {
+        let cache = std::sync::Arc::new(crate::islands::EvalCache::default());
+        let eval = Evaluator::new(mha_suite()).with_cache(std::sync::Arc::clone(&cache));
+        let specs = vec![KernelSpec::naive(); 6];
+        let out = EvalPool::new(3).evaluate_batch(&eval, &specs);
+        assert_eq!(out.len(), 6);
+        // 6 identical genomes: at most a couple of racing misses, the rest
+        // hits — and exactly one stored entry.
+        assert_eq!(cache.hits() + cache.misses(), 6);
+        assert!(cache.hits() >= 1);
+        assert_eq!(cache.len(), 1);
+    }
 }

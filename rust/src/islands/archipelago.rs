@@ -1,0 +1,432 @@
+//! The archipelago: N independent lineages ("islands"), each driven by its
+//! own variation operator + supervisor on a worker thread, exchanging
+//! elites at migration barriers and sharing one content-addressed
+//! evaluation cache.
+//!
+//! Determinism contract: island i's operator PRNG is derived from the run
+//! seed and i alone; islands share no mutable state between barriers
+//! except the [`EvalCache`], whose entries are deterministic functions of
+//! the genome (noise is disabled inside evolution) — so a cache hit equals
+//! a recomputation bit-for-bit.  Migration happens only with all worker
+//! threads joined, walking routes in a deterministic order with randomness
+//! from a dedicated migration stream.  Archive contents are therefore a
+//! pure function of (config, seed genome), independent of worker count and
+//! thread scheduling.
+
+use std::sync::Arc;
+
+use crate::agent::{AgentAction, VariationOperator};
+use crate::coordinator::config::RunConfig;
+use crate::coordinator::driver::{build_operator, RunReport};
+use crate::coordinator::metrics::Metrics;
+use crate::evolution::Lineage;
+use crate::islands::cache::EvalCache;
+use crate::islands::migration::Migrant;
+use crate::kernelspec::KernelSpec;
+use crate::prng::Rng;
+use crate::score::Evaluator;
+use crate::supervisor::Supervisor;
+
+/// Per-island results, reported alongside the global aggregate.
+pub struct IslandReport {
+    pub id: usize,
+    pub lineage: Lineage,
+    pub metrics: Metrics,
+    pub interventions: Vec<String>,
+    pub steps: usize,
+}
+
+/// One island's full run state (operator + supervisor + archive).
+struct Island {
+    id: usize,
+    lineage: Lineage,
+    operator: Box<dyn VariationOperator + Send>,
+    supervisor: Supervisor,
+    metrics: Metrics,
+    interventions: Vec<String>,
+    steps: usize,
+}
+
+impl Island {
+    fn done(&self, cfg: &RunConfig) -> bool {
+        self.lineage.len() >= cfg.target_commits + 1 || self.steps >= cfg.max_steps
+    }
+}
+
+/// The island-model search coordinator.  `islands = 1` reproduces the
+/// paper's single-lineage regime exactly (same operator seed, same step
+/// sequence, no migration).
+pub struct Archipelago {
+    pub config: RunConfig,
+}
+
+impl Archipelago {
+    pub fn new(config: RunConfig) -> Self {
+        Archipelago { config }
+    }
+
+    /// Worker threads for the next epoch (0 in config = one per island,
+    /// capped by the machine).
+    fn worker_count(&self, islands: usize) -> usize {
+        let configured = self.config.topology.workers;
+        let cap = if configured == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            configured
+        };
+        cap.clamp(1, islands.max(1))
+    }
+
+    /// Run the archipelago from a seed genome (committed unconditionally to
+    /// every island, as the paper seeds from a working baseline).
+    pub fn run_from(&self, seed_spec: KernelSpec, seed_message: &str) -> RunReport {
+        let cfg = &self.config;
+        let n = cfg.topology.islands.max(1);
+        let cache = Arc::new(EvalCache::default());
+        let eval = cfg.evaluator().with_cache(Arc::clone(&cache));
+
+        // Per-island operator streams: island 0 uses the run seed verbatim
+        // (the single-lineage path is the N=1 special case, bit-for-bit);
+        // the rest derive independent streams from it.
+        let mut seeder = Rng::new(cfg.seed);
+        let mut islands: Vec<Island> = (0..n)
+            .map(|i| {
+                let op_seed = if i == 0 {
+                    cfg.seed
+                } else {
+                    seeder.fork(i as u64).next_u64()
+                };
+                Island {
+                    id: i,
+                    lineage: Lineage::new(),
+                    operator: build_operator(cfg, op_seed),
+                    supervisor: Supervisor::new(cfg.supervisor.clone()),
+                    metrics: Metrics::new(),
+                    interventions: Vec::new(),
+                    steps: 0,
+                }
+            })
+            .collect();
+        let mut mig_rng = seeder.fork(0xA5CADE);
+
+        // Every island scores the seed itself; the cache turns all but the
+        // first call into hits, and the per-island evaluation counters stay
+        // exact (hits + misses == evaluations).
+        for isl in &mut islands {
+            let seed_score = isl.metrics.time("evaluate", || eval.evaluate(&seed_spec));
+            assert!(
+                seed_score.is_correct(),
+                "seed genome must be correct: {:?}",
+                seed_score.failure
+            );
+            isl.lineage.seed(seed_spec.clone(), seed_score, seed_message);
+            isl.metrics.incr("evaluations", 1);
+        }
+
+        // Epochs: every island runs until it lands `migrate_every` fresh
+        // commits — or 4x that many steps, so a stalled island still
+        // reaches the barrier and can receive the migrants that would
+        // unstick it instead of burning its whole budget alone.  Then all
+        // threads join and elites migrate.  N=1 runs one uninterrupted
+        // epoch.
+        let (commit_quota, step_quota) = if n == 1 {
+            (usize::MAX, usize::MAX)
+        } else {
+            let k = cfg.topology.migrate_every.max(1);
+            (k, k.saturating_mul(4))
+        };
+        let mut epoch = 0usize;
+        while islands.iter().any(|i| !i.done(cfg)) {
+            self.run_epoch(&mut islands, &eval, commit_quota, step_quota);
+            epoch += 1;
+            if n > 1 && islands.iter().any(|i| !i.done(cfg)) {
+                self.migrate(&mut islands, epoch, &mut mig_rng);
+            }
+        }
+
+        self.aggregate(islands, &cache)
+    }
+
+    /// One epoch: islands advance independently (no shared mutable state
+    /// beyond the cache), partitioned across worker threads.
+    fn run_epoch(
+        &self,
+        islands: &mut [Island],
+        eval: &Evaluator,
+        commit_quota: usize,
+        step_quota: usize,
+    ) {
+        let cfg = &self.config;
+        let workers = self.worker_count(islands.len());
+        if workers <= 1 || islands.len() <= 1 {
+            for isl in islands.iter_mut() {
+                run_island_epoch(isl, eval, cfg, commit_quota, step_quota);
+            }
+            return;
+        }
+        // Split islands into exactly `workers` contiguous groups (sizes
+        // differing by at most one) so every requested thread is used.
+        let base = islands.len() / workers;
+        let extra = islands.len() % workers;
+        std::thread::scope(|scope| {
+            let mut rest = islands;
+            for i in 0..workers {
+                let take = base + usize::from(i < extra);
+                if take == 0 {
+                    break;
+                }
+                let (group, tail) = std::mem::take(&mut rest).split_at_mut(take);
+                rest = tail;
+                scope.spawn(move || {
+                    for isl in group {
+                        run_island_epoch(isl, eval, cfg, commit_quota, step_quota);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Migration barrier: walk the policy's routes in order; a migrant that
+    /// strictly beats the destination's best is committed through the
+    /// normal Update rule, and is always handed to the destination
+    /// operator's crossover pool (so lineage consultation becomes
+    /// cross-island even when the migrant doesn't immediately win).
+    fn migrate(&self, islands: &mut [Island], epoch: usize, mig_rng: &mut Rng) {
+        let cfg = &self.config;
+        let n = islands.len();
+        // Globally best island; ties break to the lowest index.
+        let mut best = 0usize;
+        for (i, isl) in islands.iter().enumerate() {
+            if isl.lineage.best_geomean() > islands[best].lineage.best_geomean() {
+                best = i;
+            }
+        }
+        let routes = cfg.topology.migration.routes(n, best, mig_rng);
+        // Snapshot every route's donor BEFORE applying any commits: routes
+        // must deliver the elites as of the barrier.  Otherwise an earlier
+        // route's accepted migrant becomes a later route's "donor" — Ring
+        // would cascade one genome around the whole ring in a single
+        // barrier, and RandomPairs would hand an island its own elite back
+        // instead of its partner's.
+        let donors: Vec<Option<(Migrant, String)>> = routes
+            .iter()
+            .map(|&(src, _)| {
+                islands[src].lineage.best().map(|donor| {
+                    (
+                        Migrant {
+                            from_island: src,
+                            commit: donor.id,
+                            spec: donor.spec.clone(),
+                            score: donor.score.clone(),
+                        },
+                        donor.message.clone(),
+                    )
+                })
+            })
+            .collect();
+        for (&(src, dst), snapshot) in routes.iter().zip(donors) {
+            if src == dst {
+                continue;
+            }
+            let Some((migrant, donor_message)) = snapshot else {
+                continue;
+            };
+            let dst_isl = &mut islands[dst];
+            if dst_isl.done(cfg) {
+                continue;
+            }
+            let strictly_better =
+                migrant.score.geomean() > dst_isl.lineage.best_geomean() * (1.0 + 1e-12);
+            if strictly_better {
+                let message = format!(
+                    "migrant from island {src} (epoch {epoch}): {donor_message}"
+                );
+                if dst_isl
+                    .lineage
+                    .update(
+                        migrant.spec.clone(),
+                        migrant.score.clone(),
+                        &message,
+                        dst_isl.steps,
+                    )
+                    .is_ok()
+                {
+                    dst_isl.metrics.incr("migrants_accepted", 1);
+                }
+            }
+            dst_isl.operator.receive_migrants(&[migrant]);
+            dst_isl.metrics.incr("migrants_received", 1);
+        }
+    }
+
+    /// Fold island results into the aggregate [`RunReport`]: the reported
+    /// lineage is the globally best island's archive, metrics are summed,
+    /// and cache statistics surface as coordinator counters.
+    fn aggregate(&self, islands: Vec<Island>, cache: &EvalCache) -> RunReport {
+        let reports: Vec<IslandReport> = islands
+            .into_iter()
+            .map(|i| IslandReport {
+                id: i.id,
+                lineage: i.lineage,
+                metrics: i.metrics,
+                interventions: i.interventions,
+                steps: i.steps,
+            })
+            .collect();
+        let mut best = 0usize;
+        for (i, r) in reports.iter().enumerate() {
+            if r.lineage.best_geomean() > reports[best].lineage.best_geomean() {
+                best = i;
+            }
+        }
+        let mut metrics = Metrics::new();
+        for r in &reports {
+            metrics.merge(&r.metrics);
+        }
+        metrics.incr("eval_cache_hits", cache.hits());
+        metrics.incr("eval_cache_misses", cache.misses());
+        metrics.incr("eval_cache_entries", cache.len() as u64);
+        let interventions: Vec<String> = reports
+            .iter()
+            .flat_map(|r| r.interventions.iter().cloned())
+            .collect();
+        let steps: usize = reports.iter().map(|r| r.steps).sum();
+        let lineage = reports[best].lineage.clone();
+        if let Some(path) = &self.config.lineage_path {
+            lineage.save(path).expect("persist lineage");
+        }
+        RunReport {
+            lineage,
+            metrics,
+            interventions,
+            steps,
+            islands: reports,
+        }
+    }
+}
+
+/// Advance one island until its epoch commit/step quota, global commit
+/// target, or step budget is reached — the body of the paper's §3.3 loop.
+fn run_island_epoch(
+    isl: &mut Island,
+    eval: &Evaluator,
+    cfg: &RunConfig,
+    commit_quota: usize,
+    step_quota: usize,
+) {
+    let epoch_commit_start = isl.lineage.len();
+    let epoch_step_start = isl.steps;
+    let Island {
+        lineage,
+        operator,
+        supervisor,
+        metrics,
+        interventions,
+        steps,
+        ..
+    } = isl;
+    while lineage.len() < cfg.target_commits + 1
+        && *steps < cfg.max_steps
+        && lineage.len() - epoch_commit_start < commit_quota
+        && *steps - epoch_step_start < step_quota
+    {
+        *steps += 1;
+        let step = *steps;
+        let outcome = metrics.time("variation_step", || operator.step(lineage, eval, step));
+        metrics.incr("evaluations", outcome.evaluations as u64);
+        metrics.incr("directions_explored", outcome.directions.len() as u64);
+        if outcome.committed.is_some() {
+            metrics.incr("commits", 1);
+        }
+        metrics.incr(
+            "repairs",
+            outcome
+                .actions
+                .iter()
+                .filter(|a| matches!(a, AgentAction::Diagnose { .. }))
+                .count() as u64,
+        );
+        if let Some(directive) = supervisor.observe(&outcome, lineage) {
+            metrics.incr("interventions", 1);
+            interventions.push(directive.note.clone());
+            operator.apply_directive(&directive);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::islands::migration::MigrationPolicy;
+
+    fn island_config(islands: usize, policy: MigrationPolicy) -> RunConfig {
+        let mut cfg = RunConfig {
+            seed: 13,
+            target_commits: 8,
+            max_steps: 40,
+            ..RunConfig::default()
+        };
+        cfg.topology.islands = islands;
+        cfg.topology.migration = policy;
+        cfg.topology.migrate_every = 2;
+        cfg.topology.workers = 2;
+        cfg
+    }
+
+    #[test]
+    fn archipelago_improves_over_seed_on_every_island() {
+        let report = Archipelago::new(island_config(3, MigrationPolicy::Ring))
+            .run_from(KernelSpec::naive(), "seed x0");
+        assert_eq!(report.islands.len(), 3);
+        for isl in &report.islands {
+            let seed_g = isl.lineage.versions()[0].score.geomean();
+            assert!(
+                isl.lineage.best_geomean() > seed_g,
+                "island {} never improved",
+                isl.id
+            );
+        }
+        // Global best is the max over islands.
+        let max_g = report
+            .islands
+            .iter()
+            .map(|i| i.lineage.best_geomean())
+            .fold(0.0f64, f64::max);
+        assert!((report.lineage.best_geomean() - max_g).abs() < 1e-12);
+    }
+
+    #[test]
+    fn migration_exchanges_elites() {
+        let report = Archipelago::new(island_config(3, MigrationPolicy::BroadcastBest))
+            .run_from(KernelSpec::naive(), "seed x0");
+        assert!(
+            report.metrics.counter("migrants_received") > 0,
+            "no migrants delivered"
+        );
+    }
+
+    #[test]
+    fn shared_cache_dedupes_across_islands() {
+        let report = Archipelago::new(island_config(2, MigrationPolicy::Ring))
+            .run_from(KernelSpec::naive(), "seed x0");
+        // Both islands evaluate the identical seed genome; the second is a
+        // guaranteed hit, and convergent proposals add more.
+        assert!(report.metrics.counter("eval_cache_hits") > 0);
+        assert!(report.metrics.counter("eval_cache_misses") > 0);
+        // Hits + misses covers every scoring-function invocation.
+        assert_eq!(
+            report.metrics.counter("eval_cache_hits")
+                + report.metrics.counter("eval_cache_misses"),
+            report.metrics.counter("evaluations")
+        );
+    }
+
+    #[test]
+    fn single_island_runs_without_migration() {
+        let report = Archipelago::new(island_config(1, MigrationPolicy::Ring))
+            .run_from(KernelSpec::naive(), "seed x0");
+        assert_eq!(report.islands.len(), 1);
+        assert_eq!(report.metrics.counter("migrants_received"), 0);
+        assert!(report.lineage.len() > 1);
+    }
+}

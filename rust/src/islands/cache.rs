@@ -1,0 +1,156 @@
+//! Shared content-addressed evaluation cache: KernelSpec-hash -> Score
+//! behind a sharded lock.
+//!
+//! Duplicate genomes are the norm under island search — every island seeds
+//! from the same x_0, migration homogenizes the elites, and independent
+//! agents rediscover the same catalogue edits — so the archipelago routes
+//! every scoring-function call through this map and never re-simulates a
+//! genome any island has already paid for.  Scores are deterministic
+//! inside evolution (noise_sigma = 0), so a cache hit is byte-identical to
+//! a recomputation and caching cannot perturb reproducibility.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::score::Score;
+
+/// Default shard count (power of two; collisions only cost lock sharing).
+pub const DEFAULT_SHARDS: usize = 16;
+
+/// A sharded (hash -> Score) map with hit/miss counters.
+pub struct EvalCache {
+    shards: Vec<Mutex<HashMap<u64, Score>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl EvalCache {
+    pub fn new(shards: usize) -> Self {
+        let shards = shards.max(1);
+        EvalCache {
+            shards: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: u64) -> &Mutex<HashMap<u64, Score>> {
+        &self.shards[(key % self.shards.len() as u64) as usize]
+    }
+
+    /// Look up `key`; on miss, run `compute` (without holding any lock —
+    /// simulation is the expensive part) and publish the result.  Two
+    /// threads racing on the same fresh key may both compute; the values
+    /// are identical, so the first insert wins harmlessly.
+    pub fn get_or_compute(&self, key: u64, compute: impl FnOnce() -> Score) -> Score {
+        if let Some(hit) = self.shard(key).lock().unwrap().get(&key).cloned() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit;
+        }
+        let score = compute();
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.shard(key)
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| score.clone());
+        score
+    }
+
+    /// Peek without computing.
+    pub fn get(&self, key: u64) -> Option<Score> {
+        self.shard(key).lock().unwrap().get(&key).cloned()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Distinct genomes scored so far.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for EvalCache {
+    fn default() -> Self {
+        Self::new(DEFAULT_SHARDS)
+    }
+}
+
+impl std::fmt::Debug for EvalCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EvalCache")
+            .field("entries", &self.len())
+            .field("hits", &self.hits())
+            .field("misses", &self.misses())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelspec::KernelSpec;
+    use crate::score::{mha_suite, Evaluator};
+
+    #[test]
+    fn miss_then_hit() {
+        let cache = EvalCache::default();
+        let eval = Evaluator::new(mha_suite());
+        let spec = KernelSpec::naive();
+        let key = spec.content_hash();
+        let a = cache.get_or_compute(key, || eval.evaluate(&spec));
+        let b = cache.get_or_compute(key, || panic!("must not recompute"));
+        assert_eq!(a.per_config, b.per_config);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let cache = EvalCache::new(4);
+        let eval = Evaluator::new(mha_suite());
+        let a = KernelSpec::naive();
+        let mut b = a.clone();
+        b.block_q = 128;
+        let sa = cache.get_or_compute(a.content_hash(), || eval.evaluate(&a));
+        let sb = cache.get_or_compute(b.content_hash(), || eval.evaluate(&b));
+        assert_ne!(sa.per_config, sb.per_config);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.misses(), 2);
+    }
+
+    #[test]
+    fn concurrent_access_counts_consistently() {
+        let cache = std::sync::Arc::new(EvalCache::default());
+        let eval = Evaluator::new(mha_suite());
+        let spec = KernelSpec::naive();
+        let key = spec.content_hash();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let cache = std::sync::Arc::clone(&cache);
+                let eval = eval.clone();
+                let spec = spec.clone();
+                scope.spawn(move || {
+                    for _ in 0..8 {
+                        cache.get_or_compute(key, || eval.evaluate(&spec));
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.hits() + cache.misses(), 32);
+        assert!(cache.misses() >= 1);
+        assert_eq!(cache.len(), 1);
+    }
+}

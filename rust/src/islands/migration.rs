@@ -1,0 +1,166 @@
+//! Migration between islands: which elites travel where, every K commits.
+//!
+//! Migration is applied at epoch barriers only (all worker threads joined),
+//! in island-index order, with any randomness drawn from a dedicated
+//! migration PRNG stream — so the exchange pattern is a pure function of
+//! (run seed, epoch) and never of thread scheduling.
+
+use crate::kernelspec::KernelSpec;
+use crate::prng::Rng;
+use crate::score::Score;
+use crate::store::CommitId;
+
+/// An elite traveling from one island to another.  Carries the donor's
+/// score so the receiver never re-simulates it (all islands share one
+/// suite), and the commit id so the receiving agent's crossover log can
+/// cite the cross-island donor.
+#[derive(Debug, Clone)]
+pub struct Migrant {
+    pub from_island: usize,
+    pub commit: CommitId,
+    pub spec: KernelSpec,
+    pub score: Score,
+}
+
+/// How elites are exchanged at a migration barrier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigrationPolicy {
+    /// Island i sends its best to island (i+1) mod N.
+    Ring,
+    /// The globally best island sends its best to every other island.
+    BroadcastBest,
+    /// A fresh random pairing each barrier; paired islands swap bests.
+    RandomPairs,
+}
+
+impl MigrationPolicy {
+    /// The (source, destination) routes for one barrier over `n` islands.
+    /// `best` is the globally-best island (used by BroadcastBest); `rng` is
+    /// the archipelago's dedicated migration stream (used by RandomPairs).
+    pub fn routes(&self, n: usize, best: usize, rng: &mut Rng) -> Vec<(usize, usize)> {
+        if n < 2 {
+            return Vec::new();
+        }
+        match self {
+            MigrationPolicy::Ring => (0..n).map(|i| (i, (i + 1) % n)).collect(),
+            MigrationPolicy::BroadcastBest => {
+                (0..n).filter(|&j| j != best).map(|j| (best, j)).collect()
+            }
+            MigrationPolicy::RandomPairs => {
+                let mut idx: Vec<usize> = (0..n).collect();
+                // Fisher-Yates on the migration stream.
+                for i in (1..n).rev() {
+                    let j = rng.below(i + 1);
+                    idx.swap(i, j);
+                }
+                let mut routes = Vec::with_capacity(n);
+                for pair in idx.chunks(2) {
+                    if let [a, b] = *pair {
+                        routes.push((a, b));
+                        routes.push((b, a));
+                    }
+                }
+                routes
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for MigrationPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "ring" => Ok(MigrationPolicy::Ring),
+            "broadcast" | "broadcast_best" | "broadcast-best" | "best" => {
+                Ok(MigrationPolicy::BroadcastBest)
+            }
+            "random" | "random_pairs" | "random-pairs" | "pairs" => {
+                Ok(MigrationPolicy::RandomPairs)
+            }
+            other => Err(format!("unknown migration policy '{other}'")),
+        }
+    }
+}
+
+impl std::fmt::Display for MigrationPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            MigrationPolicy::Ring => "ring",
+            MigrationPolicy::BroadcastBest => "broadcast_best",
+            MigrationPolicy::RandomPairs => "random_pairs",
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_routes_cycle() {
+        let mut rng = Rng::new(1);
+        let r = MigrationPolicy::Ring.routes(4, 0, &mut rng);
+        assert_eq!(r, vec![(0, 1), (1, 2), (2, 3), (3, 0)]);
+    }
+
+    #[test]
+    fn broadcast_routes_fan_out_from_best() {
+        let mut rng = Rng::new(1);
+        let r = MigrationPolicy::BroadcastBest.routes(4, 2, &mut rng);
+        assert_eq!(r, vec![(2, 0), (2, 1), (2, 3)]);
+    }
+
+    #[test]
+    fn random_pairs_swap_and_cover() {
+        let mut rng = Rng::new(7);
+        let r = MigrationPolicy::RandomPairs.routes(6, 0, &mut rng);
+        assert_eq!(r.len(), 6); // 3 pairs, both directions
+        for (a, b) in &r {
+            assert!(r.contains(&(*b, *a)), "pair ({a},{b}) must be symmetric");
+            assert_ne!(a, b);
+        }
+        // Every endpoint appears exactly twice (once as src, once as dst).
+        for i in 0..6 {
+            assert_eq!(r.iter().filter(|(a, _)| *a == i).count(), 1);
+            assert_eq!(r.iter().filter(|(_, b)| *b == i).count(), 1);
+        }
+    }
+
+    #[test]
+    fn random_pairs_odd_island_sits_out() {
+        let mut rng = Rng::new(3);
+        let r = MigrationPolicy::RandomPairs.routes(5, 0, &mut rng);
+        assert_eq!(r.len(), 4); // 2 pairs; one island idle this barrier
+    }
+
+    #[test]
+    fn random_pairs_deterministic_given_stream() {
+        let a = MigrationPolicy::RandomPairs.routes(8, 0, &mut Rng::new(11));
+        let b = MigrationPolicy::RandomPairs.routes(8, 0, &mut Rng::new(11));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn single_island_never_migrates() {
+        let mut rng = Rng::new(1);
+        for p in [
+            MigrationPolicy::Ring,
+            MigrationPolicy::BroadcastBest,
+            MigrationPolicy::RandomPairs,
+        ] {
+            assert!(p.routes(1, 0, &mut rng).is_empty());
+        }
+    }
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for p in [
+            MigrationPolicy::Ring,
+            MigrationPolicy::BroadcastBest,
+            MigrationPolicy::RandomPairs,
+        ] {
+            assert_eq!(p.to_string().parse::<MigrationPolicy>().unwrap(), p);
+        }
+        assert!("sideways".parse::<MigrationPolicy>().is_err());
+    }
+}

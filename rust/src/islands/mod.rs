@@ -1,0 +1,27 @@
+//! Island-model parallel search: the step from the paper's single
+//! sequential lineage (§3.3) to a population of concurrent lineages.
+//!
+//! * [`archipelago::Archipelago`] — N independent [`crate::evolution::Lineage`]s,
+//!   each driven by its own variation operator + supervisor on a worker
+//!   thread with a per-island PRNG stream derived from the run seed;
+//! * [`migration::MigrationPolicy`] — elites exchanged at epoch barriers
+//!   (ring / broadcast-best / random pairs, every K commits), fed into the
+//!   agent's existing crossover path so lineage consultation becomes
+//!   cross-island;
+//! * [`cache::EvalCache`] — a shared content-addressed (genome-hash →
+//!   Score) map behind a sharded lock, so duplicate genomes proposed by
+//!   different islands are never re-simulated.
+//!
+//! The paper's own commit criterion and content-addressed store generalize
+//! directly: migrants pass through the same Update rule as any candidate,
+//! and cache hits are bit-identical to recomputation (evolution runs
+//! noise-free), so results are reproducible regardless of worker count or
+//! thread scheduling.
+
+pub mod archipelago;
+pub mod cache;
+pub mod migration;
+
+pub use archipelago::{Archipelago, IslandReport};
+pub use cache::EvalCache;
+pub use migration::{Migrant, MigrationPolicy};

@@ -11,9 +11,16 @@
 //!   evaluates them against the scoring function ([`score`]), diagnoses and
 //!   repairs failures, and commits improvements — supervised against stalls
 //!   and unproductive cycles ([`supervisor`]).
+//! * **Scale-out** — an island model ([`islands`]): N concurrent lineages
+//!   with per-island PRNG streams, elite migration (ring / broadcast-best /
+//!   random pairs), and a shared content-addressed evaluation cache
+//!   ([`islands::EvalCache`]) so duplicate genomes are never re-simulated;
+//!   the paper's sequential regime is the one-island special case.
 //! * **Layer 2/1 (build-time Python)** — a parameterized Pallas
 //!   flash-attention kernel realizing the genome's algorithmic space,
-//!   AOT-lowered to HLO text artifacts the [`runtime`] executes via PJRT.
+//!   AOT-lowered to HLO text artifacts the `runtime` module (behind the
+//!   `pjrt` feature, which needs the vendored xla closure) executes via
+//!   PJRT.
 //! * **Hardware substrate** — the paper evolves CUDA kernels on B200 with a
 //!   profiler; we reproduce that substrate with a cycle-approximate
 //!   Blackwell-class simulator ([`sim`]) that prices exactly the
@@ -30,11 +37,13 @@ pub mod baselines;
 pub mod benchkit;
 pub mod coordinator;
 pub mod evolution;
+pub mod islands;
 pub mod json;
 pub mod kernelspec;
 pub mod knowledge;
 pub mod prng;
 pub mod repro;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod score;
 pub mod sim;

@@ -1,7 +1,8 @@
 //! `avo` — the Layer-3 coordinator CLI.
 //!
 //! Subcommands (hand-rolled parser; clap is not vendored offline):
-//!   evolve    run the AVO evolution loop (the paper's main experiment)
+//!   evolve    run the AVO evolution loop (the paper's main experiment),
+//!             optionally as an N-island archipelago
 //!   transfer  adapt an evolved MHA lineage to GQA (§4.3)
 //!   compare   AVO vs single-turn vs fixed-pipeline at equal budget
 //!   show      print a lineage file (versions, scores, sources)
@@ -9,6 +10,7 @@
 //!
 //! Examples:
 //!   avo evolve --seed 42 --commits 40 --out runs/mha
+//!   avo evolve --islands 4 --migration broadcast_best --migrate-every 3
 //!   avo evolve --config runs/mha.cfg
 //!   avo transfer --lineage runs/mha/lineage.json --kv-heads 4
 //!   avo compare --budget 240
@@ -18,15 +20,20 @@ use std::path::PathBuf;
 
 use avo::coordinator::{config::OperatorKind, EvolutionDriver, RunConfig};
 use avo::evolution::Lineage;
+use avo::islands::MigrationPolicy;
 use avo::kernelspec::KernelSpec;
 use avo::score::{mha_suite, BenchConfig, Evaluator};
 use avo::sim::profile::profile;
+
+type CliError = Box<dyn std::error::Error>;
 
 fn usage() -> ! {
     eprintln!(
         "usage: avo <evolve|transfer|compare|show|profile> [flags]\n\
          \n\
          evolve   --seed N --commits N --steps N --operator avo|single_turn|pes\n\
+         \u{20}         --islands N --migration ring|broadcast_best|random_pairs\n\
+         \u{20}         --migrate-every K --island-workers N\n\
          \u{20}         --config FILE --out DIR\n\
          transfer --lineage FILE --kv-heads 4|8 --seed N --out DIR\n\
          compare  --budget N --seed N\n\
@@ -51,12 +58,23 @@ impl Flags {
         self.0.iter().any(|a| a == name)
     }
 
-    fn parse<T: std::str::FromStr>(&self, name: &str) -> Option<T> {
-        self.get(name).and_then(|v| v.parse().ok())
+    /// Parse a flag's value; a malformed value is an error, not a silent
+    /// fall-through to the default.
+    fn parse_strict<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| format!("{name}: invalid value '{v}': {e}").into()),
+        }
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), CliError> {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() {
         usage();
@@ -67,21 +85,32 @@ fn main() -> anyhow::Result<()> {
     match cmd.as_str() {
         "evolve" => {
             let mut cfg = match flags.get("--config") {
-                Some(path) => RunConfig::load(std::path::Path::new(path))
-                    .map_err(|e| anyhow::anyhow!(e))?,
+                Some(path) => RunConfig::load(std::path::Path::new(path))?,
                 None => RunConfig::default(),
             };
-            if let Some(s) = flags.parse("--seed") {
+            if let Some(s) = flags.parse_strict("--seed")? {
                 cfg.seed = s;
             }
-            if let Some(c) = flags.parse("--commits") {
+            if let Some(c) = flags.parse_strict("--commits")? {
                 cfg.target_commits = c;
             }
-            if let Some(s) = flags.parse("--steps") {
+            if let Some(s) = flags.parse_strict("--steps")? {
                 cfg.max_steps = s;
             }
             if let Some(op) = flags.get("--operator") {
-                cfg.operator = op.parse::<OperatorKind>().map_err(|e| anyhow::anyhow!(e))?;
+                cfg.operator = op.parse::<OperatorKind>()?;
+            }
+            if let Some(n) = flags.parse_strict("--islands")? {
+                cfg.topology.islands = n;
+            }
+            if let Some(m) = flags.get("--migration") {
+                cfg.topology.migration = m.parse::<MigrationPolicy>()?;
+            }
+            if let Some(k) = flags.parse_strict("--migrate-every")? {
+                cfg.topology.migrate_every = k;
+            }
+            if let Some(w) = flags.parse_strict("--island-workers")? {
+                cfg.topology.workers = w;
             }
             let out_dir = flags.get("--out").map(PathBuf::from);
             if let Some(dir) = &out_dir {
@@ -90,6 +119,28 @@ fn main() -> anyhow::Result<()> {
             }
             let report = EvolutionDriver::new(cfg).run();
             println!("{}", report.summary());
+            if report.islands.len() > 1 {
+                for isl in &report.islands {
+                    println!(
+                        "  island {}: {} commits, best {:.1} TFLOPS, {} steps, \
+                         {} migrants in ({} accepted)",
+                        isl.id,
+                        isl.lineage.len(),
+                        isl.lineage.best_geomean(),
+                        isl.steps,
+                        isl.metrics.counter("migrants_received"),
+                        isl.metrics.counter("migrants_accepted"),
+                    );
+                }
+                let (h, m) = (
+                    report.metrics.counter("eval_cache_hits"),
+                    report.metrics.counter("eval_cache_misses"),
+                );
+                println!(
+                    "  eval cache: {h} hits / {m} misses ({:.0}% deduplicated)",
+                    100.0 * h as f64 / (h + m).max(1) as f64
+                );
+            }
             for note in &report.interventions {
                 println!("  supervisor: {note}");
             }
@@ -108,12 +159,11 @@ fn main() -> anyhow::Result<()> {
         }
         "transfer" => {
             let lineage_path = flags.get("--lineage").unwrap_or_else(|| usage());
-            let kv: u32 = flags.parse("--kv-heads").unwrap_or(4);
-            let lineage = Lineage::load(std::path::Path::new(lineage_path))
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let kv: u32 = flags.parse_strict("--kv-heads")?.unwrap_or(4);
+            let lineage = Lineage::load(std::path::Path::new(lineage_path))?;
             let evolved = lineage.best().expect("empty lineage").spec.clone();
             let mut cfg = RunConfig::default();
-            if let Some(s) = flags.parse("--seed") {
+            if let Some(s) = flags.parse_strict("--seed")? {
                 cfg.seed = s;
             }
             if let Some(dir) = flags.get("--out") {
@@ -124,8 +174,8 @@ fn main() -> anyhow::Result<()> {
             println!("GQA transfer (kv_heads={kv}): {}", report.summary());
         }
         "compare" => {
-            let budget: usize = flags.parse("--budget").unwrap_or(240);
-            let seed: u64 = flags.parse("--seed").unwrap_or(42);
+            let budget: usize = flags.parse_strict("--budget")?.unwrap_or(240);
+            let seed: u64 = flags.parse_strict("--seed")?.unwrap_or(42);
             for op in [
                 OperatorKind::Avo,
                 OperatorKind::SingleTurn,
@@ -144,8 +194,7 @@ fn main() -> anyhow::Result<()> {
         }
         "show" => {
             let path = flags.get("--lineage").unwrap_or_else(|| usage());
-            let lineage =
-                Lineage::load(std::path::Path::new(path)).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let lineage = Lineage::load(std::path::Path::new(path))?;
             for c in lineage.versions() {
                 println!(
                     "v{:<3} {:016x} geomean {:8.1}  {}",
@@ -161,7 +210,7 @@ fn main() -> anyhow::Result<()> {
         }
         "profile" => {
             let causal = flags.has("--causal");
-            let seq: u32 = flags.parse("--seq").unwrap_or(32768);
+            let seq: u32 = flags.parse_strict("--seq")?.unwrap_or(32768);
             let eval = Evaluator::new(mha_suite());
             let cfg = BenchConfig::mha((32768 / seq).max(1), seq, causal);
             let spec = KernelSpec::naive();

@@ -177,6 +177,15 @@ impl Score {
     }
 }
 
+/// FNV-1a fold over a byte slice (cache-key hashing).
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 /// Geomean of an iterator; empty -> 0, any zero -> 0.
 pub fn geomean(xs: impl Iterator<Item = f64>) -> f64 {
     let mut log_sum = 0.0;
@@ -205,6 +214,10 @@ pub struct Evaluator {
     pub noise_sigma: f64,
     /// Functional-check seed (fixed per run).
     pub functional_seed: u64,
+    /// Shared content-addressed score cache (island search); None = every
+    /// call simulates.  Only consulted when `noise_sigma == 0`, so noisy
+    /// measurement protocols are never cached.
+    pub cache: Option<std::sync::Arc<crate::islands::EvalCache>>,
 }
 
 impl Evaluator {
@@ -214,6 +227,7 @@ impl Evaluator {
             suite,
             noise_sigma: 0.0,
             functional_seed: 0x5EED,
+            cache: None,
         }
     }
 
@@ -222,9 +236,34 @@ impl Evaluator {
         self
     }
 
+    /// Route all deterministic evaluations through a shared score cache.
+    pub fn with_cache(mut self, cache: std::sync::Arc<crate::islands::EvalCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Cache-key component identifying what (besides the genome itself)
+    /// determines a score: the suite cells and the functional-check seed.
+    /// (The machine model is fixed per process.)
+    pub fn suite_tag(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for c in &self.suite {
+            h = fnv1a(h, c.name.as_bytes());
+            h = fnv1a(h, b";");
+        }
+        fnv1a(h, &self.functional_seed.to_le_bytes())
+    }
+
     /// Full scoring: validate -> functional check (per masking regime and
     /// group actually present in the suite) -> cycle model per config.
+    /// With a cache attached, duplicate genomes return the stored score.
     pub fn evaluate(&self, spec: &KernelSpec) -> Score {
+        if self.noise_sigma == 0.0 {
+            if let Some(cache) = &self.cache {
+                let key = spec.content_hash() ^ self.suite_tag();
+                return cache.get_or_compute(key, || self.evaluate_noisy(spec, &mut None));
+            }
+        }
         self.evaluate_noisy(spec, &mut None)
     }
 
@@ -339,6 +378,29 @@ mod tests {
         assert_eq!(geomean([].into_iter()), 0.0);
         assert_eq!(geomean([2.0, 0.0].into_iter()), 0.0);
         assert!((geomean([2.0, 8.0].into_iter()) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cached_evaluator_matches_uncached() {
+        let cache = std::sync::Arc::new(crate::islands::EvalCache::default());
+        let ev = Evaluator::new(mha_suite()).with_cache(std::sync::Arc::clone(&cache));
+        let plain = Evaluator::new(mha_suite());
+        let spec = crate::baselines::evolved_genome();
+        let a = ev.evaluate(&spec);
+        let b = ev.evaluate(&spec);
+        let c = plain.evaluate(&spec);
+        assert_eq!(a.per_config, b.per_config);
+        assert_eq!(a.per_config, c.per_config);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+    }
+
+    #[test]
+    fn suite_tag_distinguishes_suites() {
+        assert_ne!(
+            Evaluator::new(mha_suite()).suite_tag(),
+            Evaluator::new(gqa_suite(4)).suite_tag()
+        );
     }
 
     #[test]
