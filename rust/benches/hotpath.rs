@@ -1,14 +1,21 @@
 //! Hot-path microbenchmarks (the §Perf targets in EXPERIMENTS.md):
 //! the scoring function decomposed — structural validation, functional
-//! correctness execution, cycle model, full suite evaluation, parallel
-//! batch throughput — plus store/json costs.
+//! correctness execution, cycle model, full suite evaluation, batched
+//! backend throughput — plus store/json costs.
+//!
+//! Doubles as the CI batching smoke: after timing, it asserts that the
+//! batched eval path (parallel SimBackend, cached batch with in-batch
+//! dedup) returns score-identical results to one-at-a-time evaluation,
+//! and that the cached batch actually deduplicates.  A batching
+//! regression fails the build, not just the numbers.
 
 use avo::baselines;
 use avo::benchkit::Bench;
 use avo::coordinator::EvalPool;
+use avo::eval::{CachedBackend, EvalBackend, SimBackend};
 use avo::json::ToJson;
 use avo::kernelspec::KernelSpec;
-use avo::score::{mha_suite, BenchConfig, Evaluator};
+use avo::score::{mha_suite, BenchConfig, Evaluator, Score};
 use avo::sim::{functional, machine::MachineSpec, pipeline};
 
 fn main() {
@@ -31,6 +38,8 @@ fn main() {
     });
     b.case("content_hash", || spec.content_hash());
 
+    // 64 genomes over 4 distinct pipeline depths: 16-way duplication, the
+    // shape an archipelago's convergent proposals actually have.
     let specs: Vec<KernelSpec> = (0..64)
         .map(|i| {
             let mut s = baselines::evolved_genome();
@@ -38,11 +47,54 @@ fn main() {
             s
         })
         .collect();
-    let pool = EvalPool::new(
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
-    );
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let pool = EvalPool::new(workers);
     b.case("pool_batch_64", || pool.evaluate_batch(&eval, &specs));
     let seq = EvalPool::new(1);
     b.case("seq_batch_64", || seq.evaluate_batch(&eval, &specs));
+
+    let sim = SimBackend::new(eval.clone(), workers);
+    b.case("backend_batch_64", || sim.evaluate_batch(&specs));
+    b.case("backend_one_at_a_time_64", || {
+        specs.iter().map(|s| sim.evaluate(s)).collect::<Vec<Score>>()
+    });
+    // Fresh cache per iteration: times the dedup fill (4 computations for
+    // 64 requests), not warm hits.
+    b.case("cached_backend_batch_64_cold", || {
+        CachedBackend::new(SimBackend::new(eval.clone(), workers)).evaluate_batch(&specs)
+    });
+    let warm = CachedBackend::new(SimBackend::new(eval.clone(), workers));
+    warm.evaluate_batch(&specs);
+    b.case("cached_backend_batch_64_warm", || warm.evaluate_batch(&specs));
     b.finish();
+
+    // == batching smoke (CI gate) ==
+    let batched = sim.evaluate_batch(&specs);
+    let one_at_a_time: Vec<Score> = specs.iter().map(|s| eval.evaluate(s)).collect();
+    assert_eq!(batched.len(), one_at_a_time.len());
+    for (i, (a, b)) in batched.iter().zip(&one_at_a_time).enumerate() {
+        assert_eq!(
+            a.per_config, b.per_config,
+            "batched eval diverged from one-at-a-time at index {i}"
+        );
+    }
+    let cached = CachedBackend::new(SimBackend::new(eval.clone(), workers));
+    let via_cache = cached.evaluate_batch(&specs);
+    for (i, (a, b)) in via_cache.iter().zip(&one_at_a_time).enumerate() {
+        assert_eq!(
+            a.per_config, b.per_config,
+            "cached batch diverged from one-at-a-time at index {i}"
+        );
+    }
+    let stats = cached.cache_stats();
+    assert_eq!(
+        stats.hits + stats.misses,
+        specs.len() as u64,
+        "every batch slot must count as exactly one hit or miss"
+    );
+    assert_eq!(stats.misses, 4, "64 specs over 4 distinct genomes must compute 4");
+    println!(
+        "batching smoke OK: 64-spec batch, {} dedup hits / {} computations",
+        stats.hits, stats.misses
+    );
 }

@@ -20,12 +20,13 @@
 use std::collections::HashMap;
 
 use crate::agent::{diagnose, AgentAction, StepOutcome, VariationOperator};
+use crate::eval::EvalBackend;
 use crate::evolution::Lineage;
 use crate::islands::Migrant;
 use crate::kernelspec::{Direction, Edit, KernelSpec};
 use crate::knowledge::KnowledgeBase;
 use crate::prng::Rng;
-use crate::score::{BenchConfig, Evaluator, Score};
+use crate::score::{BenchConfig, Score};
 use crate::sim::profile::{profile, ProfileReport};
 use crate::supervisor::Directive;
 
@@ -185,13 +186,24 @@ impl AvoAgent {
 
     /// Evaluate with diagnose/repair loop.  Returns the final candidate,
     /// its score, and the evaluation count consumed.
+    ///
+    /// Every candidate — the initial proposal and each repair round — goes
+    /// through the backend's batched entry point.  The agent's §3.2
+    /// semantics are inherently sequential (each repair conditions on the
+    /// previous failure class), so today's batches are singletons; the
+    /// seam is what lets a parallel or remote backend overlap these
+    /// evaluations with other islands' batches without touching agent
+    /// logic.
     fn evaluate_with_repair(
         &mut self,
-        eval: &Evaluator,
+        eval: &dyn EvalBackend,
         mut cand: KernelSpec,
         actions: &mut Vec<AgentAction>,
     ) -> (KernelSpec, Score, usize) {
-        let mut score = eval.evaluate(&cand);
+        let mut score = eval
+            .evaluate_batch(std::slice::from_ref(&cand))
+            .pop()
+            .expect("one score per candidate");
         let mut evals = 1;
         actions.push(AgentAction::Evaluate {
             geomean: score.geomean(),
@@ -210,7 +222,10 @@ impl AvoAgent {
                 repair: repair.rationale.to_string(),
             });
             cand = repair.apply(&cand);
-            score = eval.evaluate(&cand);
+            score = eval
+                .evaluate_batch(std::slice::from_ref(&cand))
+                .pop()
+                .expect("one score per candidate");
             evals += 1;
             actions.push(AgentAction::Evaluate {
                 geomean: score.geomean(),
@@ -242,7 +257,7 @@ impl VariationOperator for AvoAgent {
         "avo"
     }
 
-    fn step(&mut self, lineage: &mut Lineage, eval: &Evaluator, step: usize) -> StepOutcome {
+    fn step(&mut self, lineage: &mut Lineage, eval: &dyn EvalBackend, step: usize) -> StepOutcome {
         let mut out = StepOutcome::default();
         self.decay_bans();
         let best = lineage.best().expect("lineage must be seeded").clone();
@@ -252,7 +267,7 @@ impl VariationOperator for AvoAgent {
         let flagship: Vec<BenchConfig> = {
             let mut seen = Vec::new();
             let mut cells = Vec::new();
-            for c in eval.suite.iter().rev() {
+            for c in eval.suite().iter().rev() {
                 if !seen.contains(&c.causal) {
                     seen.push(c.causal);
                     cells.push(c.clone());

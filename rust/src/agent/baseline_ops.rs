@@ -2,11 +2,11 @@
 //! same primitives as AVO so comparisons isolate the operator structure.
 
 use crate::agent::{AgentAction, StepOutcome, VariationOperator};
+use crate::eval::EvalBackend;
 use crate::evolution::Lineage;
 use crate::kernelspec::{all_edits, KernelSpec};
 use crate::knowledge::KnowledgeBase;
 use crate::prng::Rng;
-use crate::score::Evaluator;
 
 /// FunSearch/AlphaEvolve-style operator: `Vary = Generate(Sample(P_t))`.
 /// The framework samples parents with a score-weighted heuristic; the
@@ -40,7 +40,7 @@ impl VariationOperator for SingleTurnOperator {
         "single_turn"
     }
 
-    fn step(&mut self, lineage: &mut Lineage, eval: &Evaluator, step: usize) -> StepOutcome {
+    fn step(&mut self, lineage: &mut Lineage, eval: &dyn EvalBackend, step: usize) -> StepOutcome {
         let mut out = StepOutcome::default();
         let parent = self.sample_parent(lineage).clone();
         // One-shot generation: a single catalogue edit, prompt-conditioned
@@ -126,7 +126,7 @@ impl VariationOperator for FixedPipelineOperator {
         "fixed_pipeline"
     }
 
-    fn step(&mut self, lineage: &mut Lineage, eval: &Evaluator, step: usize) -> StepOutcome {
+    fn step(&mut self, lineage: &mut Lineage, eval: &dyn EvalBackend, step: usize) -> StepOutcome {
         let mut out = StepOutcome::default();
         let parent = self.sample_parent(lineage).clone();
 

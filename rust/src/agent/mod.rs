@@ -20,10 +20,11 @@ pub mod diagnose;
 pub use avo::{AvoAgent, AvoConfig};
 pub use baseline_ops::{FixedPipelineOperator, SingleTurnOperator};
 
+use crate::eval::EvalBackend;
 use crate::evolution::Lineage;
 use crate::islands::Migrant;
 use crate::kernelspec::Direction;
-use crate::score::{Evaluator, Failure};
+use crate::score::Failure;
 use crate::store::CommitId;
 
 /// One entry of the agent's action log (the observable trace of a
@@ -63,9 +64,14 @@ pub struct StepOutcome {
 }
 
 /// A variation operator: produces (at most) one committed version per step.
+/// Operators see the scoring function only through the batched
+/// [`EvalBackend`] seam, so the same operator runs unchanged over the bare
+/// simulator, a cached stack, a warm-started archipelago, or (eventually)
+/// a remote batch backend.
 pub trait VariationOperator {
     fn name(&self) -> &'static str;
-    fn step(&mut self, lineage: &mut Lineage, eval: &Evaluator, step: usize) -> StepOutcome;
+    fn step(&mut self, lineage: &mut Lineage, eval: &dyn EvalBackend, step: usize)
+        -> StepOutcome;
     /// Supervisor hook (no-op for baseline operators, which have no
     /// self-supervision channel — part of what Fig. 1 contrasts).
     fn apply_directive(&mut self, _directive: &crate::supervisor::Directive) {}

@@ -60,6 +60,9 @@ impl Default for SearchTopology {
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub operator: OperatorKind,
+    /// Heterogeneous per-island operator mix: island i runs
+    /// `operator_mix[i % len]`.  Empty = every island runs `operator`.
+    pub operator_mix: Vec<OperatorKind>,
     pub seed: u64,
     /// Stop after this many committed versions (the paper: 40)...
     pub target_commits: usize,
@@ -75,12 +78,18 @@ pub struct RunConfig {
     pub eval_workers: usize,
     /// Where to persist the lineage (None = in-memory only).
     pub lineage_path: Option<std::path::PathBuf>,
+    /// Prior run directory to warm-start the evaluation cache from
+    /// (expects `eval_cache.json` inside; see [`crate::eval::persist`]).
+    pub warm_start: Option<std::path::PathBuf>,
+    /// Where to persist this run's evaluation cache (None = discard).
+    pub eval_cache_path: Option<std::path::PathBuf>,
 }
 
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
             operator: OperatorKind::Avo,
+            operator_mix: Vec::new(),
             seed: 42,
             target_commits: 40,
             max_steps: 400,
@@ -92,6 +101,8 @@ impl Default for RunConfig {
                 .map(|n| n.get())
                 .unwrap_or(4),
             lineage_path: None,
+            warm_start: None,
+            eval_cache_path: None,
         }
     }
 }
@@ -112,6 +123,9 @@ impl RunConfig {
             let bad = |e: &dyn std::fmt::Display| format!("line {}: {e}", lineno + 1);
             match k {
                 "operator" => cfg.operator = v.parse().map_err(|e: String| bad(&e))?,
+                "operators" => {
+                    cfg.operator_mix = parse_operator_list(v).map_err(|e| bad(&e))?
+                }
                 "seed" => cfg.seed = v.parse().map_err(|e| bad(&e))?,
                 "target_commits" => cfg.target_commits = v.parse().map_err(|e| bad(&e))?,
                 "max_steps" => cfg.max_steps = v.parse().map_err(|e| bad(&e))?,
@@ -128,6 +142,8 @@ impl RunConfig {
                     cfg.topology.workers = v.parse().map_err(|e| bad(&e))?
                 }
                 "lineage_path" => cfg.lineage_path = Some(v.into()),
+                "warm_start" => cfg.warm_start = Some(v.into()),
+                "eval_cache_path" => cfg.eval_cache_path = Some(v.into()),
                 "inner_budget" => cfg.agent.inner_budget = v.parse().map_err(|e| bad(&e))?,
                 "repair_budget" => cfg.agent.repair_budget = v.parse().map_err(|e| bad(&e))?,
                 "crossover_prob" => {
@@ -158,6 +174,27 @@ impl RunConfig {
         };
         Evaluator::new(suite)
     }
+
+    /// The operator island `i` runs: round-robin over `operator_mix`, or
+    /// the homogeneous `operator` when no mix is configured.  Island 0 of
+    /// a mixed run gets `operator_mix[0]`, so the sequential N = 1 regime
+    /// stays well-defined under a mix too.
+    pub fn operator_for_island(&self, island: usize) -> OperatorKind {
+        if self.operator_mix.is_empty() {
+            self.operator
+        } else {
+            self.operator_mix[island % self.operator_mix.len()]
+        }
+    }
+}
+
+/// Parse a comma-separated operator list (`avo,single_turn,fixed_pipeline`).
+/// Always yields at least one operator: `split(',')` never returns an
+/// empty iterator, and an empty segment fails the `OperatorKind` parse.
+pub fn parse_operator_list(v: &str) -> Result<Vec<OperatorKind>, String> {
+    v.split(',')
+        .map(|s| s.trim().parse::<OperatorKind>())
+        .collect()
 }
 
 #[cfg(test)]
@@ -208,6 +245,39 @@ mod tests {
         assert_eq!(cfg.gqa_kv_heads, Some(4));
         assert_eq!(cfg.agent.inner_budget, 9);
         assert_eq!(cfg.supervisor.stall_window, 6);
+    }
+
+    #[test]
+    fn parse_operator_mix_and_persistence_keys() {
+        let cfg = RunConfig::parse(
+            "operators = avo, single_turn, fixed_pipeline\n\
+             warm_start = runs/prior\n\
+             eval_cache_path = runs/next/eval_cache.json\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.operator_mix,
+            vec![
+                OperatorKind::Avo,
+                OperatorKind::SingleTurn,
+                OperatorKind::FixedPipeline
+            ]
+        );
+        assert_eq!(cfg.warm_start.as_deref(), Some(std::path::Path::new("runs/prior")));
+        assert!(cfg.eval_cache_path.is_some());
+        assert!(RunConfig::parse("operators = avo,sideways\n").is_err());
+    }
+
+    #[test]
+    fn operator_for_island_round_robins() {
+        let mut cfg = RunConfig::default();
+        // Homogeneous: every island runs the default operator.
+        assert_eq!(cfg.operator_for_island(0), OperatorKind::Avo);
+        assert_eq!(cfg.operator_for_island(5), OperatorKind::Avo);
+        cfg.operator_mix = vec![OperatorKind::Avo, OperatorKind::SingleTurn];
+        assert_eq!(cfg.operator_for_island(0), OperatorKind::Avo);
+        assert_eq!(cfg.operator_for_island(1), OperatorKind::SingleTurn);
+        assert_eq!(cfg.operator_for_island(2), OperatorKind::Avo);
     }
 
     #[test]

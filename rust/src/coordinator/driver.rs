@@ -15,13 +15,16 @@ use crate::islands::{Archipelago, IslandReport};
 use crate::kernelspec::KernelSpec;
 use crate::score::Evaluator;
 
-/// Construct the configured variation operator with an explicit PRNG seed
-/// (the archipelago derives one per island from the run seed).
+/// Construct island `island`'s variation operator with an explicit PRNG
+/// seed (the archipelago derives one per island from the run seed).  With
+/// a heterogeneous `operator_mix` configured, operators round-robin across
+/// islands; otherwise every island runs the homogeneous `operator`.
 pub(crate) fn build_operator(
     config: &RunConfig,
+    island: usize,
     seed: u64,
 ) -> Box<dyn VariationOperator + Send> {
-    match config.operator {
+    match config.operator_for_island(island) {
         OperatorKind::Avo => Box::new(AvoAgent::new(config.agent.clone(), seed)),
         OperatorKind::SingleTurn => Box::new(SingleTurnOperator::new(seed)),
         OperatorKind::FixedPipeline => Box::new(FixedPipelineOperator::new(seed)),
@@ -54,20 +57,45 @@ impl RunReport {
             self.metrics.counter("directions_explored"),
             self.interventions.len(),
         );
+        // Cache hit-rate in one line (the sequential regime caches too,
+        // and warm-start wins show up here as an elevated rate).
+        let (hits, misses) = (
+            self.metrics.counter("eval_cache_hits"),
+            self.metrics.counter("eval_cache_misses"),
+        );
+        if hits + misses > 0 {
+            s.push_str(&format!(
+                ", cache {hits}/{} hits ({:.0}%)",
+                hits + misses,
+                100.0 * hits as f64 / (hits + misses) as f64,
+            ));
+        }
+        let warm = self.metrics.counter("eval_cache_warm_entries");
+        if warm > 0 {
+            s.push_str(&format!(" [warm-start: {warm} entries]"));
+        }
         if self.islands.len() > 1 {
-            let per_island: Vec<String> = self
+            let bests: Vec<String> = self
                 .islands
                 .iter()
                 .map(|i| format!("{:.0}", i.lineage.best_geomean()))
                 .collect();
+            let evals: Vec<String> = self
+                .islands
+                .iter()
+                .map(|i| i.metrics.counter("evaluations").to_string())
+                .collect();
             s.push_str(&format!(
-                "; {} islands (bests [{}]), {} migrants, cache {} hits / {} misses",
+                "; {} islands (bests [{}], evals [{}]), {} migrants",
                 self.islands.len(),
-                per_island.join(", "),
+                bests.join(", "),
+                evals.join(", "),
                 self.metrics.counter("migrants_received"),
-                self.metrics.counter("eval_cache_hits"),
-                self.metrics.counter("eval_cache_misses"),
             ));
+            if self.islands.iter().any(|i| i.operator != self.islands[0].operator) {
+                let ops: Vec<&str> = self.islands.iter().map(|i| i.operator).collect();
+                s.push_str(&format!(", ops [{}]", ops.join(", ")));
+            }
         }
         s
     }
@@ -202,5 +230,45 @@ mod tests {
         assert_eq!(report.islands.len(), 3);
         assert!(report.metrics.counter("eval_cache_hits") > 0);
         assert!(report.summary().contains("islands"));
+        assert!(report.summary().contains("evals ["));
+    }
+
+    #[test]
+    fn summary_exposes_cache_hit_rate_for_sequential_regime() {
+        let report = EvolutionDriver::new(small_config(6)).run();
+        // Even N = 1 routes through the cached backend; the summary shows
+        // the hit-rate in one line.
+        assert!(report.summary().contains("cache "), "{}", report.summary());
+        assert_eq!(
+            report.metrics.counter("eval_cache_hits")
+                + report.metrics.counter("eval_cache_misses"),
+            report.metrics.counter("evaluations")
+        );
+    }
+
+    #[test]
+    fn heterogeneous_operator_mix_round_robins_across_islands() {
+        let mut cfg = small_config(11);
+        cfg.target_commits = 3;
+        cfg.max_steps = 20;
+        cfg.operator_mix = vec![
+            OperatorKind::Avo,
+            OperatorKind::SingleTurn,
+            OperatorKind::FixedPipeline,
+        ];
+        cfg.topology.islands = 4;
+        cfg.topology.migrate_every = 2;
+        let report = EvolutionDriver::new(cfg).run();
+        let ops: Vec<&str> = report.islands.iter().map(|i| i.operator).collect();
+        assert_eq!(ops, vec!["avo", "single_turn", "fixed_pipeline", "avo"]);
+        assert!(report.summary().contains("ops ["), "{}", report.summary());
+    }
+
+    #[test]
+    fn homogeneous_run_reports_operator_per_island() {
+        let report = EvolutionDriver::new(small_config(4)).run();
+        assert_eq!(report.islands[0].operator, "avo");
+        // No mix configured: the summary stays free of the ops list.
+        assert!(!report.summary().contains("ops ["));
     }
 }

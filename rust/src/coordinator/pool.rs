@@ -1,12 +1,12 @@
 //! Parallel evaluation pool: scores a batch of candidates across worker
 //! threads.  This is the coordinator's throughput substrate — the agent's
 //! inner loop is sequential by nature (each proposal conditions on the last
-//! result), but suite evaluation fans out per benchmark configuration, and
-//! the repro/bench harnesses score many genomes at once.
+//! result), but the repro/bench harnesses score many genomes at once.
+//!
+//! The fan-out itself lives in [`crate::eval::SimBackend`]; this pool is
+//! the evaluator-shaped convenience wrapper the harnesses hold on to.
 
-use std::sync::mpsc;
-use std::sync::Arc;
-
+use crate::eval::{EvalBackend, SimBackend};
 use crate::kernelspec::KernelSpec;
 use crate::score::{Evaluator, Score};
 
@@ -22,36 +22,7 @@ impl EvalPool {
 
     /// Evaluate candidates in parallel; result order matches input order.
     pub fn evaluate_batch(&self, eval: &Evaluator, specs: &[KernelSpec]) -> Vec<Score> {
-        if specs.len() <= 1 || self.workers == 1 {
-            return specs.iter().map(|s| eval.evaluate(s)).collect();
-        }
-        let eval = Arc::new(eval.clone());
-        let (tx, rx) = mpsc::channel::<(usize, Score)>();
-        let next = Arc::new(std::sync::atomic::AtomicUsize::new(0));
-        std::thread::scope(|scope| {
-            for _ in 0..self.workers.min(specs.len()) {
-                let tx = tx.clone();
-                let eval = Arc::clone(&eval);
-                let next = Arc::clone(&next);
-                let specs = &specs;
-                scope.spawn(move || loop {
-                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if i >= specs.len() {
-                        break;
-                    }
-                    let score = eval.evaluate(&specs[i]);
-                    if tx.send((i, score)).is_err() {
-                        break;
-                    }
-                });
-            }
-        });
-        drop(tx);
-        let mut out: Vec<Option<Score>> = vec![None; specs.len()];
-        for (i, s) in rx {
-            out[i] = Some(s);
-        }
-        out.into_iter().map(|s| s.expect("worker died")).collect()
+        SimBackend::new(eval.clone(), self.workers).evaluate_batch(specs)
     }
 }
 
@@ -133,19 +104,5 @@ mod tests {
         let out = EvalPool::new(0).evaluate_batch(&eval, &[KernelSpec::naive()]);
         assert_eq!(out.len(), 1);
         assert!(out[0].is_correct());
-    }
-
-    #[test]
-    fn pool_routes_through_shared_cache() {
-        let cache = std::sync::Arc::new(crate::islands::EvalCache::default());
-        let eval = Evaluator::new(mha_suite()).with_cache(std::sync::Arc::clone(&cache));
-        let specs = vec![KernelSpec::naive(); 6];
-        let out = EvalPool::new(3).evaluate_batch(&eval, &specs);
-        assert_eq!(out.len(), 6);
-        // 6 identical genomes: at most a couple of racing misses, the rest
-        // hits — and exactly one stored entry.
-        assert_eq!(cache.hits() + cache.misses(), 6);
-        assert!(cache.hits() >= 1);
-        assert_eq!(cache.len(), 1);
     }
 }

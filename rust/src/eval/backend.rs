@@ -1,0 +1,159 @@
+//! Ground-truth backends: the functional + pipeline simulator behind the
+//! [`EvalBackend`] seam.
+//!
+//! [`crate::score::Evaluator`] itself implements the trait (sequential
+//! batches — the reference semantics); [`SimBackend`] adds worker-thread
+//! fan-out for batches of more than one candidate.  Both produce identical
+//! scores: parallelism only reorders *wall-clock*, never results, because
+//! each score is computed independently and written back by input index.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use crate::eval::EvalBackend;
+use crate::kernelspec::KernelSpec;
+use crate::score::{BenchConfig, Evaluator, Score};
+use crate::sim::pipeline::CycleReport;
+
+impl EvalBackend for Evaluator {
+    fn evaluate_batch(&self, specs: &[KernelSpec]) -> Vec<Score> {
+        specs.iter().map(|s| Evaluator::evaluate(self, s)).collect()
+    }
+
+    fn suite(&self) -> &[BenchConfig] {
+        &self.suite
+    }
+
+    fn report(&self, spec: &KernelSpec, cfg: &BenchConfig) -> CycleReport {
+        Evaluator::report(self, spec, cfg)
+    }
+
+    fn cache_tag(&self) -> u64 {
+        self.suite_tag() ^ self.machine.fingerprint()
+    }
+
+    fn is_deterministic(&self) -> bool {
+        self.noise_sigma == 0.0
+    }
+}
+
+/// The simulator backend: an [`Evaluator`] plus a worker budget for
+/// fanning out multi-candidate batches (single candidates are scored
+/// inline — the agent's inner loop pays no threading overhead).
+pub struct SimBackend {
+    eval: Evaluator,
+    workers: usize,
+}
+
+impl SimBackend {
+    pub fn new(eval: Evaluator, workers: usize) -> Self {
+        SimBackend { eval, workers: workers.max(1) }
+    }
+
+    pub fn evaluator(&self) -> &Evaluator {
+        &self.eval
+    }
+}
+
+impl EvalBackend for SimBackend {
+    /// Evaluate candidates in parallel; result order matches input order.
+    fn evaluate_batch(&self, specs: &[KernelSpec]) -> Vec<Score> {
+        if specs.len() <= 1 || self.workers == 1 {
+            return specs.iter().map(|s| self.eval.evaluate(s)).collect();
+        }
+        let (tx, rx) = mpsc::channel::<(usize, Score)>();
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers.min(specs.len()) {
+                let tx = tx.clone();
+                let eval = &self.eval;
+                let next = &next;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= specs.len() {
+                        break;
+                    }
+                    let score = eval.evaluate(&specs[i]);
+                    if tx.send((i, score)).is_err() {
+                        break;
+                    }
+                });
+            }
+        });
+        drop(tx);
+        let mut out: Vec<Option<Score>> = vec![None; specs.len()];
+        for (i, s) in rx {
+            out[i] = Some(s);
+        }
+        out.into_iter().map(|s| s.expect("worker died")).collect()
+    }
+
+    fn suite(&self) -> &[BenchConfig] {
+        &self.eval.suite
+    }
+
+    fn report(&self, spec: &KernelSpec, cfg: &BenchConfig) -> CycleReport {
+        self.eval.report(spec, cfg)
+    }
+
+    fn cache_tag(&self) -> u64 {
+        EvalBackend::cache_tag(&self.eval)
+    }
+
+    fn is_deterministic(&self) -> bool {
+        EvalBackend::is_deterministic(&self.eval)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::score::mha_suite;
+
+    fn specs() -> Vec<KernelSpec> {
+        vec![
+            KernelSpec::naive(),
+            crate::baselines::fa4_genome(),
+            crate::baselines::evolved_genome(),
+            crate::baselines::cudnn_genome(),
+        ]
+    }
+
+    #[test]
+    fn parallel_batch_matches_sequential() {
+        let eval = Evaluator::new(mha_suite());
+        let par = SimBackend::new(eval.clone(), 4);
+        let out = par.evaluate_batch(&specs());
+        let seq: Vec<Score> = specs().iter().map(|s| eval.evaluate(s)).collect();
+        assert_eq!(out.len(), seq.len());
+        for (p, s) in out.iter().zip(&seq) {
+            assert_eq!(p.per_config, s.per_config);
+        }
+    }
+
+    #[test]
+    fn order_preserved_under_more_workers_than_specs() {
+        let backend = SimBackend::new(Evaluator::new(mha_suite()), 16);
+        let input = specs();
+        let out = backend.evaluate_batch(&input);
+        for (o, s) in out.iter().zip(&input) {
+            assert_eq!(o.per_config, backend.evaluator().evaluate(s).per_config);
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_batches() {
+        let backend = SimBackend::new(Evaluator::new(mha_suite()), 4);
+        assert!(backend.evaluate_batch(&[]).is_empty());
+        let one = backend.evaluate_batch(&[KernelSpec::naive()]);
+        assert_eq!(one.len(), 1);
+        assert!(one[0].is_correct());
+    }
+
+    #[test]
+    fn sim_backend_tag_matches_wrapped_evaluator() {
+        let eval = Evaluator::new(mha_suite());
+        let backend = SimBackend::new(eval.clone(), 2);
+        assert_eq!(EvalBackend::cache_tag(&backend), EvalBackend::cache_tag(&eval));
+    }
+}

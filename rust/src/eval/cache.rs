@@ -1,14 +1,17 @@
-//! Shared content-addressed evaluation cache: KernelSpec-hash -> Score
-//! behind a sharded lock.
+//! Shared content-addressed evaluation cache: score-key -> Score behind a
+//! sharded lock — the shard implementation underneath
+//! [`crate::eval::CachedBackend`].
 //!
-//! Duplicate genomes are the norm under island search — every island seeds
-//! from the same x_0, migration homogenizes the elites, and independent
-//! agents rediscover the same catalogue edits — so the archipelago routes
-//! every scoring-function call through this map and never re-simulates a
-//! genome any island has already paid for.  Scores are deterministic
-//! inside evolution (noise_sigma = 0), so a cache hit is byte-identical to
-//! a recomputation and caching cannot perturb reproducibility.
+//! Duplicate genomes are the norm under evolutionary search — every island
+//! seeds from the same x_0, migration homogenizes the elites, and
+//! independent agents rediscover the same catalogue edits — so the cached
+//! backend routes every scoring-function call through this map and never
+//! re-simulates a genome any lineage has already paid for.  Scores are
+//! deterministic inside evolution (noise_sigma = 0), so a cache hit is
+//! byte-identical to a recomputation and caching cannot perturb
+//! reproducibility.
 
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -18,7 +21,9 @@ use crate::score::Score;
 /// Default shard count (power of two; collisions only cost lock sharing).
 pub const DEFAULT_SHARDS: usize = 16;
 
-/// A sharded (hash -> Score) map with hit/miss counters.
+/// A sharded (key -> Score) map with hit/miss counters.  The key is
+/// supplied by the caller ([`crate::eval::CachedBackend`] uses genome
+/// content hash XOR the backend's cache tag).
 pub struct EvalCache {
     shards: Vec<Mutex<HashMap<u64, Score>>>,
     hits: AtomicU64,
@@ -58,9 +63,60 @@ impl EvalCache {
         score
     }
 
-    /// Peek without computing.
+    /// Counted lookup: increments the hit counter on success and the miss
+    /// counter on failure (the batch path computes misses itself).
+    pub fn lookup(&self, key: u64) -> Option<Score> {
+        match self.shard(key).lock().unwrap().get(&key).cloned() {
+            Some(score) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(score)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Count a hit that was served without a map lookup (an in-batch
+    /// duplicate of a key whose computation is already in flight — a
+    /// sequential pass would have found it published).
+    pub(crate) fn credit_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Publish an entry without touching the counters (batch fills and
+    /// warm-start seeding).  Returns true if the key was fresh.
+    pub fn insert(&self, key: u64, score: Score) -> bool {
+        match self.shard(key).lock().unwrap().entry(key) {
+            Entry::Vacant(v) => {
+                v.insert(score);
+                true
+            }
+            Entry::Occupied(_) => false,
+        }
+    }
+
+    /// Peek without computing or counting.
     pub fn get(&self, key: u64) -> Option<Score> {
         self.shard(key).lock().unwrap().get(&key).cloned()
+    }
+
+    /// All entries, sorted by key (deterministic persistence order).
+    pub fn snapshot(&self) -> Vec<(u64, Score)> {
+        let mut out: Vec<(u64, Score)> = self
+            .shards
+            .iter()
+            .flat_map(|s| {
+                s.lock()
+                    .unwrap()
+                    .iter()
+                    .map(|(k, v)| (*k, v.clone()))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        out.sort_by_key(|(k, _)| *k);
+        out
     }
 
     pub fn hits(&self) -> u64 {
@@ -152,5 +208,33 @@ mod tests {
         assert_eq!(cache.hits() + cache.misses(), 32);
         assert!(cache.misses() >= 1);
         assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn lookup_counts_and_insert_is_silent() {
+        let cache = EvalCache::default();
+        let eval = Evaluator::new(mha_suite());
+        let spec = KernelSpec::naive();
+        let score = eval.evaluate(&spec);
+        assert!(cache.lookup(7).is_none());
+        assert_eq!(cache.misses(), 1);
+        assert!(cache.insert(7, score.clone()));
+        assert!(!cache.insert(7, score.clone()), "second insert must not overwrite");
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        assert!(cache.lookup(7).is_some());
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_complete() {
+        let cache = EvalCache::new(4);
+        let eval = Evaluator::new(mha_suite());
+        let score = eval.evaluate(&KernelSpec::naive());
+        for key in [9u64, 3, 17, 1] {
+            cache.insert(key, score.clone());
+        }
+        let snap = cache.snapshot();
+        let keys: Vec<u64> = snap.iter().map(|(k, _)| *k).collect();
+        assert_eq!(keys, vec![1, 3, 9, 17]);
     }
 }

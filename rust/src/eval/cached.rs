@@ -1,0 +1,248 @@
+//! Content-addressed memoization over any [`EvalBackend`].
+//!
+//! This layer carries the search's determinism contract: evolution runs
+//! noise-free, so every score is a pure function of the quantities folded
+//! into the cache key (genome content hash XOR [`EvalBackend::cache_tag`],
+//! which pins the suite, functional seed, and machine model).  A hit is
+//! byte-identical to a recomputation, which is why archive contents stay a
+//! pure function of (config, seed genome) no matter how many islands,
+//! worker threads, or warm-started runs share the cache.
+
+use crate::eval::cache::EvalCache;
+use crate::eval::{CacheStats, EvalBackend};
+use crate::kernelspec::KernelSpec;
+use crate::score::{BenchConfig, Score};
+use crate::sim::pipeline::CycleReport;
+
+/// A caching layer over an inner backend.  Hit/miss accounting is exact:
+/// every requested spec counts as exactly one hit or one miss, so
+/// `hits + misses` equals the number of scoring-function invocations.
+pub struct CachedBackend<B: EvalBackend> {
+    inner: B,
+    cache: EvalCache,
+}
+
+impl<B: EvalBackend> CachedBackend<B> {
+    pub fn new(inner: B) -> Self {
+        CachedBackend { inner, cache: EvalCache::default() }
+    }
+
+    pub fn with_shards(inner: B, shards: usize) -> Self {
+        CachedBackend { inner, cache: EvalCache::new(shards) }
+    }
+
+    pub fn cache(&self) -> &EvalCache {
+        &self.cache
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    fn key(&self, spec: &KernelSpec) -> u64 {
+        spec.content_hash() ^ self.inner.cache_tag()
+    }
+
+    /// Seed an entry (warm start).  Returns true if the key was fresh.
+    /// Seeded entries are not counted as hits or misses until looked up.
+    pub fn seed_entry(&self, key: u64, score: Score) -> bool {
+        self.cache.insert(key, score)
+    }
+}
+
+impl<B: EvalBackend> EvalBackend for CachedBackend<B> {
+    /// Batched lookup: known genomes are served from the cache, distinct
+    /// misses go to the inner backend as ONE batch (so a parallel or
+    /// remote inner backend sees the full width), and in-batch duplicates
+    /// of a miss share that single computation — counted as hits, exactly
+    /// as a sequential pass over the batch would have counted them.
+    fn evaluate_batch(&self, specs: &[KernelSpec]) -> Vec<Score> {
+        // A noisy measurement protocol must never be frozen into the
+        // cache (the invariant the old Evaluator cache guard enforced):
+        // pass straight through, uncached and uncounted.
+        if !self.inner.is_deterministic() {
+            return self.inner.evaluate_batch(specs);
+        }
+        match specs {
+            [] => Vec::new(),
+            // The single-candidate path is the agent inner loop's; keep it
+            // on the racy-but-idempotent fast path (no batch bookkeeping).
+            [one] => {
+                vec![self
+                    .cache
+                    .get_or_compute(self.key(one), || self.inner.evaluate(one))]
+            }
+            _ => {
+                let n = specs.len();
+                let mut out: Vec<Option<Score>> = vec![None; n];
+                // (key, input index) of each distinct miss, in input order.
+                let mut pending: Vec<(u64, usize)> = Vec::new();
+                // (input index, pending index) of in-batch duplicates.
+                let mut dups: Vec<(usize, usize)> = Vec::new();
+                for (i, spec) in specs.iter().enumerate() {
+                    let key = self.key(spec);
+                    if let Some(p) = pending.iter().position(|&(k, _)| k == key) {
+                        self.cache.credit_hit();
+                        dups.push((i, p));
+                    } else if let Some(score) = self.cache.lookup(key) {
+                        out[i] = Some(score);
+                    } else {
+                        pending.push((key, i));
+                    }
+                }
+                if !pending.is_empty() {
+                    let to_eval: Vec<KernelSpec> =
+                        pending.iter().map(|&(_, i)| specs[i].clone()).collect();
+                    let scores = self.inner.evaluate_batch(&to_eval);
+                    assert_eq!(
+                        scores.len(),
+                        pending.len(),
+                        "inner backend must return one score per spec"
+                    );
+                    for (&(key, i), score) in pending.iter().zip(scores) {
+                        self.cache.insert(key, score.clone());
+                        out[i] = Some(score);
+                    }
+                }
+                for (i, p) in dups {
+                    out[i] = out[pending[p].1].clone();
+                }
+                out.into_iter()
+                    .map(|s| s.expect("every batch slot filled"))
+                    .collect()
+            }
+        }
+    }
+
+    fn suite(&self) -> &[BenchConfig] {
+        self.inner.suite()
+    }
+
+    fn report(&self, spec: &KernelSpec, cfg: &BenchConfig) -> CycleReport {
+        self.inner.report(spec, cfg)
+    }
+
+    fn cache_tag(&self) -> u64 {
+        self.inner.cache_tag()
+    }
+
+    fn is_deterministic(&self) -> bool {
+        self.inner.is_deterministic()
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.cache.hits(),
+            misses: self.cache.misses(),
+            entries: self.cache.len() as u64,
+            warm_entries: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelspec::KernelSpec;
+    use crate::score::{gqa_suite, mha_suite, Evaluator};
+
+    fn backend() -> CachedBackend<Evaluator> {
+        CachedBackend::new(Evaluator::new(mha_suite()))
+    }
+
+    #[test]
+    fn cached_single_matches_uncached() {
+        let cached = backend();
+        let plain = Evaluator::new(mha_suite());
+        let spec = crate::baselines::evolved_genome();
+        let a = cached.evaluate(&spec);
+        let b = cached.evaluate(&spec);
+        let c = plain.evaluate(&spec);
+        assert_eq!(a.per_config, b.per_config);
+        assert_eq!(a.per_config, c.per_config);
+        let stats = cached.cache_stats();
+        assert_eq!((stats.hits, stats.misses, stats.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn batch_counts_duplicates_as_hits() {
+        let cached = backend();
+        let specs = vec![KernelSpec::naive(); 6];
+        let out = cached.evaluate_batch(&specs);
+        assert_eq!(out.len(), 6);
+        let stats = cached.cache_stats();
+        // One computation; the five in-batch duplicates are hits.
+        assert_eq!((stats.hits, stats.misses, stats.entries), (5, 1, 1));
+        assert_eq!(stats.hits + stats.misses, 6);
+    }
+
+    #[test]
+    fn batch_preserves_order_and_matches_sequential() {
+        let cached = backend();
+        let specs = vec![
+            crate::baselines::evolved_genome(),
+            KernelSpec::naive(),
+            crate::baselines::fa4_genome(),
+            KernelSpec::naive(),
+            crate::baselines::evolved_genome(),
+        ];
+        let out = cached.evaluate_batch(&specs);
+        let plain = Evaluator::new(mha_suite());
+        for (o, s) in out.iter().zip(&specs) {
+            assert_eq!(o.per_config, plain.evaluate(s).per_config);
+        }
+        // 3 distinct genomes computed once each, 2 in-batch duplicates.
+        let stats = cached.cache_stats();
+        assert_eq!((stats.hits, stats.misses, stats.entries), (2, 3, 3));
+    }
+
+    #[test]
+    fn batch_mixes_warm_entries_and_fresh_computation() {
+        let cached = backend();
+        let naive = KernelSpec::naive();
+        cached.evaluate(&naive); // miss 1 — now cached
+        let specs = vec![naive.clone(), crate::baselines::fa4_genome(), naive];
+        let out = cached.evaluate_batch(&specs);
+        assert_eq!(out[0].per_config, out[2].per_config);
+        let stats = cached.cache_stats();
+        // naive: 2 hits (both served from the existing entry); fa4: miss.
+        assert_eq!((stats.hits, stats.misses, stats.entries), (2, 2, 2));
+    }
+
+    #[test]
+    fn failed_candidates_are_cached_too() {
+        let cached = backend();
+        let mut bad = KernelSpec::naive();
+        bad.fence_kind = crate::kernelspec::FenceKind::NonBlocking;
+        let a = cached.evaluate(&bad);
+        let b = cached.evaluate(&bad);
+        assert!(!a.is_correct());
+        assert_eq!(a.failure, b.failure);
+        let stats = cached.cache_stats();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+    }
+
+    #[test]
+    fn noisy_backend_is_never_cached() {
+        // A noisy measurement protocol passes straight through: nothing
+        // stored, nothing counted, so no noisy sample can be frozen and
+        // replayed as a deterministic score.
+        let noisy = CachedBackend::new(Evaluator::new(mha_suite()).with_noise(0.004));
+        let spec = KernelSpec::naive();
+        noisy.evaluate(&spec);
+        noisy.evaluate(&spec);
+        let stats = noisy.cache_stats();
+        assert_eq!((stats.hits, stats.misses, stats.entries), (0, 0, 0));
+        assert!(!noisy.is_deterministic());
+    }
+
+    #[test]
+    fn different_suites_key_differently() {
+        // Same genome under different suites must not share entries even
+        // if the two cached backends shared one store: the tag differs.
+        let mha = backend();
+        let gqa = CachedBackend::new(Evaluator::new(gqa_suite(4)));
+        let spec = KernelSpec::naive();
+        assert_ne!(mha.key(&spec), gqa.key(&spec));
+    }
+}

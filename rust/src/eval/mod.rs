@@ -1,0 +1,130 @@
+//! Layered evaluation subsystem: the pluggable seam between the search
+//! coordinator and the scoring function **f**.
+//!
+//! The paper's 7-day continuous run (§3.3) lives or dies on evaluation
+//! throughput and on "full state continuity across the entire evolutionary
+//! process".  Everything that *invokes* f — the AVO agent's inner loop,
+//! both baseline operators, the archipelago, the driver, the bench
+//! harnesses — goes through one trait with a batched entry point:
+//!
+//! * [`EvalBackend`] — `evaluate_batch(&[KernelSpec]) -> Vec<Score>`, plus
+//!   the suite/profiling accessors operators need;
+//! * [`SimBackend`] — the ground-truth backend: wraps
+//!   [`crate::score::Evaluator`] (structural validation → functional
+//!   check → cycle model) and fans a batch out across worker threads;
+//! * [`CachedBackend`] — composable content-addressed memoization over any
+//!   inner backend (generalizing what used to be an island-only special
+//!   case; the sequential N = 1 regime shares the same layer);
+//! * [`PersistentBackend`] — JSON persistence of the cache keyed by genome
+//!   hash + machine/suite fingerprint, enabling `--warm-start <dir>`:
+//!   a new archipelago re-uses every evaluation a prior run paid for.
+//!
+//! **Determinism contract.** Evolution runs noise-free, so a Score is a
+//! pure function of (genome, suite, functional seed, machine model) — the
+//! exact quantities folded into [`EvalBackend::cache_tag`].  A cache hit
+//! (in-memory or warm-started from disk) is therefore byte-identical to a
+//! recomputation: JSON round-trips print f64s shortest-exact, and the
+//! cache key pins every score input.  This is the contract the island
+//! determinism suite leans on; it lives here, not in the archipelago.
+//!
+//! Layer order is `PersistentBackend<CachedBackend<SimBackend>>` in the
+//! driver; a future parallel or multi-machine topology slots in as another
+//! `EvalBackend` implementation (e.g. a remote batch RPC) without touching
+//! operator code — operators already propose candidates through the
+//! batched entry point.
+
+pub mod backend;
+pub mod cache;
+pub mod cached;
+pub mod persist;
+
+pub use backend::SimBackend;
+pub use cache::{EvalCache, DEFAULT_SHARDS};
+pub use cached::CachedBackend;
+pub use persist::{PersistentBackend, CACHE_FILE};
+
+use crate::kernelspec::KernelSpec;
+use crate::score::{BenchConfig, Score};
+use crate::sim::pipeline::CycleReport;
+
+/// Cache statistics surfaced by caching layers (zero for pure backends).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Distinct genomes stored.
+    pub entries: u64,
+    /// Entries seeded from a prior run's persisted cache (warm start).
+    pub warm_entries: u64,
+}
+
+/// A (possibly layered) evaluation backend: everything the search needs
+/// from the scoring function f.
+///
+/// The batched entry point is the contract: `evaluate_batch` must return
+/// exactly one [`Score`] per input spec, in input order, and — inside
+/// evolution, where noise is disabled — each score must be a pure function
+/// of the spec (so layers may cache, dedupe, or fan out freely).
+pub trait EvalBackend: Sync {
+    /// Score a batch of candidates; `out[i]` corresponds to `specs[i]`.
+    fn evaluate_batch(&self, specs: &[KernelSpec]) -> Vec<Score>;
+
+    /// Score a single candidate (a one-element batch).
+    fn evaluate(&self, spec: &KernelSpec) -> Score {
+        self.evaluate_batch(std::slice::from_ref(spec))
+            .pop()
+            .expect("evaluate_batch must return one score per spec")
+    }
+
+    /// The benchmark suite scores are computed over (operators profile the
+    /// flagship cells of each masking regime present here).
+    fn suite(&self) -> &[BenchConfig];
+
+    /// Cycle report for one cell (the profiling path; assumes validity).
+    fn report(&self, spec: &KernelSpec, cfg: &BenchConfig) -> CycleReport;
+
+    /// Cache-key component identifying everything *besides* the genome
+    /// that determines a score: suite cells, functional seed, and machine
+    /// model.  Caching layers key entries on `content_hash ^ cache_tag`,
+    /// and the persistent layer rejects files whose tag does not match.
+    fn cache_tag(&self) -> u64;
+
+    /// Whether scores are a pure function of the spec.  Caching layers
+    /// MUST pass straight through when this is false (a noisy measurement
+    /// protocol must never be frozen into a cache) — the invariant the old
+    /// `Evaluator` cache guard enforced with `noise_sigma == 0`.
+    fn is_deterministic(&self) -> bool {
+        true
+    }
+
+    /// Statistics from any caching layer in the stack (default: none).
+    fn cache_stats(&self) -> CacheStats {
+        CacheStats::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelspec::KernelSpec;
+    use crate::score::{gqa_suite, mha_suite, Evaluator};
+
+    #[test]
+    fn trait_object_single_eval_matches_direct() {
+        let eval = Evaluator::new(mha_suite());
+        let backend: &dyn EvalBackend = &eval;
+        let spec = KernelSpec::naive();
+        let via_trait = backend.evaluate(&spec);
+        let direct = eval.evaluate(&spec);
+        assert_eq!(via_trait.per_config, direct.per_config);
+        assert_eq!(backend.suite().len(), 8);
+    }
+
+    #[test]
+    fn cache_tag_distinguishes_suites() {
+        let mha: &dyn EvalBackend = &Evaluator::new(mha_suite());
+        let gqa_e = Evaluator::new(gqa_suite(4));
+        let gqa: &dyn EvalBackend = &gqa_e;
+        assert_ne!(mha.cache_tag(), gqa.cache_tag());
+    }
+}

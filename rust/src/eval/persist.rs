@@ -1,0 +1,286 @@
+//! Cache persistence: save a run's evaluations to JSON and warm-start the
+//! next run from them — the paper's "full state continuity across the
+//! entire evolutionary process" (§3.3) extended to the scoring function.
+//!
+//! The file is keyed twice: each entry by the full cache key (genome
+//! content hash XOR backend tag), and the file as a whole by the backend's
+//! [`EvalBackend::cache_tag`] fingerprint (suite cells, functional seed,
+//! [`crate::sim::machine::MachineSpec`] constants).  A file produced under
+//! a different machine model, suite, or functional seed is rejected at
+//! load instead of silently poisoning a run with incomparable scores; so
+//! is a file that fails to parse or carries malformed entries.
+
+use std::path::Path;
+
+use crate::eval::{CacheStats, CachedBackend, EvalBackend};
+use crate::json::{parse, FromJson, Json, ToJson};
+use crate::kernelspec::KernelSpec;
+use crate::score::{BenchConfig, Score};
+use crate::sim::pipeline::CycleReport;
+
+/// File name of the persisted cache inside a run's output directory.
+pub const CACHE_FILE: &str = "eval_cache.json";
+
+/// Persistence layer over a [`CachedBackend`]: loads a prior run's
+/// evaluations at construction (warm start) and snapshots the cache to
+/// disk on demand.
+pub struct PersistentBackend<B: EvalBackend> {
+    inner: CachedBackend<B>,
+    warm_entries: u64,
+}
+
+impl<B: EvalBackend> PersistentBackend<B> {
+    /// A cold backend: nothing pre-seeded, persistence on request.
+    pub fn new(inner: CachedBackend<B>) -> Self {
+        PersistentBackend { inner, warm_entries: 0 }
+    }
+
+    /// Warm-start from `dir/eval_cache.json` (a prior run's `--out` dir).
+    /// Rejects unreadable, unparseable, or fingerprint-mismatched files.
+    pub fn warm_start(inner: CachedBackend<B>, dir: &Path) -> Result<Self, String> {
+        let path = dir.join(CACHE_FILE);
+        let entries = load_entries(&path, inner.cache_tag())?;
+        let mut warm = 0u64;
+        for (key, score) in entries {
+            if inner.seed_entry(key, score) {
+                warm += 1;
+            }
+        }
+        Ok(PersistentBackend { inner, warm_entries: warm })
+    }
+
+    /// Entries seeded from disk at construction.
+    pub fn warm_entries(&self) -> u64 {
+        self.warm_entries
+    }
+
+    /// Snapshot the cache (warm-started entries included) to `path`.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let json = snapshot_json(self.inner.cache_tag(), &self.inner.cache().snapshot());
+        std::fs::write(path, json.pretty())
+    }
+}
+
+impl<B: EvalBackend> EvalBackend for PersistentBackend<B> {
+    fn evaluate_batch(&self, specs: &[KernelSpec]) -> Vec<Score> {
+        self.inner.evaluate_batch(specs)
+    }
+
+    fn suite(&self) -> &[BenchConfig] {
+        self.inner.suite()
+    }
+
+    fn report(&self, spec: &KernelSpec, cfg: &BenchConfig) -> CycleReport {
+        self.inner.report(spec, cfg)
+    }
+
+    fn cache_tag(&self) -> u64 {
+        self.inner.cache_tag()
+    }
+
+    fn is_deterministic(&self) -> bool {
+        self.inner.is_deterministic()
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        CacheStats { warm_entries: self.warm_entries, ..self.inner.cache_stats() }
+    }
+}
+
+/// Validate a warm-start directory without seeding anything: parses
+/// `dir/eval_cache.json` and checks its fingerprint against `tag`.
+/// Returns the entry count.  The CLI calls this up front so a typo'd
+/// directory or stale cache surfaces as a clean error before the run
+/// starts (the in-run load still rejects as a backstop).
+pub fn validate(dir: &Path, tag: u64) -> Result<usize, String> {
+    load_entries(&dir.join(CACHE_FILE), tag).map(|entries| entries.len())
+}
+
+fn snapshot_json(tag: u64, entries: &[(u64, Score)]) -> Json {
+    Json::obj([
+        ("version", 1u32.to_json()),
+        ("fingerprint", Json::Str(format!("{tag:016x}"))),
+        (
+            "entries",
+            Json::arr(entries.iter().map(|(key, score)| {
+                Json::obj([
+                    ("key", Json::Str(format!("{key:016x}"))),
+                    ("score", score.to_json()),
+                ])
+            })),
+        ),
+    ])
+}
+
+fn load_entries(path: &Path, expect_tag: u64) -> Result<Vec<(u64, Score)>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    let v = parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    let version = v
+        .get("version")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| "cache file missing version".to_string())?;
+    if version != 1 {
+        return Err(format!("unsupported cache file version {version}"));
+    }
+    let tag_hex = v
+        .get("fingerprint")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "cache file missing fingerprint".to_string())?;
+    let tag = u64::from_str_radix(tag_hex, 16)
+        .map_err(|_| format!("bad cache fingerprint '{tag_hex}'"))?;
+    if tag != expect_tag {
+        return Err(format!(
+            "cache fingerprint mismatch: file {tag:016x} vs run {expect_tag:016x} \
+             (different machine model, benchmark suite, or functional seed)"
+        ));
+    }
+    v.get("entries")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "cache file missing entries".to_string())?
+        .iter()
+        .map(|e| {
+            let key_hex = e
+                .get("key")
+                .and_then(Json::as_str)
+                .ok_or_else(|| "cache entry missing key".to_string())?;
+            let key = u64::from_str_radix(key_hex, 16)
+                .map_err(|_| format!("bad cache entry key '{key_hex}'"))?;
+            let score = Score::from_json(
+                e.get("score")
+                    .ok_or_else(|| "cache entry missing score".to_string())?,
+            )?;
+            Ok((key, score))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelspec::KernelSpec;
+    use crate::score::{gqa_suite, mha_suite, Evaluator};
+
+    fn tempdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("avo_persist_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn cold() -> PersistentBackend<Evaluator> {
+        PersistentBackend::new(CachedBackend::new(Evaluator::new(mha_suite())))
+    }
+
+    #[test]
+    fn save_then_warm_start_serves_hits_with_identical_scores() {
+        let dir = tempdir("roundtrip");
+        let a = cold();
+        let spec = crate::baselines::evolved_genome();
+        let fresh = a.evaluate(&spec);
+        a.save(&dir.join(CACHE_FILE)).unwrap();
+
+        let b = PersistentBackend::warm_start(
+            CachedBackend::new(Evaluator::new(mha_suite())),
+            &dir,
+        )
+        .unwrap();
+        assert_eq!(b.warm_entries(), 1);
+        let warm = b.evaluate(&spec);
+        // Bit-identical: f64s survive the JSON round trip exactly.
+        assert_eq!(fresh.per_config, warm.per_config);
+        let stats = b.cache_stats();
+        assert_eq!((stats.hits, stats.misses, stats.warm_entries), (1, 0, 1));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn failed_scores_roundtrip() {
+        let dir = tempdir("failed");
+        let a = cold();
+        let mut bad = KernelSpec::naive();
+        bad.fence_kind = crate::kernelspec::FenceKind::NonBlocking;
+        let fresh = a.evaluate(&bad);
+        a.save(&dir.join(CACHE_FILE)).unwrap();
+        let b = PersistentBackend::warm_start(
+            CachedBackend::new(Evaluator::new(mha_suite())),
+            &dir,
+        )
+        .unwrap();
+        let warm = b.evaluate(&bad);
+        assert_eq!(fresh.failure, warm.failure);
+        assert_eq!(b.cache_stats().misses, 0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn validate_reports_entry_count_and_rejects_bad_tag() {
+        let dir = tempdir("validate");
+        let a = cold();
+        a.evaluate(&KernelSpec::naive());
+        a.save(&dir.join(CACHE_FILE)).unwrap();
+        let tag = EvalBackend::cache_tag(&Evaluator::new(mha_suite()));
+        assert_eq!(validate(&dir, tag), Ok(1));
+        assert!(validate(&dir, tag ^ 1).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_rejected() {
+        let dir = tempdir("missing");
+        let err = PersistentBackend::warm_start(
+            CachedBackend::new(Evaluator::new(mha_suite())),
+            &dir,
+        )
+        .unwrap_err();
+        assert!(err.contains(CACHE_FILE), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn corrupt_file_is_rejected() {
+        let dir = tempdir("corrupt");
+        std::fs::write(dir.join(CACHE_FILE), "{not json").unwrap();
+        assert!(PersistentBackend::warm_start(
+            CachedBackend::new(Evaluator::new(mha_suite())),
+            &dir,
+        )
+        .is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_rejected() {
+        let dir = tempdir("fprint");
+        // Save under the MHA suite, load under GQA: the tag must differ
+        // and the load must refuse.
+        let a = cold();
+        a.evaluate(&KernelSpec::naive());
+        a.save(&dir.join(CACHE_FILE)).unwrap();
+        let err = PersistentBackend::warm_start(
+            CachedBackend::new(Evaluator::new(gqa_suite(4))),
+            &dir,
+        )
+        .unwrap_err();
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn malformed_entry_is_rejected() {
+        let dir = tempdir("badentry");
+        let tag = EvalBackend::cache_tag(&Evaluator::new(mha_suite()));
+        let text = format!(
+            "{{\"version\": 1, \"fingerprint\": \"{tag:016x}\", \
+             \"entries\": [{{\"key\": \"zz\", \"score\": null}}]}}"
+        );
+        std::fs::write(dir.join(CACHE_FILE), text).unwrap();
+        let err = PersistentBackend::warm_start(
+            CachedBackend::new(Evaluator::new(mha_suite())),
+            &dir,
+        )
+        .unwrap_err();
+        assert!(err.contains("bad cache entry key"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -5,31 +5,32 @@
 //!
 //! Determinism contract: island i's operator PRNG is derived from the run
 //! seed and i alone; islands share no mutable state between barriers
-//! except the [`EvalCache`], whose entries are deterministic functions of
-//! the genome (noise is disabled inside evolution) — so a cache hit equals
-//! a recomputation bit-for-bit.  Migration happens only with all worker
-//! threads joined, walking routes in a deterministic order with randomness
-//! from a dedicated migration stream.  Archive contents are therefore a
-//! pure function of (config, seed genome), independent of worker count and
-//! thread scheduling.
-
-use std::sync::Arc;
+//! except the evaluation cache.  The cache side of the contract — a hit
+//! (in-memory or warm-started) equals a recomputation bit-for-bit — now
+//! lives in [`crate::eval::CachedBackend`] (see the [`crate::eval`] module
+//! docs); the archipelago only relies on it.  Migration happens only with
+//! all worker threads joined, walking routes in a deterministic order with
+//! randomness from a dedicated migration stream.  Archive contents are
+//! therefore a pure function of (config, seed genome), independent of
+//! worker count, thread scheduling, and warm-start state.
 
 use crate::agent::{AgentAction, VariationOperator};
 use crate::coordinator::config::RunConfig;
 use crate::coordinator::driver::{build_operator, RunReport};
 use crate::coordinator::metrics::Metrics;
+use crate::eval::{CacheStats, CachedBackend, EvalBackend, PersistentBackend, SimBackend};
 use crate::evolution::Lineage;
-use crate::islands::cache::EvalCache;
 use crate::islands::migration::Migrant;
 use crate::kernelspec::KernelSpec;
 use crate::prng::Rng;
-use crate::score::Evaluator;
 use crate::supervisor::Supervisor;
 
 /// Per-island results, reported alongside the global aggregate.
 pub struct IslandReport {
     pub id: usize,
+    /// Name of the variation operator this island ran (heterogeneous
+    /// mixes assign operators round-robin across islands).
+    pub operator: &'static str,
     pub lineage: Lineage,
     pub metrics: Metrics,
     pub interventions: Vec<String>,
@@ -82,8 +83,16 @@ impl Archipelago {
     pub fn run_from(&self, seed_spec: KernelSpec, seed_message: &str) -> RunReport {
         let cfg = &self.config;
         let n = cfg.topology.islands.max(1);
-        let cache = Arc::new(EvalCache::default());
-        let eval = cfg.evaluator().with_cache(Arc::clone(&cache));
+        // The layered evaluation stack: simulator -> shared cache ->
+        // persistence.  Warm-starting seeds the cache from a prior run's
+        // saved evaluations; a rejected file (corrupt or fingerprint
+        // mismatch) aborts rather than silently running cold.
+        let cached = CachedBackend::new(SimBackend::new(cfg.evaluator(), cfg.eval_workers));
+        let backend = match &cfg.warm_start {
+            Some(dir) => PersistentBackend::warm_start(cached, dir)
+                .unwrap_or_else(|e| panic!("warm-start rejected: {e}")),
+            None => PersistentBackend::new(cached),
+        };
 
         // Per-island operator streams: island 0 uses the run seed verbatim
         // (the single-lineage path is the N=1 special case, bit-for-bit);
@@ -99,7 +108,7 @@ impl Archipelago {
                 Island {
                     id: i,
                     lineage: Lineage::new(),
-                    operator: build_operator(cfg, op_seed),
+                    operator: build_operator(cfg, i, op_seed),
                     supervisor: Supervisor::new(cfg.supervisor.clone()),
                     metrics: Metrics::new(),
                     interventions: Vec::new(),
@@ -113,7 +122,8 @@ impl Archipelago {
         // first call into hits, and the per-island evaluation counters stay
         // exact (hits + misses == evaluations).
         for isl in &mut islands {
-            let seed_score = isl.metrics.time("evaluate", || eval.evaluate(&seed_spec));
+            let seed_score =
+                isl.metrics.time("evaluate", || backend.evaluate(&seed_spec));
             assert!(
                 seed_score.is_correct(),
                 "seed genome must be correct: {:?}",
@@ -137,14 +147,22 @@ impl Archipelago {
         };
         let mut epoch = 0usize;
         while islands.iter().any(|i| !i.done(cfg)) {
-            self.run_epoch(&mut islands, &eval, commit_quota, step_quota);
+            self.run_epoch(&mut islands, &backend, commit_quota, step_quota);
             epoch += 1;
             if n > 1 && islands.iter().any(|i| !i.done(cfg)) {
                 self.migrate(&mut islands, epoch, &mut mig_rng);
             }
         }
 
-        self.aggregate(islands, &cache)
+        // The cache snapshot is an optimization for future runs — never
+        // let an IO failure here (disk full, out-dir removed) discard the
+        // completed run's results.
+        if let Some(path) = &cfg.eval_cache_path {
+            if let Err(e) = backend.save(path) {
+                eprintln!("warning: failed to persist eval cache to {}: {e}", path.display());
+            }
+        }
+        self.aggregate(islands, backend.cache_stats())
     }
 
     /// One epoch: islands advance independently (no shared mutable state
@@ -152,7 +170,7 @@ impl Archipelago {
     fn run_epoch(
         &self,
         islands: &mut [Island],
-        eval: &Evaluator,
+        eval: &dyn EvalBackend,
         commit_quota: usize,
         step_quota: usize,
     ) {
@@ -262,11 +280,12 @@ impl Archipelago {
     /// Fold island results into the aggregate [`RunReport`]: the reported
     /// lineage is the globally best island's archive, metrics are summed,
     /// and cache statistics surface as coordinator counters.
-    fn aggregate(&self, islands: Vec<Island>, cache: &EvalCache) -> RunReport {
+    fn aggregate(&self, islands: Vec<Island>, stats: CacheStats) -> RunReport {
         let reports: Vec<IslandReport> = islands
             .into_iter()
             .map(|i| IslandReport {
                 id: i.id,
+                operator: i.operator.name(),
                 lineage: i.lineage,
                 metrics: i.metrics,
                 interventions: i.interventions,
@@ -283,9 +302,12 @@ impl Archipelago {
         for r in &reports {
             metrics.merge(&r.metrics);
         }
-        metrics.incr("eval_cache_hits", cache.hits());
-        metrics.incr("eval_cache_misses", cache.misses());
-        metrics.incr("eval_cache_entries", cache.len() as u64);
+        metrics.incr("eval_cache_hits", stats.hits);
+        metrics.incr("eval_cache_misses", stats.misses);
+        metrics.incr("eval_cache_entries", stats.entries);
+        if stats.warm_entries > 0 {
+            metrics.incr("eval_cache_warm_entries", stats.warm_entries);
+        }
         let interventions: Vec<String> = reports
             .iter()
             .flat_map(|r| r.interventions.iter().cloned())
@@ -309,7 +331,7 @@ impl Archipelago {
 /// target, or step budget is reached — the body of the paper's §3.3 loop.
 fn run_island_epoch(
     isl: &mut Island,
-    eval: &Evaluator,
+    eval: &dyn EvalBackend,
     cfg: &RunConfig,
     commit_quota: usize,
     step_quota: usize,

@@ -8,20 +8,22 @@
 //!   (ring / broadcast-best / random pairs, every K commits), fed into the
 //!   agent's existing crossover path so lineage consultation becomes
 //!   cross-island;
-//! * [`cache::EvalCache`] — a shared content-addressed (genome-hash →
-//!   Score) map behind a sharded lock, so duplicate genomes proposed by
-//!   different islands are never re-simulated.
+//! * a shared content-addressed evaluation cache — now the generic
+//!   [`crate::eval::CachedBackend`] layer (the sharded map itself lives in
+//!   [`crate::eval::cache`]; PR 1's `islands::EvalCache` path is kept as a
+//!   re-export) — so duplicate genomes proposed by different islands are
+//!   never re-simulated.
 //!
 //! The paper's own commit criterion and content-addressed store generalize
 //! directly: migrants pass through the same Update rule as any candidate,
 //! and cache hits are bit-identical to recomputation (evolution runs
-//! noise-free), so results are reproducible regardless of worker count or
-//! thread scheduling.
+//! noise-free — the determinism contract spelled out in [`crate::eval`]),
+//! so results are reproducible regardless of worker count or thread
+//! scheduling.
 
 pub mod archipelago;
-pub mod cache;
 pub mod migration;
 
 pub use archipelago::{Archipelago, IslandReport};
-pub use cache::EvalCache;
+pub use crate::eval::EvalCache;
 pub use migration::{Migrant, MigrationPolicy};

@@ -12,10 +12,17 @@
 //!   repairs failures, and commits improvements — supervised against stalls
 //!   and unproductive cycles ([`supervisor`]).
 //! * **Scale-out** — an island model ([`islands`]): N concurrent lineages
-//!   with per-island PRNG streams, elite migration (ring / broadcast-best /
-//!   random pairs), and a shared content-addressed evaluation cache
-//!   ([`islands::EvalCache`]) so duplicate genomes are never re-simulated;
-//!   the paper's sequential regime is the one-island special case.
+//!   with per-island PRNG streams and elite migration (ring /
+//!   broadcast-best / random pairs); the paper's sequential regime is the
+//!   one-island special case.
+//! * **Evaluation subsystem** ([`eval`]) — the batched [`eval::EvalBackend`]
+//!   seam every scoring-function call goes through: [`eval::SimBackend`]
+//!   (the simulator, with worker fan-out for batches),
+//!   [`eval::CachedBackend`] (shared content-addressed memoization, so
+//!   duplicate genomes are never re-simulated), and
+//!   [`eval::PersistentBackend`] (JSON cache persistence + `--warm-start`,
+//!   carrying evaluations across runs).  The determinism contract for
+//!   cached and warm-started scores lives here.
 //! * **Layer 2/1 (build-time Python)** — a parameterized Pallas
 //!   flash-attention kernel realizing the genome's algorithmic space,
 //!   AOT-lowered to HLO text artifacts the `runtime` module (behind the
@@ -36,6 +43,7 @@ pub mod agent;
 pub mod baselines;
 pub mod benchkit;
 pub mod coordinator;
+pub mod eval;
 pub mod evolution;
 pub mod islands;
 pub mod json;
@@ -50,6 +58,7 @@ pub mod sim;
 pub mod store;
 pub mod supervisor;
 
+pub use eval::EvalBackend;
 pub use kernelspec::KernelSpec;
 pub use score::{BenchConfig, Evaluator, Score};
 pub use sim::machine::MachineSpec;

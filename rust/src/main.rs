@@ -11,6 +11,8 @@
 //! Examples:
 //!   avo evolve --seed 42 --commits 40 --out runs/mha
 //!   avo evolve --islands 4 --migration broadcast_best --migrate-every 3
+//!   avo evolve --islands 3 --operators avo,single_turn,fixed_pipeline
+//!   avo evolve --warm-start runs/mha --out runs/mha2   # reuse evaluations
 //!   avo evolve --config runs/mha.cfg
 //!   avo transfer --lineage runs/mha/lineage.json --kv-heads 4
 //!   avo compare --budget 240
@@ -32,8 +34,10 @@ fn usage() -> ! {
         "usage: avo <evolve|transfer|compare|show|profile> [flags]\n\
          \n\
          evolve   --seed N --commits N --steps N --operator avo|single_turn|pes\n\
+         \u{20}         --operators OP[,OP...]  (heterogeneous islands, round-robin)\n\
          \u{20}         --islands N --migration ring|broadcast_best|random_pairs\n\
          \u{20}         --migrate-every K --island-workers N\n\
+         \u{20}         --warm-start DIR  (reuse a prior run's eval cache)\n\
          \u{20}         --config FILE --out DIR\n\
          transfer --lineage FILE --kv-heads 4|8 --seed N --out DIR\n\
          compare  --budget N --seed N\n\
@@ -100,6 +104,9 @@ fn main() -> Result<(), CliError> {
             if let Some(op) = flags.get("--operator") {
                 cfg.operator = op.parse::<OperatorKind>()?;
             }
+            if let Some(ops) = flags.get("--operators") {
+                cfg.operator_mix = avo::coordinator::config::parse_operator_list(ops)?;
+            }
             if let Some(n) = flags.parse_strict("--islands")? {
                 cfg.topology.islands = n;
             }
@@ -112,19 +119,32 @@ fn main() -> Result<(), CliError> {
             if let Some(w) = flags.parse_strict("--island-workers")? {
                 cfg.topology.workers = w;
             }
+            if let Some(dir) = flags.get("--warm-start") {
+                cfg.warm_start = Some(PathBuf::from(dir));
+            }
             let out_dir = flags.get("--out").map(PathBuf::from);
             if let Some(dir) = &out_dir {
                 std::fs::create_dir_all(dir)?;
                 cfg.lineage_path = Some(dir.join("lineage.json"));
+                cfg.eval_cache_path = Some(dir.join(avo::eval::CACHE_FILE));
+            }
+            // Validate the warm-start cache (whether it came from the
+            // --warm-start flag or a `warm_start =` config key) up front,
+            // so a typo'd directory / corrupt file / stale fingerprint is
+            // a clean CLI error instead of a mid-run panic.
+            if let Some(dir) = &cfg.warm_start {
+                avo::eval::persist::validate(dir, avo::EvalBackend::cache_tag(&cfg.evaluator()))
+                    .map_err(|e| format!("warm-start: {e}"))?;
             }
             let report = EvolutionDriver::new(cfg).run();
             println!("{}", report.summary());
             if report.islands.len() > 1 {
                 for isl in &report.islands {
                     println!(
-                        "  island {}: {} commits, best {:.1} TFLOPS, {} steps, \
+                        "  island {} [{}]: {} commits, best {:.1} TFLOPS, {} steps, \
                          {} migrants in ({} accepted)",
                         isl.id,
+                        isl.operator,
                         isl.lineage.len(),
                         isl.lineage.best_geomean(),
                         isl.steps,
@@ -132,14 +152,18 @@ fn main() -> Result<(), CliError> {
                         isl.metrics.counter("migrants_accepted"),
                     );
                 }
-                let (h, m) = (
-                    report.metrics.counter("eval_cache_hits"),
-                    report.metrics.counter("eval_cache_misses"),
-                );
-                println!(
-                    "  eval cache: {h} hits / {m} misses ({:.0}% deduplicated)",
-                    100.0 * h as f64 / (h + m).max(1) as f64
-                );
+            }
+            let (h, m) = (
+                report.metrics.counter("eval_cache_hits"),
+                report.metrics.counter("eval_cache_misses"),
+            );
+            println!(
+                "  eval cache: {h} hits / {m} misses ({:.0}% deduplicated)",
+                100.0 * h as f64 / (h + m).max(1) as f64
+            );
+            let warm = report.metrics.counter("eval_cache_warm_entries");
+            if warm > 0 {
+                println!("  warm-start: {warm} cached evaluations loaded from prior run");
             }
             for note in &report.interventions {
                 println!("  supervisor: {note}");
@@ -154,7 +178,7 @@ fn main() -> Result<(), CliError> {
                     dir.join("trajectory_noncausal.json"),
                     report.lineage.trajectory_json(false).pretty(),
                 )?;
-                println!("wrote lineage + trajectories to {}", dir.display());
+                println!("wrote lineage + trajectories + eval cache to {}", dir.display());
             }
         }
         "transfer" => {

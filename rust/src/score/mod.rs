@@ -214,10 +214,6 @@ pub struct Evaluator {
     pub noise_sigma: f64,
     /// Functional-check seed (fixed per run).
     pub functional_seed: u64,
-    /// Shared content-addressed score cache (island search); None = every
-    /// call simulates.  Only consulted when `noise_sigma == 0`, so noisy
-    /// measurement protocols are never cached.
-    pub cache: Option<std::sync::Arc<crate::islands::EvalCache>>,
 }
 
 impl Evaluator {
@@ -227,7 +223,6 @@ impl Evaluator {
             suite,
             noise_sigma: 0.0,
             functional_seed: 0x5EED,
-            cache: None,
         }
     }
 
@@ -236,15 +231,11 @@ impl Evaluator {
         self
     }
 
-    /// Route all deterministic evaluations through a shared score cache.
-    pub fn with_cache(mut self, cache: std::sync::Arc<crate::islands::EvalCache>) -> Self {
-        self.cache = Some(cache);
-        self
-    }
-
-    /// Cache-key component identifying what (besides the genome itself)
-    /// determines a score: the suite cells and the functional-check seed.
-    /// (The machine model is fixed per process.)
+    /// Cache-key component identifying what (besides the genome itself and
+    /// the machine model) determines a score: the suite cells and the
+    /// functional-check seed.  Caching lives a layer up, in
+    /// [`crate::eval::CachedBackend`]; this tag feeds its key and the
+    /// persisted-cache fingerprint.
     pub fn suite_tag(&self) -> u64 {
         let mut h: u64 = 0xcbf29ce484222325;
         for c in &self.suite {
@@ -256,14 +247,7 @@ impl Evaluator {
 
     /// Full scoring: validate -> functional check (per masking regime and
     /// group actually present in the suite) -> cycle model per config.
-    /// With a cache attached, duplicate genomes return the stored score.
     pub fn evaluate(&self, spec: &KernelSpec) -> Score {
-        if self.noise_sigma == 0.0 {
-            if let Some(cache) = &self.cache {
-                let key = spec.content_hash() ^ self.suite_tag();
-                return cache.get_or_compute(key, || self.evaluate_noisy(spec, &mut None));
-            }
-        }
         self.evaluate_noisy(spec, &mut None)
     }
 
@@ -378,21 +362,6 @@ mod tests {
         assert_eq!(geomean([].into_iter()), 0.0);
         assert_eq!(geomean([2.0, 0.0].into_iter()), 0.0);
         assert!((geomean([2.0, 8.0].into_iter()) - 4.0).abs() < 1e-12);
-    }
-
-    #[test]
-    fn cached_evaluator_matches_uncached() {
-        let cache = std::sync::Arc::new(crate::islands::EvalCache::default());
-        let ev = Evaluator::new(mha_suite()).with_cache(std::sync::Arc::clone(&cache));
-        let plain = Evaluator::new(mha_suite());
-        let spec = crate::baselines::evolved_genome();
-        let a = ev.evaluate(&spec);
-        let b = ev.evaluate(&spec);
-        let c = plain.evaluate(&spec);
-        assert_eq!(a.per_config, b.per_config);
-        assert_eq!(a.per_config, c.per_config);
-        assert_eq!(cache.hits(), 1);
-        assert_eq!(cache.misses(), 1);
     }
 
     #[test]

@@ -127,6 +127,78 @@ impl MachineSpec {
     pub fn cycles_to_seconds(&self, cycles: f64) -> f64 {
         cycles / (self.clock_ghz * 1e9)
     }
+
+    /// Stable fingerprint of every cost constant (FNV-1a over the field
+    /// bit patterns).  Persisted evaluation caches are keyed on this, so a
+    /// recalibrated or different machine model invalidates saved scores
+    /// instead of silently mixing incomparable TFLOPS numbers.
+    pub fn fingerprint(&self) -> u64 {
+        // Exhaustive destructuring (no `..`): adding a field to MachineSpec
+        // refuses to compile until it is folded in here, so no cost
+        // constant can ever silently escape the fingerprint.
+        let MachineSpec {
+            sms,
+            clock_ghz,
+            peak_bf16_tflops,
+            hbm_tbps,
+            kv_l2_reuse,
+            mma_issue_efficiency,
+            mma_dependency_bubble,
+            vec_ops_per_cycle,
+            sfu_ops_per_cycle,
+            exp2_ops_per_cycle,
+            fence_blocking_cycles,
+            fence_nonblocking_cycles,
+            guarded_vote_cycles,
+            rescale_freq_noncausal,
+            rescale_freq_causal,
+            branchless_pred_cycles,
+            handoff_cycles,
+            causal_dual_path_cycles,
+            overlap_hide_fraction,
+            causal_overlap_attenuation,
+            causal_spill_visibility,
+            spill_cycles_per_reg,
+            tma_latency_cycles,
+            noise_rel_sigma,
+        } = self;
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut fold = |bits: u64| {
+            for b in bits.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        fold(*sms as u64);
+        for f in [
+            clock_ghz,
+            peak_bf16_tflops,
+            hbm_tbps,
+            kv_l2_reuse,
+            mma_issue_efficiency,
+            mma_dependency_bubble,
+            vec_ops_per_cycle,
+            sfu_ops_per_cycle,
+            exp2_ops_per_cycle,
+            fence_blocking_cycles,
+            fence_nonblocking_cycles,
+            guarded_vote_cycles,
+            rescale_freq_noncausal,
+            rescale_freq_causal,
+            branchless_pred_cycles,
+            handoff_cycles,
+            causal_dual_path_cycles,
+            overlap_hide_fraction,
+            causal_overlap_attenuation,
+            causal_spill_visibility,
+            spill_cycles_per_reg,
+            tma_latency_cycles,
+            noise_rel_sigma,
+        ] {
+            fold(f.to_bits());
+        }
+        h
+    }
 }
 
 impl Default for MachineSpec {
@@ -154,5 +226,16 @@ mod tests {
         let m = MachineSpec::b200();
         let s = m.cycles_to_seconds(1.965e9);
         assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fingerprint_stable_and_sensitive() {
+        assert_eq!(MachineSpec::b200().fingerprint(), MachineSpec::b200().fingerprint());
+        let mut recalibrated = MachineSpec::b200();
+        recalibrated.fence_blocking_cycles += 1.0;
+        assert_ne!(MachineSpec::b200().fingerprint(), recalibrated.fingerprint());
+        let mut more_sms = MachineSpec::b200();
+        more_sms.sms += 1;
+        assert_ne!(MachineSpec::b200().fingerprint(), more_sms.fingerprint());
     }
 }

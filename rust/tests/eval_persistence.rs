@@ -1,0 +1,149 @@
+//! Cache persistence contract: a `--warm-start` run reproduces the
+//! cold run's archive byte-for-byte while serving evaluations from the
+//! prior run's saved cache, and corrupt or mismatched cache files are
+//! rejected instead of silently poisoning a run.
+
+use avo::coordinator::{EvolutionDriver, RunConfig, RunReport};
+use avo::eval::{CachedBackend, EvalBackend, PersistentBackend, SimBackend, CACHE_FILE};
+use avo::score::{gqa_suite, Evaluator};
+
+fn tempdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("avo_warm_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn small_config(seed: u64, islands: usize) -> RunConfig {
+    let mut cfg = RunConfig {
+        seed,
+        target_commits: 5,
+        max_steps: 25,
+        ..RunConfig::default()
+    };
+    cfg.topology.islands = islands;
+    cfg.topology.migrate_every = 2;
+    cfg.topology.workers = 2;
+    cfg
+}
+
+/// Full per-island commit-id sequences (ids are content hashes chained
+/// through parents, so equality means byte-identical archives).
+fn archives(report: &RunReport) -> Vec<Vec<u64>> {
+    report
+        .islands
+        .iter()
+        .map(|i| i.lineage.versions().iter().map(|c| c.id.0).collect())
+        .collect()
+}
+
+#[test]
+fn warm_start_roundtrip_reproduces_cold_archive_with_hits() {
+    let dir = tempdir("roundtrip");
+
+    // Run A: save the evaluation cache.
+    let mut save_cfg = small_config(23, 1);
+    save_cfg.eval_cache_path = Some(dir.join(CACHE_FILE));
+    let run_a = EvolutionDriver::new(save_cfg).run();
+    assert!(dir.join(CACHE_FILE).exists(), "cache file not written");
+
+    // Run B: cold, same seed — the reference archive.
+    let cold = EvolutionDriver::new(small_config(23, 1)).run();
+    assert_eq!(archives(&run_a), archives(&cold));
+
+    // Run C: warm-started from run A's cache.
+    let mut warm_cfg = small_config(23, 1);
+    warm_cfg.warm_start = Some(dir.clone());
+    let warm = EvolutionDriver::new(warm_cfg).run();
+
+    // Byte-identical archives...
+    assert_eq!(archives(&warm), archives(&cold), "warm start changed the archive");
+    assert_eq!(warm.steps, cold.steps);
+    assert!((warm.lineage.best_geomean() - cold.lineage.best_geomean()).abs() < 1e-12);
+    // ...with the warm cache doing the work: nonzero hits, strictly more
+    // than the cold run's self-hits, and — since run A already paid for
+    // every genome this trajectory evaluates — zero misses.
+    let (warm_hits, cold_hits) = (
+        warm.metrics.counter("eval_cache_hits"),
+        cold.metrics.counter("eval_cache_hits"),
+    );
+    assert!(warm_hits > 0);
+    assert!(warm_hits > cold_hits, "warm {warm_hits} vs cold {cold_hits}");
+    assert_eq!(warm.metrics.counter("eval_cache_misses"), 0);
+    assert!(warm.metrics.counter("eval_cache_warm_entries") > 0);
+    assert!(warm.summary().contains("warm-start"), "{}", warm.summary());
+
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn warm_start_reproduces_multi_island_archipelago() {
+    let dir = tempdir("islands");
+
+    let mut save_cfg = small_config(31, 3);
+    save_cfg.eval_cache_path = Some(dir.join(CACHE_FILE));
+    let cold = EvolutionDriver::new(save_cfg).run();
+
+    let mut warm_cfg = small_config(31, 3);
+    warm_cfg.warm_start = Some(dir.clone());
+    let warm = EvolutionDriver::new(warm_cfg).run();
+
+    assert_eq!(archives(&warm), archives(&cold));
+    assert_eq!(warm.metrics.counter("eval_cache_misses"), 0);
+    assert!(warm.metrics.counter("eval_cache_hits") > 0);
+
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn saved_cache_includes_warm_entries_for_chained_runs() {
+    // A -> B -> C: each run warm-starts from the previous and re-saves;
+    // the chain must not lose entries (run C still runs miss-free).
+    let dir_a = tempdir("chain_a");
+    let dir_b = tempdir("chain_b");
+
+    let mut cfg = small_config(7, 1);
+    cfg.eval_cache_path = Some(dir_a.join(CACHE_FILE));
+    EvolutionDriver::new(cfg).run();
+
+    let mut cfg = small_config(7, 1);
+    cfg.warm_start = Some(dir_a.clone());
+    cfg.eval_cache_path = Some(dir_b.join(CACHE_FILE));
+    let b = EvolutionDriver::new(cfg).run();
+    assert_eq!(b.metrics.counter("eval_cache_misses"), 0);
+
+    let mut cfg = small_config(7, 1);
+    cfg.warm_start = Some(dir_b.clone());
+    let c = EvolutionDriver::new(cfg).run();
+    assert_eq!(c.metrics.counter("eval_cache_misses"), 0);
+
+    std::fs::remove_dir_all(dir_a).ok();
+    std::fs::remove_dir_all(dir_b).ok();
+}
+
+#[test]
+fn corrupt_cache_file_is_rejected() {
+    let dir = tempdir("corrupt");
+    std::fs::write(dir.join(CACHE_FILE), "{\"version\": 1, garbage").unwrap();
+    let cfg = small_config(3, 1);
+    let backend = CachedBackend::new(SimBackend::new(cfg.evaluator(), 1));
+    let err = PersistentBackend::warm_start(backend, &dir).unwrap_err();
+    assert!(err.contains("json parse error"), "{err}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn cache_from_different_suite_is_rejected() {
+    let dir = tempdir("suite");
+    // Save under the default MHA suite...
+    let mha = PersistentBackend::new(CachedBackend::new(SimBackend::new(
+        small_config(3, 1).evaluator(),
+        1,
+    )));
+    mha.evaluate(&avo::kernelspec::KernelSpec::naive());
+    mha.save(&dir.join(CACHE_FILE)).unwrap();
+    // ...and refuse to load under the GQA transfer suite.
+    let gqa = CachedBackend::new(SimBackend::new(Evaluator::new(gqa_suite(4)), 1));
+    let err = PersistentBackend::warm_start(gqa, &dir).unwrap_err();
+    assert!(err.contains("fingerprint mismatch"), "{err}");
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -98,6 +98,28 @@ fn islands_explore_distinct_trajectories_within_a_run() {
 }
 
 #[test]
+fn warm_started_run_reproduces_cold_archive() {
+    // Save a run's evaluation cache, then warm-start the same config from
+    // it: the archive must be byte-identical to the cold run while the
+    // cache does the scoring work (nonzero hits, no misses).
+    let dir = std::env::temp_dir().join(format!("avo_det_warm_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut save_cfg = island_config(33, 3, 2, MigrationPolicy::Ring);
+    save_cfg.eval_cache_path = Some(dir.join(avo::eval::CACHE_FILE));
+    let cold = EvolutionDriver::new(save_cfg).run();
+
+    let mut warm_cfg = island_config(33, 3, 2, MigrationPolicy::Ring);
+    warm_cfg.warm_start = Some(dir.clone());
+    let warm = EvolutionDriver::new(warm_cfg).run();
+
+    assert_eq!(archives(&cold), archives(&warm));
+    assert_eq!(heads(&cold), heads(&warm));
+    assert!(warm.metrics.counter("eval_cache_hits") > 0);
+    assert_eq!(warm.metrics.counter("eval_cache_misses"), 0);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn n_island_run_matches_or_beats_each_member_island() {
     // The reported global best is by construction the max over islands.
     let report =
