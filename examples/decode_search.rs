@@ -1,0 +1,51 @@
+//! Decode-attention search demo: evolve the `decode:<batch>` workload
+//! (the CLI's `avo evolve --workload decode:32`) and print the per-cell
+//! gains of the best genome over the naive decode seed, then adapt the
+//! result back onto the MHA suite with the generic cross-workload
+//! transfer.
+//!
+//!   cargo run --release --example decode_search [--batch N]
+
+use avo::coordinator::{EvolutionDriver, RunConfig};
+
+fn main() {
+    let batch: u32 = std::env::args()
+        .skip_while(|a| a != "--batch")
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32);
+
+    println!("== AVO decode-attention search: --workload decode:{batch} ==");
+    let mut cfg = RunConfig {
+        seed: 42,
+        target_commits: 12,
+        max_steps: 80,
+        ..RunConfig::default()
+    };
+    cfg.workload = format!("decode:{batch}");
+    let driver = EvolutionDriver::new(cfg);
+
+    let t0 = std::time::Instant::now();
+    let report = driver.run();
+    println!("{} ({:.2?})", report.summary(), t0.elapsed());
+
+    let versions = report.lineage.versions();
+    let seed = versions[0].score.clone();
+    let best = report.lineage.best().expect("seeded lineage");
+    println!("\n  cell                 seed TFLOPS    best TFLOPS     gain");
+    for (name, s) in &seed.per_config {
+        let b = best.score.get(name).unwrap_or(0.0);
+        println!(
+            "  {name:<18} {s:>12.3} {b:>14.3}   {:+7.1}%",
+            (b / s - 1.0) * 100.0
+        );
+    }
+    println!("\nbest genome:\n{}", best.message);
+
+    // Cross-workload transfer: the same evolved mechanisms, re-scored and
+    // briefly adapted on the MHA forward suite.
+    let transfer = driver
+        .transfer_to("mha", best.spec.clone())
+        .expect("mha is a registered workload");
+    println!("\ntransfer decode:{batch} -> mha: {}", transfer.summary());
+}

@@ -29,6 +29,7 @@ use crate::prng::Rng;
 use crate::score::{BenchConfig, Score};
 use crate::sim::profile::{profile, ProfileReport};
 use crate::supervisor::Directive;
+use crate::workload::{PhaseSchedule, Workload};
 
 /// Tunables of the agent loop.
 #[derive(Debug, Clone)]
@@ -47,6 +48,11 @@ pub struct AvoConfig {
     pub phase_boost: f64,
     /// Penalty exponent for directions that repeatedly failed to help.
     pub novelty_decay: f64,
+    /// Speculative repair batching (`--speculative-repair`): submit every
+    /// ranked repair of a failed candidate as one `evaluate_batch` call
+    /// and take the first correct one in table order, instead of walking
+    /// the table one evaluation at a time.
+    pub speculative_repair: bool,
 }
 
 impl Default for AvoConfig {
@@ -59,6 +65,7 @@ impl Default for AvoConfig {
             algorithmic_until: 22,
             phase_boost: 2.5,
             novelty_decay: 0.6,
+            speculative_repair: false,
         }
     }
 }
@@ -76,6 +83,9 @@ struct DirMemory {
 pub struct AvoAgent {
     pub config: AvoConfig,
     kb: KnowledgeBase,
+    /// Workload phase schedule (attention defaults from `new`; rebind with
+    /// [`Self::with_workload`]).
+    phases: PhaseSchedule,
     rng: Rng,
     memory: HashMap<Direction, DirMemory>,
     /// Supervisor boost, decayed each step.
@@ -91,6 +101,7 @@ impl AvoAgent {
         AvoAgent {
             config,
             kb: KnowledgeBase::paper_kb(),
+            phases: PhaseSchedule::attention(),
             rng: Rng::new(seed),
             memory: HashMap::new(),
             boosted: Vec::new(),
@@ -98,27 +109,26 @@ impl AvoAgent {
         }
     }
 
+    /// Rebind the agent to a workload's knowledge base and phase schedule.
+    /// The attention defaults from [`Self::new`] equal the MHA/GQA
+    /// workloads' exactly (and rebinding draws no randomness), so this is
+    /// behavior-preserving for the paper's runs.
+    pub fn with_workload(mut self, workload: &dyn Workload) -> Self {
+        self.kb = workload.knowledge_base();
+        self.phases = workload.phase_schedule();
+        self
+    }
+
     /// Directions the current strategy phase favours (the paper: "early
     /// steps may focus on structural changes ... later steps can shift
-    /// toward micro-architectural tuning").
-    fn phase_directions(&self, committed: usize) -> &'static [Direction] {
-        if committed < self.config.structural_until {
-            &[
-                Direction::Pipelining,
-                Direction::Tiling,
-                Direction::Masking,
-                Direction::MmaIssue,
-            ]
-        } else if committed < self.config.algorithmic_until {
-            &[Direction::SoftmaxAlgo, Direction::Synchronization, Direction::Masking]
-        } else {
-            &[
-                Direction::Overlap,
-                Direction::Registers,
-                Direction::Scheduling,
-                Direction::Synchronization,
-            ]
-        }
+    /// toward micro-architectural tuning").  The sets come from the
+    /// workload's [`PhaseSchedule`]; the boundaries from [`AvoConfig`].
+    fn phase_directions(&self, committed: usize) -> &[Direction] {
+        self.phases.for_phase(
+            committed,
+            self.config.structural_until,
+            self.config.algorithmic_until,
+        )
     }
 
     /// Merge profiler reports of the causal and non-causal flagship cells
@@ -189,11 +199,12 @@ impl AvoAgent {
     ///
     /// Every candidate — the initial proposal and each repair round — goes
     /// through the backend's batched entry point.  The agent's §3.2
-    /// semantics are inherently sequential (each repair conditions on the
-    /// previous failure class), so today's batches are singletons; the
-    /// seam is what lets a parallel or remote backend overlap these
-    /// evaluations with other islands' batches without touching agent
-    /// logic.
+    /// semantics are sequential by default (each repair conditions on the
+    /// previous failure class), so those batches are singletons; with
+    /// [`AvoConfig::speculative_repair`] a failed candidate's whole ranked
+    /// repair table goes out as one batch instead, and the first correct
+    /// candidate in table order wins — trading extra (parallelizable)
+    /// evaluations for never spending a second round on a fixable failure.
     fn evaluate_with_repair(
         &mut self,
         eval: &dyn EvalBackend,
@@ -216,17 +227,49 @@ impl AvoAgent {
             }
             repairs_left -= 1;
             let repairs = diagnose::repairs_for(&failure, &cand);
-            let Some(repair) = repairs.first() else { break };
-            actions.push(AgentAction::Diagnose {
-                failure: failure.to_string(),
-                repair: repair.rationale.to_string(),
-            });
-            cand = repair.apply(&cand);
-            score = eval
-                .evaluate_batch(std::slice::from_ref(&cand))
-                .pop()
-                .expect("one score per candidate");
-            evals += 1;
+            if repairs.is_empty() {
+                break;
+            }
+            if self.config.speculative_repair && repairs.len() > 1 {
+                // Speculative batch: evaluate the whole ranked repair
+                // table at once and keep the first correct candidate in
+                // table order.  If none passes, fall back to the
+                // top-ranked (still-failing) candidate so the next round
+                // re-diagnoses from the strongest repair, exactly as the
+                // sequential path would.
+                let cands: Vec<KernelSpec> =
+                    repairs.iter().map(|r| r.apply(&cand)).collect();
+                let scores = eval.evaluate_batch(&cands);
+                evals += cands.len();
+                let pick = scores
+                    .iter()
+                    .position(|s| s.is_correct())
+                    .unwrap_or(0);
+                actions.push(AgentAction::Diagnose {
+                    failure: failure.to_string(),
+                    repair: repairs[pick].rationale.to_string(),
+                });
+                cand = cands
+                    .into_iter()
+                    .nth(pick)
+                    .expect("pick indexes the candidate batch");
+                score = scores
+                    .into_iter()
+                    .nth(pick)
+                    .expect("pick indexes the score batch");
+            } else {
+                let repair = &repairs[0];
+                actions.push(AgentAction::Diagnose {
+                    failure: failure.to_string(),
+                    repair: repair.rationale.to_string(),
+                });
+                cand = repair.apply(&cand);
+                score = eval
+                    .evaluate_batch(std::slice::from_ref(&cand))
+                    .pop()
+                    .expect("one score per candidate");
+                evals += 1;
+            }
             actions.push(AgentAction::Evaluate {
                 geomean: score.geomean(),
                 failure: score.failure.clone(),
@@ -571,6 +614,77 @@ mod tests {
         assert_eq!(agent.migrants.len(), 8);
         // Oldest dropped first: the survivors are the freshest 8.
         assert_eq!(agent.migrants[0].from_island, 12);
+    }
+
+    #[test]
+    fn speculative_repair_batches_the_repair_table() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        /// Backend wrapper recording the widest batch it was handed.
+        struct Recorder {
+            inner: crate::score::Evaluator,
+            max_batch: AtomicUsize,
+        }
+        impl EvalBackend for Recorder {
+            fn evaluate_batch(&self, specs: &[KernelSpec]) -> Vec<Score> {
+                self.max_batch.fetch_max(specs.len(), Ordering::Relaxed);
+                self.inner.evaluate_batch(specs)
+            }
+            fn suite(&self) -> &[BenchConfig] {
+                &self.inner.suite
+            }
+            fn report(
+                &self,
+                spec: &KernelSpec,
+                cfg: &BenchConfig,
+            ) -> crate::sim::pipeline::CycleReport {
+                self.inner.report(spec, cfg)
+            }
+            fn cache_tag(&self) -> u64 {
+                EvalBackend::cache_tag(&self.inner)
+            }
+        }
+
+        // Deterministic check on a known FenceRace candidate: the ranked
+        // repair table (branchless rescale, blocking-fence fallback) must
+        // go out as one 2-wide batch, and the table-order winner — the
+        // branchless repair — must come back correct.
+        let mut cfg = AvoConfig::default();
+        cfg.speculative_repair = true;
+        let mut agent = AvoAgent::new(cfg, 7);
+        let rec = Recorder {
+            inner: crate::score::Evaluator::new(crate::score::mha_suite()),
+            max_batch: AtomicUsize::new(0),
+        };
+        let mut bad = KernelSpec::naive();
+        bad.fence_kind = crate::kernelspec::FenceKind::NonBlocking;
+        let mut actions = Vec::new();
+        let (fixed, score, evals) = agent.evaluate_with_repair(&rec, bad, &mut actions);
+        assert!(score.is_correct(), "{:?}", score.failure);
+        assert_eq!(
+            fixed.rescale_mode,
+            crate::kernelspec::RescaleMode::Branchless,
+            "table-order winner must be the top-ranked repair"
+        );
+        assert_eq!(rec.max_batch.load(Ordering::Relaxed), 2);
+        // One initial evaluation + the 2-wide speculative batch.
+        assert_eq!(evals, 3);
+        assert!(actions
+            .iter()
+            .any(|a| matches!(a, AgentAction::Diagnose { .. })));
+
+        // The sequential path (the default) never widens a batch.
+        let mut agent = AvoAgent::new(AvoConfig::default(), 7);
+        let rec = Recorder {
+            inner: crate::score::Evaluator::new(crate::score::mha_suite()),
+            max_batch: AtomicUsize::new(0),
+        };
+        let mut bad = KernelSpec::naive();
+        bad.fence_kind = crate::kernelspec::FenceKind::NonBlocking;
+        let mut actions = Vec::new();
+        let (_, score, _) = agent.evaluate_with_repair(&rec, bad, &mut actions);
+        assert!(score.is_correct());
+        assert_eq!(rec.max_batch.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -99,6 +99,14 @@ impl FixedPipelineOperator {
         }
     }
 
+    /// Rebind to a workload's knowledge base (the paper KB from `new` is
+    /// the attention workloads' exactly, so this is behavior-preserving
+    /// for MHA/GQA runs).
+    pub fn with_workload(mut self, workload: &dyn crate::workload::Workload) -> Self {
+        self.kb = workload.knowledge_base();
+        self
+    }
+
     /// MAP-Elites-lite: best member per (block_q, block_k) cell, then
     /// Boltzmann over cell elites.
     fn sample_parent<'a>(&mut self, lineage: &'a Lineage) -> &'a KernelSpec {

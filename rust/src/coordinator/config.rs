@@ -4,8 +4,9 @@
 
 use crate::agent::AvoConfig;
 use crate::islands::MigrationPolicy;
-use crate::score::{gqa_suite, mha_suite, Evaluator};
+use crate::score::Evaluator;
 use crate::supervisor::SupervisorConfig;
+use crate::workload::Workload;
 
 /// Which variation operator drives the run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,6 +41,14 @@ pub struct SearchTopology {
     /// (A stalled island still syncs after 4x this many steps, so it can
     /// receive migrants rather than exhaust its budget alone.)
     pub migrate_every: usize,
+    /// Adaptive migration intervals: halve a stalled island's interval
+    /// (it mixes with its neighbours sooner) and restore it on
+    /// improvement.  Off by default — the fixed-interval regime is the
+    /// reproducible baseline.
+    pub adaptive_migration: bool,
+    /// Barrier epochs without a best-geomean improvement before an
+    /// island's interval halves (adaptive migration only).
+    pub adaptive_stall_epochs: usize,
     /// Worker threads driving islands (0 = one per island, machine-capped).
     /// Archive contents are identical for every worker count.
     pub workers: usize,
@@ -51,6 +60,8 @@ impl Default for SearchTopology {
             islands: 1,
             migration: MigrationPolicy::Ring,
             migrate_every: 4,
+            adaptive_migration: false,
+            adaptive_stall_epochs: 2,
             workers: 0,
         }
     }
@@ -68,8 +79,11 @@ pub struct RunConfig {
     pub target_commits: usize,
     /// ...or after this many variation steps, whichever first.
     pub max_steps: usize,
-    /// GQA transfer suite (None = MHA evolution).
-    pub gqa_kv_heads: Option<u32>,
+    /// The kernel scenario this run optimizes: `mha`, `gqa:<kv_heads>`, or
+    /// `decode:<batch>` (the [`crate::workload`] registry).  Validated
+    /// when parsed from a config file or the CLI; programmatic values are
+    /// checked when the run instantiates the workload.
+    pub workload: String,
     pub agent: AvoConfig,
     pub supervisor: SupervisorConfig,
     /// Island-model topology (1 island = the paper's sequential lineage).
@@ -83,6 +97,10 @@ pub struct RunConfig {
     pub warm_start: Option<std::path::PathBuf>,
     /// Where to persist this run's evaluation cache (None = discard).
     pub eval_cache_path: Option<std::path::PathBuf>,
+    /// Cap on distinct genomes held in the evaluation cache, evicted
+    /// oldest-first (`--eval-cache-max-entries`); None = unbounded.  Keeps
+    /// week-long runs from growing `eval_cache.json` without limit.
+    pub eval_cache_max_entries: Option<usize>,
 }
 
 impl Default for RunConfig {
@@ -93,7 +111,7 @@ impl Default for RunConfig {
             seed: 42,
             target_commits: 40,
             max_steps: 400,
-            gqa_kv_heads: None,
+            workload: "mha".to_string(),
             agent: AvoConfig::default(),
             supervisor: SupervisorConfig::default(),
             topology: SearchTopology::default(),
@@ -103,6 +121,7 @@ impl Default for RunConfig {
             lineage_path: None,
             warm_start: None,
             eval_cache_path: None,
+            eval_cache_max_entries: None,
         }
     }
 }
@@ -129,7 +148,10 @@ impl RunConfig {
                 "seed" => cfg.seed = v.parse().map_err(|e| bad(&e))?,
                 "target_commits" => cfg.target_commits = v.parse().map_err(|e| bad(&e))?,
                 "max_steps" => cfg.max_steps = v.parse().map_err(|e| bad(&e))?,
-                "gqa_kv_heads" => cfg.gqa_kv_heads = Some(v.parse().map_err(|e| bad(&e))?),
+                "workload" => {
+                    crate::workload::parse(v).map_err(|e| bad(&e))?;
+                    cfg.workload = v.trim().to_string();
+                }
                 "eval_workers" => cfg.eval_workers = v.parse().map_err(|e| bad(&e))?,
                 "islands" => cfg.topology.islands = v.parse().map_err(|e| bad(&e))?,
                 "migration" => {
@@ -138,14 +160,26 @@ impl RunConfig {
                 "migrate_every" => {
                     cfg.topology.migrate_every = v.parse().map_err(|e| bad(&e))?
                 }
+                "adaptive_migration" => {
+                    cfg.topology.adaptive_migration = v.parse().map_err(|e| bad(&e))?
+                }
+                "adaptive_stall_epochs" => {
+                    cfg.topology.adaptive_stall_epochs = v.parse().map_err(|e| bad(&e))?
+                }
                 "island_workers" => {
                     cfg.topology.workers = v.parse().map_err(|e| bad(&e))?
                 }
                 "lineage_path" => cfg.lineage_path = Some(v.into()),
                 "warm_start" => cfg.warm_start = Some(v.into()),
                 "eval_cache_path" => cfg.eval_cache_path = Some(v.into()),
+                "eval_cache_max_entries" => {
+                    cfg.eval_cache_max_entries = Some(v.parse().map_err(|e| bad(&e))?)
+                }
                 "inner_budget" => cfg.agent.inner_budget = v.parse().map_err(|e| bad(&e))?,
                 "repair_budget" => cfg.agent.repair_budget = v.parse().map_err(|e| bad(&e))?,
+                "speculative_repair" => {
+                    cfg.agent.speculative_repair = v.parse().map_err(|e| bad(&e))?
+                }
                 "crossover_prob" => {
                     cfg.agent.crossover_prob = v.parse().map_err(|e| bad(&e))?
                 }
@@ -166,13 +200,18 @@ impl RunConfig {
         Self::parse(&text)
     }
 
-    /// The evaluator this configuration's runs are scored against.
+    /// Instantiate the configured workload.  Spec strings from config
+    /// files and the CLI are validated at parse time; an invalid
+    /// programmatic value panics here with the registry's error.
+    pub fn workload(&self) -> Box<dyn Workload> {
+        crate::workload::parse(&self.workload)
+            .unwrap_or_else(|e| panic!("invalid workload '{}': {e}", self.workload))
+    }
+
+    /// The evaluator this configuration's runs are scored against: the
+    /// workload's suite plus its cache-isolating tag.
     pub fn evaluator(&self) -> Evaluator {
-        let suite = match self.gqa_kv_heads {
-            Some(kv) => gqa_suite(kv),
-            None => mha_suite(),
-        };
-        Evaluator::new(suite)
+        Evaluator::for_workload(&*self.workload())
     }
 
     /// The operator island `i` runs: round-robin over `operator_mix`, or
@@ -206,10 +245,15 @@ mod tests {
         let c = RunConfig::default();
         assert_eq!(c.target_commits, 40);
         assert_eq!(c.operator, OperatorKind::Avo);
-        assert!(c.gqa_kv_heads.is_none());
+        // The default scenario is the paper's MHA evolution.
+        assert_eq!(c.workload, "mha");
+        assert_eq!(c.workload().name(), "mha");
         // The default topology is the paper's single sequential lineage.
         assert_eq!(c.topology.islands, 1);
         assert_eq!(c.topology.migration, MigrationPolicy::Ring);
+        assert!(!c.topology.adaptive_migration);
+        assert!(c.eval_cache_max_entries.is_none());
+        assert!(!c.agent.speculative_repair);
     }
 
     #[test]
@@ -234,7 +278,7 @@ mod tests {
             "operator = single_turn\n\
              seed = 7          # comment\n\
              target_commits = 12\n\
-             gqa_kv_heads = 4\n\
+             workload = gqa:4\n\
              inner_budget = 9\n\
              stall_window = 6\n",
         )
@@ -242,9 +286,44 @@ mod tests {
         assert_eq!(cfg.operator, OperatorKind::SingleTurn);
         assert_eq!(cfg.seed, 7);
         assert_eq!(cfg.target_commits, 12);
-        assert_eq!(cfg.gqa_kv_heads, Some(4));
+        assert_eq!(cfg.workload, "gqa:4");
         assert_eq!(cfg.agent.inner_budget, 9);
         assert_eq!(cfg.supervisor.stall_window, 6);
+    }
+
+    #[test]
+    fn parse_workload_key_validates_against_registry() {
+        for (spec, suite_head) in
+            [("mha", "mha_"), ("gqa:8", "gqa_g4_"), ("decode:32", "dec_b32_")]
+        {
+            let cfg = RunConfig::parse(&format!("workload = {spec}\n")).unwrap();
+            assert_eq!(cfg.workload, spec);
+            let suite = cfg.evaluator().suite;
+            assert!(
+                suite[0].name.starts_with(suite_head),
+                "{spec}: {}",
+                suite[0].name
+            );
+        }
+        assert!(RunConfig::parse("workload = warp\n").is_err());
+        assert!(RunConfig::parse("workload = gqa:5\n").is_err());
+        assert!(RunConfig::parse("workload = decode:0\n").is_err());
+    }
+
+    #[test]
+    fn parse_satellite_keys() {
+        let cfg = RunConfig::parse(
+            "adaptive_migration = true\n\
+             adaptive_stall_epochs = 3\n\
+             eval_cache_max_entries = 5000\n\
+             speculative_repair = true\n",
+        )
+        .unwrap();
+        assert!(cfg.topology.adaptive_migration);
+        assert_eq!(cfg.topology.adaptive_stall_epochs, 3);
+        assert_eq!(cfg.eval_cache_max_entries, Some(5000));
+        assert!(cfg.agent.speculative_repair);
+        assert!(RunConfig::parse("adaptive_migration = maybe\n").is_err());
     }
 
     #[test]

@@ -14,20 +14,27 @@ use crate::evolution::Lineage;
 use crate::islands::{Archipelago, IslandReport};
 use crate::kernelspec::KernelSpec;
 use crate::score::Evaluator;
+use crate::workload::Workload;
 
 /// Construct island `island`'s variation operator with an explicit PRNG
-/// seed (the archipelago derives one per island from the run seed).  With
-/// a heterogeneous `operator_mix` configured, operators round-robin across
+/// seed (the archipelago derives one per island from the run seed), bound
+/// to the run's workload (knowledge-base shard + phase schedule).  With a
+/// heterogeneous `operator_mix` configured, operators round-robin across
 /// islands; otherwise every island runs the homogeneous `operator`.
 pub(crate) fn build_operator(
     config: &RunConfig,
     island: usize,
     seed: u64,
+    workload: &dyn Workload,
 ) -> Box<dyn VariationOperator + Send> {
     match config.operator_for_island(island) {
-        OperatorKind::Avo => Box::new(AvoAgent::new(config.agent.clone(), seed)),
+        OperatorKind::Avo => {
+            Box::new(AvoAgent::new(config.agent.clone(), seed).with_workload(workload))
+        }
         OperatorKind::SingleTurn => Box::new(SingleTurnOperator::new(seed)),
-        OperatorKind::FixedPipeline => Box::new(FixedPipelineOperator::new(seed)),
+        OperatorKind::FixedPipeline => {
+            Box::new(FixedPipelineOperator::new(seed).with_workload(workload))
+        }
     }
 }
 
@@ -35,6 +42,8 @@ pub(crate) fn build_operator(
 /// `steps` aggregate across islands (the lineage is the globally best
 /// island's archive); `islands` carries the per-island detail.
 pub struct RunReport {
+    /// Canonical spec of the workload the run optimized.
+    pub workload: String,
     pub lineage: Lineage,
     pub metrics: Metrics,
     /// Supervisor intervention notes from every island, in island order.
@@ -48,8 +57,9 @@ pub struct RunReport {
 impl RunReport {
     pub fn summary(&self) -> String {
         let mut s = format!(
-            "{} commits, best geomean {:.1} TFLOPS, {} steps, {} evaluations, \
+            "[{}] {} commits, best geomean {:.1} TFLOPS, {} steps, {} evaluations, \
              {} directions explored, {} interventions",
+            self.workload,
             self.lineage.len(),
             self.lineage.best_geomean(),
             self.steps,
@@ -73,6 +83,10 @@ impl RunReport {
         let warm = self.metrics.counter("eval_cache_warm_entries");
         if warm > 0 {
             s.push_str(&format!(" [warm-start: {warm} entries]"));
+        }
+        let halvings = self.metrics.counter("migration_interval_halvings");
+        if halvings > 0 {
+            s.push_str(&format!(", {halvings} migration-interval halvings"));
         }
         if self.islands.len() > 1 {
             let bests: Vec<String> = self
@@ -120,21 +134,73 @@ impl EvolutionDriver {
         Archipelago::new(self.config.clone()).run_from(seed_spec, seed_message)
     }
 
-    /// The paper's main MHA run: evolve from the naive seed.
+    /// The configured workload's main run: evolve from its seed genome
+    /// (the paper's MHA experiment when `workload = mha`).
     pub fn run(&self) -> RunReport {
-        self.run_from(KernelSpec::naive(), "seed x0: naive tiled attention")
+        let workload = self.config.workload();
+        self.run_from(workload.seed_genome(), &workload.seed_message())
     }
 
-    /// The GQA transfer (§4.3): a short adaptation run seeded from an
-    /// evolved MHA genome, scored on the GQA suite.
-    pub fn transfer_to_gqa(&self, evolved: KernelSpec, kv_heads: u32) -> RunReport {
+    /// Cross-workload transfer, generalizing the paper's §4.3 GQA
+    /// adaptation: a short run seeded from an evolved genome, scored on
+    /// the target workload's suite with its KB shard and phase schedule.
+    ///
+    /// A genome evolved on one workload may arm a hazard only the target
+    /// suite exercises (e.g. a decode-evolved arithmetic mask under MMA
+    /// interleave is only racy on causal forward cells); the transfer
+    /// walks the ranked repair table first, exactly as the agent would,
+    /// so the run always seeds from a correct genome.  Errors if
+    /// `workload` is not a registered spec or the seed is unrepairable.
+    pub fn transfer_to(
+        &self,
+        workload: &str,
+        evolved: KernelSpec,
+    ) -> Result<RunReport, String> {
+        let target = crate::workload::parse(workload)?;
         let mut cfg = self.config.clone();
-        cfg.gqa_kv_heads = Some(kv_heads);
+        cfg.workload = target.name();
         // 30 minutes of autonomous effort ~ a handful of variation steps.
         cfg.target_commits = 4;
         cfg.max_steps = 12;
+        // Cache identity follows the workload: a warm-start directory or
+        // eval-cache path inherited from the source run would be rejected
+        // (or overwritten) under the target's fingerprint.  The lineage
+        // path is the caller's explicit output choice and is kept.
+        cfg.warm_start = None;
+        cfg.eval_cache_path = None;
         let driver = EvolutionDriver::new(cfg);
-        driver.run_from(evolved, "transfer seed: evolved MHA kernel")
+        let evaluator = driver.config.evaluator();
+        let mut seed = evolved;
+        let mut score = evaluator.evaluate(&seed);
+        let mut rounds = 0;
+        while let Some(failure) = score.failure.clone() {
+            rounds += 1;
+            if rounds > 8 {
+                return Err(format!(
+                    "transfer seed unrepairable onto {}: {failure}",
+                    target.name()
+                ));
+            }
+            let repairs = crate::agent::diagnose::repairs_for(&failure, &seed);
+            let Some(repair) = repairs.first() else {
+                return Err(format!(
+                    "transfer seed unrepairable onto {}: {failure} (no ranked repair)",
+                    target.name()
+                ));
+            };
+            seed = repair.apply(&seed);
+            score = evaluator.evaluate(&seed);
+        }
+        Ok(driver.run_from(
+            seed,
+            &format!("transfer seed: evolved kernel onto {}", target.name()),
+        ))
+    }
+
+    /// The GQA transfer (§4.3), as a [`Self::transfer_to`] special case.
+    pub fn transfer_to_gqa(&self, evolved: KernelSpec, kv_heads: u32) -> RunReport {
+        self.transfer_to(&format!("gqa:{kv_heads}"), evolved)
+            .expect("gqa is a registered workload")
     }
 }
 

@@ -12,7 +12,7 @@
 //! reproducibility.
 
 use std::collections::hash_map::Entry;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -21,11 +21,21 @@ use crate::score::Score;
 /// Default shard count (power of two; collisions only cost lock sharing).
 pub const DEFAULT_SHARDS: usize = 16;
 
-/// A sharded (key -> Score) map with hit/miss counters.  The key is
-/// supplied by the caller ([`crate::eval::CachedBackend`] uses genome
-/// content hash XOR the backend's cache tag).
+/// A sharded (key -> Score) map with hit/miss counters and an optional
+/// entry cap (oldest-first eviction).  The key is supplied by the caller
+/// ([`crate::eval::CachedBackend`] uses genome content hash XOR the
+/// backend's cache tag).
 pub struct EvalCache {
     shards: Vec<Mutex<HashMap<u64, Score>>>,
+    /// Insertion order of live keys, oldest first — the eviction queue.
+    /// A key appears at most once (re-inserting an existing key is a
+    /// no-op, and eviction removes the key from both structures).
+    order: Mutex<VecDeque<u64>>,
+    /// Live entry count (kept in lock-step with the shards), so the
+    /// eviction cap check never has to lock every shard.
+    live: AtomicU64,
+    /// Entry cap (`--eval-cache-max-entries`); None = unbounded.
+    max_entries: Option<usize>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -35,13 +45,46 @@ impl EvalCache {
         let shards = shards.max(1);
         EvalCache {
             shards: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
+            order: Mutex::new(VecDeque::new()),
+            live: AtomicU64::new(0),
+            max_entries: None,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
     }
 
+    /// Bound the cache to `max` entries (floored at 1), evicting
+    /// oldest-first on insert.  Eviction never perturbs results — a
+    /// re-requested evicted genome recomputes to the identical score (the
+    /// determinism contract) — it only bounds memory and the persisted
+    /// `eval_cache.json`.  Oldest-first is exact for a sequential caller;
+    /// under concurrent inserts it follows the observed interleaving.
+    pub fn set_max_entries(&mut self, max: usize) {
+        self.max_entries = Some(max.max(1));
+    }
+
+    pub fn max_entries(&self) -> Option<usize> {
+        self.max_entries
+    }
+
     fn shard(&self, key: u64) -> &Mutex<HashMap<u64, Score>> {
         &self.shards[(key % self.shards.len() as u64) as usize]
+    }
+
+    /// Record a fresh insert in the eviction queue and enforce the cap.
+    /// The cap check reads the O(1) live counter, not the shards.
+    fn record_insert(&self, key: u64) {
+        self.order.lock().unwrap().push_back(key);
+        self.live.fetch_add(1, Ordering::Relaxed);
+        if let Some(max) = self.max_entries {
+            while self.live.load(Ordering::Relaxed) > max as u64 {
+                let victim = self.order.lock().unwrap().pop_front();
+                let Some(victim) = victim else { break };
+                if self.shard(victim).lock().unwrap().remove(&victim).is_some() {
+                    self.live.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+        }
     }
 
     /// Look up `key`; on miss, run `compute` (without holding any lock —
@@ -55,11 +98,16 @@ impl EvalCache {
         }
         let score = compute();
         self.misses.fetch_add(1, Ordering::Relaxed);
-        self.shard(key)
-            .lock()
-            .unwrap()
-            .entry(key)
-            .or_insert_with(|| score.clone());
+        let fresh = match self.shard(key).lock().unwrap().entry(key) {
+            Entry::Vacant(v) => {
+                v.insert(score.clone());
+                true
+            }
+            Entry::Occupied(_) => false,
+        };
+        if fresh {
+            self.record_insert(key);
+        }
         score
     }
 
@@ -88,13 +136,17 @@ impl EvalCache {
     /// Publish an entry without touching the counters (batch fills and
     /// warm-start seeding).  Returns true if the key was fresh.
     pub fn insert(&self, key: u64, score: Score) -> bool {
-        match self.shard(key).lock().unwrap().entry(key) {
+        let fresh = match self.shard(key).lock().unwrap().entry(key) {
             Entry::Vacant(v) => {
                 v.insert(score);
                 true
             }
             Entry::Occupied(_) => false,
+        };
+        if fresh {
+            self.record_insert(key);
         }
+        fresh
     }
 
     /// Peek without computing or counting.
@@ -236,5 +288,57 @@ mod tests {
         let snap = cache.snapshot();
         let keys: Vec<u64> = snap.iter().map(|(k, _)| *k).collect();
         assert_eq!(keys, vec![1, 3, 9, 17]);
+    }
+
+    #[test]
+    fn eviction_is_oldest_first_and_deterministic() {
+        let mut cache = EvalCache::new(4);
+        cache.set_max_entries(2);
+        let eval = Evaluator::new(mha_suite());
+        let score = eval.evaluate(&KernelSpec::naive());
+        for key in [10u64, 20, 30, 40] {
+            cache.insert(key, score.clone());
+        }
+        assert_eq!(cache.len(), 2);
+        // The two oldest were evicted, the two newest survive.
+        assert!(cache.get(10).is_none());
+        assert!(cache.get(20).is_none());
+        assert!(cache.get(30).is_some());
+        assert!(cache.get(40).is_some());
+        // An evicted key recomputes (a miss), then lives again — and
+        // pushes out the now-oldest survivor.
+        let back = cache.get_or_compute(10, || score.clone());
+        assert_eq!(back.per_config, score.per_config);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(30).is_none());
+        assert!(cache.get(40).is_some() && cache.get(10).is_some());
+    }
+
+    #[test]
+    fn reinserting_live_key_does_not_duplicate_eviction_slots() {
+        let mut cache = EvalCache::new(2);
+        cache.set_max_entries(2);
+        let eval = Evaluator::new(mha_suite());
+        let score = eval.evaluate(&KernelSpec::naive());
+        assert!(cache.insert(1, score.clone()));
+        assert!(!cache.insert(1, score.clone())); // no-op, not re-queued
+        assert!(cache.insert(2, score.clone()));
+        assert!(cache.insert(3, score.clone())); // evicts key 1 exactly once
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(1).is_none());
+        assert!(cache.get(2).is_some() && cache.get(3).is_some());
+    }
+
+    #[test]
+    fn unbounded_cache_never_evicts() {
+        let cache = EvalCache::new(4);
+        let eval = Evaluator::new(mha_suite());
+        let score = eval.evaluate(&KernelSpec::naive());
+        for key in 0..64u64 {
+            cache.insert(key, score.clone());
+        }
+        assert_eq!(cache.len(), 64);
+        assert_eq!(cache.max_entries(), None);
     }
 }

@@ -31,6 +31,14 @@ impl<B: EvalBackend> CachedBackend<B> {
         CachedBackend { inner, cache: EvalCache::new(shards) }
     }
 
+    /// Bound the cache to `max` distinct genomes, evicted oldest-first
+    /// (`--eval-cache-max-entries`): week-long runs stop growing memory
+    /// and `eval_cache.json` without bound, at the price of recomputing
+    /// evicted genomes — which the determinism contract makes harmless.
+    pub fn set_max_entries(&mut self, max: usize) {
+        self.cache.set_max_entries(max);
+    }
+
     pub fn cache(&self) -> &EvalCache {
         &self.cache
     }

@@ -267,6 +267,40 @@ mod tests {
     }
 
     #[test]
+    fn capped_cache_persists_only_surviving_entries() {
+        let dir = tempdir("capped");
+        let mut cached = CachedBackend::new(Evaluator::new(mha_suite()));
+        cached.set_max_entries(2);
+        let backend = PersistentBackend::new(cached);
+        let specs = [
+            KernelSpec::naive(),
+            crate::baselines::fa4_genome(),
+            crate::baselines::evolved_genome(),
+            crate::baselines::cudnn_genome(),
+        ];
+        for s in &specs {
+            backend.evaluate(s);
+        }
+        assert_eq!(backend.cache_stats().entries, 2);
+        backend.save(&dir.join(CACHE_FILE)).unwrap();
+        // The saved file carries exactly the two newest genomes; a warm
+        // start hits on them and recomputes the evicted ones.
+        let warm = PersistentBackend::warm_start(
+            CachedBackend::new(Evaluator::new(mha_suite())),
+            &dir,
+        )
+        .unwrap();
+        assert_eq!(warm.warm_entries(), 2);
+        warm.evaluate(&specs[2]);
+        warm.evaluate(&specs[3]);
+        let stats = warm.cache_stats();
+        assert_eq!((stats.hits, stats.misses), (2, 0));
+        warm.evaluate(&specs[0]);
+        assert_eq!(warm.cache_stats().misses, 1);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
     fn malformed_entry_is_rejected() {
         let dir = tempdir("badentry");
         let tag = EvalBackend::cache_tag(&Evaluator::new(mha_suite()));

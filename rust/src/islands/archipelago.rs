@@ -31,6 +31,10 @@ pub struct IslandReport {
     /// Name of the variation operator this island ran (heterogeneous
     /// mixes assign operators round-robin across islands).
     pub operator: &'static str,
+    /// Migration interval (commits per epoch) at run end — below the
+    /// configured `migrate_every` when adaptive migration halved it for a
+    /// stalling island.
+    pub migrate_every: usize,
     pub lineage: Lineage,
     pub metrics: Metrics,
     pub interventions: Vec<String>,
@@ -46,6 +50,13 @@ struct Island {
     metrics: Metrics,
     interventions: Vec<String>,
     steps: usize,
+    /// Current epoch commit quota (`usize::MAX` for the N = 1 regime;
+    /// adaptive migration halves it while the island stalls).
+    migrate_every: usize,
+    /// Consecutive barriers without a best-geomean improvement.
+    stall_epochs: usize,
+    /// Best geomean observed at the previous barrier.
+    best_at_barrier: f64,
 }
 
 impl Island {
@@ -83,15 +94,29 @@ impl Archipelago {
     pub fn run_from(&self, seed_spec: KernelSpec, seed_message: &str) -> RunReport {
         let cfg = &self.config;
         let n = cfg.topology.islands.max(1);
+        // The scenario this run optimizes: suite, KB shard, phase
+        // schedule, and the tag isolating its cache entries.
+        let workload = cfg.workload();
         // The layered evaluation stack: simulator -> shared cache ->
         // persistence.  Warm-starting seeds the cache from a prior run's
         // saved evaluations; a rejected file (corrupt or fingerprint
         // mismatch) aborts rather than silently running cold.
-        let cached = CachedBackend::new(SimBackend::new(cfg.evaluator(), cfg.eval_workers));
+        let mut cached =
+            CachedBackend::new(SimBackend::new(cfg.evaluator(), cfg.eval_workers));
+        if let Some(max) = cfg.eval_cache_max_entries {
+            cached.set_max_entries(max);
+        }
         let backend = match &cfg.warm_start {
             Some(dir) => PersistentBackend::warm_start(cached, dir)
                 .unwrap_or_else(|e| panic!("warm-start rejected: {e}")),
             None => PersistentBackend::new(cached),
+        };
+
+        // Epoch commit quota: N = 1 runs one uninterrupted epoch.
+        let base_quota = if n == 1 {
+            usize::MAX
+        } else {
+            cfg.topology.migrate_every.max(1)
         };
 
         // Per-island operator streams: island 0 uses the run seed verbatim
@@ -108,11 +133,14 @@ impl Archipelago {
                 Island {
                     id: i,
                     lineage: Lineage::new(),
-                    operator: build_operator(cfg, i, op_seed),
+                    operator: build_operator(cfg, i, op_seed, &*workload),
                     supervisor: Supervisor::new(cfg.supervisor.clone()),
                     metrics: Metrics::new(),
                     interventions: Vec::new(),
                     steps: 0,
+                    migrate_every: base_quota,
+                    stall_epochs: 0,
+                    best_at_barrier: 0.0,
                 }
             })
             .collect();
@@ -133,24 +161,24 @@ impl Archipelago {
             isl.metrics.incr("evaluations", 1);
         }
 
-        // Epochs: every island runs until it lands `migrate_every` fresh
-        // commits — or 4x that many steps, so a stalled island still
+        // Epochs: every island runs until it lands its commit quota
+        // (`migrate_every` fresh commits, possibly halved by adaptive
+        // migration) — or 4x that many steps, so a stalled island still
         // reaches the barrier and can receive the migrants that would
         // unstick it instead of burning its whole budget alone.  Then all
         // threads join and elites migrate.  N=1 runs one uninterrupted
         // epoch.
-        let (commit_quota, step_quota) = if n == 1 {
-            (usize::MAX, usize::MAX)
-        } else {
-            let k = cfg.topology.migrate_every.max(1);
-            (k, k.saturating_mul(4))
-        };
         let mut epoch = 0usize;
         while islands.iter().any(|i| !i.done(cfg)) {
-            self.run_epoch(&mut islands, &backend, commit_quota, step_quota);
+            self.run_epoch(&mut islands, &backend);
             epoch += 1;
-            if n > 1 && islands.iter().any(|i| !i.done(cfg)) {
-                self.migrate(&mut islands, epoch, &mut mig_rng);
+            if n > 1 {
+                if cfg.topology.adaptive_migration {
+                    self.adapt_intervals(&mut islands, base_quota);
+                }
+                if islands.iter().any(|i| !i.done(cfg)) {
+                    self.migrate(&mut islands, epoch, &mut mig_rng);
+                }
             }
         }
 
@@ -166,19 +194,14 @@ impl Archipelago {
     }
 
     /// One epoch: islands advance independently (no shared mutable state
-    /// beyond the cache), partitioned across worker threads.
-    fn run_epoch(
-        &self,
-        islands: &mut [Island],
-        eval: &dyn EvalBackend,
-        commit_quota: usize,
-        step_quota: usize,
-    ) {
+    /// beyond the cache), partitioned across worker threads.  Each island
+    /// runs to its own commit quota (`Island::migrate_every`).
+    fn run_epoch(&self, islands: &mut [Island], eval: &dyn EvalBackend) {
         let cfg = &self.config;
         let workers = self.worker_count(islands.len());
         if workers <= 1 || islands.len() <= 1 {
             for isl in islands.iter_mut() {
-                run_island_epoch(isl, eval, cfg, commit_quota, step_quota);
+                run_island_epoch(isl, eval, cfg);
             }
             return;
         }
@@ -197,11 +220,45 @@ impl Archipelago {
                 rest = tail;
                 scope.spawn(move || {
                     for isl in group {
-                        run_island_epoch(isl, eval, cfg, commit_quota, step_quota);
+                        run_island_epoch(isl, eval, cfg);
                     }
                 });
             }
         });
+    }
+
+    /// Adaptive migration intervals (ROADMAP follow-up): an island whose
+    /// best geomean has not improved for `adaptive_stall_epochs`
+    /// consecutive barriers gets its interval halved — it reaches the next
+    /// barrier (and its neighbours' elites) sooner — and the configured
+    /// interval is restored the moment it improves again.  Purely a
+    /// function of (config, scores), so same-seed reproducibility and
+    /// worker-count independence are preserved.
+    fn adapt_intervals(&self, islands: &mut [Island], base_quota: usize) {
+        let stall_after = self.config.topology.adaptive_stall_epochs.max(1);
+        for isl in islands.iter_mut() {
+            if isl.done(&self.config) {
+                // Finished islands sit out remaining barriers; adapting
+                // them would only misreport their final interval.
+                continue;
+            }
+            let best = isl.lineage.best_geomean();
+            if best > isl.best_at_barrier * (1.0 + 1e-12) {
+                isl.stall_epochs = 0;
+                if isl.migrate_every < base_quota {
+                    isl.migrate_every = base_quota;
+                    isl.metrics.incr("migration_interval_restores", 1);
+                }
+            } else {
+                isl.stall_epochs += 1;
+                if isl.stall_epochs >= stall_after && isl.migrate_every > 1 {
+                    isl.migrate_every = (isl.migrate_every / 2).max(1);
+                    isl.metrics.incr("migration_interval_halvings", 1);
+                    isl.stall_epochs = 0;
+                }
+            }
+            isl.best_at_barrier = best;
+        }
     }
 
     /// Migration barrier: walk the policy's routes in order; a migrant that
@@ -281,11 +338,19 @@ impl Archipelago {
     /// lineage is the globally best island's archive, metrics are summed,
     /// and cache statistics surface as coordinator counters.
     fn aggregate(&self, islands: Vec<Island>, stats: CacheStats) -> RunReport {
+        let configured_interval = self.config.topology.migrate_every;
         let reports: Vec<IslandReport> = islands
             .into_iter()
             .map(|i| IslandReport {
                 id: i.id,
                 operator: i.operator.name(),
+                // The N = 1 sentinel (usize::MAX) reads back as the
+                // configured interval — no epochs means no adaptation.
+                migrate_every: if i.migrate_every == usize::MAX {
+                    configured_interval
+                } else {
+                    i.migrate_every
+                },
                 lineage: i.lineage,
                 metrics: i.metrics,
                 interventions: i.interventions,
@@ -318,6 +383,7 @@ impl Archipelago {
             lineage.save(path).expect("persist lineage");
         }
         RunReport {
+            workload: self.config.workload.clone(),
             lineage,
             metrics,
             interventions,
@@ -329,13 +395,9 @@ impl Archipelago {
 
 /// Advance one island until its epoch commit/step quota, global commit
 /// target, or step budget is reached — the body of the paper's §3.3 loop.
-fn run_island_epoch(
-    isl: &mut Island,
-    eval: &dyn EvalBackend,
-    cfg: &RunConfig,
-    commit_quota: usize,
-    step_quota: usize,
-) {
+fn run_island_epoch(isl: &mut Island, eval: &dyn EvalBackend, cfg: &RunConfig) {
+    let commit_quota = isl.migrate_every;
+    let step_quota = isl.migrate_every.saturating_mul(4);
     let epoch_commit_start = isl.lineage.len();
     let epoch_step_start = isl.steps;
     let Island {
@@ -450,5 +512,79 @@ mod tests {
         assert_eq!(report.islands.len(), 1);
         assert_eq!(report.metrics.counter("migrants_received"), 0);
         assert!(report.lineage.len() > 1);
+        // The N = 1 sentinel reads back as the configured interval.
+        assert_eq!(report.islands[0].migrate_every, 2);
+    }
+
+    #[test]
+    fn adapt_intervals_halves_on_stall_and_restores_on_improvement() {
+        let mut cfg = island_config(2, MigrationPolicy::Ring);
+        cfg.topology.adaptive_migration = true;
+        cfg.topology.adaptive_stall_epochs = 2;
+        let arch = Archipelago::new(cfg.clone());
+        let workload = cfg.workload();
+        let ev = cfg.evaluator();
+        let mut isl = Island {
+            id: 0,
+            lineage: Lineage::new(),
+            operator: build_operator(&cfg, 0, 1, &*workload),
+            supervisor: Supervisor::new(cfg.supervisor.clone()),
+            metrics: Metrics::new(),
+            interventions: Vec::new(),
+            steps: 0,
+            migrate_every: 4,
+            stall_epochs: 0,
+            best_at_barrier: 0.0,
+        };
+        let spec = KernelSpec::naive();
+        let score = ev.evaluate(&spec);
+        isl.lineage.seed(spec, score, "seed");
+        let mut islands = vec![isl];
+
+        // Barrier 1: the seed itself is an improvement over 0.0.
+        arch.adapt_intervals(&mut islands, 4);
+        assert_eq!((islands[0].stall_epochs, islands[0].migrate_every), (0, 4));
+        // Two stalled barriers halve the interval...
+        arch.adapt_intervals(&mut islands, 4);
+        assert_eq!((islands[0].stall_epochs, islands[0].migrate_every), (1, 4));
+        arch.adapt_intervals(&mut islands, 4);
+        assert_eq!((islands[0].stall_epochs, islands[0].migrate_every), (0, 2));
+        assert_eq!(islands[0].metrics.counter("migration_interval_halvings"), 1);
+        // ...two more halve again (floored at 1)...
+        arch.adapt_intervals(&mut islands, 4);
+        arch.adapt_intervals(&mut islands, 4);
+        assert_eq!(islands[0].migrate_every, 1);
+        // ...and an improvement restores the configured interval.
+        let better = crate::baselines::evolved_genome();
+        let s = ev.evaluate(&better);
+        islands[0].lineage.update(better, s, "jump", 1).unwrap();
+        arch.adapt_intervals(&mut islands, 4);
+        assert_eq!(islands[0].migrate_every, 4);
+        assert_eq!(islands[0].metrics.counter("migration_interval_restores"), 1);
+    }
+
+    #[test]
+    fn adaptive_migration_preserves_same_seed_reproducibility() {
+        let mut cfg = island_config(3, MigrationPolicy::Ring);
+        cfg.topology.adaptive_migration = true;
+        cfg.topology.adaptive_stall_epochs = 1;
+        let ids = |r: &crate::coordinator::driver::RunReport| -> Vec<Vec<u64>> {
+            r.islands
+                .iter()
+                .map(|i| i.lineage.versions().iter().map(|c| c.id.0).collect())
+                .collect()
+        };
+        let a = Archipelago::new(cfg.clone()).run_from(KernelSpec::naive(), "seed x0");
+        let b = Archipelago::new(cfg.clone()).run_from(KernelSpec::naive(), "seed x0");
+        assert_eq!(ids(&a), ids(&b));
+        // Worker-count independence holds under adaptation too (interval
+        // changes are a pure function of barrier-time scores).
+        cfg.topology.workers = 1;
+        let serial = Archipelago::new(cfg.clone()).run_from(KernelSpec::naive(), "seed x0");
+        assert_eq!(ids(&a), ids(&serial));
+        // Reported intervals stay within [1, configured].
+        for isl in &a.islands {
+            assert!(isl.migrate_every >= 1 && isl.migrate_every <= 2);
+        }
     }
 }

@@ -43,6 +43,17 @@ impl KnowledgeBase {
         KnowledgeBase { docs: docs() }
     }
 
+    /// The decode-attention shard: the paper KB plus the decode-specific
+    /// documents (split-KV decomposition, KV streaming, short-iteration
+    /// overheads).  Used by [`crate::workload::DecodeAttention`]; the
+    /// forward workloads keep the unmodified paper KB so their retrieval
+    /// order — and therefore their archives — are untouched.
+    pub fn decode_kb() -> Self {
+        let mut all = docs();
+        all.extend(decode_docs());
+        KnowledgeBase { docs: all }
+    }
+
     /// Documents relevant to a bottleneck direction, most-authoritative
     /// first.
     pub fn retrieve(&self, direction: Direction) -> Vec<&Doc> {
@@ -210,6 +221,55 @@ fn docs() -> Vec<Doc> {
     ]
 }
 
+/// Decode-attention documents (the `decode:<batch>` workload's shard).
+pub fn decode_docs() -> Vec<Doc> {
+    vec![
+        Doc {
+            id: "split-kv",
+            title: "Decode attention: split-KV work decomposition",
+            direction: Direction::Scheduling,
+            content: "A decode step launches one work item per (batch element, \
+                KV head) — often far fewer than the SM count, leaving most of \
+                the machine idle while each item walks a long KV cache.  \
+                Splitting the KV axis across k cooperating CTAs gives each a \
+                contiguous cache segment; every CTA produces a partial (running \
+                max, running sum, accumulator) triple, and a reduction pass \
+                rescales the partials to the global maximum and merges them.  \
+                Persistent work scheduling is the natural host: the split \
+                factor follows idle-SM headroom instead of the grid shape.",
+            prior: 1.0,
+        },
+        Doc {
+            id: "decode-kv-stream",
+            title: "Decode attention: KV streaming at raw HBM bandwidth",
+            direction: Direction::Pipelining,
+            content: "Unlike the forward pass, decode gets no L2 reuse on K/V: \
+                each batch element owns a distinct cache, read exactly once per \
+                step, so the kernel runs at raw HBM bandwidth and the GEMV \
+                compute under it is nearly free.  An unbuffered (depth-1) \
+                pipeline serializes every block's transfer latency with its \
+                trivial compute; two or more stages hide the stream almost \
+                entirely, after which extra depth buys little — the roofline \
+                is the memory system, not the pipeline.",
+            prior: 0.95,
+        },
+        Doc {
+            id: "decode-iter-overhead",
+            title: "Short-iteration overhead: fences and votes in decode loops",
+            direction: Direction::Synchronization,
+            content: "A decode iteration processes one K/V block for a single \
+                query row: a few hundred cycles of useful work.  Per-iteration \
+                fixed costs — the guarded rescale's warp vote, a blocking \
+                write-drain fence, warp-group handoffs — that disappear into a \
+                forward tile's compute are a first-order term here.  The \
+                branchless speculative rescale plus the ordering-only fence \
+                removes the vote and the drain; growing the K block amortizes \
+                what remains over more elements per iteration.",
+            prior: 0.95,
+        },
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -249,9 +309,34 @@ mod tests {
 
     #[test]
     fn docs_have_substantive_content() {
-        for doc in &KnowledgeBase::paper_kb().docs {
-            assert!(doc.content.len() > 120, "{} too thin", doc.id);
-            assert!(!doc.title.is_empty());
+        for kb in [KnowledgeBase::paper_kb(), KnowledgeBase::decode_kb()] {
+            for doc in &kb.docs {
+                assert!(doc.content.len() > 120, "{} too thin", doc.id);
+                assert!(!doc.title.is_empty());
+            }
         }
+    }
+
+    #[test]
+    fn decode_kb_extends_paper_kb() {
+        let paper = KnowledgeBase::paper_kb();
+        let decode = KnowledgeBase::decode_kb();
+        assert_eq!(decode.docs.len(), paper.docs.len() + 3);
+        // Paper docs keep their order (retrieval priority is preserved for
+        // directions the decode shard does not touch)...
+        for (a, b) in paper.docs.iter().zip(&decode.docs) {
+            assert_eq!(a.id, b.id);
+        }
+        // ...and the decode docs lead retrieval for their directions.
+        assert_eq!(decode.retrieve(Direction::Scheduling)[0].id, "split-kv");
+        assert!(decode
+            .retrieve(Direction::Synchronization)
+            .iter()
+            .any(|d| d.id == "decode-iter-overhead"));
+        // Unique ids across the shard.
+        let mut ids: Vec<&str> = decode.docs.iter().map(|d| d.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), decode.docs.len());
     }
 }

@@ -11,18 +11,28 @@
 //!   evaluates them against the scoring function ([`score`]), diagnoses and
 //!   repairs failures, and commits improvements — supervised against stalls
 //!   and unproductive cycles ([`supervisor`]).
+//! * **Workloads** ([`workload`]) — the scenario seam: a [`Workload`]
+//!   bundles the benchmark suite, correctness regimes, knowledge-base
+//!   shard, phase schedule, seed genome, baseline anchors, and a
+//!   cache-isolating tag.  Registered scenarios: `mha` and `gqa:<kv>`
+//!   (byte-for-byte the paper's runs) and `decode:<batch>` (single-query
+//!   decode over a batched KV cache, priced by a split-KV path in the
+//!   simulator).  `EvolutionDriver::transfer_to` adapts an evolved genome
+//!   across workloads, generalizing the paper's §4.3 GQA transfer.
 //! * **Scale-out** — an island model ([`islands`]): N concurrent lineages
 //!   with per-island PRNG streams and elite migration (ring /
-//!   broadcast-best / random pairs); the paper's sequential regime is the
-//!   one-island special case.
+//!   broadcast-best / random pairs, with optional adaptive intervals for
+//!   stalled islands); the paper's sequential regime is the one-island
+//!   special case.
 //! * **Evaluation subsystem** ([`eval`]) — the batched [`eval::EvalBackend`]
 //!   seam every scoring-function call goes through: [`eval::SimBackend`]
 //!   (the simulator, with worker fan-out for batches),
-//!   [`eval::CachedBackend`] (shared content-addressed memoization, so
-//!   duplicate genomes are never re-simulated), and
-//!   [`eval::PersistentBackend`] (JSON cache persistence + `--warm-start`,
-//!   carrying evaluations across runs).  The determinism contract for
-//!   cached and warm-started scores lives here.
+//!   [`eval::CachedBackend`] (shared content-addressed memoization — with
+//!   an optional oldest-first entry cap for week-long runs — so duplicate
+//!   genomes are never re-simulated), and [`eval::PersistentBackend`]
+//!   (JSON cache persistence + `--warm-start`, carrying evaluations across
+//!   runs; files are fingerprinted per workload).  The determinism
+//!   contract for cached and warm-started scores lives here.
 //! * **Layer 2/1 (build-time Python)** — a parameterized Pallas
 //!   flash-attention kernel realizing the genome's algorithmic space,
 //!   AOT-lowered to HLO text artifacts the `runtime` module (behind the
@@ -57,8 +67,10 @@ pub mod score;
 pub mod sim;
 pub mod store;
 pub mod supervisor;
+pub mod workload;
 
 pub use eval::EvalBackend;
 pub use kernelspec::KernelSpec;
 pub use score::{BenchConfig, Evaluator, Score};
 pub use sim::machine::MachineSpec;
+pub use workload::Workload;

@@ -1,20 +1,25 @@
 //! `avo` — the Layer-3 coordinator CLI.
 //!
 //! Subcommands (hand-rolled parser; clap is not vendored offline):
-//!   evolve    run the AVO evolution loop (the paper's main experiment),
-//!             optionally as an N-island archipelago
-//!   transfer  adapt an evolved MHA lineage to GQA (§4.3)
+//!   evolve    run the AVO evolution loop (the paper's main experiment) on
+//!             any registered workload, optionally as an N-island
+//!             archipelago
+//!   transfer  adapt an evolved lineage to another workload (§4.3
+//!             generalized: gqa:<kv>, decode:<batch>, mha)
 //!   compare   AVO vs single-turn vs fixed-pipeline at equal budget
 //!   show      print a lineage file (versions, scores, sources)
 //!   profile   print the profiler report for a genome on one config
 //!
 //! Examples:
 //!   avo evolve --seed 42 --commits 40 --out runs/mha
+//!   avo evolve --workload decode:32 --commits 12 --out runs/decode
 //!   avo evolve --islands 4 --migration broadcast_best --migrate-every 3
 //!   avo evolve --islands 3 --operators avo,single_turn,fixed_pipeline
 //!   avo evolve --warm-start runs/mha --out runs/mha2   # reuse evaluations
+//!   avo evolve --adaptive-migration --eval-cache-max-entries 100000
 //!   avo evolve --config runs/mha.cfg
-//!   avo transfer --lineage runs/mha/lineage.json --kv-heads 4
+//!   avo transfer --lineage runs/mha/lineage.json --workload gqa:4
+//!   avo transfer --lineage runs/mha/lineage.json --workload decode:32
 //!   avo compare --budget 240
 //!   avo show --lineage runs/mha/lineage.json
 
@@ -33,16 +38,20 @@ fn usage() -> ! {
     eprintln!(
         "usage: avo <evolve|transfer|compare|show|profile> [flags]\n\
          \n\
-         evolve   --seed N --commits N --steps N --operator avo|single_turn|pes\n\
+         evolve   --workload {} (default mha)\n\
+         \u{20}         --seed N --commits N --steps N --operator avo|single_turn|pes\n\
          \u{20}         --operators OP[,OP...]  (heterogeneous islands, round-robin)\n\
          \u{20}         --islands N --migration ring|broadcast_best|random_pairs\n\
-         \u{20}         --migrate-every K --island-workers N\n\
+         \u{20}         --migrate-every K --island-workers N --adaptive-migration\n\
          \u{20}         --warm-start DIR  (reuse a prior run's eval cache)\n\
+         \u{20}         --eval-cache-max-entries N  --speculative-repair\n\
          \u{20}         --config FILE --out DIR\n\
-         transfer --lineage FILE --kv-heads 4|8 --seed N --out DIR\n\
+         transfer --lineage FILE --workload SPEC (or --kv-heads 4|8)\n\
+         \u{20}         --seed N --out DIR\n\
          compare  --budget N --seed N\n\
          show     --lineage FILE [--sources]\n\
-         profile  --causal --seq N"
+         profile  --causal --seq N",
+        avo::workload::KNOWN.join("|")
     );
     std::process::exit(2)
 }
@@ -107,6 +116,10 @@ fn main() -> Result<(), CliError> {
             if let Some(ops) = flags.get("--operators") {
                 cfg.operator_mix = avo::coordinator::config::parse_operator_list(ops)?;
             }
+            if let Some(w) = flags.get("--workload") {
+                avo::workload::parse(w)?; // validate against the registry
+                cfg.workload = w.to_string();
+            }
             if let Some(n) = flags.parse_strict("--islands")? {
                 cfg.topology.islands = n;
             }
@@ -121,6 +134,18 @@ fn main() -> Result<(), CliError> {
             }
             if let Some(dir) = flags.get("--warm-start") {
                 cfg.warm_start = Some(PathBuf::from(dir));
+            }
+            if let Some(n) = flags.parse_strict("--eval-cache-max-entries")? {
+                cfg.eval_cache_max_entries = Some(n);
+            }
+            if flags.has("--speculative-repair") {
+                cfg.agent.speculative_repair = true;
+            }
+            if flags.has("--adaptive-migration") {
+                cfg.topology.adaptive_migration = true;
+            }
+            if let Some(k) = flags.parse_strict("--adaptive-stall-epochs")? {
+                cfg.topology.adaptive_stall_epochs = k;
             }
             let out_dir = flags.get("--out").map(PathBuf::from);
             if let Some(dir) = &out_dir {
@@ -183,7 +208,18 @@ fn main() -> Result<(), CliError> {
         }
         "transfer" => {
             let lineage_path = flags.get("--lineage").unwrap_or_else(|| usage());
-            let kv: u32 = flags.parse_strict("--kv-heads")?.unwrap_or(4);
+            // Target workload: --workload SPEC, or the legacy --kv-heads
+            // shorthand for the paper's GQA transfer.
+            let target = match flags.get("--workload") {
+                Some(w) => {
+                    avo::workload::parse(w)?;
+                    w.to_string()
+                }
+                None => {
+                    let kv: u32 = flags.parse_strict("--kv-heads")?.unwrap_or(4);
+                    format!("gqa:{kv}")
+                }
+            };
             let lineage = Lineage::load(std::path::Path::new(lineage_path))?;
             let evolved = lineage.best().expect("empty lineage").spec.clone();
             let mut cfg = RunConfig::default();
@@ -192,10 +228,13 @@ fn main() -> Result<(), CliError> {
             }
             if let Some(dir) = flags.get("--out") {
                 std::fs::create_dir_all(dir)?;
-                cfg.lineage_path = Some(PathBuf::from(dir).join("gqa_lineage.json"));
+                cfg.lineage_path = Some(
+                    PathBuf::from(dir)
+                        .join(format!("{}_lineage.json", target.replace(':', "_"))),
+                );
             }
-            let report = EvolutionDriver::new(cfg).transfer_to_gqa(evolved, kv);
-            println!("GQA transfer (kv_heads={kv}): {}", report.summary());
+            let report = EvolutionDriver::new(cfg).transfer_to(&target, evolved)?;
+            println!("transfer onto {target}: {}", report.summary());
         }
         "compare" => {
             let budget: usize = flags.parse_strict("--budget")?.unwrap_or(240);

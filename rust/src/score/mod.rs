@@ -20,6 +20,10 @@ pub struct BenchConfig {
     pub batch: u32,
     pub q_heads: u32,
     pub kv_heads: u32,
+    /// Query tokens per batch element: equals `seq_len` for the forward
+    /// (prefill) workloads, 1 for decode-attention cells.
+    pub q_len: u32,
+    /// Key/value sequence length.
     pub seq_len: u32,
     pub head_dim: u32,
     pub causal: bool,
@@ -37,6 +41,7 @@ impl BenchConfig {
             batch,
             q_heads: 16,
             kv_heads: 16,
+            q_len: seq_len,
             seq_len,
             head_dim: 128,
             causal,
@@ -56,9 +61,27 @@ impl BenchConfig {
             batch,
             q_heads: 32,
             kv_heads,
+            q_len: seq_len,
             seq_len,
             head_dim: 128,
             causal,
+        }
+    }
+
+    /// Decode cell: one query token per batch element attending over a
+    /// `kv_len`-token KV cache (the [`crate::workload::DecodeAttention`]
+    /// suite).  The single query is the newest token, so it sees the whole
+    /// cache and no mask work is needed (`causal = false`).
+    pub fn decode(batch: u32, kv_len: u32, q_heads: u32, kv_heads: u32) -> Self {
+        BenchConfig {
+            name: format!("dec_b{batch}_{kv_len}"),
+            batch,
+            q_heads,
+            kv_heads,
+            q_len: 1,
+            seq_len: kv_len,
+            head_dim: 128,
+            causal: false,
         }
     }
 
@@ -66,14 +89,21 @@ impl BenchConfig {
         self.q_heads / self.kv_heads
     }
 
-    /// FLOPs by the FA benchmark convention (4·B·H·N²·D, halved causal).
+    /// Is this a decode (single-query) cell?
+    pub fn is_decode(&self) -> bool {
+        self.q_len == 1 && self.seq_len > 1
+    }
+
+    /// FLOPs by the FA benchmark convention (4·B·H·Q·N·D; halved for the
+    /// causal forward case where Q == N and half the scores are masked).
     pub fn flops(&self) -> f64 {
         let f = 4.0
             * self.batch as f64
             * self.q_heads as f64
-            * (self.seq_len as f64).powi(2)
+            * self.q_len as f64
+            * self.seq_len as f64
             * self.head_dim as f64;
-        if self.causal {
+        if self.causal && self.q_len == self.seq_len {
             f / 2.0
         } else {
             f
@@ -177,8 +207,9 @@ impl Score {
     }
 }
 
-/// FNV-1a fold over a byte slice (cache-key hashing).
-fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+/// FNV-1a fold over a byte slice (cache-key hashing; also the basis of
+/// [`crate::workload::tag_of`]).
+pub(crate) fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x100000001b3);
@@ -214,6 +245,11 @@ pub struct Evaluator {
     pub noise_sigma: f64,
     /// Functional-check seed (fixed per run).
     pub functional_seed: u64,
+    /// [`crate::workload::Workload::workload_tag`] of the scenario this
+    /// suite belongs to, folded into [`Self::suite_tag`] so evaluation
+    /// caches from different workloads can never collide even if their
+    /// suite cells hash alike.  0 for ad-hoc evaluators.
+    pub workload_tag: u64,
 }
 
 impl Evaluator {
@@ -223,7 +259,15 @@ impl Evaluator {
             suite,
             noise_sigma: 0.0,
             functional_seed: 0x5EED,
+            workload_tag: 0,
         }
+    }
+
+    /// Evaluator for a registered workload: its suite plus its tag.
+    pub fn for_workload(workload: &dyn crate::workload::Workload) -> Self {
+        let mut ev = Evaluator::new(workload.suite());
+        ev.workload_tag = workload.workload_tag();
+        ev
     }
 
     pub fn with_noise(mut self, sigma: f64) -> Self {
@@ -232,16 +276,17 @@ impl Evaluator {
     }
 
     /// Cache-key component identifying what (besides the genome itself and
-    /// the machine model) determines a score: the suite cells and the
-    /// functional-check seed.  Caching lives a layer up, in
-    /// [`crate::eval::CachedBackend`]; this tag feeds its key and the
-    /// persisted-cache fingerprint.
+    /// the machine model) determines a score: the suite cells, the
+    /// workload tag, and the functional-check seed.  Caching lives a layer
+    /// up, in [`crate::eval::CachedBackend`]; this tag feeds its key and
+    /// the persisted-cache fingerprint.
     pub fn suite_tag(&self) -> u64 {
         let mut h: u64 = 0xcbf29ce484222325;
         for c in &self.suite {
             h = fnv1a(h, c.name.as_bytes());
             h = fnv1a(h, b";");
         }
+        h = fnv1a(h, &self.workload_tag.to_le_bytes());
         fnv1a(h, &self.functional_seed.to_le_bytes())
     }
 
@@ -370,6 +415,45 @@ mod tests {
             Evaluator::new(mha_suite()).suite_tag(),
             Evaluator::new(gqa_suite(4)).suite_tag()
         );
+    }
+
+    #[test]
+    fn suite_tag_distinguishes_workload_tags() {
+        // Identical suites, different workload tags: distinct cache
+        // identity (the cross-workload collision guarantee).
+        let a = Evaluator::new(mha_suite());
+        let mut b = Evaluator::new(mha_suite());
+        b.workload_tag = 0xDEC0DE;
+        assert_ne!(a.suite_tag(), b.suite_tag());
+    }
+
+    #[test]
+    fn decode_cell_shape_and_flops() {
+        let c = BenchConfig::decode(32, 16384, 32, 8);
+        assert!(c.is_decode());
+        assert!(!c.causal);
+        assert_eq!(c.group(), 4);
+        assert_eq!(c.q_len, 1);
+        // 4·B·H·1·N·D, no causal halving for the single-query case.
+        assert_eq!(
+            c.flops(),
+            4.0 * 32.0 * 32.0 * 16384.0 * 128.0
+        );
+        // Forward cells keep the pre-existing convention exactly.
+        let f = BenchConfig::mha(1, 32768, true);
+        assert!(!f.is_decode());
+        assert_eq!(f.flops(), 4.0 * 16.0 * 32768.0f64.powi(2) * 128.0 / 2.0);
+    }
+
+    #[test]
+    fn decode_suite_evaluates_naive_positive() {
+        let ev = Evaluator::new(vec![
+            BenchConfig::decode(32, 4096, 32, 8),
+            BenchConfig::decode(4, 32768, 32, 8),
+        ]);
+        let s = ev.evaluate(&KernelSpec::naive());
+        assert!(s.is_correct(), "{:?}", s.failure);
+        assert!(s.per_config.iter().all(|(_, t)| *t > 0.0));
     }
 
     #[test]

@@ -122,8 +122,13 @@ pub fn register_demand(spec: &KernelSpec) -> (u32, u32, u32) {
     (softmax, correction, other)
 }
 
-/// Price one genome on one benchmark configuration.
+/// Price one genome on one benchmark configuration.  Decode (q_len = 1)
+/// cells route to the split-KV decode path; everything else is the forward
+/// tile model below.
 pub fn simulate(spec: &KernelSpec, cfg: &BenchConfig, m: &MachineSpec) -> CycleReport {
+    if cfg.is_decode() {
+        return simulate_decode(spec, cfg, m);
+    }
     let bq = spec.block_q as f64;
     let bk = spec.block_k as f64;
     let d = cfg.head_dim as f64;
@@ -384,6 +389,179 @@ pub fn simulate(spec: &KernelSpec, cfg: &BenchConfig, m: &MachineSpec) -> CycleR
     }
 }
 
+/// Price one genome on a decode (q_len = 1) configuration: batched KV
+/// streaming with an optional split-KV reduction.
+///
+/// Decode model structure (one CTA serves one (batch element, KV head)
+/// pair — its `group` query rows share the KV stream):
+///
+/// ```text
+///   per KV block:  kv_stream   = K+V bytes at raw HBM bandwidth
+///                                (no cross-CTA L2 reuse: every batch
+///                                element owns a distinct cache)
+///                  gemv_chain  = QK row-GEMV + softmax + PV row-GEMV
+///                                + rescale (+ spill stalls)
+///                  overhead    = vote/pred + fence + handoff
+///
+///   depth = 1:   iter = kv_stream + exposed latency + gemv_chain + overhead
+///   depth >= 2:  iter = max(kv_stream, gemv_chain) + overhead
+/// ```
+///
+/// With [`Scheduling::Persistent`] and fewer CTAs than SMs, the KV stream
+/// of each tile is partitioned across `splits` cooperating CTAs (split-KV)
+/// that each produce a partial (max, sum, accumulator) triple, merged by a
+/// reduction step — the decomposition the decode KB's `split-kv` document
+/// describes.  Per-tile CTA scheduling quantizes into waves instead.
+pub fn simulate_decode(spec: &KernelSpec, cfg: &BenchConfig, m: &MachineSpec) -> CycleReport {
+    let bk = spec.block_k as f64;
+    let d = cfg.head_dim as f64;
+    let group = cfg.group().max(1) as f64;
+
+    // One CTA per (batch element, KV head).
+    let base_tiles = cfg.batch as u64 * cfg.kv_heads as u64;
+
+    // ---------------- per-iteration costs (one K/V block) ----------------
+    let kv_bytes = 2.0 * bk * d * 2.0; // K + V, bf16
+    let depth = spec.kv_pipeline_depth as f64;
+    let kv_stream =
+        kv_bytes / m.hbm_bytes_per_cycle() * (1.0 - 0.02 * (depth - 1.0).min(3.0));
+
+    // Row-GEMVs on the vector units: a `group`-row score "tile" cannot
+    // fill the MMA datapath, so decode compute prices off the vector pipe.
+    let qk = 2.0 * group * bk * d / m.vec_ops_per_cycle;
+    let pv = 2.0 * group * bk * d / m.vec_ops_per_cycle;
+    let elems = group * bk;
+    let packed_speedup = if spec.softmax_packed { 1.25 } else { 1.0 };
+    let softmax = match spec.softmax_mode {
+        SoftmaxMode::TwoPass => {
+            elems * 24.0 / (m.vec_ops_per_cycle * packed_speedup)
+                + elems * 1.5 / m.sfu_ops_per_cycle
+        }
+        SoftmaxMode::SinglePass => {
+            elems * 18.0 / (m.vec_ops_per_cycle * packed_speedup)
+                + elems * 1.5 / m.exp2_ops_per_cycle
+        }
+    };
+    let corr_compute = group * d * 1.45 / m.vec_ops_per_cycle;
+
+    // Per-iteration synchronization: identical constants to the forward
+    // path, but decode iterations are short, so they dominate sooner
+    // (the decode KB's `decode-iter-overhead` document).
+    let fence_raw = match spec.fence_kind {
+        FenceKind::Blocking => m.fence_blocking_cycles,
+        FenceKind::NonBlocking => m.fence_nonblocking_cycles,
+    };
+    let (sync, fence) = match spec.rescale_mode {
+        RescaleMode::Guarded => {
+            (m.guarded_vote_cycles, fence_raw * m.rescale_freq_noncausal)
+        }
+        RescaleMode::Branchless => (m.branchless_pred_cycles, fence_raw),
+    };
+
+    // Register spills (same demand model as forward; fully visible — the
+    // single query row leaves no masked-path slack to hide them under).
+    let (dem_s, dem_c, dem_o) = register_demand(spec);
+    let spill = |demand: u32, alloc: u32| demand.saturating_sub(alloc);
+    let sp_s = spill(dem_s, spec.registers.softmax);
+    let sp_c = spill(dem_c, spec.registers.correction);
+    let sp_o = spill(dem_o, spec.registers.other);
+    let spill_s_cyc = sp_s as f64 * m.spill_cycles_per_reg;
+    let spill_c_cyc = sp_c as f64 * m.spill_cycles_per_reg;
+    let spill_o_cyc = sp_o as f64 * m.spill_cycles_per_reg * 0.3;
+
+    let gemv_chain = qk + softmax + spill_s_cyc + pv + corr_compute + spill_c_cyc;
+    let overhead = sync + fence + spill_o_cyc + m.handoff_cycles;
+    let (iter, tma_exposed_per_iter) = if spec.kv_pipeline_depth == 1 {
+        // Unbuffered: transfer and latency serialize with the compute.
+        let exposed = kv_stream + m.tma_latency_cycles * 0.5;
+        (exposed + gemv_chain + overhead, exposed)
+    } else {
+        let exposed = (kv_stream - gemv_chain).max(0.0);
+        (kv_stream.max(gemv_chain) + overhead, exposed)
+    };
+
+    // ---------------- split-KV decomposition -----------------------------
+    let n_k_blocks = (cfg.seq_len as u64).div_ceil(spec.block_k as u64).max(1);
+    let splits = if spec.scheduling == Scheduling::Persistent {
+        ((m.sms as u64) / base_tiles.max(1))
+            .clamp(1, n_k_blocks)
+            .min(16)
+    } else {
+        1
+    };
+    let blocks_per_split = n_k_blocks.div_ceil(splits);
+
+    // Reduction: merge `splits` partial (max, sum, accumulator) triples —
+    // rescale + add per merge, serialized behind a half-drain fence.
+    let reduce = if splits > 1 {
+        (splits - 1) as f64
+            * (group * d * 3.0 / m.vec_ops_per_cycle
+                + m.fence_blocking_cycles * 0.5
+                + m.handoff_cycles)
+    } else {
+        0.0
+    };
+
+    // Per-CTA prologue (Q rows + setup) and epilogue (normalize + store).
+    let prologue = group * d * 2.0 / m.hbm_bytes_per_cycle() + 200.0;
+    let epilogue_raw =
+        group * d * 2.0 / m.hbm_bytes_per_cycle() + group * d * 2.0 / m.vec_ops_per_cycle;
+    let epilogue = if spec.epilogue_async { epilogue_raw * 0.15 } else { epilogue_raw };
+
+    let cta_cost = prologue + blocks_per_split as f64 * iter + reduce + epilogue;
+    let total_ctas = base_tiles * splits;
+    let sms = m.sms as f64;
+    let total_work = total_ctas as f64 * cta_cost;
+    let makespan = match spec.scheduling {
+        // One CTA per hardware slot: equal-cost tiles quantize into waves.
+        Scheduling::PerTile => (total_ctas as f64 / sms).ceil() * cta_cost,
+        // Persistent CTAs stream work items: no wave quantization beyond a
+        // small per-run pull overhead.
+        Scheduling::Persistent => total_work / sms + cta_cost * 0.05 + m.handoff_cycles,
+    };
+
+    // ---------------- breakdown ------------------------------------------
+    let iters_total = (total_ctas * blocks_per_split) as f64;
+    let ctas_f = total_ctas as f64;
+    let mut agg = Breakdown {
+        mma_qk: qk * iters_total,
+        mma_pv: pv * iters_total,
+        softmax: softmax * iters_total,
+        correction: corr_compute * iters_total + reduce * ctas_f,
+        sync: sync * iters_total,
+        fence: fence * iters_total,
+        handoff: m.handoff_cycles * iters_total,
+        spill_softmax: spill_s_cyc * iters_total,
+        spill_correction: spill_c_cyc * iters_total,
+        spill_other: spill_o_cyc * iters_total,
+        tma_exposed: tma_exposed_per_iter * iters_total,
+        prologue: prologue * ctas_f,
+        epilogue: epilogue * ctas_f,
+        ..Breakdown::default()
+    };
+    agg.tail_waste = (makespan - total_work / sms).max(0.0) * sms;
+
+    let flops = cfg.flops();
+    let seconds = m.cycles_to_seconds(makespan);
+    CycleReport {
+        total_cycles: makespan,
+        seconds,
+        tflops: flops / seconds / 1e12,
+        flops,
+        breakdown: agg,
+        pressure: RegisterPressure {
+            softmax_demand: dem_s,
+            correction_demand: dem_c,
+            other_demand: dem_o,
+            softmax_spill: sp_s,
+            correction_spill: sp_c,
+            other_spill: sp_o,
+        },
+        tiles: base_tiles,
+        iterations: total_ctas * blocks_per_split,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -480,5 +658,118 @@ mod tests {
                    * (c.seq_len as f64).powi(2) * c.head_dim as f64);
         let rc = simulate(&KernelSpec::naive(), &cfg(true), &m);
         assert_eq!(rc.flops, r.flops / 2.0);
+    }
+
+    // ---------------- decode / split-KV path -----------------------------
+
+    fn dec_cfg(batch: u32) -> BenchConfig {
+        BenchConfig::decode(batch, 32768, 32, 8)
+    }
+
+    #[test]
+    fn decode_routes_to_decode_path_and_is_bandwidth_bound() {
+        let m = MachineSpec::b200();
+        let r = simulate(&KernelSpec::naive(), &dec_cfg(32), &m);
+        assert!(r.tflops > 0.0 && r.tflops.is_finite());
+        // Decode is far below the tensor-core roofline by construction.
+        assert!(r.tflops < m.peak_bf16_tflops * 0.01, "{}", r.tflops);
+        assert_eq!(r.tiles, 32 * 8);
+        // The naive (unbuffered) kernel exposes the whole KV stream.
+        assert!(r.breakdown.tma_exposed > 0.0);
+    }
+
+    #[test]
+    fn decode_pipeline_depth_hides_kv_stream() {
+        let m = MachineSpec::b200();
+        let mut s = KernelSpec::naive();
+        let shallow = simulate(&s, &dec_cfg(32), &m);
+        s.kv_pipeline_depth = 2;
+        let buffered = simulate(&s, &dec_cfg(32), &m);
+        assert!(buffered.tflops > shallow.tflops * 1.1);
+        // Past double-buffering the stream is the roofline: depth 4 buys
+        // only the marginal transfer-efficiency factor.
+        s.kv_pipeline_depth = 4;
+        let deep = simulate(&s, &dec_cfg(32), &m);
+        assert!(deep.tflops < buffered.tflops * 1.1);
+    }
+
+    #[test]
+    fn decode_sync_overhead_is_first_order() {
+        let m = MachineSpec::b200();
+        let mut s = KernelSpec::naive();
+        s.kv_pipeline_depth = 2;
+        let guarded = simulate(&s, &dec_cfg(32), &m);
+        s.rescale_mode = RescaleMode::Branchless;
+        s.fence_kind = FenceKind::NonBlocking;
+        let branchless = simulate(&s, &dec_cfg(32), &m);
+        assert!(
+            branchless.tflops > guarded.tflops * 1.03,
+            "branchless {} vs guarded {}",
+            branchless.tflops,
+            guarded.tflops
+        );
+    }
+
+    #[test]
+    fn decode_split_kv_wins_at_low_batch() {
+        let m = MachineSpec::b200();
+        let mut s = KernelSpec::naive();
+        s.kv_pipeline_depth = 2;
+        // batch 4 * 8 KV heads = 32 CTAs on 148 SMs: split-KV has 4x
+        // headroom, so persistent scheduling must win big.
+        let per_tile = simulate(&s, &dec_cfg(4), &m);
+        s.scheduling = Scheduling::Persistent;
+        let split = simulate(&s, &dec_cfg(4), &m);
+        assert!(
+            split.tflops > per_tile.tflops * 1.5,
+            "split {} vs per-tile {}",
+            split.tflops,
+            per_tile.tflops
+        );
+        // More CTAs in flight than base tiles (the split factor).
+        assert!(split.iterations >= per_tile.iterations);
+    }
+
+    #[test]
+    fn decode_persistent_never_hurts_at_high_batch() {
+        let m = MachineSpec::b200();
+        let mut s = KernelSpec::naive();
+        s.kv_pipeline_depth = 2;
+        let per_tile = simulate(&s, &dec_cfg(32), &m);
+        s.scheduling = Scheduling::Persistent;
+        let persistent = simulate(&s, &dec_cfg(32), &m);
+        assert!(persistent.tflops >= per_tile.tflops);
+    }
+
+    #[test]
+    fn decode_larger_k_blocks_amortize_overhead() {
+        let m = MachineSpec::b200();
+        let mut s = KernelSpec::naive();
+        s.kv_pipeline_depth = 2;
+        s.block_k = 64;
+        let small = simulate(&s, &dec_cfg(32), &m);
+        s.block_k = 128;
+        let large = simulate(&s, &dec_cfg(32), &m);
+        assert!(large.tflops > small.tflops);
+    }
+
+    #[test]
+    fn decode_evolved_dominates_naive_on_all_cells() {
+        let m = MachineSpec::b200();
+        let evolved = crate::baselines::evolved_genome();
+        let naive = KernelSpec::naive();
+        for batch in [1u32, 4, 32] {
+            for kv_len in [4096u32, 32768] {
+                let c = BenchConfig::decode(batch, kv_len, 32, 8);
+                let e = simulate(&evolved, &c, &m);
+                let n = simulate(&naive, &c, &m);
+                assert!(
+                    e.tflops > n.tflops * 1.5,
+                    "b{batch} kv{kv_len}: evolved {} vs naive {}",
+                    e.tflops,
+                    n.tflops
+                );
+            }
+        }
     }
 }

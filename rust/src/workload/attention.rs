@@ -1,0 +1,196 @@
+//! The attention-forward workloads of the paper: MHA (§4.2, the 7-day main
+//! run) and GQA (§4.3, the 30-minute transfer target).  Both are
+//! behavior-preserving registrations of what the engine previously
+//! hard-coded: the same suites, the paper knowledge base, the attention
+//! phase schedule, and the naive tiled seed — so same-seed runs reproduce
+//! pre-workload-subsystem archives byte-for-byte.
+
+use crate::baselines;
+use crate::knowledge::KnowledgeBase;
+use crate::score::{gqa_suite, mha_suite, BenchConfig};
+use crate::workload::{Anchor, PhaseSchedule, Workload};
+
+/// Multi-head attention forward: 16 heads, head_dim 128, the 8-cell
+/// sequence-length sweep at 32k total tokens.
+pub struct MhaForward;
+
+impl Workload for MhaForward {
+    fn name(&self) -> String {
+        "mha".to_string()
+    }
+
+    fn suite(&self) -> Vec<BenchConfig> {
+        mha_suite()
+    }
+
+    fn knowledge_base(&self) -> KnowledgeBase {
+        KnowledgeBase::paper_kb()
+    }
+
+    fn phase_schedule(&self) -> PhaseSchedule {
+        PhaseSchedule::attention()
+    }
+
+    /// The legacy (pre-workload-subsystem) cache identity: tag 0 keeps
+    /// `eval_cache.json` files saved before the workload seam loadable by
+    /// `--warm-start`.  Isolation from other workloads still holds — the
+    /// suite cells (and, for decode, a nonzero tag) differentiate the
+    /// fingerprint.
+    fn workload_tag(&self) -> u64 {
+        0
+    }
+
+    fn anchors(&self) -> Vec<Anchor> {
+        let curves: [(&'static str, fn(bool) -> baselines::AnchorCurve); 3] = [
+            ("cudnn", baselines::cudnn_measured),
+            ("fa4", baselines::fa4_measured),
+            ("avo", baselines::avo_measured),
+        ];
+        curves
+            .into_iter()
+            .map(|(name, f)| Anchor {
+                name,
+                per_cell: [true, false]
+                    .iter()
+                    .flat_map(|&causal| {
+                        let c = f(causal);
+                        c.seq_lens
+                            .iter()
+                            .zip(c.tflops)
+                            .map(move |(n, t)| {
+                                (
+                                    format!(
+                                        "mha_{}_{}",
+                                        if causal { "c" } else { "nc" },
+                                        n
+                                    ),
+                                    t,
+                                )
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                    .collect(),
+            })
+            .collect()
+    }
+}
+
+/// Grouped-query attention forward: 32 query heads over `kv_heads` KV
+/// heads (group = 32 / kv_heads) — the Qwen3 configurations at kv_heads 4
+/// (group 8) and 8 (group 4), though any divisor of 32 registers.
+pub struct GqaForward {
+    pub kv_heads: u32,
+}
+
+impl GqaForward {
+    pub fn new(kv_heads: u32) -> Result<Self, String> {
+        if kv_heads == 0 || kv_heads > 32 || 32 % kv_heads != 0 {
+            return Err(format!(
+                "gqa kv_heads must divide the 32 query heads, got {kv_heads}"
+            ));
+        }
+        Ok(GqaForward { kv_heads })
+    }
+}
+
+impl Workload for GqaForward {
+    fn name(&self) -> String {
+        format!("gqa:{}", self.kv_heads)
+    }
+
+    fn suite(&self) -> Vec<BenchConfig> {
+        gqa_suite(self.kv_heads)
+    }
+
+    fn knowledge_base(&self) -> KnowledgeBase {
+        KnowledgeBase::paper_kb()
+    }
+
+    fn phase_schedule(&self) -> PhaseSchedule {
+        PhaseSchedule::attention()
+    }
+
+    /// Legacy cache identity (same rationale as `MhaForward`): GQA
+    /// suites are already pairwise distinct by their cell names.
+    fn workload_tag(&self) -> u64 {
+        0
+    }
+
+    fn anchors(&self) -> Vec<Anchor> {
+        let group = 32 / self.kv_heads;
+        let cell = |causal: bool, n: u32| {
+            format!("gqa_g{}_{}_{}", group, if causal { "c" } else { "nc" }, n)
+        };
+        let mut cudnn = Vec::new();
+        let mut fa4 = Vec::new();
+        for causal in [true, false] {
+            let (c_curve, f_curve) = baselines::gqa_anchors(self.kv_heads, causal);
+            for (i, n) in c_curve.seq_lens.iter().enumerate() {
+                cudnn.push((cell(causal, *n), c_curve.tflops[i]));
+                fa4.push((cell(causal, *n), f_curve.tflops[i]));
+            }
+        }
+        vec![
+            Anchor { name: "cudnn", per_cell: cudnn },
+            Anchor { name: "fa4", per_cell: fa4 },
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mha_workload_is_the_legacy_construction() {
+        let w = MhaForward;
+        assert_eq!(w.suite(), mha_suite());
+        let legacy = KnowledgeBase::paper_kb();
+        let kb = w.knowledge_base();
+        let ids: Vec<&str> = kb.docs.iter().map(|d| d.id).collect();
+        let legacy_ids: Vec<&str> = legacy.docs.iter().map(|d| d.id).collect();
+        assert_eq!(ids, legacy_ids);
+        assert_eq!(w.phase_schedule(), PhaseSchedule::attention());
+        assert_eq!(w.seed_genome(), crate::kernelspec::KernelSpec::naive());
+        assert_eq!(w.seed_message(), "seed x0: naive tiled attention");
+    }
+
+    #[test]
+    fn gqa_workload_matches_legacy_suite() {
+        for kv in [4u32, 8] {
+            let w = GqaForward::new(kv).unwrap();
+            assert_eq!(w.suite(), gqa_suite(kv));
+        }
+        assert!(GqaForward::new(0).is_err());
+        assert!(GqaForward::new(5).is_err());
+        assert!(GqaForward::new(64).is_err());
+    }
+
+    #[test]
+    fn mha_anchors_cover_every_suite_cell() {
+        let w = MhaForward;
+        let suite = w.suite();
+        for anchor in w.anchors() {
+            assert_eq!(anchor.per_cell.len(), suite.len(), "{}", anchor.name);
+            for c in &suite {
+                assert!(
+                    anchor.per_cell.iter().any(|(n, t)| n == &c.name && *t > 0.0),
+                    "{}: missing {}",
+                    anchor.name,
+                    c.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gqa_anchors_use_suite_cell_names() {
+        let w = GqaForward::new(4).unwrap();
+        let names: Vec<String> = w.suite().into_iter().map(|c| c.name).collect();
+        for anchor in w.anchors() {
+            for (n, _) in &anchor.per_cell {
+                assert!(names.contains(n), "{n} not a suite cell");
+            }
+        }
+    }
+}

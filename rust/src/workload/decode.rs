@@ -1,0 +1,174 @@
+//! Decode attention: the second genuinely new workload behind the
+//! [`Workload`] seam — one query token per batch element attending over a
+//! long KV cache (the serving hot loop), q_len = 1.
+//!
+//! Decode inverts the forward workload's economics: the score tile is a
+//! single row, the tensor-core datapath cannot fill, and every (batch
+//! element, KV head) streams its *own* K/V exactly once — so the kernel is
+//! bandwidth-bound with short iterations whose fixed overheads (fences,
+//! votes, handoffs) dominate sooner.  The cycle model prices this through
+//! the split-KV decode path in [`crate::sim::pipeline`]: persistent
+//! scheduling partitions each tile's KV stream across idle SMs and merges
+//! the partial (max, sum, accumulator) triples in a reduction step, which
+//! is where the decode suite's low-batch cells win most.
+//!
+//! The same genome vocabulary drives the search: staging depth hides the
+//! KV stream, branchless rescale + the relaxed fence shrink the
+//! per-iteration overhead, larger K blocks amortize it, persistent
+//! scheduling realizes split-KV.  Correctness still gates through the
+//! functional executor on the (non-causal, group 4) regime, so hazard
+//! combinations (FenceRace, EpilogueRace) fail on decode exactly as they
+//! do on the forward suites.
+
+use crate::knowledge::KnowledgeBase;
+use crate::score::{BenchConfig, Evaluator};
+use crate::workload::{Anchor, PhaseSchedule, Workload};
+
+/// Single-query decode over a batched KV cache.  `batch` is the serving
+/// batch size of the flagship cells; the suite adds low-batch cells
+/// (batch/8) to exercise the split-KV path where CTAs are scarcer than
+/// SMs.
+pub struct DecodeAttention {
+    pub batch: u32,
+}
+
+impl DecodeAttention {
+    /// Query heads of the decode model configuration (GQA-style serving:
+    /// 32 query heads sharing 8 KV heads, group 4).
+    pub const Q_HEADS: u32 = 32;
+    pub const KV_HEADS: u32 = 8;
+    /// KV-cache lengths of the flagship cells.
+    pub const KV_LENS: [u32; 4] = [4096, 8192, 16384, 32768];
+
+    pub fn new(batch: u32) -> Result<Self, String> {
+        if batch == 0 || batch > 4096 {
+            return Err(format!("decode batch must be in 1..=4096, got {batch}"));
+        }
+        Ok(DecodeAttention { batch })
+    }
+}
+
+impl Workload for DecodeAttention {
+    fn name(&self) -> String {
+        format!("decode:{}", self.batch)
+    }
+
+    fn suite(&self) -> Vec<BenchConfig> {
+        let mut v: Vec<BenchConfig> = Self::KV_LENS
+            .iter()
+            .map(|&kv_len| {
+                BenchConfig::decode(self.batch, kv_len, Self::Q_HEADS, Self::KV_HEADS)
+            })
+            .collect();
+        // Low-batch cells: few CTAs relative to SMs, so split-KV (and not
+        // just per-iteration efficiency) decides the score.
+        let low = (self.batch / 8).max(1);
+        if low < self.batch {
+            for kv_len in [16384u32, 32768] {
+                v.push(BenchConfig::decode(low, kv_len, Self::Q_HEADS, Self::KV_HEADS));
+            }
+        }
+        v
+    }
+
+    fn knowledge_base(&self) -> KnowledgeBase {
+        KnowledgeBase::decode_kb()
+    }
+
+    fn phase_schedule(&self) -> PhaseSchedule {
+        PhaseSchedule::decode()
+    }
+
+    fn seed_message(&self) -> String {
+        "seed x0: naive decode attention".to_string()
+    }
+
+    /// Reference curves simulated from the shared genome anchors: the
+    /// naive seed (the floor every run must beat) and the evolved MHA v40
+    /// genome (what pure cross-workload transfer lands before adaptation).
+    fn anchors(&self) -> Vec<Anchor> {
+        let ev = Evaluator::new(self.suite());
+        let mut out = Vec::new();
+        for (name, genome) in [
+            ("naive-seed", crate::kernelspec::KernelSpec::naive()),
+            ("evolved-mha-transfer", crate::baselines::evolved_genome()),
+        ] {
+            let score = ev.evaluate(&genome);
+            out.push(Anchor { name, per_cell: score.per_config });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_shapes() {
+        let w = DecodeAttention::new(32).unwrap();
+        let suite = w.suite();
+        assert_eq!(suite.len(), 6);
+        for c in &suite {
+            assert!(c.is_decode());
+            assert!(!c.causal);
+            assert_eq!(c.group(), 4);
+            assert_eq!(c.head_dim, 128);
+        }
+        // Flagship cells at the configured batch, low-batch cells at /8.
+        assert_eq!(suite[0].batch, 32);
+        assert_eq!(suite[4].batch, 4);
+        // Cell names are unique (score lookup is by name).
+        let mut names: Vec<&str> = suite.iter().map(|c| c.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), suite.len());
+    }
+
+    #[test]
+    fn tiny_batch_has_no_duplicate_cells() {
+        for batch in [1u32, 2, 8] {
+            let w = DecodeAttention::new(batch).unwrap();
+            let suite = w.suite();
+            let mut names: Vec<String> = suite.iter().map(|c| c.name.clone()).collect();
+            names.sort();
+            names.dedup();
+            assert_eq!(names.len(), suite.len(), "batch {batch}");
+        }
+        assert!(DecodeAttention::new(0).is_err());
+    }
+
+    #[test]
+    fn anchors_include_naive_floor() {
+        let w = DecodeAttention::new(32).unwrap();
+        let anchors = w.anchors();
+        assert!(anchors.iter().any(|a| a.name == "naive-seed"));
+        for a in &anchors {
+            assert_eq!(a.per_cell.len(), w.suite().len());
+            assert!(a.per_cell.iter().all(|(_, t)| *t > 0.0), "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn evolved_transfer_anchor_beats_naive_anchor() {
+        // The evolved MHA genome's mechanisms (staging, branchless+relaxed
+        // fence, persistent scheduling) carry over to decode: the transfer
+        // anchor must dominate the naive floor, which is what makes the
+        // cross-workload transfer experiment meaningful.
+        let w = DecodeAttention::new(32).unwrap();
+        let anchors = w.anchors();
+        let get = |name: &str| {
+            anchors
+                .iter()
+                .find(|a| a.name == name)
+                .unwrap()
+                .per_cell
+                .clone()
+        };
+        let naive = get("naive-seed");
+        let evolved = get("evolved-mha-transfer");
+        for ((cell, n), (_, e)) in naive.iter().zip(&evolved) {
+            assert!(e > n, "{cell}: evolved {e} <= naive {n}");
+        }
+    }
+}

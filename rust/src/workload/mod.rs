@@ -1,0 +1,335 @@
+//! The workload subsystem: what makes the search engine generic over
+//! kernel scenarios.
+//!
+//! The paper's headline transfer result (§4.3 — MHA optimizations adapting
+//! to GQA in 30 minutes of autonomous search) rests on the variation
+//! operator being *reusable* across scenarios.  A [`Workload`] bundles
+//! everything that is scenario-specific and nothing that is not:
+//!
+//! * the benchmark **suite** the scoring function f is computed over;
+//! * the **knowledge-base shard** the agent consults (the attention
+//!   workloads read the paper KB; decode adds split-KV / KV-streaming
+//!   docs);
+//! * the **phase schedule** — which [`Direction`]s count as structural /
+//!   algorithmic / micro-architectural for the agent's strategy shift;
+//! * the **seed genome** and message the lineage starts from;
+//! * **baseline anchors** (measured or reference curves per suite cell);
+//! * a **workload tag** folded into [`crate::score::Evaluator::suite_tag`]
+//!   and thereby into every cache key and persisted-cache fingerprint, so
+//!   evaluations from different workloads can never collide.
+//!
+//! Everything else — the AVO agent loop, both baseline operators, the
+//! supervisor, the island model, the layered evaluation stack, warm-start
+//! persistence — is workload-agnostic and runs unchanged.  Registering a
+//! new scenario is a ~100-line module implementing this trait plus one arm
+//! in [`parse`]; see [`decode::DecodeAttention`] for the template.
+//!
+//! Registered workloads (`RunConfig::workload` / `--workload`):
+//!
+//! | spec              | scenario                                         |
+//! |-------------------|--------------------------------------------------|
+//! | `mha`             | the paper's 8-cell MHA forward suite (§4.2)      |
+//! | `gqa:<kv_heads>`  | GQA forward, 32 query heads (§4.3)               |
+//! | `decode:<batch>`  | single-query decode over a batched KV cache      |
+//!
+//! The attention workloads are behavior-preserving: a `--workload mha` (or
+//! `gqa:<kv>`) run reproduces the pre-workload-subsystem archive
+//! byte-for-byte (`rust/tests/workloads.rs` pins this).
+
+pub mod attention;
+pub mod decode;
+
+pub use attention::{GqaForward, MhaForward};
+pub use decode::DecodeAttention;
+
+use crate::kernelspec::{Direction, KernelSpec};
+use crate::knowledge::KnowledgeBase;
+use crate::score::BenchConfig;
+
+/// The agent's strategy schedule for one workload: which optimization
+/// directions each phase of the run favours (the paper: "early steps may
+/// focus on structural changes ... later steps can shift toward
+/// micro-architectural tuning").  Phase boundaries (committed-version
+/// counts) stay in [`crate::agent::AvoConfig`]; the workload only supplies
+/// the direction sets.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhaseSchedule {
+    pub structural: Vec<Direction>,
+    pub algorithmic: Vec<Direction>,
+    pub micro: Vec<Direction>,
+}
+
+impl PhaseSchedule {
+    /// The attention-forward schedule — exactly the direction sets the
+    /// pre-workload agent hard-coded, so MHA/GQA runs are byte-identical.
+    pub fn attention() -> Self {
+        PhaseSchedule {
+            structural: vec![
+                Direction::Pipelining,
+                Direction::Tiling,
+                Direction::Masking,
+                Direction::MmaIssue,
+            ],
+            algorithmic: vec![
+                Direction::SoftmaxAlgo,
+                Direction::Synchronization,
+                Direction::Masking,
+            ],
+            micro: vec![
+                Direction::Overlap,
+                Direction::Registers,
+                Direction::Scheduling,
+                Direction::Synchronization,
+            ],
+        }
+    }
+
+    /// Decode-leaning schedule: decode is bandwidth-bound with short
+    /// iterations, so staging/tiling/work-decomposition lead, then the
+    /// per-iteration overheads (sync, softmax), then register tuning.
+    pub fn decode() -> Self {
+        PhaseSchedule {
+            structural: vec![
+                Direction::Pipelining,
+                Direction::Scheduling,
+                Direction::Tiling,
+            ],
+            algorithmic: vec![Direction::Synchronization, Direction::SoftmaxAlgo],
+            micro: vec![
+                Direction::Registers,
+                Direction::Synchronization,
+                Direction::Scheduling,
+            ],
+        }
+    }
+
+    /// Directions favoured after `committed` versions, given the agent's
+    /// phase boundaries.
+    pub fn for_phase(
+        &self,
+        committed: usize,
+        structural_until: usize,
+        algorithmic_until: usize,
+    ) -> &[Direction] {
+        if committed < structural_until {
+            &self.structural
+        } else if committed < algorithmic_until {
+            &self.algorithmic
+        } else {
+            &self.micro
+        }
+    }
+}
+
+/// A named baseline anchor for one workload: TFLOPS per suite cell
+/// (measured curves for the attention workloads, simulated reference
+/// genomes for decode).
+#[derive(Debug, Clone)]
+pub struct Anchor {
+    pub name: &'static str,
+    /// (suite-cell name, TFLOPS) pairs.
+    pub per_cell: Vec<(String, f64)>,
+}
+
+/// One kernel scenario: everything the search engine needs that is not
+/// generic.  Implementations must be cheap to construct — the coordinator
+/// instantiates them from the config string on demand.
+pub trait Workload: Send + Sync {
+    /// Canonical spec string (`mha`, `gqa:4`, `decode:32`); [`parse`] of
+    /// this string reconstructs the workload.
+    fn name(&self) -> String;
+
+    /// The benchmark suite the scoring function is computed over.
+    fn suite(&self) -> Vec<BenchConfig>;
+
+    /// The knowledge-base shard the agent consults for this scenario.
+    fn knowledge_base(&self) -> KnowledgeBase;
+
+    /// The agent's phase schedule for this scenario.
+    fn phase_schedule(&self) -> PhaseSchedule;
+
+    /// The seed genome x_0 the lineage starts from.
+    fn seed_genome(&self) -> KernelSpec {
+        KernelSpec::naive()
+    }
+
+    /// The seed commit message.
+    fn seed_message(&self) -> String {
+        "seed x0: naive tiled attention".to_string()
+    }
+
+    /// Baseline anchor curves for figures/benches (may be empty).
+    fn anchors(&self) -> Vec<Anchor> {
+        Vec::new()
+    }
+
+    /// Tag folded into [`crate::score::Evaluator::suite_tag`] (and thereby
+    /// into every cache key and persisted-cache fingerprint).  The default
+    /// hashes the canonical name, which is unique per registered workload;
+    /// the attention workloads override it to 0 — the pre-workload cache
+    /// identity — so `eval_cache.json` files saved before the workload
+    /// seam stay loadable (their suites already fingerprint distinctly).
+    fn workload_tag(&self) -> u64 {
+        tag_of(&self.name())
+    }
+}
+
+/// FNV-1a of a workload name (the default [`Workload::workload_tag`]).
+pub fn tag_of(name: &str) -> u64 {
+    crate::score::fnv1a(0xcbf29ce484222325, name.as_bytes())
+}
+
+/// Human-readable list of registered workload specs (CLI help).
+pub const KNOWN: [&str; 3] = ["mha", "gqa:<kv_heads>", "decode:<batch>"];
+
+/// The workload registry: parse a spec string (`mha`, `gqa:4`,
+/// `decode:32`) into its workload.  Adding a scenario = implementing
+/// [`Workload`] and adding one arm here.
+pub fn parse(spec: &str) -> Result<Box<dyn Workload>, String> {
+    let spec = spec.trim();
+    let (head, arg) = match spec.split_once(':') {
+        Some((h, a)) => (h, Some(a)),
+        None => (spec, None),
+    };
+    match head {
+        "mha" => {
+            if arg.is_some() {
+                return Err("workload 'mha' takes no parameter".to_string());
+            }
+            Ok(Box::new(MhaForward))
+        }
+        "gqa" => {
+            let kv: u32 = arg
+                .ok_or_else(|| "workload 'gqa' needs kv_heads, e.g. gqa:4".to_string())?
+                .parse()
+                .map_err(|e| format!("gqa kv_heads: {e}"))?;
+            Ok(Box::new(GqaForward::new(kv)?))
+        }
+        "decode" => {
+            let batch: u32 = arg
+                .ok_or_else(|| "workload 'decode' needs a batch, e.g. decode:32".to_string())?
+                .parse()
+                .map_err(|e| format!("decode batch: {e}"))?;
+            Ok(Box::new(DecodeAttention::new(batch)?))
+        }
+        other => Err(format!(
+            "unknown workload '{other}' (registered: {})",
+            KNOWN.join(", ")
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_registered_specs_roundtrip() {
+        for spec in ["mha", "gqa:4", "gqa:8", "decode:32", "decode:1"] {
+            let w = parse(spec).unwrap();
+            assert_eq!(w.name(), spec, "canonical name must round-trip");
+            assert!(!w.suite().is_empty());
+            assert!(parse(&w.name()).is_ok());
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for spec in ["", "mha:1", "gqa", "gqa:banana", "gqa:5", "gqa:0", "decode", "decode:0", "warp"] {
+            assert!(parse(spec).is_err(), "'{spec}' should be rejected");
+        }
+    }
+
+    #[test]
+    fn workload_cache_identities_are_pairwise_distinct() {
+        // The full cache identity is the evaluator's suite tag (cells +
+        // workload tag + functional seed): pairwise distinct across every
+        // registered workload, even though the attention workloads share
+        // the legacy tag 0 for old-cache compatibility.
+        let specs = ["mha", "gqa:4", "gqa:8", "decode:8", "decode:32"];
+        let tags: Vec<u64> = specs
+            .iter()
+            .map(|s| {
+                crate::score::Evaluator::for_workload(&*parse(s).unwrap()).suite_tag()
+            })
+            .collect();
+        for i in 0..tags.len() {
+            for j in i + 1..tags.len() {
+                assert_ne!(tags[i], tags[j], "{} vs {}", specs[i], specs[j]);
+            }
+        }
+        // Decode carries a nonzero tag; the attention workloads keep the
+        // legacy identity so pre-workload caches still warm-start.
+        assert_ne!(parse("decode:32").unwrap().workload_tag(), 0);
+        assert_eq!(parse("mha").unwrap().workload_tag(), 0);
+        assert_eq!(parse("gqa:4").unwrap().workload_tag(), 0);
+    }
+
+    #[test]
+    fn attention_schedule_matches_legacy_agent_phases() {
+        // Byte-for-byte reproduction of pre-workload archives requires
+        // these exact sets (they weight the agent's direction sampling).
+        let s = PhaseSchedule::attention();
+        assert_eq!(
+            s.for_phase(0, 10, 22),
+            &[
+                Direction::Pipelining,
+                Direction::Tiling,
+                Direction::Masking,
+                Direction::MmaIssue
+            ]
+        );
+        assert_eq!(
+            s.for_phase(15, 10, 22),
+            &[
+                Direction::SoftmaxAlgo,
+                Direction::Synchronization,
+                Direction::Masking
+            ]
+        );
+        assert_eq!(
+            s.for_phase(30, 10, 22),
+            &[
+                Direction::Overlap,
+                Direction::Registers,
+                Direction::Scheduling,
+                Direction::Synchronization
+            ]
+        );
+    }
+
+    #[test]
+    fn every_workload_schedule_covers_nonempty_phases() {
+        for spec in ["mha", "gqa:4", "decode:32"] {
+            let s = parse(spec).unwrap().phase_schedule();
+            assert!(!s.structural.is_empty());
+            assert!(!s.algorithmic.is_empty());
+            assert!(!s.micro.is_empty());
+        }
+    }
+
+    #[test]
+    fn every_workload_kb_covers_its_schedule() {
+        // The agent retrieves docs by direction; phase-favoured directions
+        // must have KB coverage or the boost multiplies a 0.1 floor.
+        for spec in ["mha", "gqa:4", "decode:32"] {
+            let w = parse(spec).unwrap();
+            let kb = w.knowledge_base();
+            let s = w.phase_schedule();
+            for d in s.structural.iter().chain(&s.algorithmic).chain(&s.micro) {
+                assert!(!kb.retrieve(*d).is_empty(), "{spec}: no KB doc for {d:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn seed_genomes_are_correct_on_their_suites() {
+        for spec in ["mha", "gqa:4", "gqa:8", "decode:32"] {
+            let w = parse(spec).unwrap();
+            let ev = crate::score::Evaluator::for_workload(&*w);
+            let s = ev.evaluate(&w.seed_genome());
+            assert!(s.is_correct(), "{spec}: {:?}", s.failure);
+            assert!(s.geomean() > 0.0, "{spec}");
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Workload-subsystem contract tests.
+//!
+//! * **Golden parity** — the MHA/GQA workloads are behavior-preserving: a
+//!   driver run configured through the workload registry produces an
+//!   archive byte-identical (commit-id sequence — content hashes chained
+//!   through parents) to the pre-refactor construction, replicated here
+//!   from first principles: `Evaluator::new` over a hand-built suite and
+//!   `AvoAgent::new` with its built-in attention defaults.
+//! * **Decode** — determinism, warm-start roundtrip, and the end-to-end
+//!   acceptance bar: the best genome beats the naive decode seed on every
+//!   suite cell.
+//! * **Cache isolation** — same genome, different workload: distinct cache
+//!   identity, and persisted caches refuse to cross workloads.
+
+use avo::agent::{AvoAgent, VariationOperator};
+use avo::coordinator::{EvolutionDriver, RunConfig};
+use avo::eval::{CachedBackend, EvalBackend, PersistentBackend, SimBackend, CACHE_FILE};
+use avo::evolution::Lineage;
+use avo::kernelspec::KernelSpec;
+use avo::score::{gqa_suite, mha_suite, BenchConfig, Evaluator};
+use avo::supervisor::Supervisor;
+
+/// The pre-refactor sequential construction, replicated verbatim: legacy
+/// evaluator (no workload tag), the agent's built-in attention KB/phase
+/// defaults, and the N = 1 archipelago loop (uncapped single epoch).
+fn legacy_sequential_archive(
+    suite: Vec<BenchConfig>,
+    seed: u64,
+    target_commits: usize,
+    max_steps: usize,
+) -> Vec<u64> {
+    let cfg = RunConfig {
+        seed,
+        target_commits,
+        max_steps,
+        ..RunConfig::default()
+    };
+    let backend = CachedBackend::new(SimBackend::new(
+        Evaluator::new(suite),
+        cfg.eval_workers,
+    ));
+    let mut lineage = Lineage::new();
+    let seed_spec = KernelSpec::naive();
+    let seed_score = backend.evaluate(&seed_spec);
+    assert!(seed_score.is_correct());
+    lineage.seed(seed_spec, seed_score, "seed x0: naive tiled attention");
+    let mut op = AvoAgent::new(cfg.agent.clone(), cfg.seed);
+    let mut supervisor = Supervisor::new(cfg.supervisor.clone());
+    let mut steps = 0usize;
+    while lineage.len() < cfg.target_commits + 1 && steps < cfg.max_steps {
+        steps += 1;
+        let outcome = op.step(&mut lineage, &backend, steps);
+        if let Some(directive) = supervisor.observe(&outcome, &lineage) {
+            op.apply_directive(&directive);
+        }
+    }
+    lineage.versions().iter().map(|c| c.id.0).collect()
+}
+
+fn workload_config(workload: &str, seed: u64, commits: usize, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig {
+        seed,
+        target_commits: commits,
+        max_steps: steps,
+        ..RunConfig::default()
+    };
+    cfg.workload = workload.to_string();
+    cfg
+}
+
+fn driver_archive(workload: &str, seed: u64, commits: usize, steps: usize) -> Vec<u64> {
+    let report = EvolutionDriver::new(workload_config(workload, seed, commits, steps)).run();
+    report.lineage.versions().iter().map(|c| c.id.0).collect()
+}
+
+#[test]
+fn mha_workload_reproduces_legacy_archive_byte_for_byte() {
+    let golden = legacy_sequential_archive(mha_suite(), 5, 8, 40);
+    assert!(golden.len() > 1, "legacy run must commit beyond the seed");
+    assert_eq!(driver_archive("mha", 5, 8, 40), golden);
+}
+
+#[test]
+fn gqa_workload_reproduces_legacy_archive_byte_for_byte() {
+    let golden = legacy_sequential_archive(gqa_suite(4), 7, 6, 30);
+    assert!(golden.len() > 1);
+    assert_eq!(driver_archive("gqa:4", 7, 6, 30), golden);
+}
+
+#[test]
+fn decode_run_beats_naive_seed_on_every_suite_cell() {
+    // The acceptance bar: an end-to-end `--workload decode:32` run whose
+    // best genome strictly beats the naive decode seed on every cell.
+    let report =
+        EvolutionDriver::new(workload_config("decode:32", 3, 10, 60)).run();
+    assert!(report.lineage.len() > 1, "no commit landed on decode");
+    let versions = report.lineage.versions();
+    let seed_score = versions[0].score.clone();
+    let best = report.lineage.best().expect("seeded lineage");
+    for (name, seed_t) in &seed_score.per_config {
+        assert!(name.starts_with("dec_b"), "{name}");
+        let best_t = best.score.get(name).expect("same suite cells");
+        assert!(
+            best_t > *seed_t,
+            "cell {name}: best {best_t} does not beat seed {seed_t}"
+        );
+    }
+    assert!(report.summary().starts_with("[decode:32]"), "{}", report.summary());
+}
+
+#[test]
+fn decode_runs_are_deterministic_per_seed() {
+    let a = driver_archive("decode:32", 11, 6, 30);
+    let b = driver_archive("decode:32", 11, 6, 30);
+    assert_eq!(a, b);
+    let c = driver_archive("decode:32", 12, 6, 30);
+    assert_ne!(a, c, "distinct seeds must explore distinct trajectories");
+}
+
+#[test]
+fn decode_warm_start_reproduces_cold_archive() {
+    let dir = std::env::temp_dir().join(format!("avo_wk_warm_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut cold_cfg = workload_config("decode:32", 9, 5, 25);
+    cold_cfg.eval_cache_path = Some(dir.join(CACHE_FILE));
+    let cold = EvolutionDriver::new(cold_cfg).run();
+
+    let mut warm_cfg = workload_config("decode:32", 9, 5, 25);
+    warm_cfg.warm_start = Some(dir.clone());
+    let warm = EvolutionDriver::new(warm_cfg).run();
+
+    let ids = |r: &avo::coordinator::RunReport| -> Vec<u64> {
+        r.lineage.versions().iter().map(|c| c.id.0).collect()
+    };
+    assert_eq!(ids(&cold), ids(&warm));
+    assert!(warm.metrics.counter("eval_cache_hits") > 0);
+    assert_eq!(warm.metrics.counter("eval_cache_misses"), 0);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn cross_workload_cache_identity_never_collides() {
+    // The attention workloads keep the legacy cache identity (tag 0), so
+    // eval_cache.json files saved before the workload subsystem still
+    // warm-start their runs...
+    let via_workload =
+        Evaluator::for_workload(&avo::workload::GqaForward::new(4).unwrap());
+    let manual = Evaluator::new(gqa_suite(4));
+    assert_eq!(via_workload.suite, manual.suite);
+    assert_eq!(
+        EvalBackend::cache_tag(&via_workload),
+        EvalBackend::cache_tag(&manual)
+    );
+    // ...while the decode workload's nonzero tag separates it even from an
+    // ad-hoc evaluator over the very same cells.
+    let decode = avo::workload::DecodeAttention::new(32).unwrap();
+    let via_decode = Evaluator::for_workload(&decode);
+    let manual_decode = Evaluator::new(via_decode.suite.clone());
+    assert_ne!(
+        EvalBackend::cache_tag(&via_decode),
+        EvalBackend::cache_tag(&manual_decode)
+    );
+    // Registered workloads disagree pairwise.
+    let specs = ["mha", "gqa:4", "gqa:8", "decode:8", "decode:32"];
+    let tags: Vec<u64> = specs
+        .iter()
+        .map(|s| {
+            EvalBackend::cache_tag(&Evaluator::for_workload(
+                &*avo::workload::parse(s).unwrap(),
+            ))
+        })
+        .collect();
+    for i in 0..tags.len() {
+        for j in i + 1..tags.len() {
+            assert_ne!(tags[i], tags[j], "{} vs {}", specs[i], specs[j]);
+        }
+    }
+}
+
+#[test]
+fn legacy_cache_files_still_warm_start_attention_workloads() {
+    // A cache saved under the pre-workload construction (ad-hoc evaluator,
+    // no workload tag) must load under the MhaForward workload: the
+    // attention workloads keep the legacy fingerprint.
+    let dir = std::env::temp_dir().join(format!("avo_wk_legacy_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let legacy = PersistentBackend::new(CachedBackend::new(Evaluator::new(mha_suite())));
+    legacy.evaluate(&KernelSpec::naive());
+    legacy.save(&dir.join(CACHE_FILE)).unwrap();
+    let warm = PersistentBackend::warm_start(
+        CachedBackend::new(Evaluator::for_workload(
+            &*avo::workload::parse("mha").unwrap(),
+        )),
+        &dir,
+    )
+    .expect("legacy mha cache must remain loadable");
+    assert_eq!(warm.warm_entries(), 1);
+    warm.evaluate(&KernelSpec::naive());
+    assert_eq!((warm.cache_stats().hits, warm.cache_stats().misses), (1, 0));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn persisted_cache_refuses_to_cross_workloads() {
+    let dir = std::env::temp_dir().join(format!("avo_wk_cross_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let decode = PersistentBackend::new(CachedBackend::new(Evaluator::for_workload(
+        &*avo::workload::parse("decode:32").unwrap(),
+    )));
+    decode.evaluate(&KernelSpec::naive());
+    decode.save(&dir.join(CACHE_FILE)).unwrap();
+    let err = PersistentBackend::warm_start(
+        CachedBackend::new(Evaluator::for_workload(
+            &*avo::workload::parse("mha").unwrap(),
+        )),
+        &dir,
+    )
+    .unwrap_err();
+    assert!(err.contains("fingerprint mismatch"), "{err}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn transfer_to_decode_adapts_an_evolved_forward_genome() {
+    let driver = EvolutionDriver::new(RunConfig {
+        seed: 2,
+        ..RunConfig::default()
+    });
+    let report = driver
+        .transfer_to("decode:32", avo::baselines::evolved_genome())
+        .unwrap();
+    // Scored on the decode suite, seeded from the evolved genome.
+    let seed_commit = &report.lineage.versions()[0];
+    for (name, t) in &seed_commit.score.per_config {
+        assert!(name.starts_with("dec_b"), "{name}");
+        assert!(*t > 0.0);
+    }
+    // The Update rule guarantees monotonicity from the transfer seed.
+    assert!(report.lineage.best_geomean() >= seed_commit.score.geomean());
+    // Unregistered targets error instead of running a bogus suite.
+    assert!(driver.transfer_to("warp-drive:9", KernelSpec::naive()).is_err());
+}
+
+#[test]
+fn transfer_back_to_mha_from_decode_best() {
+    // The cross-workload path works in both directions: take a (short)
+    // decode run's best genome and adapt it onto the MHA suite.
+    let decode = EvolutionDriver::new(workload_config("decode:32", 4, 4, 20)).run();
+    let best = decode.lineage.best().expect("seeded").spec.clone();
+    let driver = EvolutionDriver::new(RunConfig { seed: 4, ..RunConfig::default() });
+    let report = driver.transfer_to("mha", best).unwrap();
+    let seed_commit = &report.lineage.versions()[0];
+    assert!(seed_commit
+        .score
+        .per_config
+        .iter()
+        .all(|(n, _)| n.starts_with("mha_")));
+    assert!(report.lineage.best_geomean() >= seed_commit.score.geomean());
+}
+
+#[test]
+fn multi_island_decode_run_shares_cache_and_migrates() {
+    let mut cfg = workload_config("decode:32", 13, 5, 30);
+    cfg.topology.islands = 3;
+    cfg.topology.migrate_every = 2;
+    cfg.topology.workers = 2;
+    let report = EvolutionDriver::new(cfg).run();
+    assert_eq!(report.islands.len(), 3);
+    assert!(report.metrics.counter("eval_cache_hits") > 0);
+    for isl in &report.islands {
+        let seed_g = isl.lineage.versions()[0].score.geomean();
+        assert!(isl.lineage.best_geomean() >= seed_g);
+    }
+}
