@@ -9,11 +9,21 @@
 use avo::coordinator::{EvolutionDriver, RunConfig};
 
 fn main() {
-    let batch: u32 = std::env::args()
-        .skip_while(|a| a != "--batch")
-        .nth(1)
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(32);
+    let mut args = std::env::args();
+    let batch: u32 = if args.any(|a| a == "--batch") {
+        match args.next() {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("--batch expects a positive integer, got '{v}'");
+                std::process::exit(2);
+            }),
+            None => {
+                eprintln!("--batch expects a value");
+                std::process::exit(2);
+            }
+        }
+    } else {
+        32
+    };
 
     println!("== AVO decode-attention search: --workload decode:{batch} ==");
     let mut cfg = RunConfig {
@@ -23,7 +33,12 @@ fn main() {
         ..RunConfig::default()
     };
     cfg.workload = format!("decode:{batch}");
-    let driver = EvolutionDriver::new(cfg);
+    // try_new validates the batch range, turning e.g. --batch 0 into a
+    // clean error instead of a construction panic.
+    let driver = EvolutionDriver::try_new(cfg).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
 
     let t0 = std::time::Instant::now();
     let report = driver.run();

@@ -201,8 +201,10 @@ impl RunConfig {
     }
 
     /// Instantiate the configured workload.  Spec strings from config
-    /// files and the CLI are validated at parse time; an invalid
-    /// programmatic value panics here with the registry's error.
+    /// files and the CLI are validated at parse time, and
+    /// [`crate::coordinator::EvolutionDriver::try_new`] validates
+    /// programmatic values at construction; a spec that evades both
+    /// panics here with the registry's error.
     pub fn workload(&self) -> Box<dyn Workload> {
         crate::workload::parse(&self.workload)
             .unwrap_or_else(|e| panic!("invalid workload '{}': {e}", self.workload))

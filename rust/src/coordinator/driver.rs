@@ -121,8 +121,20 @@ pub struct EvolutionDriver {
 }
 
 impl EvolutionDriver {
+    /// Construct a driver, validating the configured workload spec so
+    /// programmatic misuse fails here, at the API boundary, rather than
+    /// deep inside `evaluator()`/`run()`.  Fallible callers can use
+    /// [`Self::try_new`].
     pub fn new(config: RunConfig) -> Self {
-        EvolutionDriver { config }
+        Self::try_new(config).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Like [`Self::new`] but returns the registry's error instead of
+    /// panicking on an invalid workload spec.
+    pub fn try_new(config: RunConfig) -> Result<Self, String> {
+        crate::workload::parse(&config.workload)
+            .map_err(|e| format!("invalid workload '{}': {e}", config.workload))?;
+        Ok(EvolutionDriver { config })
     }
 
     pub fn evaluator(&self) -> Evaluator {
@@ -169,6 +181,11 @@ impl EvolutionDriver {
         cfg.warm_start = None;
         cfg.eval_cache_path = None;
         let driver = EvolutionDriver::new(cfg);
+        // The repair walk runs on a bare Evaluator — uncached, and the
+        // accepted seed is re-evaluated once by run_from's backend stack.
+        // That is ≤ 9 extra simulator evaluations per transfer, bounded
+        // and one-shot; sharing the run's Cached/Persistent stack would
+        // mean extracting backend construction from Archipelago.
         let evaluator = driver.config.evaluator();
         let mut seed = evolved;
         let mut score = evaluator.evaluate(&seed);
@@ -223,6 +240,16 @@ mod tests {
         assert!(report.lineage.len() >= 5, "only {} commits", report.lineage.len());
         assert!(report.metrics.counter("evaluations") > 8);
         assert!(report.lineage.best_geomean() > 600.0);
+    }
+
+    #[test]
+    fn invalid_workload_fails_at_construction() {
+        let cfg = RunConfig {
+            workload: "warp-drive:9".to_string(),
+            ..RunConfig::default()
+        };
+        let err = EvolutionDriver::try_new(cfg).unwrap_err();
+        assert!(err.contains("invalid workload 'warp-drive:9'"), "{err}");
     }
 
     #[test]

@@ -30,9 +30,11 @@ pub struct EvalCache {
     /// Insertion order of live keys, oldest first — the eviction queue.
     /// A key appears at most once (re-inserting an existing key is a
     /// no-op, and eviction removes the key from both structures).
+    /// Maintained only while `max_entries` is set; unbounded caches skip
+    /// it so the sharded fast path has no global lock.
     order: Mutex<VecDeque<u64>>,
-    /// Live entry count (kept in lock-step with the shards), so the
-    /// eviction cap check never has to lock every shard.
+    /// Live entry count (kept in lock-step with the shards while capped),
+    /// so the eviction cap check never has to lock every shard.
     live: AtomicU64,
     /// Entry cap (`--eval-cache-max-entries`); None = unbounded.
     max_entries: Option<usize>,
@@ -54,13 +56,41 @@ impl EvalCache {
     }
 
     /// Bound the cache to `max` entries (floored at 1), evicting
-    /// oldest-first on insert.  Eviction never perturbs results — a
+    /// oldest-first — immediately if already over the cap, then on each
+    /// fresh insert.  Eviction never perturbs results — a
     /// re-requested evicted genome recomputes to the identical score (the
     /// determinism contract) — it only bounds memory and the persisted
     /// `eval_cache.json`.  Oldest-first is exact for a sequential caller;
     /// under concurrent inserts it follows the observed interleaving.
     pub fn set_max_entries(&mut self, max: usize) {
-        self.max_entries = Some(max.max(1));
+        if self.max_entries.is_none() {
+            // Eviction bookkeeping is skipped while unbounded (so the
+            // default configuration never serializes inserts on the order
+            // mutex or grows a mirror queue); rebuild it from the live
+            // entries when the cap is first enabled.  Sorted key order
+            // stands in for the untracked insertion order — deterministic,
+            // which is all eviction promises.
+            let mut keys: Vec<u64> = self
+                .shards
+                .iter_mut()
+                .flat_map(|s| s.get_mut().unwrap().keys().copied().collect::<Vec<_>>())
+                .collect();
+            keys.sort_unstable();
+            *self.live.get_mut() = keys.len() as u64;
+            *self.order.get_mut().unwrap() = keys.into_iter().collect();
+        }
+        let max = max.max(1);
+        self.max_entries = Some(max);
+        // Enforce the bound immediately: a cap set on a populated cache
+        // must hold for len()/snapshot() without waiting for an insert.
+        while *self.live.get_mut() > max as u64 {
+            let Some(victim) = self.order.get_mut().unwrap().pop_front() else {
+                break;
+            };
+            if self.shard(victim).lock().unwrap().remove(&victim).is_some() {
+                *self.live.get_mut() -= 1;
+            }
+        }
     }
 
     pub fn max_entries(&self) -> Option<usize> {
@@ -72,17 +102,18 @@ impl EvalCache {
     }
 
     /// Record a fresh insert in the eviction queue and enforce the cap.
-    /// The cap check reads the O(1) live counter, not the shards.
+    /// The cap check reads the O(1) live counter, not the shards.  A
+    /// no-op while unbounded: the queue and counter are only maintained
+    /// (see [`Self::set_max_entries`]) when there is a cap to enforce.
     fn record_insert(&self, key: u64) {
+        let Some(max) = self.max_entries else { return };
         self.order.lock().unwrap().push_back(key);
         self.live.fetch_add(1, Ordering::Relaxed);
-        if let Some(max) = self.max_entries {
-            while self.live.load(Ordering::Relaxed) > max as u64 {
-                let victim = self.order.lock().unwrap().pop_front();
-                let Some(victim) = victim else { break };
-                if self.shard(victim).lock().unwrap().remove(&victim).is_some() {
-                    self.live.fetch_sub(1, Ordering::Relaxed);
-                }
+        while self.live.load(Ordering::Relaxed) > max as u64 {
+            let victim = self.order.lock().unwrap().pop_front();
+            let Some(victim) = victim else { break };
+            if self.shard(victim).lock().unwrap().remove(&victim).is_some() {
+                self.live.fetch_sub(1, Ordering::Relaxed);
             }
         }
     }
@@ -98,16 +129,7 @@ impl EvalCache {
         }
         let score = compute();
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let fresh = match self.shard(key).lock().unwrap().entry(key) {
-            Entry::Vacant(v) => {
-                v.insert(score.clone());
-                true
-            }
-            Entry::Occupied(_) => false,
-        };
-        if fresh {
-            self.record_insert(key);
-        }
+        self.insert(key, score.clone());
         score
     }
 
@@ -328,6 +350,29 @@ mod tests {
         assert_eq!(cache.len(), 2);
         assert!(cache.get(1).is_none());
         assert!(cache.get(2).is_some() && cache.get(3).is_some());
+    }
+
+    #[test]
+    fn enabling_cap_on_populated_cache_rebuilds_bookkeeping() {
+        // Unbounded inserts skip eviction bookkeeping; set_max_entries
+        // must reconstruct it (sorted-key order) so the cap still holds.
+        let mut cache = EvalCache::new(4);
+        let eval = Evaluator::new(mha_suite());
+        let score = eval.evaluate(&KernelSpec::naive());
+        for key in [5u64, 1, 9] {
+            cache.insert(key, score.clone());
+        }
+        cache.set_max_entries(3);
+        cache.insert(7, score.clone());
+        assert_eq!(cache.len(), 3);
+        assert!(cache.get(1).is_none(), "lowest key evicted first");
+        assert!(cache.get(5).is_some() && cache.get(9).is_some() && cache.get(7).is_some());
+        // Tightening the cap below the current population drains
+        // immediately, without waiting for the next insert.
+        cache.set_max_entries(2);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(5).is_none(), "oldest survivor evicted on tighten");
+        assert!(cache.get(9).is_some() && cache.get(7).is_some());
     }
 
     #[test]

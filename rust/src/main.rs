@@ -42,7 +42,8 @@ fn usage() -> ! {
          \u{20}         --seed N --commits N --steps N --operator avo|single_turn|pes\n\
          \u{20}         --operators OP[,OP...]  (heterogeneous islands, round-robin)\n\
          \u{20}         --islands N --migration ring|broadcast_best|random_pairs\n\
-         \u{20}         --migrate-every K --island-workers N --adaptive-migration\n\
+         \u{20}         --migrate-every K --island-workers N\n\
+         \u{20}         --adaptive-migration --adaptive-stall-epochs K\n\
          \u{20}         --warm-start DIR  (reuse a prior run's eval cache)\n\
          \u{20}         --eval-cache-max-entries N  --speculative-repair\n\
          \u{20}         --config FILE --out DIR\n\
@@ -161,6 +162,7 @@ fn main() -> Result<(), CliError> {
                 avo::eval::persist::validate(dir, avo::EvalBackend::cache_tag(&cfg.evaluator()))
                     .map_err(|e| format!("warm-start: {e}"))?;
             }
+            let suite = cfg.evaluator().suite;
             let report = EvolutionDriver::new(cfg).run();
             println!("{}", report.summary());
             if report.islands.len() > 1 {
@@ -195,29 +197,55 @@ fn main() -> Result<(), CliError> {
             }
             println!("{}", report.metrics.report());
             if let Some(dir) = &out_dir {
-                std::fs::write(
-                    dir.join("trajectory_causal.json"),
-                    report.lineage.trajectory_json(true).pretty(),
-                )?;
-                std::fs::write(
-                    dir.join("trajectory_noncausal.json"),
-                    report.lineage.trajectory_json(false).pretty(),
-                )?;
-                println!("wrote lineage + trajectories + eval cache to {}", dir.display());
+                // Only regimes the suite actually contains: a decode run
+                // has no causal cells, and an all-zero trajectory file
+                // would read as a broken run.  An absent regime's file is
+                // removed so a reused --out directory can't serve a stale
+                // trajectory from a different workload.
+                let mut artifacts = vec!["lineage"];
+                if suite.iter().any(|c| c.causal) {
+                    std::fs::write(
+                        dir.join("trajectory_causal.json"),
+                        report.lineage.trajectory_json(true).pretty(),
+                    )?;
+                    artifacts.push("causal trajectory");
+                } else {
+                    std::fs::remove_file(dir.join("trajectory_causal.json")).ok();
+                }
+                if suite.iter().any(|c| !c.causal) {
+                    std::fs::write(
+                        dir.join("trajectory_noncausal.json"),
+                        report.lineage.trajectory_json(false).pretty(),
+                    )?;
+                    artifacts.push("non-causal trajectory");
+                } else {
+                    std::fs::remove_file(dir.join("trajectory_noncausal.json")).ok();
+                }
+                artifacts.push("eval cache");
+                println!("wrote {} to {}", artifacts.join(" + "), dir.display());
             }
         }
         "transfer" => {
             let lineage_path = flags.get("--lineage").unwrap_or_else(|| usage());
             // Target workload: --workload SPEC, or the legacy --kv-heads
             // shorthand for the paper's GQA transfer.
-            let target = match flags.get("--workload") {
+            let (target, out_name) = match flags.get("--workload") {
                 Some(w) => {
+                    if flags.has("--kv-heads") {
+                        return Err(
+                            "--workload and --kv-heads are mutually exclusive \
+                             (--kv-heads N is shorthand for --workload gqa:N)"
+                                .into(),
+                        );
+                    }
                     avo::workload::parse(w)?;
-                    w.to_string()
+                    (w.to_string(), format!("{}_lineage.json", w.replace(':', "_")))
                 }
                 None => {
                     let kv: u32 = flags.parse_strict("--kv-heads")?.unwrap_or(4);
-                    format!("gqa:{kv}")
+                    // The legacy shorthand keeps its legacy output name so
+                    // scripts consuming gqa_lineage.json keep working.
+                    (format!("gqa:{kv}"), "gqa_lineage.json".to_string())
                 }
             };
             let lineage = Lineage::load(std::path::Path::new(lineage_path))?;
@@ -228,10 +256,7 @@ fn main() -> Result<(), CliError> {
             }
             if let Some(dir) = flags.get("--out") {
                 std::fs::create_dir_all(dir)?;
-                cfg.lineage_path = Some(
-                    PathBuf::from(dir)
-                        .join(format!("{}_lineage.json", target.replace(':', "_"))),
-                );
+                cfg.lineage_path = Some(PathBuf::from(dir).join(out_name));
             }
             let report = EvolutionDriver::new(cfg).transfer_to(&target, evolved)?;
             println!("transfer onto {target}: {}", report.summary());

@@ -73,8 +73,18 @@ impl BenchConfig {
     /// suite).  The single query is the newest token, so it sees the whole
     /// cache and no mask work is needed (`causal = false`).
     pub fn decode(batch: u32, kv_len: u32, q_heads: u32, kv_heads: u32) -> Self {
+        // A kv_len = 1 cell would fail is_decode() (q_len == seq_len == 1)
+        // and silently route to the forward tile cost model.
+        assert!(kv_len > 1, "decode cell requires kv_len > 1, got {kv_len}");
         BenchConfig {
-            name: format!("dec_b{batch}_{kv_len}"),
+            // Head configuration is part of the name (kv_heads directly,
+            // not the integer-division group, which non-divisor configs
+            // can alias): cells differing only in q/kv heads must not
+            // collide in suite_tag or per-config score lookup.  The `_nc_`
+            // marker keeps the name-based causal/non-causal splits
+            // (trajectory export, geomean views) working: every decode
+            // cell is non-causal.
+            name: format!("dec_b{batch}_h{q_heads}k{kv_heads}_nc_{kv_len}"),
             batch,
             q_heads,
             kv_heads,
@@ -248,7 +258,9 @@ pub struct Evaluator {
     /// [`crate::workload::Workload::workload_tag`] of the scenario this
     /// suite belongs to, folded into [`Self::suite_tag`] so evaluation
     /// caches from different workloads can never collide even if their
-    /// suite cells hash alike.  0 for ad-hoc evaluators.
+    /// suite cells hash alike.  0 (ad-hoc evaluators and the attention
+    /// workloads) is the legacy sentinel and is NOT folded, preserving
+    /// the pre-workload-refactor fingerprint of saved caches.
     pub workload_tag: u64,
 }
 
@@ -286,7 +298,12 @@ impl Evaluator {
             h = fnv1a(h, c.name.as_bytes());
             h = fnv1a(h, b";");
         }
-        h = fnv1a(h, &self.workload_tag.to_le_bytes());
+        // Legacy sentinel 0 is NOT folded: pre-workload-refactor caches
+        // were fingerprinted without any workload bytes, and MHA/GQA keep
+        // tag 0 precisely so those eval_cache.json files stay warm-startable.
+        if self.workload_tag != 0 {
+            h = fnv1a(h, &self.workload_tag.to_le_bytes());
+        }
         fnv1a(h, &self.functional_seed.to_le_bytes())
     }
 

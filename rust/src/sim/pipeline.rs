@@ -508,26 +508,38 @@ pub fn simulate_decode(spec: &KernelSpec, cfg: &BenchConfig, m: &MachineSpec) ->
         group * d * 2.0 / m.hbm_bytes_per_cycle() + group * d * 2.0 / m.vec_ops_per_cycle;
     let epilogue = if spec.epilogue_async { epilogue_raw * 0.15 } else { epilogue_raw };
 
-    let cta_cost = prologue + blocks_per_split as f64 * iter + reduce + epilogue;
+    // Per split CTA: load Q, stream its share of the KV blocks.  The
+    // merge of the split partials and the final normalize/store happen
+    // ONCE per tile (on the reducing CTA, after its own split finishes),
+    // not once per split — charging them per CTA would overcount the
+    // one-merge-per-tile cost by the split factor.
+    let cta_work = prologue + blocks_per_split as f64 * iter;
+    let cta_cost = cta_work + reduce + epilogue;
     let total_ctas = base_tiles * splits;
     let sms = m.sms as f64;
-    let total_work = total_ctas as f64 * cta_cost;
+    let total_work = total_ctas as f64 * cta_work + base_tiles as f64 * (reduce + epilogue);
     let makespan = match spec.scheduling {
         // One CTA per hardware slot: equal-cost tiles quantize into waves.
         Scheduling::PerTile => (total_ctas as f64 / sms).ceil() * cta_cost,
         // Persistent CTAs stream work items: no wave quantization beyond a
-        // small per-run pull overhead.
-        Scheduling::Persistent => total_work / sms + cta_cost * 0.05 + m.handoff_cycles,
+        // small per-run pull overhead.  Floored at one CTA's own cost —
+        // with fewer CTAs than SMs the critical path is a single work
+        // item, and total_work/sms alone would model the impossible
+        // (finishing faster than any one CTA can run).
+        Scheduling::Persistent => {
+            (total_work / sms + cta_cost * 0.05 + m.handoff_cycles).max(cta_cost)
+        }
     };
 
     // ---------------- breakdown ------------------------------------------
     let iters_total = (total_ctas * blocks_per_split) as f64;
     let ctas_f = total_ctas as f64;
+    let tiles_f = base_tiles as f64;
     let mut agg = Breakdown {
         mma_qk: qk * iters_total,
         mma_pv: pv * iters_total,
         softmax: softmax * iters_total,
-        correction: corr_compute * iters_total + reduce * ctas_f,
+        correction: corr_compute * iters_total + reduce * tiles_f,
         sync: sync * iters_total,
         fence: fence * iters_total,
         handoff: m.handoff_cycles * iters_total,
@@ -536,7 +548,7 @@ pub fn simulate_decode(spec: &KernelSpec, cfg: &BenchConfig, m: &MachineSpec) ->
         spill_other: spill_o_cyc * iters_total,
         tma_exposed: tma_exposed_per_iter * iters_total,
         prologue: prologue * ctas_f,
-        epilogue: epilogue * ctas_f,
+        epilogue: epilogue * tiles_f,
         ..Breakdown::default()
     };
     agg.tail_waste = (makespan - total_work / sms).max(0.0) * sms;

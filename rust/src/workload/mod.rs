@@ -166,9 +166,13 @@ pub trait Workload: Send + Sync {
     /// Tag folded into [`crate::score::Evaluator::suite_tag`] (and thereby
     /// into every cache key and persisted-cache fingerprint).  The default
     /// hashes the canonical name, which is unique per registered workload;
-    /// the attention workloads override it to 0 — the pre-workload cache
-    /// identity — so `eval_cache.json` files saved before the workload
-    /// seam stay loadable (their suites already fingerprint distinctly).
+    /// the attention workloads override it to 0 — the legacy sentinel that
+    /// `suite_tag` skips entirely — so `eval_cache.json` files saved
+    /// before the workload seam stay loadable (their suites already
+    /// fingerprint distinctly).  New workloads must NOT override this to
+    /// 0: a tag-0 workload's cache identity rests on its suite-cell names
+    /// alone, which is exactly the grandfathered weakness the tag exists
+    /// to close.
     fn workload_tag(&self) -> u64 {
         tag_of(&self.name())
     }

@@ -177,13 +177,59 @@ fn cross_workload_cache_identity_never_collides() {
     }
 }
 
+/// `Evaluator::suite_tag` of `Evaluator::new(mha_suite())` and
+/// `Evaluator::new(gqa_suite(4))` as computed by commit `bfe02eb` — the
+/// last pre-workload-refactor revision, whose `suite_tag` had no
+/// workload-tag fold at all.  These are the suite halves of the
+/// fingerprints real `eval_cache.json` files written before the refactor
+/// carry (the persisted fingerprint is `suite_tag ^
+/// MachineSpec::fingerprint()`), so they are goldens, not derived values:
+/// if either assertion below starts failing, the fix is to restore the
+/// legacy hash identity, NOT to update the constant.  The machine half is
+/// deliberately left live — recalibrating a cost constant is SUPPOSED to
+/// invalidate saved caches.
+const PRE_REFACTOR_MHA_SUITE_TAG: u64 = 0x274f235cfb6de46c;
+const PRE_REFACTOR_GQA4_SUITE_TAG: u64 = 0xf583a045b691f414;
+
 #[test]
 fn legacy_cache_files_still_warm_start_attention_workloads() {
     // A cache saved under the pre-workload construction (ad-hoc evaluator,
     // no workload tag) must load under the MhaForward workload: the
-    // attention workloads keep the legacy fingerprint.
+    // attention workloads keep the legacy fingerprint.  Anchored against
+    // hard-coded pre-refactor goldens so the check cannot go circular
+    // (both sides built with post-refactor code would pass even if the
+    // fingerprint drifted for everyone).
+    assert_eq!(
+        Evaluator::for_workload(&*avo::workload::parse("mha").unwrap()).suite_tag(),
+        PRE_REFACTOR_MHA_SUITE_TAG
+    );
+    assert_eq!(
+        Evaluator::for_workload(&*avo::workload::parse("gqa:4").unwrap()).suite_tag(),
+        PRE_REFACTOR_GQA4_SUITE_TAG
+    );
     let dir = std::env::temp_dir().join(format!("avo_wk_legacy_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
+    // A pre-refactor file: its fingerprint's suite half is the golden
+    // constant (not recomputed by any current suite-hashing code) XOR the
+    // live machine fingerprint.  It must pass the warm-start check.
+    let legacy_fingerprint =
+        PRE_REFACTOR_MHA_SUITE_TAG ^ avo::MachineSpec::b200().fingerprint();
+    std::fs::write(
+        dir.join(CACHE_FILE),
+        format!(
+            "{{\"version\": 1, \"fingerprint\": \"{legacy_fingerprint:016x}\", \
+             \"entries\": []}}"
+        ),
+    )
+    .unwrap();
+    PersistentBackend::warm_start(
+        CachedBackend::new(Evaluator::for_workload(
+            &*avo::workload::parse("mha").unwrap(),
+        )),
+        &dir,
+    )
+    .expect("pre-refactor mha cache file must remain loadable");
+    // And a populated legacy-construction cache round-trips its entries.
     let legacy = PersistentBackend::new(CachedBackend::new(Evaluator::new(mha_suite())));
     legacy.evaluate(&KernelSpec::naive());
     legacy.save(&dir.join(CACHE_FILE)).unwrap();
