@@ -1,0 +1,89 @@
+//! Staged agent-runtime microbenchmarks, plus the lookahead batching gate.
+//!
+//! Times short AVO runs under the default one-at-a-time configuration and
+//! under refinement-lookahead + speculative-repair batching, then prints
+//! the per-stage wall-clock breakdown from the merged [`AgentTrace`].
+//!
+//! Doubles as a CI gate (like `benches/hotpath.rs`): after timing, it
+//! asserts the acceptance bar for the batching work — at `--lookahead 8`
+//! with speculative repair the agent must issue measurably fewer
+//! `evaluate_batch` calls than the one-at-a-time path needs for the same
+//! number of evaluations, while the default configuration must keep the
+//! strict one-call-per-evaluation shape that byte-for-byte archive parity
+//! rests on.
+
+use avo::agent::{AgentTrace, AvoAgent, AvoConfig, VariationOperator};
+use avo::benchkit::Bench;
+use avo::eval::CountingBackend;
+use avo::evolution::Lineage;
+use avo::kernelspec::KernelSpec;
+use avo::score::{mha_suite, Evaluator};
+
+/// Run `steps` AVO variation steps; return (commits, merged trace, stats).
+fn run(config: AvoConfig, seed: u64, steps: usize) -> (usize, AgentTrace, u64, u64, u64) {
+    let rec = CountingBackend::new(Evaluator::new(mha_suite()));
+    let mut lineage = Lineage::new();
+    let seed_spec = KernelSpec::naive();
+    let score = rec.inner().evaluate(&seed_spec);
+    lineage.seed(seed_spec, score, "seed x0: naive tiled attention");
+    let mut agent = AvoAgent::new(config, seed);
+    let mut trace = AgentTrace::default();
+    for step in 1..=steps {
+        let outcome = agent.step(&mut lineage, &rec, step);
+        trace.merge(&outcome.trace);
+    }
+    (lineage.len(), trace, rec.calls(), rec.evals(), rec.max_width())
+}
+
+fn lookahead_config(k: usize) -> AvoConfig {
+    let mut cfg = AvoConfig::default();
+    cfg.lookahead = k;
+    cfg.speculative_repair = true;
+    cfg
+}
+
+fn main() {
+    let mut b = Bench::new("agent_stages").with_iters(1, 5);
+    b.case("avo_10_steps_one_at_a_time", || run(AvoConfig::default(), 42, 10));
+    b.case("avo_10_steps_lookahead4", || run(lookahead_config(4), 42, 10));
+    b.case("avo_10_steps_lookahead8", || run(lookahead_config(8), 42, 10));
+    b.finish();
+
+    // Stage breakdown of a representative run (observability, not a gate).
+    let (_, trace, _, _, _) = run(AvoConfig::default(), 7, 15);
+    println!("stage breakdown (15 default steps):");
+    for (stage, stat) in &trace.stages {
+        println!(
+            "  {stage:<10} {:>5} runs  {:>8.2} ms",
+            stat.runs,
+            stat.nanos as f64 / 1e6
+        );
+    }
+
+    // == batching gate (CI) ==
+    // The same contract (and the 0.8 call-reduction threshold) is pinned
+    // suite-side by tests/operator_parity.rs::lookahead_one_changes_nothing
+    // and ::lookahead_cuts_backend_calls_per_evaluation — keep the two in
+    // sync.  This copy is the *bench-side* gate the acceptance criteria
+    // name: a batching regression fails `cargo bench --bench agent_stages`,
+    // not just the numbers.
+    let (_, trace, calls, evals, width) = run(AvoConfig::default(), 42, 15);
+    assert_eq!(width, 1, "default flags must never widen a batch");
+    assert_eq!(calls, evals, "default flags: one backend call per evaluation");
+    assert_eq!(trace.eval_batches, calls, "trace must account every backend call");
+    assert_eq!(trace.evals, evals, "trace must account every evaluation");
+
+    let (commits, trace8, calls8, evals8, width8) = run(lookahead_config(8), 42, 15);
+    assert!(commits > 1, "lookahead run never committed");
+    assert!(width8 >= 2, "lookahead never widened a batch");
+    assert!(
+        (calls8 as f64) < 0.8 * (evals8 as f64),
+        "lookahead 8 + speculative repair must cut backend calls by >20% \
+         per evaluation: {calls8} calls / {evals8} evals"
+    );
+    assert_eq!(trace8.eval_batches, calls8);
+    println!(
+        "batching gate OK: one-at-a-time {calls}/{evals} calls/evals, \
+         lookahead8 {calls8}/{evals8} (max width {width8})"
+    );
+}

@@ -1,35 +1,42 @@
 //! The Agentic Variation Operator (§3): a self-directed loop that subsumes
 //! Sample, Generate, and evaluation.
 //!
-//! One variation step (§3.2):
-//! 1. **Profile** — read the profiler report of the current best `x` (and,
-//!    sometimes, of earlier lineage members for comparison);
-//! 2. **Select a direction** — weight the profiler's bottleneck ranking by
-//!    knowledge-base priors, by the agent's memory of what has already
-//!    failed, by its strategy phase (structural early, micro-architectural
-//!    late — the behaviour the paper observes), and by any supervisor
-//!    directive;
-//! 3. **Propose** — draw an edit from the catalogue through KB retrieval,
-//!    or port fields from an earlier lineage member (crossover);
-//! 4. **Evaluate** with the scoring function `f`;
-//! 5. **Diagnose & repair** on failure (compile error or correctness
-//!    class), re-evaluating up to the repair budget;
-//! 6. **Refine** — on success, continue stacking edits within the step
-//!    until improvement stalls, then **commit** through the Update rule.
+//! One variation step (§3.2), as a [`StagePipeline`] over the stages in
+//! [`crate::agent::stages`]:
+//!
+//! 1. **Consult** — read the profiler report of the current best `x` (and,
+//!    sometimes, of earlier lineage members for comparison), folding
+//!    bottleneck shares into direction weights;
+//! 2. **Propose** — select a direction (weighted by the profiler ranking,
+//!    knowledge-base priors, the agent's memory of what has already
+//!    failed, its strategy phase, and any supervisor directive) and source
+//!    candidates: KB catalogue edits, lineage crossover, or cross-island
+//!    migrants — up to [`AvoConfig::lookahead`] edits at once;
+//! 3. **Repair** — evaluate with the scoring function `f`, walking the
+//!    ranked repair table on failure (speculatively batched under
+//!    [`AvoConfig::speculative_repair`]);
+//! 4. **Critique** — refine while improving, then score-delta triage and
+//!    hazard classification;
+//! 5. **Verify** — commit through the Update rule and update the
+//!    per-direction memory.
+//!
+//! The pipeline loops Propose→Repair→Critique→Verify until a commit lands
+//! or [`AvoConfig::inner_budget`] evaluations are spent.  At default flags
+//! it replays the pre-refactor monolithic `AvoAgent::step` PRNG stream
+//! draw-for-draw (pinned by `rust/tests/operator_parity.rs`).
 
-use std::collections::HashMap;
-
-use crate::agent::{diagnose, AgentAction, StepOutcome, VariationOperator};
+use crate::agent::stages::consult::Consult;
+use crate::agent::stages::critique::Critique;
+use crate::agent::stages::propose::{Propose, ProposePolicy};
+use crate::agent::stages::repair::Repair;
+use crate::agent::stages::verify::{Verify, VerifyStyle};
+use crate::agent::stages::{AgentState, StagePipeline};
+use crate::agent::{StepOutcome, VariationOperator};
 use crate::eval::EvalBackend;
 use crate::evolution::Lineage;
 use crate::islands::Migrant;
-use crate::kernelspec::{Direction, Edit, KernelSpec};
-use crate::knowledge::KnowledgeBase;
-use crate::prng::Rng;
-use crate::score::{BenchConfig, Score};
-use crate::sim::profile::{profile, ProfileReport};
 use crate::supervisor::Directive;
-use crate::workload::{PhaseSchedule, Workload};
+use crate::workload::Workload;
 
 /// Tunables of the agent loop.
 #[derive(Debug, Clone)]
@@ -53,6 +60,15 @@ pub struct AvoConfig {
     /// and take the first correct one in table order, instead of walking
     /// the table one evaluation at a time.
     pub speculative_repair: bool,
+    /// Refinement lookahead batching (`--lookahead <k>`): the Propose and
+    /// Critique stages accumulate up to `k` candidate edits per direction
+    /// and submit them as a single `evaluate_batch`, instead of proposing
+    /// and scoring one at a time.  `1` (the default) preserves the
+    /// monolithic one-at-a-time behavior byte-for-byte; larger values
+    /// trade extra (batchable, cache-friendly) evaluations for fewer
+    /// backend round-trips per candidate considered.  Batch width is
+    /// clamped to the step's remaining [`AvoConfig::inner_budget`].
+    pub lookahead: usize,
 }
 
 impl Default for AvoConfig {
@@ -66,436 +82,66 @@ impl Default for AvoConfig {
             phase_boost: 2.5,
             novelty_decay: 0.6,
             speculative_repair: false,
+            lookahead: 1,
         }
     }
 }
 
-/// Per-direction memory (the agent's accumulated experience).
-#[derive(Debug, Clone, Default)]
-struct DirMemory {
-    tried: usize,
-    /// Consecutive tries with no committed gain.
-    barren: usize,
-    banned_for: usize,
-}
-
-/// The AVO agent.
+/// The AVO agent: a [`StagePipeline`] configured with the full consult /
+/// propose / repair / critique / verify loop.
 pub struct AvoAgent {
-    pub config: AvoConfig,
-    kb: KnowledgeBase,
-    /// Workload phase schedule (attention defaults from `new`; rebind with
-    /// [`Self::with_workload`]).
-    phases: PhaseSchedule,
-    rng: Rng,
-    memory: HashMap<Direction, DirMemory>,
-    /// Supervisor boost, decayed each step.
-    boosted: Vec<Direction>,
-    /// Elites received from other islands, consumed as crossover donors
-    /// (oldest first).  Empty outside island-model runs, so the sequential
-    /// regime draws exactly the same PRNG stream as before.
-    migrants: Vec<Migrant>,
+    pipeline: StagePipeline,
 }
 
 impl AvoAgent {
     pub fn new(config: AvoConfig, seed: u64) -> Self {
-        AvoAgent {
-            config,
-            kb: KnowledgeBase::paper_kb(),
-            phases: PhaseSchedule::attention(),
-            rng: Rng::new(seed),
-            memory: HashMap::new(),
-            boosted: Vec::new(),
-            migrants: Vec::new(),
-        }
+        let state = AgentState::new(config, seed);
+        let pipeline = StagePipeline::new(
+            "avo",
+            state,
+            vec![Box::new(Consult)],
+            vec![
+                Box::new(Propose::new(ProposePolicy::Directed)),
+                Box::new(Repair::avo()),
+                Box::new(Critique::avo()),
+                Box::new(Verify::new(VerifyStyle::Avo)),
+            ],
+            true,
+        );
+        AvoAgent { pipeline }
     }
 
-    /// Rebind the agent to a workload's knowledge base and phase schedule.
-    /// The attention defaults from [`Self::new`] equal the MHA/GQA
-    /// workloads' exactly (and rebinding draws no randomness), so this is
-    /// behavior-preserving for the paper's runs.
+    /// Rebind the agent to a workload's knowledge base, phase schedule,
+    /// and stage tuning.  The attention defaults from [`Self::new`] equal
+    /// the MHA/GQA workloads' exactly (and rebinding draws no randomness),
+    /// so this is behavior-preserving for the paper's runs.
     pub fn with_workload(mut self, workload: &dyn Workload) -> Self {
-        self.kb = workload.knowledge_base();
-        self.phases = workload.phase_schedule();
+        self.pipeline.bind_workload(workload);
         self
     }
 
-    /// Directions the current strategy phase favours (the paper: "early
-    /// steps may focus on structural changes ... later steps can shift
-    /// toward micro-architectural tuning").  The sets come from the
-    /// workload's [`PhaseSchedule`]; the boundaries from [`AvoConfig`].
-    fn phase_directions(&self, committed: usize) -> &[Direction] {
-        self.phases.for_phase(
-            committed,
-            self.config.structural_until,
-            self.config.algorithmic_until,
-        )
-    }
-
-    /// Merge profiler reports of the causal and non-causal flagship cells
-    /// into direction weights.
-    fn bottleneck_weights(&self, reports: &[ProfileReport]) -> HashMap<Direction, f64> {
-        let mut w = HashMap::new();
-        for r in reports {
-            for b in &r.bottlenecks {
-                *w.entry(b.direction).or_insert(0.0) += b.share;
-            }
-        }
-        w
-    }
-
-    fn choose_direction(
-        &mut self,
-        weights: &HashMap<Direction, f64>,
-        committed: usize,
-    ) -> Direction {
-        let phase = self.phase_directions(committed);
-        let dirs: Vec<Direction> = Direction::ALL
-            .into_iter()
-            .filter(|d| {
-                self.memory
-                    .get(d)
-                    .map(|m| m.banned_for == 0)
-                    .unwrap_or(true)
-            })
-            .collect();
-        let dirs = if dirs.is_empty() { Direction::ALL.to_vec() } else { dirs };
-        let ws: Vec<f64> = dirs
-            .iter()
-            .map(|d| {
-                let bottleneck = weights.get(d).copied().unwrap_or(0.01).max(0.01);
-                let kb_prior = self
-                    .kb
-                    .retrieve(*d)
-                    .first()
-                    .map(|doc| doc.prior)
-                    .unwrap_or(0.1);
-                let barren = self.memory.get(d).map(|m| m.barren).unwrap_or(0);
-                let novelty = self.config.novelty_decay.powi(barren as i32);
-                let phase_mult = if phase.contains(d) { self.config.phase_boost } else { 1.0 };
-                let boost = if self.boosted.contains(d) { 3.0 } else { 1.0 };
-                bottleneck * kb_prior * novelty * phase_mult * boost
-            })
-            .collect();
-        dirs[self.rng.weighted(&ws)]
-    }
-
-    /// Draw an edit for the direction (KB-weighted, no-ops filtered).
-    fn propose_edit(&mut self, direction: Direction, base: &KernelSpec) -> Option<Edit> {
-        let candidates: Vec<(Edit, f64)> = self
-            .kb
-            .edits_for(direction)
-            .into_iter()
-            .filter(|(e, _)| !e.is_noop(base))
-            .collect();
-        if candidates.is_empty() {
-            return None;
-        }
-        let ws: Vec<f64> = candidates.iter().map(|(_, w)| *w).collect();
-        Some(candidates[self.rng.weighted(&ws)].0.clone())
-    }
-
-    /// Evaluate with diagnose/repair loop.  Returns the final candidate,
-    /// its score, and the evaluation count consumed.
-    ///
-    /// Every candidate — the initial proposal and each repair round — goes
-    /// through the backend's batched entry point.  The agent's §3.2
-    /// semantics are sequential by default (each repair conditions on the
-    /// previous failure class), so those batches are singletons; with
-    /// [`AvoConfig::speculative_repair`] a failed candidate's whole ranked
-    /// repair table goes out as one batch instead, and the first correct
-    /// candidate in table order wins — trading extra (parallelizable)
-    /// evaluations for never spending a second round on a fixable failure.
-    fn evaluate_with_repair(
-        &mut self,
-        eval: &dyn EvalBackend,
-        mut cand: KernelSpec,
-        actions: &mut Vec<AgentAction>,
-    ) -> (KernelSpec, Score, usize) {
-        let mut score = eval
-            .evaluate_batch(std::slice::from_ref(&cand))
-            .pop()
-            .expect("one score per candidate");
-        let mut evals = 1;
-        actions.push(AgentAction::Evaluate {
-            geomean: score.geomean(),
-            failure: score.failure.clone(),
-        });
-        let mut repairs_left = self.config.repair_budget;
-        while let Some(failure) = score.failure.clone() {
-            if repairs_left == 0 {
-                break;
-            }
-            repairs_left -= 1;
-            let repairs = diagnose::repairs_for(&failure, &cand);
-            if repairs.is_empty() {
-                break;
-            }
-            if self.config.speculative_repair && repairs.len() > 1 {
-                // Speculative batch: evaluate the whole ranked repair
-                // table at once and keep the first correct candidate in
-                // table order.  If none passes, fall back to the
-                // top-ranked (still-failing) candidate so the next round
-                // re-diagnoses from the strongest repair, exactly as the
-                // sequential path would.
-                let cands: Vec<KernelSpec> =
-                    repairs.iter().map(|r| r.apply(&cand)).collect();
-                let scores = eval.evaluate_batch(&cands);
-                evals += cands.len();
-                let pick = scores
-                    .iter()
-                    .position(|s| s.is_correct())
-                    .unwrap_or(0);
-                actions.push(AgentAction::Diagnose {
-                    failure: failure.to_string(),
-                    repair: repairs[pick].rationale.to_string(),
-                });
-                cand = cands
-                    .into_iter()
-                    .nth(pick)
-                    .expect("pick indexes the candidate batch");
-                score = scores
-                    .into_iter()
-                    .nth(pick)
-                    .expect("pick indexes the score batch");
-            } else {
-                let repair = &repairs[0];
-                actions.push(AgentAction::Diagnose {
-                    failure: failure.to_string(),
-                    repair: repair.rationale.to_string(),
-                });
-                cand = repair.apply(&cand);
-                score = eval
-                    .evaluate_batch(std::slice::from_ref(&cand))
-                    .pop()
-                    .expect("one score per candidate");
-                evals += 1;
-            }
-            actions.push(AgentAction::Evaluate {
-                geomean: score.geomean(),
-                failure: score.failure.clone(),
-            });
-        }
-        (cand, score, evals)
-    }
-
-    fn remember(&mut self, direction: Direction, produced_commit: bool) {
-        let m = self.memory.entry(direction).or_default();
-        m.tried += 1;
-        if produced_commit {
-            m.barren = 0;
-        } else {
-            m.barren += 1;
-        }
-    }
-
-    fn decay_bans(&mut self) {
-        for m in self.memory.values_mut() {
-            m.banned_for = m.banned_for.saturating_sub(1);
-        }
+    /// The persistent agent state (configuration, memory, migrant pool,
+    /// PRNG stream).
+    pub fn state(&self) -> &AgentState {
+        &self.pipeline.state
     }
 }
 
 impl VariationOperator for AvoAgent {
     fn name(&self) -> &'static str {
-        "avo"
+        self.pipeline.name()
     }
 
     fn step(&mut self, lineage: &mut Lineage, eval: &dyn EvalBackend, step: usize) -> StepOutcome {
-        let mut out = StepOutcome::default();
-        self.decay_bans();
-        let best = lineage.best().expect("lineage must be seeded").clone();
-
-        // 1. Profile the current best on the flagship cells of each regime
-        //    present in the suite.
-        let flagship: Vec<BenchConfig> = {
-            let mut seen = Vec::new();
-            let mut cells = Vec::new();
-            for c in eval.suite().iter().rev() {
-                if !seen.contains(&c.causal) {
-                    seen.push(c.causal);
-                    cells.push(c.clone());
-                }
-            }
-            cells
-        };
-        let reports: Vec<ProfileReport> = flagship
-            .iter()
-            .map(|c| profile(&eval.report(&best.spec, c)))
-            .collect();
-        if let Some(r) = reports.first() {
-            out.actions.push(AgentAction::ReadProfile {
-                commit: best.id,
-                top_bottleneck: r.bottlenecks[0].direction,
-                note: r.bottlenecks[0].note.clone(),
-            });
-        }
-        let weights = self.bottleneck_weights(&reports);
-
-        // Occasionally re-read an earlier lineage member for comparison
-        // (the paper: "frequently examines multiple prior implementations").
-        if lineage.len() > 2 && self.rng.chance(0.3) {
-            let versions = lineage.versions();
-            let pick = versions[self.rng.below(versions.len())];
-            let r = profile(&eval.report(&pick.spec, &flagship[0]));
-            out.actions.push(AgentAction::ReadProfile {
-                commit: pick.id,
-                top_bottleneck: r.bottlenecks[0].direction,
-                note: format!("comparative read of v{}", pick.step),
-            });
-        }
-
-        // Inner loop: explore directions until the budget is spent or a
-        // commit lands.
-        let mut budget = self.config.inner_budget;
-        let mut committed = None;
-        while budget > 0 && committed.is_none() {
-            let direction = self.choose_direction(&weights, lineage.len());
-            if !out.directions.contains(&direction) {
-                out.directions.push(direction);
-            }
-            if let Some(doc) = self.kb.retrieve(direction).first() {
-                out.actions.push(AgentAction::ConsultKb {
-                    doc_id: doc.id,
-                    direction,
-                });
-            }
-
-            // 3. Propose: crossover (cross-island migrant first, then local
-            //    lineage member) or catalogue edit.  The migrant branch
-            //    draws no randomness when the pool is empty, keeping the
-            //    sequential regime's PRNG stream untouched.  Migrants are
-            //    consulted more eagerly than local donors (floored at 0.3)
-            //    — but crossover_prob = 0 is an explicit no-crossover
-            //    ablation and disables the migrant path too.
-            let migrant_prob = if self.config.crossover_prob > 0.0 {
-                self.config.crossover_prob.max(0.3)
-            } else {
-                0.0
-            };
-            let candidate = if !self.migrants.is_empty() && self.rng.chance(migrant_prob)
-            {
-                let donor = self.migrants.remove(0);
-                out.actions.push(AgentAction::Crossover { with: donor.commit });
-                best.spec.crossover(&donor.spec, &mut self.rng)
-            } else if lineage.len() > 3 && self.rng.chance(self.config.crossover_prob)
-            {
-                let versions = lineage.versions();
-                let donor = versions[self.rng.below(versions.len())];
-                out.actions.push(AgentAction::Crossover { with: donor.id });
-                best.spec.crossover(&donor.spec, &mut self.rng)
-            } else {
-                match self.propose_edit(direction, &best.spec) {
-                    Some(e) => {
-                        out.actions.push(AgentAction::Propose {
-                            direction,
-                            rationale: e.rationale.to_string(),
-                        });
-                        e.apply(&best.spec)
-                    }
-                    None => {
-                        budget -= 1;
-                        self.remember(direction, false);
-                        continue;
-                    }
-                }
-            };
-
-            // 4+5. Evaluate with diagnosis/repair.
-            let (mut cand, mut score, evals) =
-                self.evaluate_with_repair(eval, candidate, &mut out.actions);
-            out.evaluations += evals;
-            budget = budget.saturating_sub(evals);
-
-            // 6. Refine: while improving, stack another edit in the same
-            //    direction (cheap hill-climb within the step).
-            while budget > 0
-                && score.is_correct()
-                && score.geomean() > lineage.best_geomean()
-                && self.rng.chance(0.5)
-            {
-                let Some(next) = self.propose_edit(direction, &cand) else { break };
-                let stacked = next.apply(&cand);
-                let (c2, s2, e2) =
-                    self.evaluate_with_repair(eval, stacked, &mut out.actions);
-                out.evaluations += e2;
-                budget = budget.saturating_sub(e2);
-                if s2.is_correct() && s2.geomean() > score.geomean() {
-                    cand = c2;
-                    score = s2;
-                } else {
-                    break;
-                }
-            }
-
-            // Commit strict improvements always; neutral refinements only
-            // occasionally (the paper's plateaus), so the commit budget is
-            // spent on real gains rather than filled by no-op edits.
-            let strict = score.geomean() > lineage.best_geomean() * (1.0 + 1e-12);
-            let produced = score.is_correct()
-                && (strict
-                    || (score.geomean() >= lineage.best_geomean() && self.rng.chance(0.15)));
-            if produced && cand != best.spec {
-                let message = format!(
-                    "[{}] {} (geomean {:.1} TFLOPS)",
-                    direction,
-                    out.actions
-                        .iter()
-                        .rev()
-                        .find_map(|a| match a {
-                            AgentAction::Propose { rationale, .. } => Some(rationale.clone()),
-                            AgentAction::Crossover { .. } =>
-                                Some("port mechanism from earlier version".to_string()),
-                            _ => None,
-                        })
-                        .unwrap_or_default(),
-                    score.geomean()
-                );
-                if let Ok(id) = lineage.update(cand, score.clone(), &message, step) {
-                    out.actions.push(AgentAction::Commit {
-                        id,
-                        geomean: score.geomean(),
-                        message,
-                    });
-                    committed = Some(id);
-                }
-            }
-            self.remember(direction, committed.is_some());
-        }
-
-        if committed.is_none() {
-            out.actions.push(AgentAction::Abandon {
-                reason: format!(
-                    "inner budget exhausted after exploring {:?}",
-                    out.directions
-                ),
-            });
-        }
-        out.committed = committed;
-        out
+        self.pipeline.step(lineage, eval, step)
     }
 
     fn receive_migrants(&mut self, migrants: &[Migrant]) {
-        self.migrants.extend(migrants.iter().cloned());
-        // Keep only the freshest few: stale elites from slow islands stop
-        // being useful once the local lineage has moved past them.
-        if self.migrants.len() > 8 {
-            let drop = self.migrants.len() - 8;
-            self.migrants.drain(..drop);
-        }
+        self.pipeline.state.receive_migrants(migrants);
     }
 
     fn apply_directive(&mut self, directive: &Directive) {
-        for d in &directive.ban {
-            self.memory.entry(*d).or_default().banned_for = directive.ban_steps;
-        }
-        self.boosted = directive.boost.clone();
-        // A fresh perspective: forget accumulated barren-ness so previously
-        // written-off directions are reconsidered.
-        if directive.reset_memory {
-            for m in self.memory.values_mut() {
-                m.barren = 0;
-            }
-        }
+        self.pipeline.state.apply_directive(directive);
     }
 }
 
@@ -503,6 +149,8 @@ impl VariationOperator for AvoAgent {
 mod tests {
     use super::*;
     use crate::agent::tests::run_operator;
+    use crate::agent::AgentAction;
+    use crate::kernelspec::Direction;
 
     #[test]
     fn agent_reaches_near_evolved_quality() {
@@ -546,10 +194,11 @@ mod tests {
     #[test]
     fn phase_shift_structural_to_micro() {
         let agent = AvoAgent::new(AvoConfig::default(), 0);
-        assert!(agent.phase_directions(0).contains(&Direction::Pipelining));
-        assert!(!agent.phase_directions(0).contains(&Direction::Registers));
-        assert!(agent.phase_directions(30).contains(&Direction::Registers));
-        assert!(!agent.phase_directions(30).contains(&Direction::Tiling));
+        let state = agent.state();
+        assert!(state.phase_directions(0).contains(&Direction::Pipelining));
+        assert!(!state.phase_directions(0).contains(&Direction::Registers));
+        assert!(state.phase_directions(30).contains(&Direction::Registers));
+        assert!(!state.phase_directions(30).contains(&Direction::Tiling));
     }
 
     #[test]
@@ -563,8 +212,8 @@ mod tests {
             note: String::new(),
         };
         agent.apply_directive(&directive);
-        assert_eq!(agent.memory[&Direction::Tiling].banned_for, 4);
-        assert_eq!(agent.boosted, vec![Direction::Registers]);
+        assert_eq!(agent.state().memory[&Direction::Tiling].banned_for, 4);
+        assert_eq!(agent.state().boosted, vec![Direction::Registers]);
     }
 
     #[test]
@@ -594,97 +243,48 @@ mod tests {
             "migrant donor never consulted"
         );
         // Pool drains as donors are consumed.
-        assert!(agent.migrants.is_empty());
+        assert!(agent.state().migrants.is_empty());
     }
 
     #[test]
-    fn migrant_pool_is_bounded() {
-        let mut agent = AvoAgent::new(AvoConfig::default(), 3);
-        let eval = crate::score::Evaluator::new(crate::score::mha_suite());
-        let spec = crate::kernelspec::KernelSpec::naive();
-        let score = eval.evaluate(&spec);
-        for i in 0..20 {
-            agent.receive_migrants(&[Migrant {
-                from_island: i,
-                commit: crate::store::CommitId(i as u64),
-                spec: spec.clone(),
-                score: score.clone(),
-            }]);
+    fn default_flags_never_widen_a_batch() {
+        // The one-at-a-time contract behind byte-for-byte archive parity:
+        // without lookahead or speculative repair, every evaluate_batch
+        // the agent issues is a singleton — visible in the trace.
+        let mut agent = AvoAgent::new(AvoConfig::default(), 7);
+        let (_, outcomes) = run_operator(&mut agent, 12);
+        let mut trace = crate::agent::AgentTrace::default();
+        for o in &outcomes {
+            trace.merge(&o.trace);
         }
-        assert_eq!(agent.migrants.len(), 8);
-        // Oldest dropped first: the survivors are the freshest 8.
-        assert_eq!(agent.migrants[0].from_island, 12);
+        assert!(trace.evals > 0);
+        assert_eq!(trace.max_batch_width, 1);
+        assert_eq!(trace.eval_batches, trace.evals);
+        // (StepOutcome.evaluations is derived from trace.evals, so no
+        // cross-check here; the backend-side CountingBackend assertions in
+        // tests/operator_parity.rs provide the independent accounting.)
     }
 
     #[test]
-    fn speculative_repair_batches_the_repair_table() {
-        use std::sync::atomic::{AtomicUsize, Ordering};
-
-        /// Backend wrapper recording the widest batch it was handed.
-        struct Recorder {
-            inner: crate::score::Evaluator,
-            max_batch: AtomicUsize,
-        }
-        impl EvalBackend for Recorder {
-            fn evaluate_batch(&self, specs: &[KernelSpec]) -> Vec<Score> {
-                self.max_batch.fetch_max(specs.len(), Ordering::Relaxed);
-                self.inner.evaluate_batch(specs)
-            }
-            fn suite(&self) -> &[BenchConfig] {
-                &self.inner.suite
-            }
-            fn report(
-                &self,
-                spec: &KernelSpec,
-                cfg: &BenchConfig,
-            ) -> crate::sim::pipeline::CycleReport {
-                self.inner.report(spec, cfg)
-            }
-            fn cache_tag(&self) -> u64 {
-                EvalBackend::cache_tag(&self.inner)
-            }
-        }
-
-        // Deterministic check on a known FenceRace candidate: the ranked
-        // repair table (branchless rescale, blocking-fence fallback) must
-        // go out as one 2-wide batch, and the table-order winner — the
-        // branchless repair — must come back correct.
+    fn lookahead_widens_batches_and_cuts_backend_calls() {
         let mut cfg = AvoConfig::default();
+        cfg.lookahead = 8;
         cfg.speculative_repair = true;
         let mut agent = AvoAgent::new(cfg, 7);
-        let rec = Recorder {
-            inner: crate::score::Evaluator::new(crate::score::mha_suite()),
-            max_batch: AtomicUsize::new(0),
-        };
-        let mut bad = KernelSpec::naive();
-        bad.fence_kind = crate::kernelspec::FenceKind::NonBlocking;
-        let mut actions = Vec::new();
-        let (fixed, score, evals) = agent.evaluate_with_repair(&rec, bad, &mut actions);
-        assert!(score.is_correct(), "{:?}", score.failure);
-        assert_eq!(
-            fixed.rescale_mode,
-            crate::kernelspec::RescaleMode::Branchless,
-            "table-order winner must be the top-ranked repair"
+        let (lineage, outcomes) = run_operator(&mut agent, 12);
+        let mut trace = crate::agent::AgentTrace::default();
+        for o in &outcomes {
+            trace.merge(&o.trace);
+        }
+        assert!(lineage.len() > 1, "lookahead run never committed");
+        assert!(trace.max_batch_width >= 2, "no batch ever widened");
+        assert!(
+            trace.eval_batches < trace.evals,
+            "lookahead must issue fewer backend calls than evaluations \
+             ({} calls / {} evals)",
+            trace.eval_batches,
+            trace.evals
         );
-        assert_eq!(rec.max_batch.load(Ordering::Relaxed), 2);
-        // One initial evaluation + the 2-wide speculative batch.
-        assert_eq!(evals, 3);
-        assert!(actions
-            .iter()
-            .any(|a| matches!(a, AgentAction::Diagnose { .. })));
-
-        // The sequential path (the default) never widens a batch.
-        let mut agent = AvoAgent::new(AvoConfig::default(), 7);
-        let rec = Recorder {
-            inner: crate::score::Evaluator::new(crate::score::mha_suite()),
-            max_batch: AtomicUsize::new(0),
-        };
-        let mut bad = KernelSpec::naive();
-        bad.fence_kind = crate::kernelspec::FenceKind::NonBlocking;
-        let mut actions = Vec::new();
-        let (_, score, _) = agent.evaluate_with_repair(&rec, bad, &mut actions);
-        assert!(score.is_correct());
-        assert_eq!(rec.max_batch.load(Ordering::Relaxed), 1);
     }
 
     #[test]
@@ -696,5 +296,23 @@ mod tests {
         for o in &outcomes {
             assert!(o.evaluations <= AvoConfig::default().inner_budget + 4);
         }
+    }
+
+    #[test]
+    fn trace_times_every_stage() {
+        let mut agent = AvoAgent::new(AvoConfig::default(), 3);
+        let (_, outcomes) = run_operator(&mut agent, 5);
+        let mut trace = crate::agent::AgentTrace::default();
+        for o in &outcomes {
+            trace.merge(&o.trace);
+        }
+        assert_eq!(trace.steps, 5);
+        for stage in ["consult", "propose", "repair", "critique", "verify"] {
+            let stat = trace.stages.get(stage).unwrap_or_else(|| panic!("no {stage} runs"));
+            assert!(stat.runs > 0, "{stage} never ran");
+        }
+        // Consult runs once per step; the round stages at least as often.
+        assert_eq!(trace.stages["consult"].runs, 5);
+        assert!(trace.stages["propose"].runs >= 5);
     }
 }

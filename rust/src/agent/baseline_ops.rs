@@ -1,208 +1,136 @@
-//! Prior-work variation operators (Figure 1's left side), built from the
-//! same primitives as AVO so comparisons isolate the operator structure.
+//! Prior-work variation operators (Figure 1's left side), expressed as
+//! *degenerate* [`StagePipeline`] configurations of the same stages the
+//! AVO agent runs — so the comparison isolates the operator structure, not
+//! the plumbing:
+//!
+//! * [`SingleTurnOperator`] — FunSearch/AlphaEvolve-style
+//!   `Vary = Generate(Sample(P_t))`: no Consult stage, a
+//!   [`ProposePolicy::SingleShot`] proposal, a zero-budget Repair stage
+//!   (the operator cannot react to failure), no refinement, one round per
+//!   step;
+//! * [`FixedPipelineOperator`] — LoongFlow-style Plan-Execute-Summarize:
+//!   no Consult stage, a [`ProposePolicy::Planned`] proposal over a
+//!   MAP-Elites-lite archive, a one-retry Repair stage (the workflow's
+//!   prescribed error-handling slot), no refinement, one round per step.
+//!
+//! Both bind to the run's workload through the same
+//! [`StagePipeline::bind_workload`] path as the AVO agent (previously
+//! `SingleTurnOperator` had no workload binding at all, so a
+//! `--operators avo,single_turn` decode run consulted the paper KB instead
+//! of the decode shard).  At default flags both replay their pre-refactor
+//! monolithic archives byte-for-byte — except that the fixed-pipeline
+//! elite index is now deterministic (see [`crate::agent::stages`]).
 
-use crate::agent::{AgentAction, StepOutcome, VariationOperator};
+use crate::agent::avo::AvoConfig;
+use crate::agent::stages::critique::Critique;
+use crate::agent::stages::propose::{Propose, ProposePolicy};
+use crate::agent::stages::repair::Repair;
+use crate::agent::stages::verify::{Verify, VerifyStyle};
+use crate::agent::stages::{AgentState, StagePipeline};
+use crate::agent::{StepOutcome, VariationOperator};
 use crate::eval::EvalBackend;
 use crate::evolution::Lineage;
-use crate::kernelspec::{all_edits, KernelSpec};
-use crate::knowledge::KnowledgeBase;
-use crate::prng::Rng;
+use crate::workload::Workload;
 
-/// FunSearch/AlphaEvolve-style operator: `Vary = Generate(Sample(P_t))`.
-/// The framework samples parents with a score-weighted heuristic; the
-/// "LLM" is a single-shot generator — one edit, one evaluation, no
-/// profiler, no repair loop, no memory.
+/// FunSearch/AlphaEvolve-style operator: framework-driven parent sampling,
+/// one-shot generation — one edit, one evaluation, no profiler, no repair
+/// loop, no memory.
 pub struct SingleTurnOperator {
-    rng: Rng,
-    /// Boltzmann temperature of the parent sampler.
-    pub temperature: f64,
+    pipeline: StagePipeline,
 }
 
 impl SingleTurnOperator {
+    /// Default Boltzmann temperature of the parent sampler (the monolith's
+    /// hard default).
+    pub const TEMPERATURE: f64 = 0.02;
+
     pub fn new(seed: u64) -> Self {
-        SingleTurnOperator { rng: Rng::new(seed), temperature: 0.02 }
+        Self::with_temperature(seed, Self::TEMPERATURE)
     }
 
-    /// Score-weighted (Boltzmann) parent sampling over the archive.
-    fn sample_parent<'a>(&mut self, lineage: &'a Lineage) -> &'a KernelSpec {
-        let versions = lineage.versions();
-        let best = lineage.best_geomean().max(1.0);
-        let ws: Vec<f64> = versions
-            .iter()
-            .map(|c| ((c.score.geomean() - best) / (self.temperature * best)).exp())
-            .collect();
-        &versions[self.rng.weighted(&ws)].spec
+    /// Construct with a custom parent-sampler temperature — the ablation
+    /// knob the monolith exposed as a public `temperature` field.
+    pub fn with_temperature(seed: u64, temperature: f64) -> Self {
+        let state = AgentState::new(AvoConfig::default(), seed);
+        let pipeline = StagePipeline::new(
+            "single_turn",
+            state,
+            vec![],
+            vec![
+                Box::new(Propose::new(ProposePolicy::SingleShot { temperature })),
+                Box::new(Repair::single_shot()),
+                Box::new(Critique::baseline()),
+                Box::new(Verify::new(VerifyStyle::SingleTurn)),
+            ],
+            false,
+        );
+        SingleTurnOperator { pipeline }
+    }
+
+    /// Rebind to a workload's knowledge base — the same binding path as
+    /// every other operator.  The one-shot edit draw is uniform over the
+    /// catalogue (no KB weighting), so binding is behavior-preserving for
+    /// the attention archives; what changes is which shard the operator's
+    /// transcript consults (a decode run reads the decode docs).
+    pub fn with_workload(mut self, workload: &dyn Workload) -> Self {
+        self.pipeline.bind_workload(workload);
+        self
     }
 }
 
 impl VariationOperator for SingleTurnOperator {
     fn name(&self) -> &'static str {
-        "single_turn"
+        self.pipeline.name()
     }
 
     fn step(&mut self, lineage: &mut Lineage, eval: &dyn EvalBackend, step: usize) -> StepOutcome {
-        let mut out = StepOutcome::default();
-        let parent = self.sample_parent(lineage).clone();
-        // One-shot generation: a single catalogue edit, prompt-conditioned
-        // on the parent only (no profile, no KB retrieval loop).
-        let edits: Vec<_> = all_edits()
-            .into_iter()
-            .filter(|e| !e.is_noop(&parent))
-            .collect();
-        let edit = edits[self.rng.below(edits.len())].clone();
-        out.directions.push(edit.direction);
-        out.actions.push(AgentAction::Propose {
-            direction: edit.direction,
-            rationale: edit.rationale.to_string(),
-        });
-        let cand = edit.apply(&parent);
-        let score = eval.evaluate(&cand);
-        out.evaluations = 1;
-        out.actions.push(AgentAction::Evaluate {
-            geomean: score.geomean(),
-            failure: score.failure.clone(),
-        });
-        // The framework's update rule decides; the operator cannot react.
-        if score.is_correct() && score.geomean() >= lineage.best_geomean() {
-            let msg = format!("[single-turn] {}", edit.rationale);
-            if let Ok(id) = lineage.update(cand, score.clone(), &msg, step) {
-                out.actions.push(AgentAction::Commit {
-                    id,
-                    geomean: score.geomean(),
-                    message: msg,
-                });
-                out.committed = Some(id);
-            }
-        }
-        out
+        self.pipeline.step(lineage, eval, step)
     }
 }
 
-/// LoongFlow-style operator: a *fixed* Plan-Execute-Summarize pipeline over
-/// a MAP-Elites-lite archive (cells keyed by tile shape) with Boltzmann
-/// selection.  More structured than single-turn, but the workflow is
-/// prescribed: one plan, one execution (with a single retry on a compile
-/// error), one summary — never an open-ended loop.
+/// LoongFlow-style operator: a *fixed* Plan-Execute-Summarize pipeline
+/// over a MAP-Elites-lite archive (cells keyed by tile shape) with
+/// Boltzmann selection.  More structured than single-turn, but the
+/// workflow is prescribed: one plan, one execution (with a single retry),
+/// one summary — never an open-ended loop.
 pub struct FixedPipelineOperator {
-    rng: Rng,
-    /// Success statistics per direction (the "Summarize" memory).
-    stats: std::collections::HashMap<crate::kernelspec::Direction, (usize, usize)>,
-    kb: KnowledgeBase,
+    pipeline: StagePipeline,
 }
 
 impl FixedPipelineOperator {
     pub fn new(seed: u64) -> Self {
-        FixedPipelineOperator {
-            rng: Rng::new(seed),
-            stats: std::collections::HashMap::new(),
-            kb: KnowledgeBase::paper_kb(),
-        }
+        let state = AgentState::new(AvoConfig::default(), seed);
+        let pipeline = StagePipeline::new(
+            "fixed_pipeline",
+            state,
+            vec![],
+            vec![
+                Box::new(Propose::new(ProposePolicy::Planned)),
+                Box::new(Repair::planned()),
+                Box::new(Critique::baseline()),
+                Box::new(Verify::new(VerifyStyle::Planned)),
+            ],
+            false,
+        );
+        FixedPipelineOperator { pipeline }
     }
 
     /// Rebind to a workload's knowledge base (the paper KB from `new` is
     /// the attention workloads' exactly, so this is behavior-preserving
     /// for MHA/GQA runs).
-    pub fn with_workload(mut self, workload: &dyn crate::workload::Workload) -> Self {
-        self.kb = workload.knowledge_base();
+    pub fn with_workload(mut self, workload: &dyn Workload) -> Self {
+        self.pipeline.bind_workload(workload);
         self
-    }
-
-    /// MAP-Elites-lite: best member per (block_q, block_k) cell, then
-    /// Boltzmann over cell elites.
-    fn sample_parent<'a>(&mut self, lineage: &'a Lineage) -> &'a KernelSpec {
-        let mut elites: std::collections::HashMap<(u32, u32), &crate::store::Commit> =
-            std::collections::HashMap::new();
-        for c in lineage.versions() {
-            let key = (c.spec.block_q, c.spec.block_k);
-            let cur = elites.entry(key).or_insert(c);
-            if c.score.geomean() > cur.score.geomean() {
-                *cur = c;
-            }
-        }
-        let elites: Vec<_> = elites.into_values().collect();
-        let best = lineage.best_geomean().max(1.0);
-        let ws: Vec<f64> = elites
-            .iter()
-            .map(|c| ((c.score.geomean() - best) / (0.03 * best)).exp())
-            .collect();
-        &elites[self.rng.weighted(&ws)].spec
     }
 }
 
 impl VariationOperator for FixedPipelineOperator {
     fn name(&self) -> &'static str {
-        "fixed_pipeline"
+        self.pipeline.name()
     }
 
     fn step(&mut self, lineage: &mut Lineage, eval: &dyn EvalBackend, step: usize) -> StepOutcome {
-        let mut out = StepOutcome::default();
-        let parent = self.sample_parent(lineage).clone();
-
-        // PLAN: pick the direction with the best summarized success rate
-        // (exploration bonus for untried directions).
-        let direction = *crate::kernelspec::Direction::ALL
-            .iter()
-            .max_by(|a, b| {
-                let rate = |d| {
-                    let (ok, tried) = self.stats.get(d).copied().unwrap_or((0, 0));
-                    (ok as f64 + 1.0) / (tried as f64 + 2.0)
-                };
-                rate(a).partial_cmp(&rate(b)).unwrap()
-            })
-            .unwrap();
-        out.directions.push(direction);
-
-        // EXECUTE: one KB-weighted edit; a single retry on *structural*
-        // failure (the pipeline's fixed error-handling slot).
-        let candidates: Vec<_> = self
-            .kb
-            .edits_for(direction)
-            .into_iter()
-            .filter(|(e, _)| !e.is_noop(&parent))
-            .collect();
-        if candidates.is_empty() {
-            self.stats.entry(direction).or_insert((0, 0)).1 += 1;
-            return out;
-        }
-        let ws: Vec<f64> = candidates.iter().map(|(_, w)| *w).collect();
-        let edit = candidates[self.rng.weighted(&ws)].0.clone();
-        out.actions.push(AgentAction::Propose {
-            direction,
-            rationale: edit.rationale.to_string(),
-        });
-        let mut cand = edit.apply(&parent);
-        let mut score = eval.evaluate(&cand);
-        out.evaluations = 1;
-        if let Some(failure) = score.failure.clone() {
-            if let Some(repair) =
-                crate::agent::diagnose::repairs_for(&failure, &cand).first()
-            {
-                out.actions.push(AgentAction::Diagnose {
-                    failure: failure.to_string(),
-                    repair: repair.rationale.to_string(),
-                });
-                cand = repair.apply(&cand);
-                score = eval.evaluate(&cand);
-                out.evaluations += 1;
-            }
-        }
-
-        // SUMMARIZE: update direction statistics; commit through Update.
-        let entry = self.stats.entry(direction).or_insert((0, 0));
-        entry.1 += 1;
-        if score.is_correct() && score.geomean() >= lineage.best_geomean() {
-            let msg = format!("[plan-execute-summarize:{direction}] {}", edit.rationale);
-            if let Ok(id) = lineage.update(cand, score.clone(), &msg, step) {
-                entry.0 += 1;
-                out.actions.push(AgentAction::Commit {
-                    id,
-                    geomean: score.geomean(),
-                    message: msg,
-                });
-                out.committed = Some(id);
-            }
-        }
-        out
+        self.pipeline.step(lineage, eval, step)
     }
 }
 
@@ -210,7 +138,7 @@ impl VariationOperator for FixedPipelineOperator {
 mod tests {
     use super::*;
     use crate::agent::tests::run_operator;
-    use crate::agent::{AvoAgent, AvoConfig};
+    use crate::agent::{AgentAction, AvoAgent, AvoConfig};
 
     #[test]
     fn single_turn_makes_some_progress() {
@@ -258,19 +186,60 @@ mod tests {
     }
 
     #[test]
-    fn boltzmann_sampler_prefers_better_parents() {
-        let eval = crate::score::Evaluator::new(crate::score::mha_suite());
-        let mut lineage = crate::evolution::Lineage::new();
-        let naive = crate::kernelspec::KernelSpec::naive();
-        let s = eval.evaluate(&naive);
-        lineage.seed(naive.clone(), s, "seed");
-        let good = crate::baselines::evolved_genome();
-        let s = eval.evaluate(&good);
-        lineage.update(good.clone(), s, "good", 1).unwrap();
-        let mut op = SingleTurnOperator::new(1);
-        let picks_good = (0..200)
-            .filter(|_| op.sample_parent(&lineage) == &good)
-            .count();
-        assert!(picks_good > 150, "picked good parent only {picks_good}/200");
+    fn baselines_are_deterministic_given_seed() {
+        // The fixed-pipeline operator's MAP-Elites index used to iterate a
+        // HashMap, whose order varies per instance — the staged rewrite
+        // pinned it (BTreeMap), so both baselines are now reproducible.
+        let run_ids = |mk: &dyn Fn() -> Box<dyn VariationOperator>| {
+            let mut op = mk();
+            let (lineage, _) = run_operator(op.as_mut(), 25);
+            lineage
+                .versions()
+                .iter()
+                .map(|c| c.id.0)
+                .collect::<Vec<u64>>()
+        };
+        for mk in [
+            (|| Box::new(SingleTurnOperator::new(9)) as Box<dyn VariationOperator>)
+                as fn() -> Box<dyn VariationOperator>,
+            (|| Box::new(FixedPipelineOperator::new(9)) as Box<dyn VariationOperator>)
+                as fn() -> Box<dyn VariationOperator>,
+        ] {
+            let a = run_ids(&mk);
+            let b = run_ids(&mk);
+            assert_eq!(a, b, "same-seed baseline runs must match");
+        }
+    }
+
+    #[test]
+    fn single_turn_transcript_consults_the_bound_workload_kb() {
+        // The operator/workload asymmetry fix: a workload-bound single-turn
+        // operator's transcript cites KB documents (from the bound shard),
+        // where the legacy operator consulted nothing at all.
+        let workload = crate::workload::parse("mha").unwrap();
+        let mut op = SingleTurnOperator::new(4).with_workload(&*workload);
+        let (_, outcomes) = run_operator(&mut op, 10);
+        assert!(
+            outcomes
+                .iter()
+                .flat_map(|o| &o.actions)
+                .any(|a| matches!(a, AgentAction::ConsultKb { .. })),
+            "no KB consultation in the single-turn transcript"
+        );
+    }
+
+    #[test]
+    fn baseline_traces_expose_degenerate_pipelines() {
+        let mut op = SingleTurnOperator::new(5);
+        let (_, outcomes) = run_operator(&mut op, 6);
+        let mut trace = crate::agent::AgentTrace::default();
+        for o in &outcomes {
+            trace.merge(&o.trace);
+        }
+        // No Consult stage, exactly one round per step, singleton batches.
+        assert!(!trace.stages.contains_key("consult"));
+        assert_eq!(trace.stages["propose"].runs, 6);
+        assert_eq!(trace.stages["verify"].runs, 6);
+        assert_eq!(trace.max_batch_width, 1);
     }
 }

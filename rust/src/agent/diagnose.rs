@@ -1,234 +1,7 @@
-//! Failure diagnosis and repair: the "edit-evaluate-diagnose cycle" of the
-//! paper's §3.2.  Every structural (`SpecError`) and semantic
-//! (`ErrorClass`) failure maps to ranked repair edits — the knowledge the
-//! agent applies when a candidate fails, instead of abandoning it the way a
-//! single-turn operator must.
+//! Compatibility shim: the failure-diagnosis/repair table moved into the
+//! staged agent runtime ([`crate::agent::stages::repair`]), which owns the
+//! "edit-evaluate-diagnose cycle" of the paper's §3.2.  Existing callers
+//! (the cross-workload transfer's seed auto-repair, the invariants suite)
+//! keep the `agent::diagnose::repairs_for` path.
 
-use crate::kernelspec::{
-    Direction, Edit, EditKind, FenceKind, KernelSpec, MaskingMode, RegisterPlan,
-    RescaleMode, Scheduling, SpecError,
-};
-use crate::score::Failure;
-use crate::sim::functional::ErrorClass;
-
-/// Ranked repair edits for a failure on a given candidate genome.
-/// First entry = the repair the knowledge base recommends most strongly
-/// (the agent tries them in order across its repair budget).
-pub fn repairs_for(failure: &Failure, spec: &KernelSpec) -> Vec<Edit> {
-    match failure {
-        Failure::Invalid(e) => structural_repairs(e, spec),
-        Failure::Incorrect(c) => semantic_repairs(*c),
-    }
-}
-
-fn edit(kind: EditKind, direction: Direction, rationale: &'static str) -> Edit {
-    Edit { kind, direction, rationale }
-}
-
-fn structural_repairs(e: &SpecError, spec: &KernelSpec) -> Vec<Edit> {
-    match e {
-        SpecError::RegisterBudgetExceeded { total } => {
-            // Give back the overdraft from the softmax group (it has the
-            // most headroom by design), per warp-group arithmetic.
-            let excess = (*total - RegisterPlan::SM_BUDGET) as i32;
-            let warps = RegisterPlan::WARPS_SOFTMAX as i32;
-            let per_warp = (excess + warps - 1) / warps;
-            vec![
-                edit(
-                    EditKind::ShiftRegisters { softmax: -per_warp, correction: 0, other: 0 },
-                    Direction::Registers,
-                    "return the overdraft from the softmax group's headroom",
-                ),
-                edit(
-                    EditKind::ShiftRegisters {
-                        softmax: 192 - spec.registers.softmax as i32,
-                        correction: 80 - spec.registers.correction as i32,
-                        other: 48 - spec.registers.other as i32,
-                    },
-                    Direction::Registers,
-                    "reset to the FA4 reference split",
-                ),
-            ]
-        }
-        SpecError::RegisterUnderMinimum { group, .. } => {
-            let (s, c, o) = match *group {
-                "softmax" => (8, -4, -4),
-                "correction" => (-4, 8, -4),
-                _ => (-4, -4, 8),
-            };
-            vec![edit(
-                EditKind::ShiftRegisters { softmax: s, correction: c, other: o },
-                Direction::Registers,
-                "raise the starved group above the ABI minimum",
-            )]
-        }
-        SpecError::SmemOverflow { .. } => vec![
-            edit(
-                EditKind::SetPipelineDepth(spec.kv_pipeline_depth.saturating_sub(1).max(1)),
-                Direction::Pipelining,
-                "drop one staging stage to fit shared memory",
-            ),
-            edit(
-                EditKind::SetBlockK(spec.block_k / 2),
-                Direction::Tiling,
-                "halve the K tile to fit shared memory",
-            ),
-        ],
-        SpecError::OverlapRequiresDualQ => vec![edit(
-            EditKind::SetQStages(2),
-            Direction::Pipelining,
-            "correction overlap needs two Q-stages in flight",
-        )],
-        SpecError::BitmaskTooWide { .. } => vec![edit(
-            EditKind::SetBlockK(128),
-            Direction::Tiling,
-            "cap block_k at the 128-column bitmask width",
-        )],
-        SpecError::BadBlockShape { block_q, block_k } => {
-            let snap = |v: u32| -> u32 {
-                *crate::kernelspec::BLOCK_SIZES
-                    .iter()
-                    .min_by_key(|&&b| b.abs_diff(v))
-                    .unwrap()
-            };
-            vec![
-                edit(EditKind::SetBlockQ(snap(*block_q)), Direction::Tiling,
-                     "snap Q tile to a supported extent"),
-                edit(EditKind::SetBlockK(snap(*block_k)), Direction::Tiling,
-                     "snap K tile to a supported extent"),
-            ]
-        }
-        SpecError::BadPipelineDepth { depth } => vec![edit(
-            EditKind::SetPipelineDepth((*depth).clamp(1, 4)),
-            Direction::Pipelining,
-            "clamp staging depth to the supported range",
-        )],
-        SpecError::BadQStages { stages } => vec![edit(
-            EditKind::SetQStages((*stages).clamp(1, 2)),
-            Direction::Pipelining,
-            "clamp Q-stage count to the supported range",
-        )],
-    }
-}
-
-fn semantic_repairs(c: ErrorClass) -> Vec<Edit> {
-    match c {
-        // The KB's fence doc: ordering-only fences need warp-uniform
-        // control flow — so the *forward* repair is branchless rescale;
-        // the fallback reverts to the blocking fence.
-        ErrorClass::FenceRace => vec![
-            edit(
-                EditKind::SetRescaleMode(RescaleMode::Branchless),
-                Direction::Synchronization,
-                "restore warp-uniform control flow so the relaxed fence is safe",
-            ),
-            edit(
-                EditKind::SetFence(FenceKind::Blocking),
-                Direction::Synchronization,
-                "fall back to the full write-drain fence",
-            ),
-        ],
-        ErrorClass::MaskOrdering => vec![
-            edit(
-                EditKind::SetMaskingMode(MaskingMode::Bitmask),
-                Direction::Masking,
-                "fuse the mask into issue-time bitmask select",
-            ),
-            edit(
-                EditKind::SetInterleave(false),
-                Direction::MmaIssue,
-                "serialize MMA issue so the late mask lands in time",
-            ),
-        ],
-        ErrorClass::EpilogueRace => vec![
-            edit(
-                EditKind::SetPipelineDepth(2),
-                Direction::Pipelining,
-                "double-buffer staging so the async store has a free slot",
-            ),
-            edit(
-                EditKind::SetEpilogueAsync(false),
-                Direction::Pipelining,
-                "serialize the epilogue store",
-            ),
-            edit(
-                EditKind::SetScheduling(Scheduling::PerTile),
-                Direction::Scheduling,
-                "per-tile CTAs never reuse a live staging buffer",
-            ),
-        ],
-        // No hazard matched: nothing principled to try.
-        ErrorClass::NumericMismatch => vec![],
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::score::{mha_suite, Evaluator};
-
-    fn eval() -> Evaluator {
-        Evaluator::new(mha_suite())
-    }
-
-    /// Property: for every failure our evaluator can produce on a
-    /// single-edit mutation of a correct genome, at least one ranked
-    /// repair makes the candidate pass.
-    #[test]
-    fn repairs_fix_every_reachable_failure() {
-        let ev = eval();
-        let bases = [
-            KernelSpec::naive(),
-            crate::baselines::fa4_genome(),
-            crate::baselines::evolved_genome(),
-        ];
-        let mut failures_seen = 0;
-        for base in &bases {
-            for e in crate::kernelspec::all_edits() {
-                let cand = e.apply(base);
-                let score = ev.evaluate(&cand);
-                let Some(failure) = score.failure.clone() else { continue };
-                failures_seen += 1;
-                let repairs = repairs_for(&failure, &cand);
-                assert!(!repairs.is_empty(), "no repair for {failure}");
-                let fixed = repairs.iter().any(|r| {
-                    let mut c = r.apply(&cand);
-                    // Repairs may need a second application round (e.g.
-                    // budget overdraft after clamping) — allow one chain.
-                    if let Some(f2) = ev.evaluate(&c).failure {
-                        if let Some(r2) = repairs_for(&f2, &c).first() {
-                            c = r2.apply(&c);
-                        }
-                    }
-                    ev.evaluate(&c).is_correct()
-                });
-                assert!(fixed, "unrepairable: {failure} on {cand:?}");
-            }
-        }
-        assert!(failures_seen >= 3, "expected several failures, saw {failures_seen}");
-    }
-
-    #[test]
-    fn fence_race_prefers_branchless() {
-        let r = semantic_repairs(ErrorClass::FenceRace);
-        assert!(matches!(
-            r[0].kind,
-            EditKind::SetRescaleMode(RescaleMode::Branchless)
-        ));
-    }
-
-    #[test]
-    fn register_overdraft_repair_is_exact() {
-        let mut s = KernelSpec::naive(); // 192/80/48 = 2048
-        s.registers.correction += 8; // +32 total -> 2080
-        let e = s.validate().unwrap_err();
-        let repairs = structural_repairs(&e, &s);
-        let fixed = repairs[0].apply(&s);
-        assert!(fixed.validate().is_ok(), "{:?}", fixed.registers);
-    }
-
-    #[test]
-    fn numeric_mismatch_has_no_repair() {
-        assert!(semantic_repairs(ErrorClass::NumericMismatch).is_empty());
-    }
-}
+pub use crate::agent::stages::repair::repairs_for;

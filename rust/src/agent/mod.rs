@@ -1,24 +1,34 @@
-//! Variation operators.
+//! Variation operators, built on the staged agent runtime ([`stages`]).
 //!
 //! [`avo::AvoAgent`] is the paper's contribution: `Vary(P_t) = Agent(P_t,
 //! K, f)` — an autonomous loop that profiles, consults the knowledge base,
 //! edits, evaluates, diagnoses, repairs, and commits, subsuming Sample,
-//! Generate, *and* evaluation (§3).
+//! Generate, *and* evaluation (§3).  It is a [`stages::StagePipeline`]
+//! over the five first-class stages — Consult, Propose, Repair, Critique,
+//! Verify — threaded through a shared [`stages::AgentContext`].
 //!
 //! [`baseline_ops`] implements the prior-work interfaces the paper's
-//! Figure 1 contrasts against, built from the *same* primitives so the
-//! comparison isolates the operator structure:
+//! Figure 1 contrasts against as *degenerate* pipelines of the same
+//! stages, so the comparison isolates the operator structure:
 //! * `SingleTurnOperator` — FunSearch/AlphaEvolve-style: framework-driven
 //!   parent sampling, one-shot generation, no repair loop;
 //! * `FixedPipelineOperator` — LoongFlow-style Plan-Execute-Summarize with
 //!   a MAP-Elites-lite archive and Boltzmann sampling.
+//!
+//! Every step returns a [`StepOutcome`] carrying both the human-readable
+//! action log ([`AgentAction`]) and the machine-readable [`AgentTrace`]
+//! (stage timings, batch widths, accept/reject reasons) the coordinator
+//! aggregates per island and per run.
 
 pub mod avo;
 pub mod baseline_ops;
 pub mod diagnose;
+pub mod stages;
+pub mod trace;
 
 pub use avo::{AvoAgent, AvoConfig};
 pub use baseline_ops::{FixedPipelineOperator, SingleTurnOperator};
+pub use trace::{AgentTrace, StageStat};
 
 use crate::eval::EvalBackend;
 use crate::evolution::Lineage;
@@ -61,6 +71,9 @@ pub struct StepOutcome {
     pub directions: Vec<Direction>,
     /// The action log.
     pub actions: Vec<AgentAction>,
+    /// Machine-readable stage/batching trace (see [`AgentTrace`]); merged
+    /// per island into [`crate::islands::IslandReport::trace`].
+    pub trace: AgentTrace,
 }
 
 /// A variation operator: produces (at most) one committed version per step.

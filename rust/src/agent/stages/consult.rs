@@ -1,0 +1,147 @@
+//! The Consult stage: read the profiler feedback and the lineage before
+//! proposing anything (§3.2 steps 1–2's input gathering).
+//!
+//! Per step it (a) ticks down supervisor bans, (b) snapshots the current
+//! best as the round base, (c) profiles the best on the flagship cell of
+//! each masking regime the suite contains, (d) occasionally re-reads an
+//! earlier lineage member for comparison (the paper: "frequently examines
+//! multiple prior implementations"), and (e) folds the profiler bottleneck
+//! shares into the direction weights the Propose stage samples from.
+
+use std::collections::HashMap;
+
+use crate::agent::stages::{AgentContext, AgentStage, StageOutcome};
+use crate::agent::AgentAction;
+use crate::kernelspec::Direction;
+use crate::score::BenchConfig;
+use crate::sim::profile::{profile, ProfileReport};
+
+/// Merge profiler reports of the flagship cells into direction weights.
+pub fn bottleneck_weights(reports: &[ProfileReport]) -> HashMap<Direction, f64> {
+    let mut w = HashMap::new();
+    for r in reports {
+        for b in &r.bottlenecks {
+            *w.entry(b.direction).or_insert(0.0) += b.share;
+        }
+    }
+    w
+}
+
+/// The flagship cell of each masking regime present in the suite (the
+/// last cell of each regime, as the monolith selected them).
+pub fn flagship_cells(suite: &[BenchConfig]) -> Vec<BenchConfig> {
+    let mut seen = Vec::new();
+    let mut cells = Vec::new();
+    for c in suite.iter().rev() {
+        if !seen.contains(&c.causal) {
+            seen.push(c.causal);
+            cells.push(c.clone());
+        }
+    }
+    cells
+}
+
+/// Lineage + profiler consultation (AVO pipelines only; the baseline
+/// operators have no profiling step — part of what Figure 1 contrasts).
+pub struct Consult;
+
+impl AgentStage for Consult {
+    fn name(&self) -> &'static str {
+        "consult"
+    }
+
+    fn run(&mut self, ctx: &mut AgentContext) -> StageOutcome {
+        ctx.state.decay_bans();
+        let best = ctx.lineage.best().expect("lineage must be seeded").clone();
+
+        // Profile the current best on the flagship cells of each regime
+        // present in the suite.
+        let flagship = flagship_cells(ctx.eval.suite());
+        let reports: Vec<ProfileReport> = flagship
+            .iter()
+            .map(|c| profile(&ctx.eval.report(&best.spec, c)))
+            .collect();
+        if let Some(r) = reports.first() {
+            ctx.out.actions.push(AgentAction::ReadProfile {
+                commit: best.id,
+                top_bottleneck: r.bottlenecks[0].direction,
+                note: r.bottlenecks[0].note.clone(),
+            });
+        }
+
+        // Occasionally re-read an earlier lineage member for comparison.
+        let read_prob = ctx.state.tuning.comparative_read_prob;
+        if ctx.lineage.len() > 2 && ctx.state.rng.chance(read_prob) {
+            let (pick_id, pick_step, pick_report) = {
+                let versions = ctx.lineage.versions();
+                let pick = versions[ctx.state.rng.below(versions.len())];
+                (pick.id, pick.step, profile(&ctx.eval.report(&pick.spec, &flagship[0])))
+            };
+            ctx.out.actions.push(AgentAction::ReadProfile {
+                commit: pick_id,
+                top_bottleneck: pick_report.bottlenecks[0].direction,
+                note: format!("comparative read of v{pick_step}"),
+            });
+        }
+
+        ctx.weights = bottleneck_weights(&reports);
+        ctx.base = Some(best.spec);
+        StageOutcome::Continue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::avo::AvoConfig;
+    use crate::agent::stages::AgentState;
+    use crate::agent::StepOutcome;
+    use crate::evolution::Lineage;
+    use crate::kernelspec::KernelSpec;
+    use crate::score::{mha_suite, Evaluator};
+
+    #[test]
+    fn flagship_picks_one_cell_per_regime() {
+        let suite = mha_suite();
+        let cells = flagship_cells(&suite);
+        assert_eq!(cells.len(), 2);
+        assert_ne!(cells[0].causal, cells[1].causal);
+        // The monolith walked the suite in reverse: flagships are the
+        // last cell of each regime.
+        assert_eq!(cells[0].name, suite.last().unwrap().name);
+    }
+
+    #[test]
+    fn consult_reads_profile_and_sets_weights() {
+        let eval = Evaluator::new(mha_suite());
+        let mut lineage = Lineage::new();
+        let seed = KernelSpec::naive();
+        let score = eval.evaluate(&seed);
+        lineage.seed(seed, score, "seed");
+        let mut state = AgentState::new(AvoConfig::default(), 7);
+        let mut ctx = AgentContext {
+            lineage: &mut lineage,
+            eval: &eval,
+            step: 1,
+            state: &mut state,
+            out: StepOutcome::default(),
+            budget: 14,
+            base: None,
+            weights: HashMap::new(),
+            direction: None,
+            proposals: Vec::new(),
+            proposal_rationales: Vec::new(),
+            winner_rationale: None,
+            candidate: None,
+            accepted: false,
+        };
+        assert_eq!(Consult.run(&mut ctx), StageOutcome::Continue);
+        assert!(ctx.base.is_some());
+        assert!(!ctx.weights.is_empty());
+        assert!(ctx
+            .out
+            .actions
+            .iter()
+            .any(|a| matches!(a, AgentAction::ReadProfile { .. })));
+    }
+}

@@ -1,0 +1,363 @@
+//! The Critique stage: refine-while-improving, then score-delta triage —
+//! §3.2 step 6's "continue stacking edits within the step until
+//! improvement stalls", followed by the accept/reject decision the Verify
+//! stage executes.
+//!
+//! Triage vocabulary (recorded into the [`crate::agent::AgentTrace`]):
+//!
+//! * `accept: strict improvement` — the candidate strictly beats the
+//!   archive best;
+//! * `accept: neutral refinement` — a plateau commit (the paper's
+//!   occasional neutral updates, drawn at the tuning's
+//!   `neutral_commit_prob`);
+//! * `reject: regression` — correct but below the archive best;
+//! * `reject: neutral plateau` — correct, equal-best, but the neutral
+//!   draw declined;
+//! * `reject: hazard <class>` — the candidate still miscomputes after the
+//!   repair budget; the reason is annotated with the masking regimes the
+//!   workload's suite exercises.  The annotation is descriptive, not a
+//!   filter — which hazards can occur at all is determined by the
+//!   evaluator and the suite (a decode suite has no causal cells, so it
+//!   simply never produces a causal-only race for this stage to record).
+
+use crate::agent::stages::propose::propose_edits;
+use crate::agent::stages::repair::{evaluate_with_repair, repair_rounds};
+use crate::agent::stages::{AgentContext, AgentStage, StageOutcome};
+use crate::kernelspec::SpecError;
+use crate::score::{Failure, Score};
+use crate::sim::functional::ErrorClass;
+
+/// How the Critique stage judges a candidate against the archive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AcceptRule {
+    /// The AVO rule: strict improvements always; neutral refinements only
+    /// occasionally (the paper's plateaus), so the commit budget is spent
+    /// on real gains rather than filled by no-op edits.
+    StrictOrLuckyNeutral,
+    /// The framework rule of the baseline operators: any correct
+    /// candidate at least as good as the archive best.
+    AtLeastBest,
+}
+
+pub struct Critique {
+    /// Stack further same-direction edits while the candidate improves
+    /// (the AVO hill-climb; baselines have no refinement loop).
+    pub refine: bool,
+    pub rule: AcceptRule,
+}
+
+impl Critique {
+    pub fn avo() -> Self {
+        Critique { refine: true, rule: AcceptRule::StrictOrLuckyNeutral }
+    }
+
+    pub fn baseline() -> Self {
+        Critique { refine: false, rule: AcceptRule::AtLeastBest }
+    }
+}
+
+/// Stable per-class name of a failure — the trace's `reasons` histogram
+/// keys on this, NOT on the failure's parameterized Display text (whose
+/// embedded values would give the histogram unbounded key cardinality;
+/// the full text stays in the action log's `Diagnose` entries).
+fn failure_class(failure: &Failure) -> &'static str {
+    match failure {
+        Failure::Invalid(e) => match e {
+            SpecError::RegisterBudgetExceeded { .. } => "RegisterBudgetExceeded",
+            SpecError::RegisterUnderMinimum { .. } => "RegisterUnderMinimum",
+            SpecError::SmemOverflow { .. } => "SmemOverflow",
+            SpecError::OverlapRequiresDualQ => "OverlapRequiresDualQ",
+            SpecError::BitmaskTooWide { .. } => "BitmaskTooWide",
+            SpecError::BadBlockShape { .. } => "BadBlockShape",
+            SpecError::BadPipelineDepth { .. } => "BadPipelineDepth",
+            SpecError::BadQStages { .. } => "BadQStages",
+        },
+        Failure::Incorrect(c) => match c {
+            ErrorClass::FenceRace => "FenceRace",
+            ErrorClass::MaskOrdering => "MaskOrdering",
+            ErrorClass::EpilogueRace => "EpilogueRace",
+            ErrorClass::NumericMismatch => "NumericMismatch",
+        },
+    }
+}
+
+/// Classify a still-failing candidate's hazard against the masking
+/// regimes the workload's suite exercises (trace annotation only).
+fn hazard_note(failure: &Failure, ctx: &AgentContext) -> String {
+    let (mut causal, mut non_causal) = (false, false);
+    for c in ctx.eval.suite() {
+        if c.causal {
+            causal = true;
+        } else {
+            non_causal = true;
+        }
+    }
+    let regimes = match (causal, non_causal) {
+        (true, true) => "causal+non-causal",
+        (true, false) => "causal",
+        (false, true) => "non-causal",
+        (false, false) => "empty-suite",
+    };
+    format!("reject: hazard {} ({regimes} regimes)", failure_class(failure))
+}
+
+impl AgentStage for Critique {
+    fn name(&self) -> &'static str {
+        "critique"
+    }
+
+    fn run(&mut self, ctx: &mut AgentContext) -> StageOutcome {
+        let Some((mut cand, mut score)) = ctx.candidate.take() else {
+            return StageOutcome::Continue;
+        };
+
+        if self.refine {
+            // Refine: while improving, stack another edit in the same
+            // direction (cheap hill-climb within the step).
+            let direction = ctx.direction.expect("Propose set the direction");
+            let refine_prob = ctx.state.tuning.refine_continue_prob;
+            while ctx.budget > 0
+                && score.is_correct()
+                && score.geomean() > ctx.lineage.best_geomean()
+                && ctx.state.rng.chance(refine_prob)
+            {
+                // Lookahead width, clamped to the remaining budget (the
+                // refine loop guard guarantees ctx.budget > 0 here).
+                let k = ctx.state.config.lookahead.max(1).min(ctx.budget);
+                if k == 1 {
+                    // The monolith's one-at-a-time hill-climb, including
+                    // its repair walk on the stacked candidate.
+                    let Some(next) =
+                        propose_edits(ctx.state, direction, &cand, 1).into_iter().next()
+                    else {
+                        break;
+                    };
+                    let stacked = next.apply(&cand);
+                    let budget = ctx.state.config.repair_budget;
+                    let speculative = ctx.state.config.speculative_repair;
+                    let (c2, s2, e2) = evaluate_with_repair(
+                        ctx.eval,
+                        stacked,
+                        &mut ctx.out.actions,
+                        &mut ctx.out.trace,
+                        budget,
+                        speculative,
+                        true,
+                    );
+                    ctx.budget = ctx.budget.saturating_sub(e2);
+                    if s2.is_correct() && s2.geomean() > score.geomean() {
+                        cand = c2;
+                        score = s2;
+                    } else {
+                        break;
+                    }
+                } else {
+                    // Refinement lookahead: stack k alternative edits and
+                    // score them as one batch; the best strictly-improving
+                    // correct one continues the climb.
+                    let edits = propose_edits(ctx.state, direction, &cand, k);
+                    if edits.is_empty() {
+                        break;
+                    }
+                    let stacked: Vec<_> = edits.iter().map(|e| e.apply(&cand)).collect();
+                    let scores: Vec<Score> = ctx.eval.evaluate_batch(&stacked);
+                    ctx.out.trace.record_batch(stacked.len());
+                    ctx.budget = ctx.budget.saturating_sub(stacked.len());
+                    // Log every evaluation, like the one-at-a-time path.
+                    for s in &scores {
+                        ctx.out.actions.push(crate::agent::AgentAction::Evaluate {
+                            geomean: s.geomean(),
+                            failure: s.failure.clone(),
+                        });
+                    }
+                    let mut winner: Option<usize> = None;
+                    for (i, s) in scores.iter().enumerate() {
+                        if s.is_correct()
+                            && s.geomean() > score.geomean()
+                            && winner
+                                .map(|w| s.geomean() > scores[w].geomean())
+                                .unwrap_or(true)
+                        {
+                            winner = Some(i);
+                        }
+                    }
+                    match winner {
+                        Some(w) => {
+                            ctx.winner_rationale = Some(edits[w].rationale.to_string());
+                            cand = stacked
+                                .into_iter()
+                                .nth(w)
+                                .expect("winner indexes the stacked batch");
+                            score = scores
+                                .into_iter()
+                                .nth(w)
+                                .expect("winner indexes the score batch");
+                        }
+                        None => {
+                            // Every stacked candidate failed or regressed:
+                            // walk the top-ranked one's repair table (the
+                            // k = 1 path repairs stacked candidates too)
+                            // and continue the climb only if the repaired
+                            // candidate strictly improves.
+                            let budget = ctx.state.config.repair_budget;
+                            let speculative = ctx.state.config.speculative_repair;
+                            let mut c0 =
+                                stacked.into_iter().next().expect("nonempty batch");
+                            let mut s0 =
+                                scores.into_iter().next().expect("nonempty batch");
+                            let extra = repair_rounds(
+                                ctx.eval,
+                                &mut c0,
+                                &mut s0,
+                                &mut ctx.out.actions,
+                                &mut ctx.out.trace,
+                                budget,
+                                speculative,
+                                true,
+                            );
+                            ctx.budget = ctx.budget.saturating_sub(extra);
+                            if s0.is_correct() && s0.geomean() > score.geomean() {
+                                ctx.winner_rationale =
+                                    Some(edits[0].rationale.to_string());
+                                cand = c0;
+                                score = s0;
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Score-delta triage: decide what Verify should do, and record
+        // why, against the archive best at this instant.
+        let best_geomean = ctx.lineage.best_geomean();
+        let strict = score.geomean() > best_geomean * (1.0 + 1e-12);
+        // `is_correct()` is exactly `failure.is_none()`, so matching the
+        // failure directly covers the incorrect case with no dead arm.
+        let (accepted, reason) = if let Some(f) = &score.failure {
+            (false, hazard_note(f, ctx))
+        } else {
+            match self.rule {
+                AcceptRule::StrictOrLuckyNeutral => {
+                    if strict {
+                        (true, "accept: strict improvement".to_string())
+                    } else if score.geomean() >= best_geomean {
+                        let neutral_prob = ctx.state.tuning.neutral_commit_prob;
+                        if ctx.state.rng.chance(neutral_prob) {
+                            (true, "accept: neutral refinement".to_string())
+                        } else {
+                            (false, "reject: neutral plateau".to_string())
+                        }
+                    } else {
+                        (false, "reject: regression".to_string())
+                    }
+                }
+                AcceptRule::AtLeastBest => {
+                    if score.geomean() >= best_geomean {
+                        (true, "accept: at least archive best".to_string())
+                    } else {
+                        (false, "reject: regression".to_string())
+                    }
+                }
+            }
+        };
+        ctx.out.trace.note_reason(&reason);
+        ctx.accepted = accepted;
+        ctx.candidate = Some((cand, score));
+        StageOutcome::Continue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::avo::AvoConfig;
+    use crate::agent::stages::AgentState;
+    use crate::agent::StepOutcome;
+    use crate::evolution::Lineage;
+    use crate::kernelspec::KernelSpec;
+    use crate::score::{mha_suite, Evaluator};
+
+    fn ctx_fixture<'a>(
+        lineage: &'a mut Lineage,
+        eval: &'a Evaluator,
+        state: &'a mut AgentState,
+    ) -> AgentContext<'a> {
+        AgentContext {
+            lineage,
+            eval,
+            step: 1,
+            state,
+            out: StepOutcome::default(),
+            budget: 14,
+            base: None,
+            weights: std::collections::HashMap::new(),
+            direction: None,
+            proposals: Vec::new(),
+            proposal_rationales: Vec::new(),
+            winner_rationale: None,
+            candidate: None,
+            accepted: false,
+        }
+    }
+
+    #[test]
+    fn triage_accepts_strict_improvement_and_rejects_regression() {
+        let eval = Evaluator::new(mha_suite());
+        let mut lineage = Lineage::new();
+        let seed = KernelSpec::naive();
+        let seed_score = eval.evaluate(&seed);
+        lineage.seed(seed.clone(), seed_score.clone(), "seed");
+        let mut state = AgentState::new(AvoConfig::default(), 1);
+
+        // Strict improvement: the evolved genome beats the naive seed.
+        let evolved = crate::baselines::evolved_genome();
+        let evolved_score = eval.evaluate(&evolved);
+        let mut ctx = ctx_fixture(&mut lineage, &eval, &mut state);
+        ctx.direction = Some(crate::kernelspec::Direction::Tiling);
+        ctx.candidate = Some((evolved, evolved_score));
+        let mut critique = Critique { refine: false, rule: AcceptRule::StrictOrLuckyNeutral };
+        critique.run(&mut ctx);
+        assert!(ctx.accepted);
+        assert_eq!(ctx.out.trace.reasons["accept: strict improvement"], 1);
+
+        // Regression: re-seed the archive at the evolved level, then offer
+        // the naive genome.
+        let mut lineage = Lineage::new();
+        let evolved = crate::baselines::evolved_genome();
+        let s = eval.evaluate(&evolved);
+        lineage.seed(evolved, s, "seed high");
+        let mut state = AgentState::new(AvoConfig::default(), 1);
+        let mut ctx = ctx_fixture(&mut lineage, &eval, &mut state);
+        ctx.direction = Some(crate::kernelspec::Direction::Tiling);
+        ctx.candidate = Some((seed, seed_score));
+        critique.run(&mut ctx);
+        assert!(!ctx.accepted);
+        assert_eq!(ctx.out.trace.reasons["reject: regression"], 1);
+    }
+
+    #[test]
+    fn triage_classifies_hazards_against_suite_regimes() {
+        let eval = Evaluator::new(mha_suite());
+        let mut lineage = Lineage::new();
+        let seed = KernelSpec::naive();
+        let s = eval.evaluate(&seed);
+        lineage.seed(seed, s, "seed");
+        let mut state = AgentState::new(AvoConfig::default(), 1);
+        let mut bad = KernelSpec::naive();
+        bad.fence_kind = crate::kernelspec::FenceKind::NonBlocking;
+        let bad_score = eval.evaluate(&bad);
+        assert!(!bad_score.is_correct());
+        let mut ctx = ctx_fixture(&mut lineage, &eval, &mut state);
+        ctx.direction = Some(crate::kernelspec::Direction::Synchronization);
+        ctx.candidate = Some((bad, bad_score));
+        let mut critique = Critique::avo();
+        critique.run(&mut ctx);
+        assert!(!ctx.accepted);
+        let reason = ctx.out.trace.reasons.keys().next().unwrap();
+        assert!(reason.starts_with("reject: hazard"), "{reason}");
+        assert!(reason.contains("causal+non-causal"), "{reason}");
+    }
+}

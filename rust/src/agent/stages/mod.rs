@@ -1,0 +1,383 @@
+//! The staged agent runtime: the AVO variation loop decomposed into
+//! explicit, composable stages.
+//!
+//! The paper's central claim is that the agent *is* the variation operator
+//! — a self-directed loop that consults the lineage, a knowledge base, and
+//! execution feedback to "propose, repair, critique, and verify" edits.
+//! This module makes those stages first-class:
+//!
+//! * [`AgentStage`] — one stage of a variation step:
+//!   `run(&mut AgentContext) -> StageOutcome`;
+//! * [`consult::Consult`] — profile the lineage (current best + occasional
+//!   comparative reads) and fold bottleneck shares into direction weights;
+//! * [`propose::Propose`] — select a direction and source a candidate
+//!   (knowledge-base edit catalogue, lineage crossover, cross-island
+//!   migrant), with policy variants for the baseline operators;
+//! * [`repair::Repair`] — evaluate candidates and walk the ranked repair
+//!   table on failure (the table itself lives in [`repair`], absorbed from
+//!   the old `agent::diagnose` module);
+//! * [`critique::Critique`] — refine-while-improving, then score-delta
+//!   triage and hazard classification against the workload's regimes;
+//! * [`verify::Verify`] — commit through the Update rule and close the
+//!   loop's memory bookkeeping.
+//!
+//! A [`StagePipeline`] threads the stages over a shared [`AgentContext`]
+//! (the per-step view of the lineage, the [`EvalBackend`] handle, and the
+//! operator's persistent [`AgentState`]) and times every stage run into an
+//! [`crate::agent::AgentTrace`].  `AvoAgent` is one pipeline
+//! configuration; the baseline
+//! operators are *degenerate* pipelines of the same stages (no consult, no
+//! refinement, fixed repair budgets), so Figure 1's comparison is now a
+//! configuration diff, not three divergent code paths.
+//!
+//! **Behavior contract.** At default flags every pipeline replays the
+//! pre-refactor monolithic operators' PRNG stream draw-for-draw, so
+//! archives are byte-identical (`rust/tests/operator_parity.rs` pins this
+//! against from-first-principles replicas of the monoliths).  The one
+//! deliberate exception: the fixed-pipeline operator's MAP-Elites cell
+//! index now iterates in sorted key order (`BTreeMap`) where the monolith
+//! iterated a `HashMap` — whose order varied per instance, making the old
+//! operator irreproducible run-to-run.  Batching beyond one candidate per
+//! call ([`crate::agent::AvoConfig::lookahead`], speculative repair) is
+//! opt-in and changes the stream by design.
+
+pub mod consult;
+pub mod critique;
+pub mod propose;
+pub mod repair;
+pub mod verify;
+
+use std::collections::HashMap;
+
+use crate::agent::avo::AvoConfig;
+use crate::agent::{AgentAction, StepOutcome};
+use crate::eval::EvalBackend;
+use crate::evolution::Lineage;
+use crate::islands::Migrant;
+use crate::kernelspec::{Direction, KernelSpec};
+use crate::knowledge::KnowledgeBase;
+use crate::prng::Rng;
+use crate::score::Score;
+use crate::supervisor::Directive;
+use crate::workload::{PhaseSchedule, Workload};
+
+// The tuning knobs live with the other per-scenario configuration in the
+// workload seam (keeping workload → agent dependency-free); the agent
+// runtime is their consumer, so the name is re-exported here.
+pub use crate::workload::StageTuning;
+
+/// What a stage tells the pipeline driver to do next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageOutcome {
+    /// Proceed to the next stage of the current round.
+    Continue,
+    /// Abandon the current round (no viable candidate); start the next
+    /// round from the first round stage.
+    NextIteration,
+    /// The variation step is complete.
+    Finish,
+}
+
+/// One stage of a variation step.  Stages communicate exclusively through
+/// the shared [`AgentContext`]; the pipeline times each run into the
+/// step's [`crate::agent::AgentTrace`].
+pub trait AgentStage: Send {
+    /// Stable name used for trace attribution.
+    fn name(&self) -> &'static str;
+    fn run(&mut self, ctx: &mut AgentContext) -> StageOutcome;
+}
+
+/// Per-direction memory (the agent's accumulated experience).
+#[derive(Debug, Clone, Default)]
+pub struct DirMemory {
+    pub tried: usize,
+    /// Consecutive tries with no committed gain.
+    pub barren: usize,
+    pub banned_for: usize,
+}
+
+/// The operator's persistent state, shared by every stage across steps:
+/// configuration, the workload-bound knowledge base and phase schedule,
+/// the PRNG stream, and the memories the paper's agent accumulates.
+pub struct AgentState {
+    pub config: AvoConfig,
+    pub kb: KnowledgeBase,
+    pub phases: PhaseSchedule,
+    pub tuning: StageTuning,
+    pub rng: Rng,
+    pub memory: HashMap<Direction, DirMemory>,
+    /// Supervisor boost, replaced on each directive.
+    pub boosted: Vec<Direction>,
+    /// Elites received from other islands, consumed as crossover donors
+    /// (oldest first).  Empty outside island-model runs, so the sequential
+    /// regime draws exactly the same PRNG stream as before.
+    pub migrants: Vec<Migrant>,
+    /// The fixed-pipeline operator's "Summarize" memory: per-direction
+    /// (successes, tries).  Unused by the AVO and single-turn pipelines.
+    pub plan_stats: HashMap<Direction, (usize, usize)>,
+}
+
+impl AgentState {
+    /// Fresh state with the attention defaults (the paper's runs); rebind
+    /// with [`StagePipeline::bind_workload`].
+    pub fn new(config: AvoConfig, seed: u64) -> Self {
+        AgentState {
+            config,
+            kb: KnowledgeBase::paper_kb(),
+            phases: PhaseSchedule::attention(),
+            tuning: StageTuning::default(),
+            rng: Rng::new(seed),
+            memory: HashMap::new(),
+            boosted: Vec::new(),
+            migrants: Vec::new(),
+            plan_stats: HashMap::new(),
+        }
+    }
+
+    /// Directions the current strategy phase favours (the paper: "early
+    /// steps may focus on structural changes ... later steps can shift
+    /// toward micro-architectural tuning").
+    pub fn phase_directions(&self, committed: usize) -> &[Direction] {
+        self.phases.for_phase(
+            committed,
+            self.config.structural_until,
+            self.config.algorithmic_until,
+        )
+    }
+
+    /// Update the per-direction memory after a round.
+    pub fn remember(&mut self, direction: Direction, produced_commit: bool) {
+        let m = self.memory.entry(direction).or_default();
+        m.tried += 1;
+        if produced_commit {
+            m.barren = 0;
+        } else {
+            m.barren += 1;
+        }
+    }
+
+    /// Tick down supervisor bans at the start of a step.
+    pub fn decay_bans(&mut self) {
+        for m in self.memory.values_mut() {
+            m.banned_for = m.banned_for.saturating_sub(1);
+        }
+    }
+
+    /// Island-model hook body shared by pipeline operators.
+    pub fn receive_migrants(&mut self, migrants: &[Migrant]) {
+        self.migrants.extend(migrants.iter().cloned());
+        // Keep only the freshest few: stale elites from slow islands stop
+        // being useful once the local lineage has moved past them.
+        if self.migrants.len() > 8 {
+            let drop = self.migrants.len() - 8;
+            self.migrants.drain(..drop);
+        }
+    }
+
+    /// Supervisor hook body shared by pipeline operators.
+    pub fn apply_directive(&mut self, directive: &Directive) {
+        for d in &directive.ban {
+            self.memory.entry(*d).or_default().banned_for = directive.ban_steps;
+        }
+        self.boosted = directive.boost.clone();
+        // A fresh perspective: forget accumulated barren-ness so previously
+        // written-off directions are reconsidered.
+        if directive.reset_memory {
+            for m in self.memory.values_mut() {
+                m.barren = 0;
+            }
+        }
+    }
+}
+
+/// The shared per-step view the stages communicate through.
+pub struct AgentContext<'a> {
+    pub lineage: &'a mut Lineage,
+    pub eval: &'a dyn EvalBackend,
+    /// The driver's variation-step index (stamped into commits).
+    pub step: usize,
+    pub state: &'a mut AgentState,
+    /// The step's result under construction (actions, counters, trace).
+    pub out: StepOutcome,
+    /// Remaining candidate evaluations this step may spend.
+    pub budget: usize,
+    /// The genome the current round edits (AVO: the best at step start;
+    /// baselines: the sampled parent).
+    pub base: Option<KernelSpec>,
+    /// Direction weights from the Consult stage's profiler reads.
+    pub weights: HashMap<Direction, f64>,
+    /// Direction chosen by the Propose stage for the current round.
+    pub direction: Option<Direction>,
+    /// Unevaluated candidates from the Propose stage (one normally; up to
+    /// `lookahead` with refinement lookahead batching).
+    pub proposals: Vec<KernelSpec>,
+    /// Rationale per proposal, parallel to `proposals` (empty for
+    /// crossover candidates).
+    pub proposal_rationales: Vec<String>,
+    /// Rationale of the lookahead batch winner (None on the one-at-a-time
+    /// path, which reconstructs the rationale from the action log exactly
+    /// as the monolith did).
+    pub winner_rationale: Option<String>,
+    /// The evaluated (and possibly repaired) candidate of the round.
+    pub candidate: Option<(KernelSpec, Score)>,
+    /// The Critique stage's verdict on `candidate`.
+    pub accepted: bool,
+}
+
+/// A variation operator expressed as a configuration of stages: `setup`
+/// runs once per step, then `rounds` repeats until a stage returns
+/// [`StageOutcome::Finish`].
+pub struct StagePipeline {
+    name: &'static str,
+    pub state: AgentState,
+    setup: Vec<Box<dyn AgentStage>>,
+    rounds: Vec<Box<dyn AgentStage>>,
+    /// Emit the monolith's `Abandon` action when a step ends uncommitted.
+    emits_abandon: bool,
+}
+
+impl StagePipeline {
+    pub fn new(
+        name: &'static str,
+        state: AgentState,
+        setup: Vec<Box<dyn AgentStage>>,
+        rounds: Vec<Box<dyn AgentStage>>,
+        emits_abandon: bool,
+    ) -> Self {
+        StagePipeline { name, state, setup, rounds, emits_abandon }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Rebind the pipeline to a workload: knowledge-base shard, phase
+    /// schedule, and stage tuning.  This is the single workload-binding
+    /// path every operator goes through (`build_operator` routes AVO and
+    /// both baselines here), and it draws no randomness — the attention
+    /// defaults equal the MHA/GQA workloads' exactly, so binding is
+    /// behavior-preserving for the paper's runs.
+    pub fn bind_workload(&mut self, workload: &dyn Workload) {
+        self.state.kb = workload.knowledge_base();
+        self.state.phases = workload.phase_schedule();
+        self.state.tuning = workload.stage_tuning();
+    }
+
+    /// Drive one variation step through the stages.
+    pub fn step(
+        &mut self,
+        lineage: &mut Lineage,
+        eval: &dyn EvalBackend,
+        step: usize,
+    ) -> StepOutcome {
+        let budget = self.state.config.inner_budget;
+        let mut ctx = AgentContext {
+            lineage,
+            eval,
+            step,
+            state: &mut self.state,
+            out: StepOutcome::default(),
+            budget,
+            base: None,
+            weights: HashMap::new(),
+            direction: None,
+            proposals: Vec::new(),
+            proposal_rationales: Vec::new(),
+            winner_rationale: None,
+            candidate: None,
+            accepted: false,
+        };
+        ctx.out.trace.steps = 1;
+        'step: {
+            for stage in self.setup.iter_mut() {
+                match run_timed(stage.as_mut(), &mut ctx) {
+                    StageOutcome::Finish => break 'step,
+                    StageOutcome::Continue | StageOutcome::NextIteration => {}
+                }
+            }
+            'rounds: loop {
+                for stage in self.rounds.iter_mut() {
+                    match run_timed(stage.as_mut(), &mut ctx) {
+                        StageOutcome::Continue => {}
+                        StageOutcome::NextIteration => continue 'rounds,
+                        StageOutcome::Finish => break 'step,
+                    }
+                }
+            }
+        }
+        if self.emits_abandon && ctx.out.committed.is_none() {
+            ctx.out.trace.note_reason("abandon: inner budget exhausted");
+            let reason = format!(
+                "inner budget exhausted after exploring {:?}",
+                ctx.out.directions
+            );
+            ctx.out.actions.push(AgentAction::Abandon { reason });
+        }
+        if ctx.out.committed.is_some() {
+            ctx.out.trace.commits += 1;
+        }
+        // Single source of truth for evaluation accounting: every eval
+        // site records into the trace (record_batch), and the legacy
+        // counter is derived from it rather than maintained in parallel.
+        ctx.out.evaluations = ctx.out.trace.evals as usize;
+        ctx.out
+    }
+}
+
+fn run_timed(stage: &mut dyn AgentStage, ctx: &mut AgentContext) -> StageOutcome {
+    let start = std::time::Instant::now();
+    let outcome = stage.run(ctx);
+    ctx.out.trace.record_stage(stage.name(), start.elapsed());
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_tuning_matches_monolith_constants() {
+        // These four constants were hard-coded in the pre-refactor
+        // `AvoAgent::step`; changing a default breaks byte-for-byte
+        // archive parity.
+        let t = StageTuning::default();
+        assert_eq!(t.comparative_read_prob, 0.3);
+        assert_eq!(t.migrant_prob_floor, 0.3);
+        assert_eq!(t.refine_continue_prob, 0.5);
+        assert_eq!(t.neutral_commit_prob, 0.15);
+    }
+
+    #[test]
+    fn state_memory_and_bans_behave_like_the_monolith() {
+        let mut s = AgentState::new(AvoConfig::default(), 1);
+        s.remember(Direction::Tiling, false);
+        s.remember(Direction::Tiling, false);
+        assert_eq!(s.memory[&Direction::Tiling].barren, 2);
+        assert_eq!(s.memory[&Direction::Tiling].tried, 2);
+        s.remember(Direction::Tiling, true);
+        assert_eq!(s.memory[&Direction::Tiling].barren, 0);
+        s.memory.entry(Direction::Tiling).or_default().banned_for = 2;
+        s.decay_bans();
+        s.decay_bans();
+        s.decay_bans(); // saturates at zero
+        assert_eq!(s.memory[&Direction::Tiling].banned_for, 0);
+    }
+
+    #[test]
+    fn migrant_pool_bounded_to_freshest_eight() {
+        let eval = crate::score::Evaluator::new(crate::score::mha_suite());
+        let spec = KernelSpec::naive();
+        let score = eval.evaluate(&spec);
+        let mut s = AgentState::new(AvoConfig::default(), 3);
+        for i in 0..20 {
+            s.receive_migrants(&[Migrant {
+                from_island: i,
+                commit: crate::store::CommitId(i as u64),
+                spec: spec.clone(),
+                score: score.clone(),
+            }]);
+        }
+        assert_eq!(s.migrants.len(), 8);
+        assert_eq!(s.migrants[0].from_island, 12);
+    }
+}

@@ -1,0 +1,301 @@
+//! The Propose stage: select a direction and source candidate edits
+//! (§3.2 steps 2–3), with policy variants for the baseline operators.
+//!
+//! * [`ProposePolicy::Directed`] — the AVO policy: direction sampling
+//!   weighted by profiler bottleneck shares × knowledge-base priors ×
+//!   barren-direction novelty decay × phase boost × supervisor boost;
+//!   candidates come from cross-island migrants, lineage crossover, or the
+//!   KB-weighted edit catalogue.  With
+//!   [`crate::agent::AvoConfig::lookahead`] > 1 it accumulates the top-k
+//!   catalogue edits for the chosen direction so the Repair stage can
+//!   evaluate them as one batch.
+//! * [`ProposePolicy::SingleShot`] — FunSearch/AlphaEvolve-style:
+//!   Boltzmann parent sampling over the whole archive, then one uniform
+//!   catalogue edit.  No profiler, no weighting, no crossover.
+//! * [`ProposePolicy::Planned`] — LoongFlow-style Plan-Execute-Summarize:
+//!   MAP-Elites-lite parent selection (best member per tile-shape cell,
+//!   Boltzmann over cell elites), direction planned from summarized
+//!   success statistics, one KB-weighted edit.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::agent::stages::{AgentContext, AgentState, AgentStage, StageOutcome};
+use crate::agent::AgentAction;
+use crate::kernelspec::{all_edits, Direction, Edit, KernelSpec};
+use crate::store::Commit;
+
+/// Weighted direction choice (the AVO policy's §3.2 step 2).
+pub fn choose_direction(
+    state: &mut AgentState,
+    weights: &HashMap<Direction, f64>,
+    committed: usize,
+) -> Direction {
+    let phase = state.phase_directions(committed);
+    let dirs: Vec<Direction> = Direction::ALL
+        .into_iter()
+        .filter(|d| {
+            state
+                .memory
+                .get(d)
+                .map(|m| m.banned_for == 0)
+                .unwrap_or(true)
+        })
+        .collect();
+    let dirs = if dirs.is_empty() { Direction::ALL.to_vec() } else { dirs };
+    let ws: Vec<f64> = dirs
+        .iter()
+        .map(|d| {
+            let bottleneck = weights.get(d).copied().unwrap_or(0.01).max(0.01);
+            let kb_prior = state
+                .kb
+                .retrieve(*d)
+                .first()
+                .map(|doc| doc.prior)
+                .unwrap_or(0.1);
+            let barren = state.memory.get(d).map(|m| m.barren).unwrap_or(0);
+            let novelty = state.config.novelty_decay.powi(barren as i32);
+            let phase_mult = if phase.contains(d) { state.config.phase_boost } else { 1.0 };
+            let boost = if state.boosted.contains(d) { 3.0 } else { 1.0 };
+            bottleneck * kb_prior * novelty * phase_mult * boost
+        })
+        .collect();
+    dirs[state.rng.weighted(&ws)]
+}
+
+/// Draw up to `k` distinct KB-weighted edits for a direction (no-ops
+/// filtered), by repeated weighted sampling without replacement.  `k = 1`
+/// is exactly the monolith's `propose_edit` — one weighted draw — so the
+/// default configuration replays the legacy PRNG stream draw-for-draw.
+pub fn propose_edits(
+    state: &mut AgentState,
+    direction: Direction,
+    base: &KernelSpec,
+    k: usize,
+) -> Vec<Edit> {
+    let mut candidates: Vec<(Edit, f64)> = state
+        .kb
+        .edits_for(direction)
+        .into_iter()
+        .filter(|(e, _)| !e.is_noop(base))
+        .collect();
+    let mut out = Vec::new();
+    while out.len() < k && !candidates.is_empty() {
+        let ws: Vec<f64> = candidates.iter().map(|(_, w)| *w).collect();
+        let i = state.rng.weighted(&ws);
+        out.push(candidates.remove(i).0);
+    }
+    out
+}
+
+/// How the Propose stage selects parents and sources candidates.
+pub enum ProposePolicy {
+    /// The AVO agent's directed proposal loop.
+    Directed,
+    /// One-shot generation over a Boltzmann-sampled parent.
+    SingleShot {
+        /// Boltzmann temperature of the parent sampler.
+        temperature: f64,
+    },
+    /// Plan-Execute-Summarize over a MAP-Elites-lite archive.
+    Planned,
+}
+
+pub struct Propose {
+    pub policy: ProposePolicy,
+}
+
+impl Propose {
+    pub fn new(policy: ProposePolicy) -> Self {
+        Propose { policy }
+    }
+}
+
+fn run_directed(ctx: &mut AgentContext) -> StageOutcome {
+    // The monolith's inner-loop guard: stop once the budget is spent
+    // or a commit landed.
+    if ctx.out.committed.is_some() || ctx.budget == 0 {
+        return StageOutcome::Finish;
+    }
+    let direction = choose_direction(ctx.state, &ctx.weights, ctx.lineage.len());
+    if !ctx.out.directions.contains(&direction) {
+        ctx.out.directions.push(direction);
+    }
+    ctx.direction = Some(direction);
+    if let Some(doc_id) = ctx.state.kb.retrieve(direction).first().map(|d| d.id) {
+        ctx.out.actions.push(AgentAction::ConsultKb { doc_id, direction });
+    }
+
+    // Candidate sourcing: crossover (cross-island migrant first, then
+    // local lineage member) or catalogue edit.  The migrant branch
+    // draws no randomness when the pool is empty, keeping the
+    // sequential regime's PRNG stream untouched.  Migrants are
+    // consulted more eagerly than local donors (floored at the
+    // tuning's migrant_prob_floor) — but crossover_prob = 0 is an
+    // explicit no-crossover ablation and disables the migrant path
+    // too.
+    let migrant_prob = if ctx.state.config.crossover_prob > 0.0 {
+        ctx.state
+            .config
+            .crossover_prob
+            .max(ctx.state.tuning.migrant_prob_floor)
+    } else {
+        0.0
+    };
+    let crossover_prob = ctx.state.config.crossover_prob;
+    let base = ctx.base.clone().expect("Consult sets the round base");
+    if !ctx.state.migrants.is_empty() && ctx.state.rng.chance(migrant_prob) {
+        let donor = ctx.state.migrants.remove(0);
+        ctx.out.actions.push(AgentAction::Crossover { with: donor.commit });
+        ctx.proposals = vec![base.crossover(&donor.spec, &mut ctx.state.rng)];
+    } else if ctx.lineage.len() > 3 && ctx.state.rng.chance(crossover_prob) {
+        let (donor_id, donor_spec) = {
+            let versions = ctx.lineage.versions();
+            let donor = versions[ctx.state.rng.below(versions.len())];
+            (donor.id, donor.spec.clone())
+        };
+        ctx.out.actions.push(AgentAction::Crossover { with: donor_id });
+        ctx.proposals = vec![base.crossover(&donor_spec, &mut ctx.state.rng)];
+    } else {
+        // Refinement lookahead: accumulate the top-k edits for this
+        // direction so Repair can submit them as one batch (k = 1 is
+        // the monolith's single weighted draw).  Clamped to the remaining
+        // inner budget so a wide batch cannot overspend the step by more
+        // than the monolith's own repair-chain overshoot.
+        let k = ctx.state.config.lookahead.max(1).min(ctx.budget);
+        let edits = propose_edits(ctx.state, direction, &base, k);
+        if edits.is_empty() {
+            ctx.budget -= 1;
+            ctx.state.remember(direction, false);
+            ctx.out.trace.note_reason("reject: no applicable edit");
+            return StageOutcome::NextIteration;
+        }
+        for e in &edits {
+            ctx.out.actions.push(AgentAction::Propose {
+                direction,
+                rationale: e.rationale.to_string(),
+            });
+        }
+        ctx.proposal_rationales =
+            edits.iter().map(|e| e.rationale.to_string()).collect();
+        ctx.proposals = edits.iter().map(|e| e.apply(&base)).collect();
+    }
+    StageOutcome::Continue
+}
+
+fn run_single_shot(ctx: &mut AgentContext, temperature: f64) -> StageOutcome {
+    // Framework-driven parent sampling: score-weighted (Boltzmann)
+    // over the whole archive.
+    let parent = {
+        let versions = ctx.lineage.versions();
+        let best = ctx.lineage.best_geomean().max(1.0);
+        let ws: Vec<f64> = versions
+            .iter()
+            .map(|c| ((c.score.geomean() - best) / (temperature * best)).exp())
+            .collect();
+        versions[ctx.state.rng.weighted(&ws)].spec.clone()
+    };
+    // One-shot generation: a single uniform catalogue edit,
+    // prompt-conditioned on the parent only.
+    let edits: Vec<Edit> = all_edits()
+        .into_iter()
+        .filter(|e| !e.is_noop(&parent))
+        .collect();
+    let edit = edits[ctx.state.rng.below(edits.len())].clone();
+    ctx.direction = Some(edit.direction);
+    ctx.out.directions.push(edit.direction);
+    // The one-shot prompt is conditioned on the *workload's* KB shard
+    // (annotation only — the uniform edit draw above is untouched, so
+    // attention archives stay byte-identical to the monolith's).
+    if let Some(doc_id) = ctx.state.kb.retrieve(edit.direction).first().map(|d| d.id) {
+        ctx.out.actions.push(AgentAction::ConsultKb {
+            doc_id,
+            direction: edit.direction,
+        });
+    }
+    ctx.out.actions.push(AgentAction::Propose {
+        direction: edit.direction,
+        rationale: edit.rationale.to_string(),
+    });
+    ctx.proposal_rationales = vec![edit.rationale.to_string()];
+    ctx.proposals = vec![edit.apply(&parent)];
+    ctx.base = Some(parent);
+    StageOutcome::Continue
+}
+
+fn run_planned(ctx: &mut AgentContext) -> StageOutcome {
+    // MAP-Elites-lite: best member per (block_q, block_k) cell, then
+    // Boltzmann over cell elites.  The cell index is a BTreeMap so
+    // elite iteration order — and therefore the Boltzmann draw — is
+    // deterministic (the monolith's HashMap made it vary per run).
+    let parent = {
+        let mut elites: BTreeMap<(u32, u32), &Commit> = BTreeMap::new();
+        for c in ctx.lineage.versions() {
+            let key = (c.spec.block_q, c.spec.block_k);
+            let cur = elites.entry(key).or_insert(c);
+            if c.score.geomean() > cur.score.geomean() {
+                *cur = c;
+            }
+        }
+        let elites: Vec<&Commit> = elites.into_values().collect();
+        let best = ctx.lineage.best_geomean().max(1.0);
+        let ws: Vec<f64> = elites
+            .iter()
+            .map(|c| ((c.score.geomean() - best) / (0.03 * best)).exp())
+            .collect();
+        elites[ctx.state.rng.weighted(&ws)].spec.clone()
+    };
+
+    // PLAN: the direction with the best summarized success rate
+    // (exploration bonus for untried directions).
+    let direction = *Direction::ALL
+        .iter()
+        .max_by(|a, b| {
+            let rate = |d| {
+                let (ok, tried) =
+                    ctx.state.plan_stats.get(d).copied().unwrap_or((0, 0));
+                (ok as f64 + 1.0) / (tried as f64 + 2.0)
+            };
+            rate(a).partial_cmp(&rate(b)).unwrap()
+        })
+        .unwrap();
+    ctx.out.directions.push(direction);
+    ctx.direction = Some(direction);
+
+    // EXECUTE: one KB-weighted edit (the same single weighted draw as
+    // `propose_edits` with k = 1); nothing applicable is a barren try the
+    // Summarize memory records, and the step ends.
+    let Some(edit) = propose_edits(ctx.state, direction, &parent, 1).into_iter().next()
+    else {
+        ctx.state.plan_stats.entry(direction).or_insert((0, 0)).1 += 1;
+        ctx.out.trace.note_reason("reject: no applicable edit");
+        return StageOutcome::Finish;
+    };
+    ctx.out.actions.push(AgentAction::Propose {
+        direction,
+        rationale: edit.rationale.to_string(),
+    });
+    ctx.proposal_rationales = vec![edit.rationale.to_string()];
+    ctx.proposals = vec![edit.apply(&parent)];
+    ctx.base = Some(parent);
+    StageOutcome::Continue
+}
+
+impl AgentStage for Propose {
+    fn name(&self) -> &'static str {
+        "propose"
+    }
+
+    fn run(&mut self, ctx: &mut AgentContext) -> StageOutcome {
+        // A fresh round: clear the previous round's working set.
+        ctx.proposals.clear();
+        ctx.proposal_rationales.clear();
+        ctx.winner_rationale = None;
+        ctx.candidate = None;
+        ctx.accepted = false;
+        match self.policy {
+            ProposePolicy::Directed => run_directed(ctx),
+            ProposePolicy::SingleShot { temperature } => run_single_shot(ctx, temperature),
+            ProposePolicy::Planned => run_planned(ctx),
+        }
+    }
+}

@@ -1,0 +1,532 @@
+//! The Repair stage: evaluate candidates and walk the ranked repair table
+//! on failure — the "edit-evaluate-diagnose cycle" of the paper's §3.2,
+//! plus the table itself (absorbed from the old `agent::diagnose` module).
+//!
+//! Every structural (`SpecError`) and semantic (`ErrorClass`) failure maps
+//! to ranked repair edits via [`repairs_for`] — the knowledge the agent
+//! applies when a candidate fails, instead of abandoning it the way a
+//! single-turn operator must.
+//!
+//! Batching seams (both opt-in; the default replays the monolith's
+//! one-at-a-time stream):
+//!
+//! * **speculative repair** (`--speculative-repair`): a failed candidate's
+//!   whole ranked repair table goes out as one `evaluate_batch`, and the
+//!   first correct candidate in table order wins;
+//! * **refinement lookahead** (`--lookahead <k>`): the Propose stage hands
+//!   this stage k candidates for the chosen direction; they are scored as
+//!   one batch and the best correct one proceeds (falling back to the
+//!   top-ranked proposal — and the normal repair walk — when all fail).
+
+use crate::agent::stages::{AgentContext, AgentStage, StageOutcome};
+use crate::agent::trace::AgentTrace;
+use crate::agent::AgentAction;
+use crate::eval::EvalBackend;
+use crate::kernelspec::{
+    Direction, Edit, EditKind, FenceKind, KernelSpec, MaskingMode, RegisterPlan,
+    RescaleMode, Scheduling, SpecError,
+};
+use crate::score::{Failure, Score};
+use crate::sim::functional::ErrorClass;
+
+/// Ranked repair edits for a failure on a given candidate genome.
+/// First entry = the repair the knowledge base recommends most strongly
+/// (the agent tries them in order across its repair budget).
+pub fn repairs_for(failure: &Failure, spec: &KernelSpec) -> Vec<Edit> {
+    match failure {
+        Failure::Invalid(e) => structural_repairs(e, spec),
+        Failure::Incorrect(c) => semantic_repairs(*c),
+    }
+}
+
+fn edit(kind: EditKind, direction: Direction, rationale: &'static str) -> Edit {
+    Edit { kind, direction, rationale }
+}
+
+fn structural_repairs(e: &SpecError, spec: &KernelSpec) -> Vec<Edit> {
+    match e {
+        SpecError::RegisterBudgetExceeded { total } => {
+            // Give back the overdraft from the softmax group (it has the
+            // most headroom by design), per warp-group arithmetic.
+            let excess = (*total - RegisterPlan::SM_BUDGET) as i32;
+            let warps = RegisterPlan::WARPS_SOFTMAX as i32;
+            let per_warp = (excess + warps - 1) / warps;
+            vec![
+                edit(
+                    EditKind::ShiftRegisters { softmax: -per_warp, correction: 0, other: 0 },
+                    Direction::Registers,
+                    "return the overdraft from the softmax group's headroom",
+                ),
+                edit(
+                    EditKind::ShiftRegisters {
+                        softmax: 192 - spec.registers.softmax as i32,
+                        correction: 80 - spec.registers.correction as i32,
+                        other: 48 - spec.registers.other as i32,
+                    },
+                    Direction::Registers,
+                    "reset to the FA4 reference split",
+                ),
+            ]
+        }
+        SpecError::RegisterUnderMinimum { group, .. } => {
+            let (s, c, o) = match *group {
+                "softmax" => (8, -4, -4),
+                "correction" => (-4, 8, -4),
+                _ => (-4, -4, 8),
+            };
+            vec![edit(
+                EditKind::ShiftRegisters { softmax: s, correction: c, other: o },
+                Direction::Registers,
+                "raise the starved group above the ABI minimum",
+            )]
+        }
+        SpecError::SmemOverflow { .. } => vec![
+            edit(
+                EditKind::SetPipelineDepth(spec.kv_pipeline_depth.saturating_sub(1).max(1)),
+                Direction::Pipelining,
+                "drop one staging stage to fit shared memory",
+            ),
+            edit(
+                EditKind::SetBlockK(spec.block_k / 2),
+                Direction::Tiling,
+                "halve the K tile to fit shared memory",
+            ),
+        ],
+        SpecError::OverlapRequiresDualQ => vec![edit(
+            EditKind::SetQStages(2),
+            Direction::Pipelining,
+            "correction overlap needs two Q-stages in flight",
+        )],
+        SpecError::BitmaskTooWide { .. } => vec![edit(
+            EditKind::SetBlockK(128),
+            Direction::Tiling,
+            "cap block_k at the 128-column bitmask width",
+        )],
+        SpecError::BadBlockShape { block_q, block_k } => {
+            let snap = |v: u32| -> u32 {
+                *crate::kernelspec::BLOCK_SIZES
+                    .iter()
+                    .min_by_key(|&&b| b.abs_diff(v))
+                    .unwrap()
+            };
+            vec![
+                edit(EditKind::SetBlockQ(snap(*block_q)), Direction::Tiling,
+                     "snap Q tile to a supported extent"),
+                edit(EditKind::SetBlockK(snap(*block_k)), Direction::Tiling,
+                     "snap K tile to a supported extent"),
+            ]
+        }
+        SpecError::BadPipelineDepth { depth } => vec![edit(
+            EditKind::SetPipelineDepth((*depth).clamp(1, 4)),
+            Direction::Pipelining,
+            "clamp staging depth to the supported range",
+        )],
+        SpecError::BadQStages { stages } => vec![edit(
+            EditKind::SetQStages((*stages).clamp(1, 2)),
+            Direction::Pipelining,
+            "clamp Q-stage count to the supported range",
+        )],
+    }
+}
+
+fn semantic_repairs(c: ErrorClass) -> Vec<Edit> {
+    match c {
+        // The KB's fence doc: ordering-only fences need warp-uniform
+        // control flow — so the *forward* repair is branchless rescale;
+        // the fallback reverts to the blocking fence.
+        ErrorClass::FenceRace => vec![
+            edit(
+                EditKind::SetRescaleMode(RescaleMode::Branchless),
+                Direction::Synchronization,
+                "restore warp-uniform control flow so the relaxed fence is safe",
+            ),
+            edit(
+                EditKind::SetFence(FenceKind::Blocking),
+                Direction::Synchronization,
+                "fall back to the full write-drain fence",
+            ),
+        ],
+        ErrorClass::MaskOrdering => vec![
+            edit(
+                EditKind::SetMaskingMode(MaskingMode::Bitmask),
+                Direction::Masking,
+                "fuse the mask into issue-time bitmask select",
+            ),
+            edit(
+                EditKind::SetInterleave(false),
+                Direction::MmaIssue,
+                "serialize MMA issue so the late mask lands in time",
+            ),
+        ],
+        ErrorClass::EpilogueRace => vec![
+            edit(
+                EditKind::SetPipelineDepth(2),
+                Direction::Pipelining,
+                "double-buffer staging so the async store has a free slot",
+            ),
+            edit(
+                EditKind::SetEpilogueAsync(false),
+                Direction::Pipelining,
+                "serialize the epilogue store",
+            ),
+            edit(
+                EditKind::SetScheduling(Scheduling::PerTile),
+                Direction::Scheduling,
+                "per-tile CTAs never reuse a live staging buffer",
+            ),
+        ],
+        // No hazard matched: nothing principled to try.
+        ErrorClass::NumericMismatch => vec![],
+    }
+}
+
+/// Walk the ranked repair table on an already-scored failing candidate:
+/// up to `budget` diagnose/repair rounds, each conditioning on the latest
+/// failure class (the monolith's `evaluate_with_repair` loop body).
+/// Returns the extra evaluations consumed.
+#[allow(clippy::too_many_arguments)]
+pub fn repair_rounds(
+    eval: &dyn EvalBackend,
+    cand: &mut KernelSpec,
+    score: &mut Score,
+    actions: &mut Vec<AgentAction>,
+    trace: &mut AgentTrace,
+    budget: usize,
+    speculative: bool,
+    emit_evaluate_actions: bool,
+) -> usize {
+    let mut evals = 0;
+    let mut repairs_left = budget;
+    while let Some(failure) = score.failure.clone() {
+        if repairs_left == 0 {
+            break;
+        }
+        repairs_left -= 1;
+        let repairs = repairs_for(&failure, cand);
+        if repairs.is_empty() {
+            break;
+        }
+        if speculative && repairs.len() > 1 {
+            // Speculative batch: evaluate the whole ranked repair table at
+            // once and keep the first correct candidate in table order.
+            // If none passes, fall back to the top-ranked (still-failing)
+            // candidate so the next round re-diagnoses from the strongest
+            // repair, exactly as the sequential path would.
+            let cands: Vec<KernelSpec> = repairs.iter().map(|r| r.apply(cand)).collect();
+            let scores = eval.evaluate_batch(&cands);
+            trace.record_batch(cands.len());
+            evals += cands.len();
+            let pick = scores.iter().position(|s| s.is_correct()).unwrap_or(0);
+            actions.push(AgentAction::Diagnose {
+                failure: failure.to_string(),
+                repair: repairs[pick].rationale.to_string(),
+            });
+            *cand = cands
+                .into_iter()
+                .nth(pick)
+                .expect("pick indexes the candidate batch");
+            *score = scores
+                .into_iter()
+                .nth(pick)
+                .expect("pick indexes the score batch");
+        } else {
+            let repair = &repairs[0];
+            actions.push(AgentAction::Diagnose {
+                failure: failure.to_string(),
+                repair: repair.rationale.to_string(),
+            });
+            *cand = repair.apply(cand);
+            *score = eval
+                .evaluate_batch(std::slice::from_ref(cand))
+                .pop()
+                .expect("one score per candidate");
+            trace.record_batch(1);
+            evals += 1;
+        }
+        if emit_evaluate_actions {
+            actions.push(AgentAction::Evaluate {
+                geomean: score.geomean(),
+                failure: score.failure.clone(),
+            });
+        }
+    }
+    evals
+}
+
+/// Evaluate one candidate with the diagnose/repair loop.  Returns the
+/// final candidate, its score, and the evaluation count consumed —
+/// byte-identical to the monolith's `evaluate_with_repair` (the Critique
+/// stage reuses it for refinement stacking).
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_with_repair(
+    eval: &dyn EvalBackend,
+    mut cand: KernelSpec,
+    actions: &mut Vec<AgentAction>,
+    trace: &mut AgentTrace,
+    budget: usize,
+    speculative: bool,
+    emit_evaluate_actions: bool,
+) -> (KernelSpec, Score, usize) {
+    let mut score = eval
+        .evaluate_batch(std::slice::from_ref(&cand))
+        .pop()
+        .expect("one score per candidate");
+    trace.record_batch(1);
+    let mut evals = 1;
+    if emit_evaluate_actions {
+        actions.push(AgentAction::Evaluate {
+            geomean: score.geomean(),
+            failure: score.failure.clone(),
+        });
+    }
+    evals += repair_rounds(
+        eval,
+        &mut cand,
+        &mut score,
+        actions,
+        trace,
+        budget,
+        speculative,
+        emit_evaluate_actions,
+    );
+    (cand, score, evals)
+}
+
+/// The Repair stage: score the Propose stage's candidates (as one batch
+/// when there are several) and drive the diagnose/repair walk on the
+/// survivor.
+pub struct Repair {
+    /// Repair rounds per failed candidate; `None` = the pipeline's
+    /// [`crate::agent::AvoConfig::repair_budget`].
+    pub budget: Option<usize>,
+    /// Speculative repair batching; `None` = the pipeline's
+    /// [`crate::agent::AvoConfig::speculative_repair`].
+    pub speculative: Option<bool>,
+    /// Whether to log `Evaluate` actions (the fixed-pipeline operator's
+    /// prescribed transcript has no evaluation entries).
+    pub emit_evaluate_actions: bool,
+}
+
+impl Repair {
+    /// The AVO flavor: budgets from the live config, full action log.
+    pub fn avo() -> Self {
+        Repair { budget: None, speculative: None, emit_evaluate_actions: true }
+    }
+
+    /// Single-turn flavor: no repair loop at all (the operator cannot
+    /// react to failure — part of what Figure 1 contrasts).
+    pub fn single_shot() -> Self {
+        Repair { budget: Some(0), speculative: Some(false), emit_evaluate_actions: true }
+    }
+
+    /// Fixed-pipeline flavor: exactly one retry in the workflow's
+    /// prescribed error-handling slot, silent transcript.
+    pub fn planned() -> Self {
+        Repair { budget: Some(1), speculative: Some(false), emit_evaluate_actions: false }
+    }
+}
+
+impl AgentStage for Repair {
+    fn name(&self) -> &'static str {
+        "repair"
+    }
+
+    fn run(&mut self, ctx: &mut AgentContext) -> StageOutcome {
+        if ctx.proposals.is_empty() {
+            return StageOutcome::Continue;
+        }
+        let budget = self.budget.unwrap_or(ctx.state.config.repair_budget);
+        let speculative = self
+            .speculative
+            .unwrap_or(ctx.state.config.speculative_repair);
+        let proposals = std::mem::take(&mut ctx.proposals);
+        let rationales = std::mem::take(&mut ctx.proposal_rationales);
+
+        let (cand, score, evals) = if proposals.len() == 1 {
+            evaluate_with_repair(
+                ctx.eval,
+                proposals.into_iter().next().expect("one proposal"),
+                &mut ctx.out.actions,
+                &mut ctx.out.trace,
+                budget,
+                speculative,
+                self.emit_evaluate_actions,
+            )
+        } else {
+            // Refinement lookahead: one batch over the whole proposal set;
+            // the best correct candidate wins.  If every proposal fails,
+            // fall back to the top-ranked one and walk its repair table,
+            // exactly as the one-at-a-time path would have.
+            let scores = ctx.eval.evaluate_batch(&proposals);
+            ctx.out.trace.record_batch(proposals.len());
+            let mut evals = proposals.len();
+            // Log every evaluation in the batch, like the one-at-a-time
+            // path (and the Critique stage's lookahead batches).
+            if self.emit_evaluate_actions {
+                for s in &scores {
+                    ctx.out.actions.push(AgentAction::Evaluate {
+                        geomean: s.geomean(),
+                        failure: s.failure.clone(),
+                    });
+                }
+            }
+            let mut pick = 0usize;
+            let mut best: Option<f64> = None;
+            for (i, s) in scores.iter().enumerate() {
+                if s.is_correct() && best.map(|b| s.geomean() > b).unwrap_or(true) {
+                    pick = i;
+                    best = Some(s.geomean());
+                }
+            }
+            ctx.winner_rationale = rationales.get(pick).cloned();
+            let mut cand = proposals
+                .into_iter()
+                .nth(pick)
+                .expect("pick indexes the proposal batch");
+            let mut score = scores
+                .into_iter()
+                .nth(pick)
+                .expect("pick indexes the score batch");
+            evals += repair_rounds(
+                ctx.eval,
+                &mut cand,
+                &mut score,
+                &mut ctx.out.actions,
+                &mut ctx.out.trace,
+                budget,
+                speculative,
+                self.emit_evaluate_actions,
+            );
+            (cand, score, evals)
+        };
+        // StepOutcome.evaluations is derived from the trace at the end of
+        // the step (single source of truth); only the budget is spent here.
+        ctx.budget = ctx.budget.saturating_sub(evals);
+        ctx.candidate = Some((cand, score));
+        StageOutcome::Continue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::score::{mha_suite, Evaluator};
+
+    fn eval() -> Evaluator {
+        Evaluator::new(mha_suite())
+    }
+
+    /// Property: for every failure our evaluator can produce on a
+    /// single-edit mutation of a correct genome, at least one ranked
+    /// repair makes the candidate pass.
+    #[test]
+    fn repairs_fix_every_reachable_failure() {
+        let ev = eval();
+        let bases = [
+            KernelSpec::naive(),
+            crate::baselines::fa4_genome(),
+            crate::baselines::evolved_genome(),
+        ];
+        let mut failures_seen = 0;
+        for base in &bases {
+            for e in crate::kernelspec::all_edits() {
+                let cand = e.apply(base);
+                let score = ev.evaluate(&cand);
+                let Some(failure) = score.failure.clone() else { continue };
+                failures_seen += 1;
+                let repairs = repairs_for(&failure, &cand);
+                assert!(!repairs.is_empty(), "no repair for {failure}");
+                let fixed = repairs.iter().any(|r| {
+                    let mut c = r.apply(&cand);
+                    // Repairs may need a second application round (e.g.
+                    // budget overdraft after clamping) — allow one chain.
+                    if let Some(f2) = ev.evaluate(&c).failure {
+                        if let Some(r2) = repairs_for(&f2, &c).first() {
+                            c = r2.apply(&c);
+                        }
+                    }
+                    ev.evaluate(&c).is_correct()
+                });
+                assert!(fixed, "unrepairable: {failure} on {cand:?}");
+            }
+        }
+        assert!(failures_seen >= 3, "expected several failures, saw {failures_seen}");
+    }
+
+    #[test]
+    fn fence_race_prefers_branchless() {
+        let r = semantic_repairs(ErrorClass::FenceRace);
+        assert!(matches!(
+            r[0].kind,
+            EditKind::SetRescaleMode(RescaleMode::Branchless)
+        ));
+    }
+
+    #[test]
+    fn register_overdraft_repair_is_exact() {
+        let mut s = KernelSpec::naive(); // 192/80/48 = 2048
+        s.registers.correction += 8; // +32 total -> 2080
+        let e = s.validate().unwrap_err();
+        let repairs = structural_repairs(&e, &s);
+        let fixed = repairs[0].apply(&s);
+        assert!(fixed.validate().is_ok(), "{:?}", fixed.registers);
+    }
+
+    #[test]
+    fn numeric_mismatch_has_no_repair() {
+        assert!(semantic_repairs(ErrorClass::NumericMismatch).is_empty());
+    }
+
+    #[test]
+    fn evaluate_with_repair_recovers_a_fence_race() {
+        // The FenceRace table (branchless rescale, blocking-fence
+        // fallback) must recover a known-bad candidate, logging the
+        // diagnose/evaluate transcript.
+        let ev = eval();
+        let mut bad = KernelSpec::naive();
+        bad.fence_kind = FenceKind::NonBlocking;
+        let mut actions = Vec::new();
+        let mut trace = AgentTrace::default();
+        let (fixed, score, evals) =
+            evaluate_with_repair(&ev, bad, &mut actions, &mut trace, 3, false, true);
+        assert!(score.is_correct(), "{:?}", score.failure);
+        assert_eq!(fixed.rescale_mode, RescaleMode::Branchless);
+        assert_eq!(evals, 2); // initial + one repaired re-evaluation
+        assert_eq!(trace.evals, 2);
+        assert_eq!(trace.eval_batches, 2);
+        assert_eq!(trace.max_batch_width, 1);
+        assert!(actions.iter().any(|a| matches!(a, AgentAction::Diagnose { .. })));
+    }
+
+    #[test]
+    fn zero_budget_leaves_failures_unrepaired() {
+        let ev = eval();
+        let mut bad = KernelSpec::naive();
+        bad.fence_kind = FenceKind::NonBlocking;
+        let mut actions = Vec::new();
+        let mut trace = AgentTrace::default();
+        let (_, score, evals) =
+            evaluate_with_repair(&ev, bad, &mut actions, &mut trace, 0, false, true);
+        assert!(!score.is_correct());
+        assert_eq!(evals, 1);
+        assert!(!actions.iter().any(|a| matches!(a, AgentAction::Diagnose { .. })));
+    }
+
+    #[test]
+    fn speculative_repair_batches_the_whole_table() {
+        let ev = eval();
+        let mut bad = KernelSpec::naive();
+        bad.fence_kind = FenceKind::NonBlocking;
+        let mut actions = Vec::new();
+        let mut trace = AgentTrace::default();
+        let (fixed, score, evals) =
+            evaluate_with_repair(&ev, bad, &mut actions, &mut trace, 3, true, true);
+        assert!(score.is_correct());
+        // Table-order winner must be the top-ranked (branchless) repair.
+        assert_eq!(fixed.rescale_mode, RescaleMode::Branchless);
+        // One initial evaluation + the 2-wide speculative batch.
+        assert_eq!(evals, 3);
+        assert_eq!(trace.max_batch_width, 2);
+        assert_eq!(trace.eval_batches, 2);
+    }
+}

@@ -1,0 +1,143 @@
+//! The Verify stage: execute the Critique verdict through the Update
+//! rule, close the round's memory bookkeeping, and decide whether the
+//! step continues (§3.2's commit, and the loop-control half of step 6).
+
+use crate::agent::stages::{AgentContext, AgentStage, StageOutcome};
+use crate::agent::AgentAction;
+
+/// Per-operator commit style: message format, summarize-memory updates,
+/// and whether the pipeline loops (AVO keeps exploring until its budget
+/// is spent; the baselines' workflows are one round per step by design).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VerifyStyle {
+    Avo,
+    SingleTurn,
+    Planned,
+}
+
+pub struct Verify {
+    pub style: VerifyStyle,
+}
+
+impl Verify {
+    pub fn new(style: VerifyStyle) -> Self {
+        Verify { style }
+    }
+}
+
+/// The monolith's commit-message reconstruction: the latest proposal
+/// rationale in the action log (a crossover reads as a port note).  The
+/// lookahead paths pre-empt it with the actual batch winner's rationale.
+fn latest_rationale(ctx: &AgentContext) -> String {
+    if let Some(r) = &ctx.winner_rationale {
+        return r.clone();
+    }
+    ctx.out
+        .actions
+        .iter()
+        .rev()
+        .find_map(|a| match a {
+            AgentAction::Propose { rationale, .. } => Some(rationale.clone()),
+            AgentAction::Crossover { .. } => {
+                Some("port mechanism from earlier version".to_string())
+            }
+            _ => None,
+        })
+        .unwrap_or_default()
+}
+
+impl AgentStage for Verify {
+    fn name(&self) -> &'static str {
+        "verify"
+    }
+
+    fn run(&mut self, ctx: &mut AgentContext) -> StageOutcome {
+        match self.style {
+            VerifyStyle::Avo => {
+                let Some((cand, score)) = ctx.candidate.take() else {
+                    return StageOutcome::NextIteration;
+                };
+                let direction = ctx.direction.expect("Propose set the direction");
+                let is_base = ctx
+                    .base
+                    .as_ref()
+                    .map(|b| &cand == b)
+                    .unwrap_or(false);
+                if ctx.accepted && !is_base {
+                    let message = format!(
+                        "[{}] {} (geomean {:.1} TFLOPS)",
+                        direction,
+                        latest_rationale(ctx),
+                        score.geomean()
+                    );
+                    if let Ok(id) =
+                        ctx.lineage.update(cand, score.clone(), &message, ctx.step)
+                    {
+                        ctx.out.actions.push(AgentAction::Commit {
+                            id,
+                            geomean: score.geomean(),
+                            message,
+                        });
+                        ctx.out.committed = Some(id);
+                    }
+                }
+                ctx.state.remember(direction, ctx.out.committed.is_some());
+                if ctx.out.committed.is_some() {
+                    StageOutcome::Finish
+                } else {
+                    StageOutcome::NextIteration
+                }
+            }
+            VerifyStyle::SingleTurn => {
+                if let Some((cand, score)) = ctx.candidate.take() {
+                    if ctx.accepted {
+                        let msg = format!("[single-turn] {}", latest_rationale(ctx));
+                        if let Ok(id) =
+                            ctx.lineage.update(cand, score.clone(), &msg, ctx.step)
+                        {
+                            ctx.out.actions.push(AgentAction::Commit {
+                                id,
+                                geomean: score.geomean(),
+                                message: msg,
+                            });
+                            ctx.out.committed = Some(id);
+                        }
+                    }
+                }
+                // The framework's update rule decides; the operator cannot
+                // react — one round per step.
+                StageOutcome::Finish
+            }
+            VerifyStyle::Planned => {
+                let direction = ctx.direction.expect("Propose set the direction");
+                // SUMMARIZE: record the try, then the success if the
+                // Update rule takes the candidate.
+                ctx.state.plan_stats.entry(direction).or_insert((0, 0)).1 += 1;
+                if let Some((cand, score)) = ctx.candidate.take() {
+                    if ctx.accepted {
+                        let msg = format!(
+                            "[plan-execute-summarize:{direction}] {}",
+                            latest_rationale(ctx)
+                        );
+                        if let Ok(id) =
+                            ctx.lineage.update(cand, score.clone(), &msg, ctx.step)
+                        {
+                            ctx.state
+                                .plan_stats
+                                .entry(direction)
+                                .or_insert((0, 0))
+                                .0 += 1;
+                            ctx.out.actions.push(AgentAction::Commit {
+                                id,
+                                geomean: score.geomean(),
+                                message: msg,
+                            });
+                            ctx.out.committed = Some(id);
+                        }
+                    }
+                }
+                StageOutcome::Finish
+            }
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! `AgentTrace`: the structured, machine-readable record of what the
+//! staged agent runtime did — the introspection side of the
+//! [`crate::agent::stages`] refactor.
+//!
+//! One trace accumulates over any number of variation steps (the pipeline
+//! emits a per-step trace in [`crate::agent::StepOutcome::trace`]; the
+//! archipelago merges them per island and again per run).  Schema (also
+//! the JSON layout produced by [`AgentTrace::to_json`], written by
+//! `avo evolve --trace-out <path>`):
+//!
+//! | field             | meaning                                          |
+//! |-------------------|--------------------------------------------------|
+//! | `steps`           | variation steps traced                           |
+//! | `stages`          | per-stage `{runs, ms}`: how often each pipeline  |
+//! |                   | stage ran and its cumulative wall-clock          |
+//! | `evals`           | candidate evaluations issued by the agent        |
+//! | `eval_batches`    | `evaluate_batch` calls those evaluations rode in |
+//! |                   | (`evals / eval_batches` = mean batch width; the  |
+//! |                   | lookahead/speculative paths push it above 1)     |
+//! | `max_batch_width` | widest single batch submitted                    |
+//! | `commits`         | candidates accepted through the Update rule      |
+//! | `reasons`         | accept/reject/abandon reason → occurrence count  |
+//!
+//! Wall-clock timings are observability only — nothing downstream reads
+//! them, so the determinism contract (archives are a pure function of
+//! config + seed) is untouched.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::json::Json;
+
+/// Cumulative cost of one pipeline stage.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageStat {
+    /// Times the stage ran.
+    pub runs: u64,
+    /// Cumulative wall-clock spent in the stage.
+    pub nanos: u64,
+}
+
+/// Structured trace of the staged agent runtime (see the module docs for
+/// the schema).
+#[derive(Debug, Clone, Default)]
+pub struct AgentTrace {
+    pub steps: u64,
+    pub stages: BTreeMap<&'static str, StageStat>,
+    pub evals: u64,
+    pub eval_batches: u64,
+    pub max_batch_width: u64,
+    pub commits: u64,
+    pub reasons: BTreeMap<String, u64>,
+}
+
+impl AgentTrace {
+    /// Record one timed run of a pipeline stage.
+    pub fn record_stage(&mut self, name: &'static str, elapsed: Duration) {
+        let s = self.stages.entry(name).or_default();
+        s.runs += 1;
+        s.nanos += elapsed.as_nanos() as u64;
+    }
+
+    /// Record one `evaluate_batch` call of `width` candidates.
+    pub fn record_batch(&mut self, width: usize) {
+        self.eval_batches += 1;
+        self.evals += width as u64;
+        self.max_batch_width = self.max_batch_width.max(width as u64);
+    }
+
+    /// Count an accept/reject/abandon reason.
+    pub fn note_reason(&mut self, reason: &str) {
+        *self.reasons.entry(reason.to_string()).or_insert(0) += 1;
+    }
+
+    /// Fold another trace into this one (summing counters, max-ing the
+    /// batch width) — how per-step traces aggregate per island and per
+    /// run.
+    pub fn merge(&mut self, other: &AgentTrace) {
+        self.steps += other.steps;
+        for (name, stat) in &other.stages {
+            let s = self.stages.entry(name).or_default();
+            s.runs += stat.runs;
+            s.nanos += stat.nanos;
+        }
+        self.evals += other.evals;
+        self.eval_batches += other.eval_batches;
+        self.max_batch_width = self.max_batch_width.max(other.max_batch_width);
+        self.commits += other.commits;
+        for (reason, n) in &other.reasons {
+            *self.reasons.entry(reason.clone()).or_insert(0) += n;
+        }
+    }
+
+    /// The stage with the largest cumulative wall-clock, if any ran.
+    pub fn hottest_stage(&self) -> Option<(&'static str, Duration)> {
+        self.stages
+            .iter()
+            .max_by_key(|(_, s)| s.nanos)
+            .map(|(name, s)| (*name, Duration::from_nanos(s.nanos)))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("steps", Json::Num(self.steps as f64)),
+            ("evals", Json::Num(self.evals as f64)),
+            ("eval_batches", Json::Num(self.eval_batches as f64)),
+            ("max_batch_width", Json::Num(self.max_batch_width as f64)),
+            ("commits", Json::Num(self.commits as f64)),
+            (
+                "stages",
+                Json::obj_from(self.stages.iter().map(|(name, s)| {
+                    (
+                        name.to_string(),
+                        Json::obj([
+                            ("runs", Json::Num(s.runs as f64)),
+                            ("ms", Json::Num(s.nanos as f64 / 1e6)),
+                        ]),
+                    )
+                })),
+            ),
+            (
+                "reasons",
+                Json::obj_from(
+                    self.reasons
+                        .iter()
+                        .map(|(r, n)| (r.clone(), Json::Num(*n as f64))),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_sums_counters_and_maxes_width() {
+        let mut a = AgentTrace::default();
+        a.record_batch(1);
+        a.record_batch(4);
+        a.record_stage("propose", Duration::from_micros(5));
+        a.note_reason("accept: strict improvement");
+        a.steps = 2;
+        let mut b = AgentTrace::default();
+        b.record_batch(8);
+        b.record_stage("propose", Duration::from_micros(3));
+        b.note_reason("accept: strict improvement");
+        b.steps = 1;
+        a.merge(&b);
+        assert_eq!(a.steps, 3);
+        assert_eq!(a.evals, 13);
+        assert_eq!(a.eval_batches, 3);
+        assert_eq!(a.max_batch_width, 8);
+        assert_eq!(a.stages["propose"].runs, 2);
+        assert_eq!(a.reasons["accept: strict improvement"], 2);
+    }
+
+    #[test]
+    fn json_schema_has_documented_fields() {
+        let mut t = AgentTrace::default();
+        t.record_batch(2);
+        t.record_stage("repair", Duration::from_millis(1));
+        t.note_reason("reject: hazard FenceRace");
+        let j = t.to_json();
+        for key in ["steps", "evals", "eval_batches", "max_batch_width", "commits"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        let stages = j.get("stages").unwrap().as_obj().unwrap();
+        assert!(stages.contains_key("repair"));
+        assert_eq!(
+            j.get("reasons").unwrap().get("reject: hazard FenceRace").unwrap().as_u64(),
+            Some(1)
+        );
+        // Round-trips through the crate's own parser (the --trace-out file
+        // must be machine-readable).
+        let parsed = crate::json::parse(&j.pretty()).unwrap();
+        assert_eq!(parsed.get("eval_batches").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn hottest_stage_picks_max_cumulative() {
+        let mut t = AgentTrace::default();
+        t.record_stage("consult", Duration::from_micros(10));
+        t.record_stage("propose", Duration::from_micros(30));
+        t.record_stage("propose", Duration::from_micros(30));
+        assert_eq!(t.hottest_stage().unwrap().0, "propose");
+        assert!(AgentTrace::default().hottest_stage().is_none());
+    }
+}

@@ -180,6 +180,13 @@ impl RunConfig {
                 "speculative_repair" => {
                     cfg.agent.speculative_repair = v.parse().map_err(|e| bad(&e))?
                 }
+                "lookahead" => {
+                    let k: usize = v.parse().map_err(|e| bad(&e))?;
+                    if k == 0 {
+                        return Err(format!("line {}: lookahead must be >= 1", lineno + 1));
+                    }
+                    cfg.agent.lookahead = k;
+                }
                 "crossover_prob" => {
                     cfg.agent.crossover_prob = v.parse().map_err(|e| bad(&e))?
                 }
@@ -256,6 +263,8 @@ mod tests {
         assert!(!c.topology.adaptive_migration);
         assert!(c.eval_cache_max_entries.is_none());
         assert!(!c.agent.speculative_repair);
+        // One-at-a-time refinement: the pre-refactor behavior.
+        assert_eq!(c.agent.lookahead, 1);
     }
 
     #[test]
@@ -318,14 +327,18 @@ mod tests {
             "adaptive_migration = true\n\
              adaptive_stall_epochs = 3\n\
              eval_cache_max_entries = 5000\n\
-             speculative_repair = true\n",
+             speculative_repair = true\n\
+             lookahead = 6\n",
         )
         .unwrap();
         assert!(cfg.topology.adaptive_migration);
         assert_eq!(cfg.topology.adaptive_stall_epochs, 3);
         assert_eq!(cfg.eval_cache_max_entries, Some(5000));
         assert!(cfg.agent.speculative_repair);
+        assert_eq!(cfg.agent.lookahead, 6);
         assert!(RunConfig::parse("adaptive_migration = maybe\n").is_err());
+        assert!(RunConfig::parse("lookahead = 0\n").is_err());
+        assert!(RunConfig::parse("lookahead = banana\n").is_err());
     }
 
     #[test]

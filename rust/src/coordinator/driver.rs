@@ -6,8 +6,9 @@
 //! rather than a parallel code path.
 
 use crate::agent::{
-    AvoAgent, FixedPipelineOperator, SingleTurnOperator, VariationOperator,
+    AgentTrace, AvoAgent, FixedPipelineOperator, SingleTurnOperator, VariationOperator,
 };
+use crate::json::Json;
 use crate::coordinator::config::{OperatorKind, RunConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::evolution::Lineage;
@@ -27,11 +28,16 @@ pub(crate) fn build_operator(
     seed: u64,
     workload: &dyn Workload,
 ) -> Box<dyn VariationOperator + Send> {
+    // Every operator binds through the same StagePipeline::bind_workload
+    // path (previously SingleTurnOperator had no binding at all, so a
+    // mixed-operator decode run consulted the paper KB).
     match config.operator_for_island(island) {
         OperatorKind::Avo => {
             Box::new(AvoAgent::new(config.agent.clone(), seed).with_workload(workload))
         }
-        OperatorKind::SingleTurn => Box::new(SingleTurnOperator::new(seed)),
+        OperatorKind::SingleTurn => {
+            Box::new(SingleTurnOperator::new(seed).with_workload(workload))
+        }
         OperatorKind::FixedPipeline => {
             Box::new(FixedPipelineOperator::new(seed).with_workload(workload))
         }
@@ -50,6 +56,10 @@ pub struct RunReport {
     pub interventions: Vec<String>,
     /// Total variation steps across all islands.
     pub steps: usize,
+    /// Merged agent trace across all islands (stage timings, batch
+    /// widths, accept/reject reasons); per-island traces live in
+    /// [`IslandReport::trace`].
+    pub trace: AgentTrace,
     /// Per-island reports (length 1 for the sequential regime).
     pub islands: Vec<IslandReport>,
 }
@@ -88,6 +98,22 @@ impl RunReport {
         if halvings > 0 {
             s.push_str(&format!(", {halvings} migration-interval halvings"));
         }
+        // The agent-side batching picture in one clause: how many backend
+        // round-trips the step loop's evaluations rode in (lookahead and
+        // speculative repair push mean width above 1), and where the
+        // pipeline spent its time.
+        if self.trace.eval_batches > 0 {
+            s.push_str(&format!(
+                ", {} eval batches (max width {})",
+                self.trace.eval_batches, self.trace.max_batch_width
+            ));
+            if let Some((stage, elapsed)) = self.trace.hottest_stage() {
+                s.push_str(&format!(
+                    ", hottest stage {stage} {:.0} ms",
+                    elapsed.as_secs_f64() * 1e3
+                ));
+            }
+        }
         if self.islands.len() > 1 {
             let bests: Vec<String> = self
                 .islands
@@ -112,6 +138,28 @@ impl RunReport {
             }
         }
         s
+    }
+
+    /// The machine-readable trace artifact (`avo evolve --trace-out`):
+    /// the aggregate [`AgentTrace`] plus one entry per island.  Schema of
+    /// the per-trace objects: see [`crate::agent::trace`].
+    pub fn trace_json(&self) -> Json {
+        Json::obj([
+            ("workload", Json::Str(self.workload.clone())),
+            ("steps", Json::Num(self.steps as f64)),
+            ("aggregate", self.trace.to_json()),
+            (
+                "islands",
+                Json::arr(self.islands.iter().map(|i| {
+                    Json::obj([
+                        ("id", Json::Num(i.id as f64)),
+                        ("operator", Json::Str(i.operator.to_string())),
+                        ("steps", Json::Num(i.steps as f64)),
+                        ("trace", i.trace.to_json()),
+                    ])
+                })),
+            ),
+        ])
     }
 }
 
@@ -336,6 +384,46 @@ mod tests {
             report.metrics.counter("eval_cache_hits")
                 + report.metrics.counter("eval_cache_misses"),
             report.metrics.counter("evaluations")
+        );
+    }
+
+    #[test]
+    fn trace_json_parses_and_carries_island_traces() {
+        let report = EvolutionDriver::new(small_config(8)).run();
+        assert!(report.summary().contains("eval batches"), "{}", report.summary());
+        let parsed = crate::json::parse(&report.trace_json().pretty()).unwrap();
+        assert_eq!(parsed.get("workload").unwrap().as_str(), Some("mha"));
+        let islands = parsed.get("islands").unwrap().as_arr().unwrap();
+        assert_eq!(islands.len(), 1);
+        let trace = islands[0].get("trace").unwrap();
+        assert!(trace.get("evals").unwrap().as_u64().unwrap() > 0);
+        assert!(trace.get("stages").unwrap().get("propose").is_some());
+        // At default flags the agent never widens a batch.
+        assert_eq!(
+            parsed
+                .get("aggregate")
+                .unwrap()
+                .get("max_batch_width")
+                .unwrap()
+                .as_u64(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn lookahead_run_batches_and_still_commits() {
+        let mut cfg = small_config(21);
+        cfg.agent.lookahead = 4;
+        cfg.agent.speculative_repair = true;
+        cfg.target_commits = 4;
+        let report = EvolutionDriver::new(cfg).run();
+        assert!(report.lineage.len() > 1);
+        assert!(report.trace.max_batch_width >= 2);
+        assert!(
+            report.trace.eval_batches < report.trace.evals,
+            "{} batches / {} evals",
+            report.trace.eval_batches,
+            report.trace.evals
         );
     }
 

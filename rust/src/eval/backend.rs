@@ -7,10 +7,10 @@
 //! scores: parallelism only reorders *wall-clock*, never results, because
 //! each score is computed independently and written back by input index.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 
-use crate::eval::EvalBackend;
+use crate::eval::{CacheStats, EvalBackend};
 use crate::kernelspec::KernelSpec;
 use crate::score::{BenchConfig, Evaluator, Score};
 use crate::sim::pipeline::CycleReport;
@@ -105,6 +105,79 @@ impl EvalBackend for SimBackend {
     }
 }
 
+/// Instrumentation layer: counts `evaluate_batch` calls, total
+/// evaluations, and the widest batch observed, delegating everything else
+/// to the inner backend.  This pins the batching contract from the
+/// *backend's* side of the seam (the agent-side
+/// [`crate::agent::AgentTrace`] records the same quantities from the
+/// operator's side); the agent-stage bench and the operator-parity suite
+/// both wrap their ground-truth evaluator in it.
+pub struct CountingBackend<B> {
+    inner: B,
+    calls: AtomicU64,
+    evals: AtomicU64,
+    max_width: AtomicU64,
+}
+
+impl<B: EvalBackend> CountingBackend<B> {
+    pub fn new(inner: B) -> Self {
+        CountingBackend {
+            inner,
+            calls: AtomicU64::new(0),
+            evals: AtomicU64::new(0),
+            max_width: AtomicU64::new(0),
+        }
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    /// `evaluate_batch` calls observed.
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Total candidate evaluations observed (sum of batch widths).
+    pub fn evals(&self) -> u64 {
+        self.evals.load(Ordering::Relaxed)
+    }
+
+    /// Widest single batch observed.
+    pub fn max_width(&self) -> u64 {
+        self.max_width.load(Ordering::Relaxed)
+    }
+}
+
+impl<B: EvalBackend> EvalBackend for CountingBackend<B> {
+    fn evaluate_batch(&self, specs: &[KernelSpec]) -> Vec<Score> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.evals.fetch_add(specs.len() as u64, Ordering::Relaxed);
+        self.max_width.fetch_max(specs.len() as u64, Ordering::Relaxed);
+        self.inner.evaluate_batch(specs)
+    }
+
+    fn suite(&self) -> &[BenchConfig] {
+        self.inner.suite()
+    }
+
+    fn report(&self, spec: &KernelSpec, cfg: &BenchConfig) -> CycleReport {
+        self.inner.report(spec, cfg)
+    }
+
+    fn cache_tag(&self) -> u64 {
+        self.inner.cache_tag()
+    }
+
+    fn is_deterministic(&self) -> bool {
+        self.inner.is_deterministic()
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.inner.cache_stats()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,5 +228,23 @@ mod tests {
         let eval = Evaluator::new(mha_suite());
         let backend = SimBackend::new(eval.clone(), 2);
         assert_eq!(EvalBackend::cache_tag(&backend), EvalBackend::cache_tag(&eval));
+    }
+
+    #[test]
+    fn counting_backend_counts_calls_and_widths_transparently() {
+        let counted = CountingBackend::new(Evaluator::new(mha_suite()));
+        let batch = specs();
+        let out = counted.evaluate_batch(&batch);
+        let one = counted.evaluate(&batch[0]);
+        assert_eq!(out[0].per_config, one.per_config);
+        assert_eq!(counted.calls(), 2);
+        assert_eq!(counted.evals(), batch.len() as u64 + 1);
+        assert_eq!(counted.max_width(), batch.len() as u64);
+        // Pure delegation everywhere else.
+        assert_eq!(
+            EvalBackend::cache_tag(&counted),
+            EvalBackend::cache_tag(counted.inner())
+        );
+        assert_eq!(counted.suite().len(), counted.inner().suite.len());
     }
 }

@@ -17,7 +17,10 @@
 //!   case; the sequential N = 1 regime shares the same layer);
 //! * [`PersistentBackend`] — JSON persistence of the cache keyed by genome
 //!   hash + machine/suite fingerprint, enabling `--warm-start <dir>`:
-//!   a new archipelago re-uses every evaluation a prior run paid for.
+//!   a new archipelago re-uses every evaluation a prior run paid for;
+//! * [`CountingBackend`] — transparent instrumentation (calls /
+//!   evaluations / max batch width) used by the agent-stage bench and the
+//!   operator-parity suite to pin the batching contract backend-side.
 //!
 //! **Determinism contract.** Evolution runs noise-free, so a Score is a
 //! pure function of (genome, suite, functional seed, machine model) — the
@@ -38,7 +41,7 @@ pub mod cache;
 pub mod cached;
 pub mod persist;
 
-pub use backend::SimBackend;
+pub use backend::{CountingBackend, SimBackend};
 pub use cache::{EvalCache, DEFAULT_SHARDS};
 pub use cached::CachedBackend;
 pub use persist::{PersistentBackend, CACHE_FILE};

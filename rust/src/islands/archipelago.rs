@@ -14,7 +14,7 @@
 //! therefore a pure function of (config, seed genome), independent of
 //! worker count, thread scheduling, and warm-start state.
 
-use crate::agent::{AgentAction, VariationOperator};
+use crate::agent::{AgentAction, AgentTrace, VariationOperator};
 use crate::coordinator::config::RunConfig;
 use crate::coordinator::driver::{build_operator, RunReport};
 use crate::coordinator::metrics::Metrics;
@@ -39,6 +39,9 @@ pub struct IslandReport {
     pub metrics: Metrics,
     pub interventions: Vec<String>,
     pub steps: usize,
+    /// Merged [`AgentTrace`] of every variation step this island ran:
+    /// stage timings, batch widths, accept/reject reasons.
+    pub trace: AgentTrace,
 }
 
 /// One island's full run state (operator + supervisor + archive).
@@ -50,6 +53,7 @@ struct Island {
     metrics: Metrics,
     interventions: Vec<String>,
     steps: usize,
+    trace: AgentTrace,
     /// Current epoch commit quota (`usize::MAX` for the N = 1 regime;
     /// adaptive migration halves it while the island stalls).
     migrate_every: usize,
@@ -138,6 +142,7 @@ impl Archipelago {
                     metrics: Metrics::new(),
                     interventions: Vec::new(),
                     steps: 0,
+                    trace: AgentTrace::default(),
                     migrate_every: base_quota,
                     stall_epochs: 0,
                     best_at_barrier: 0.0,
@@ -355,6 +360,7 @@ impl Archipelago {
                 metrics: i.metrics,
                 interventions: i.interventions,
                 steps: i.steps,
+                trace: i.trace,
             })
             .collect();
         let mut best = 0usize;
@@ -378,6 +384,10 @@ impl Archipelago {
             .flat_map(|r| r.interventions.iter().cloned())
             .collect();
         let steps: usize = reports.iter().map(|r| r.steps).sum();
+        let mut trace = AgentTrace::default();
+        for r in &reports {
+            trace.merge(&r.trace);
+        }
         let lineage = reports[best].lineage.clone();
         if let Some(path) = &self.config.lineage_path {
             lineage.save(path).expect("persist lineage");
@@ -388,6 +398,7 @@ impl Archipelago {
             metrics,
             interventions,
             steps,
+            trace,
             islands: reports,
         }
     }
@@ -407,6 +418,7 @@ fn run_island_epoch(isl: &mut Island, eval: &dyn EvalBackend, cfg: &RunConfig) {
         metrics,
         interventions,
         steps,
+        trace,
         ..
     } = isl;
     while lineage.len() < cfg.target_commits + 1
@@ -417,7 +429,9 @@ fn run_island_epoch(isl: &mut Island, eval: &dyn EvalBackend, cfg: &RunConfig) {
         *steps += 1;
         let step = *steps;
         let outcome = metrics.time("variation_step", || operator.step(lineage, eval, step));
+        trace.merge(&outcome.trace);
         metrics.incr("evaluations", outcome.evaluations as u64);
+        metrics.incr("eval_batches", outcome.trace.eval_batches);
         metrics.incr("directions_explored", outcome.directions.len() as u64);
         if outcome.committed.is_some() {
             metrics.incr("commits", 1);
@@ -506,6 +520,29 @@ mod tests {
     }
 
     #[test]
+    fn island_reports_carry_merged_traces() {
+        let report = Archipelago::new(island_config(2, MigrationPolicy::Ring))
+            .run_from(KernelSpec::naive(), "seed x0");
+        for isl in &report.islands {
+            assert_eq!(isl.trace.steps as usize, isl.steps, "island {}", isl.id);
+            assert!(isl.trace.evals > 0, "island {} traced no evals", isl.id);
+        }
+        assert_eq!(report.trace.steps as usize, report.steps);
+        assert_eq!(
+            report.metrics.counter("eval_batches"),
+            report.trace.eval_batches
+        );
+        // Default flags: the agent only ever issues singleton batches, and
+        // the metrics' evaluation counter exceeds the agent trace by
+        // exactly the per-island seed evaluations.
+        assert_eq!(report.trace.max_batch_width, 1);
+        assert_eq!(
+            report.metrics.counter("evaluations"),
+            report.trace.evals + report.islands.len() as u64
+        );
+    }
+
+    #[test]
     fn single_island_runs_without_migration() {
         let report = Archipelago::new(island_config(1, MigrationPolicy::Ring))
             .run_from(KernelSpec::naive(), "seed x0");
@@ -532,6 +569,7 @@ mod tests {
             metrics: Metrics::new(),
             interventions: Vec::new(),
             steps: 0,
+            trace: AgentTrace::default(),
             migrate_every: 4,
             stall_epochs: 0,
             best_at_barrier: 0.0,

@@ -4,13 +4,22 @@
 //! Rust + JAX + Pallas three-layer stack:
 //!
 //! * **Layer 3 (this crate)** — the paper's contribution: an evolutionary
-//!   search coordinator whose variation operator is an autonomous agent
-//!   ([`agent::AvoAgent`]) that profiles the current best kernel, consults a
-//!   knowledge base ([`knowledge`]) and the full lineage ([`evolution`]),
-//!   proposes edits to a typed kernel genome ([`kernelspec::KernelSpec`]),
-//!   evaluates them against the scoring function ([`score`]), diagnoses and
-//!   repairs failures, and commits improvements — supervised against stalls
-//!   and unproductive cycles ([`supervisor`]).
+//!   search coordinator whose variation operator is an autonomous agent.
+//!   The agent runtime ([`agent::stages`]) is a staged, introspectable
+//!   pipeline — **Consult** (profile the lineage, [`evolution`], and fold
+//!   bottlenecks into direction weights), **Propose** (knowledge-base
+//!   retrieval ([`knowledge`]), crossover, migrants — up to `--lookahead k`
+//!   edits batched per direction), **Repair** (the ranked-repair table +
+//!   speculative batching), **Critique** (refine-while-improving,
+//!   score-delta triage, hazard classification), and **Verify** (the
+//!   Update rule) — threaded through a shared `AgentContext` over a typed
+//!   kernel genome ([`kernelspec::KernelSpec`]) and the scoring function
+//!   ([`score`]).  [`agent::AvoAgent`] is the full pipeline; the Figure-1
+//!   baselines are degenerate pipelines of the same stages; every step
+//!   emits an [`agent::AgentTrace`] (stage timings, batch widths,
+//!   accept/reject reasons) surfaced per island and per run (`avo evolve
+//!   --trace-out`).  Runs are supervised against stalls and unproductive
+//!   cycles ([`supervisor`]).
 //! * **Workloads** ([`workload`]) — the scenario seam: a [`Workload`]
 //!   bundles the benchmark suite, correctness regimes, knowledge-base
 //!   shard, phase schedule, seed genome, baseline anchors, and a

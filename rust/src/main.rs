@@ -46,6 +46,8 @@ fn usage() -> ! {
          \u{20}         --adaptive-migration --adaptive-stall-epochs K\n\
          \u{20}         --warm-start DIR  (reuse a prior run's eval cache)\n\
          \u{20}         --eval-cache-max-entries N  --speculative-repair\n\
+         \u{20}         --lookahead K  (batch K candidate edits per direction)\n\
+         \u{20}         --trace-out FILE  (agent stage/batching trace as JSON)\n\
          \u{20}         --config FILE --out DIR\n\
          transfer --lineage FILE --workload SPEC (or --kv-heads 4|8)\n\
          \u{20}         --seed N --out DIR\n\
@@ -142,6 +144,12 @@ fn main() -> Result<(), CliError> {
             if flags.has("--speculative-repair") {
                 cfg.agent.speculative_repair = true;
             }
+            if let Some(k) = flags.parse_strict::<usize>("--lookahead")? {
+                if k == 0 {
+                    return Err("--lookahead must be >= 1".into());
+                }
+                cfg.agent.lookahead = k;
+            }
             if flags.has("--adaptive-migration") {
                 cfg.topology.adaptive_migration = true;
             }
@@ -162,9 +170,17 @@ fn main() -> Result<(), CliError> {
                 avo::eval::persist::validate(dir, avo::EvalBackend::cache_tag(&cfg.evaluator()))
                     .map_err(|e| format!("warm-start: {e}"))?;
             }
+            let trace_out = flags.get("--trace-out").map(PathBuf::from);
             let suite = cfg.evaluator().suite;
             let report = EvolutionDriver::new(cfg).run();
             println!("{}", report.summary());
+            if let Some(path) = &trace_out {
+                if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+                    std::fs::create_dir_all(dir)?;
+                }
+                std::fs::write(path, report.trace_json().pretty())?;
+                println!("wrote agent trace to {}", path.display());
+            }
             if report.islands.len() > 1 {
                 for isl in &report.islands {
                     println!(

@@ -129,7 +129,7 @@ mod tests {
             committed: None,
             evaluations: 3,
             directions: vec![dir],
-            actions: vec![],
+            ..StepOutcome::default()
         }
     }
 
@@ -196,7 +196,7 @@ mod tests {
             committed: Some(crate::store::CommitId(1)),
             evaluations: 1,
             directions: vec![Direction::Tiling],
-            actions: vec![],
+            ..StepOutcome::default()
         };
         assert!(sup.observe(&committed, &l).is_none());
         // Windows restarted: three more barren steps needed again.

@@ -77,7 +77,9 @@ impl Workload for MhaForward {
 
 /// Grouped-query attention forward: 32 query heads over `kv_heads` KV
 /// heads (group = 32 / kv_heads) — the Qwen3 configurations at kv_heads 4
-/// (group 8) and 8 (group 4), though any divisor of 32 registers.
+/// (group 8) and 8 (group 4), though any divisor of 32 registers.  The
+/// kv_heads = 1 extreme is MQA (group 32), with its own calibrated anchor
+/// curves in [`baselines::gqa_anchors`].
 pub struct GqaForward {
     pub kv_heads: u32,
 }
@@ -185,11 +187,16 @@ mod tests {
 
     #[test]
     fn gqa_anchors_use_suite_cell_names() {
-        let w = GqaForward::new(4).unwrap();
-        let names: Vec<String> = w.suite().into_iter().map(|c| c.name).collect();
-        for anchor in w.anchors() {
-            for (n, _) in &anchor.per_cell {
-                assert!(names.contains(n), "{n} not a suite cell");
+        // kv = 1 is MQA: its tuned anchors must land on the gqa_g32_*
+        // cells like any other registered group size.
+        for kv in [1u32, 4] {
+            let w = GqaForward::new(kv).unwrap();
+            let names: Vec<String> = w.suite().into_iter().map(|c| c.name).collect();
+            for anchor in w.anchors() {
+                assert_eq!(anchor.per_cell.len(), names.len(), "kv={kv}");
+                for (n, _) in &anchor.per_cell {
+                    assert!(names.contains(n), "{n} not a suite cell (kv={kv})");
+                }
             }
         }
     }

@@ -121,6 +121,40 @@ impl PhaseSchedule {
     }
 }
 
+/// Workload-tunable constants of the agent's staged runtime (the other
+/// per-scenario knob alongside [`PhaseSchedule`]).  The defaults are
+/// exactly the values the pre-refactor monolithic agent hard-coded, so a
+/// workload that keeps the default tuning reproduces pre-refactor
+/// archives byte-for-byte.  [`Workload::stage_tuning`] lets a scenario
+/// override them; the agent runtime consumes them through
+/// `agent::stages::AgentState`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageTuning {
+    /// Probability of a comparative profiler read of an earlier lineage
+    /// member in the Consult stage.
+    pub comparative_read_prob: f64,
+    /// Floor applied to the crossover probability when cross-island
+    /// migrants are waiting (migrants are consulted more eagerly than
+    /// local donors).
+    pub migrant_prob_floor: f64,
+    /// Probability the Critique stage keeps stacking refinements while the
+    /// candidate is improving.
+    pub refine_continue_prob: f64,
+    /// Probability of committing a neutral (non-strict) refinement.
+    pub neutral_commit_prob: f64,
+}
+
+impl Default for StageTuning {
+    fn default() -> Self {
+        StageTuning {
+            comparative_read_prob: 0.3,
+            migrant_prob_floor: 0.3,
+            refine_continue_prob: 0.5,
+            neutral_commit_prob: 0.15,
+        }
+    }
+}
+
 /// A named baseline anchor for one workload: TFLOPS per suite cell
 /// (measured curves for the attention workloads, simulated reference
 /// genomes for decode).
@@ -161,6 +195,18 @@ pub trait Workload: Send + Sync {
     /// Baseline anchor curves for figures/benches (may be empty).
     fn anchors(&self) -> Vec<Anchor> {
         Vec::new()
+    }
+
+    /// Stage-customization hook: tune the agent's staged runtime for this
+    /// scenario (comparative-read rate, refinement persistence, neutral
+    /// commit probability, migrant eagerness) alongside the phase
+    /// schedule.  The default is [`StageTuning::default`] — exactly the
+    /// constants the pre-refactor monolithic agent hard-coded — so every
+    /// registered workload currently reproduces its pre-refactor archives
+    /// byte-for-byte.  Overriding this changes archives for the workload:
+    /// do it only with fresh goldens.
+    fn stage_tuning(&self) -> StageTuning {
+        StageTuning::default()
     }
 
     /// Tag folded into [`crate::score::Evaluator::suite_tag`] (and thereby
@@ -309,6 +355,17 @@ mod tests {
             assert!(!s.structural.is_empty());
             assert!(!s.algorithmic.is_empty());
             assert!(!s.micro.is_empty());
+        }
+    }
+
+    #[test]
+    fn every_workload_keeps_default_stage_tuning() {
+        // Byte-for-byte archive parity rests on every registered workload
+        // keeping the monolith's hard-coded constants; a workload that
+        // overrides the hook must ship fresh goldens (and fail here).
+        for spec in ["mha", "gqa:1", "gqa:4", "gqa:8", "decode:8", "decode:32"] {
+            let w = parse(spec).unwrap();
+            assert_eq!(w.stage_tuning(), StageTuning::default(), "{spec}");
         }
     }
 

@@ -1,0 +1,586 @@
+//! Operator-parity goldens for the staged agent runtime.
+//!
+//! The monolith→pipeline rewrite (`rust/src/agent/stages/`) claims to be
+//! byte-for-byte behavior-preserving at default flags.  These tests pin
+//! that claim the only non-circular way: each pre-refactor monolithic
+//! operator (`AvoAgent::step`, `SingleTurnOperator::step`,
+//! `FixedPipelineOperator::step`) is replicated here *from first
+//! principles* — a literal port of the pre-refactor code against public
+//! primitives — and its archive (the commit-id sequence, content hashes
+//! chained through parents) must equal the staged pipeline's exactly.
+//!
+//! One deliberate deviation is pinned as such: the fixed-pipeline
+//! operator's MAP-Elites cell index used to iterate a `HashMap`, whose
+//! order varies per instance — the old operator was irreproducible
+//! run-to-run.  The replica (and the rewrite) use a `BTreeMap`, so the
+//! golden pins the new, deterministic behavior.
+//!
+//! The second half pins the refinement-lookahead contract: `--lookahead 1`
+//! changes neither the archive nor the `evaluate_batch` call counts, while
+//! `--lookahead k > 1` (with speculative repair) reduces backend calls per
+//! evaluation without being allowed to break the run.
+
+use std::collections::{BTreeMap, HashMap};
+
+use avo::agent::{
+    diagnose, AvoAgent, AvoConfig, FixedPipelineOperator, SingleTurnOperator,
+    StepOutcome, VariationOperator,
+};
+use avo::eval::CountingBackend;
+use avo::evolution::Lineage;
+use avo::kernelspec::{all_edits, Direction, Edit, KernelSpec};
+use avo::knowledge::KnowledgeBase;
+use avo::prng::Rng;
+use avo::score::{mha_suite, BenchConfig, Evaluator, Score};
+use avo::sim::profile::{profile, ProfileReport};
+use avo::supervisor::{Directive, Supervisor, SupervisorConfig};
+use avo::workload::PhaseSchedule;
+
+// ---------------------------------------------------------------------------
+// The pre-refactor monolithic AVO agent, replicated verbatim.
+// ---------------------------------------------------------------------------
+
+#[derive(Default, Clone)]
+struct Mem {
+    tried: usize,
+    barren: usize,
+    banned_for: usize,
+}
+
+struct LegacyAvo {
+    config: AvoConfig,
+    kb: KnowledgeBase,
+    phases: PhaseSchedule,
+    rng: Rng,
+    memory: HashMap<Direction, Mem>,
+    boosted: Vec<Direction>,
+}
+
+impl LegacyAvo {
+    fn new(config: AvoConfig, seed: u64) -> Self {
+        assert!(!config.speculative_repair, "replica ports the sequential path");
+        assert_eq!(config.lookahead, 1, "replica predates lookahead");
+        LegacyAvo {
+            config,
+            kb: KnowledgeBase::paper_kb(),
+            phases: PhaseSchedule::attention(),
+            rng: Rng::new(seed),
+            memory: HashMap::new(),
+            boosted: Vec::new(),
+        }
+    }
+
+    fn phase_directions(&self, committed: usize) -> &[Direction] {
+        self.phases.for_phase(
+            committed,
+            self.config.structural_until,
+            self.config.algorithmic_until,
+        )
+    }
+
+    fn bottleneck_weights(&self, reports: &[ProfileReport]) -> HashMap<Direction, f64> {
+        let mut w = HashMap::new();
+        for r in reports {
+            for b in &r.bottlenecks {
+                *w.entry(b.direction).or_insert(0.0) += b.share;
+            }
+        }
+        w
+    }
+
+    fn choose_direction(
+        &mut self,
+        weights: &HashMap<Direction, f64>,
+        committed: usize,
+    ) -> Direction {
+        let phase = self.phase_directions(committed);
+        let dirs: Vec<Direction> = Direction::ALL
+            .into_iter()
+            .filter(|d| {
+                self.memory
+                    .get(d)
+                    .map(|m| m.banned_for == 0)
+                    .unwrap_or(true)
+            })
+            .collect();
+        let dirs = if dirs.is_empty() { Direction::ALL.to_vec() } else { dirs };
+        let ws: Vec<f64> = dirs
+            .iter()
+            .map(|d| {
+                let bottleneck = weights.get(d).copied().unwrap_or(0.01).max(0.01);
+                let kb_prior = self
+                    .kb
+                    .retrieve(*d)
+                    .first()
+                    .map(|doc| doc.prior)
+                    .unwrap_or(0.1);
+                let barren = self.memory.get(d).map(|m| m.barren).unwrap_or(0);
+                let novelty = self.config.novelty_decay.powi(barren as i32);
+                let phase_mult = if phase.contains(d) { self.config.phase_boost } else { 1.0 };
+                let boost = if self.boosted.contains(d) { 3.0 } else { 1.0 };
+                bottleneck * kb_prior * novelty * phase_mult * boost
+            })
+            .collect();
+        dirs[self.rng.weighted(&ws)]
+    }
+
+    fn propose_edit(&mut self, direction: Direction, base: &KernelSpec) -> Option<Edit> {
+        let candidates: Vec<(Edit, f64)> = self
+            .kb
+            .edits_for(direction)
+            .into_iter()
+            .filter(|(e, _)| !e.is_noop(base))
+            .collect();
+        if candidates.is_empty() {
+            return None;
+        }
+        let ws: Vec<f64> = candidates.iter().map(|(_, w)| *w).collect();
+        Some(candidates[self.rng.weighted(&ws)].0.clone())
+    }
+
+    fn evaluate_with_repair(
+        &mut self,
+        eval: &Evaluator,
+        mut cand: KernelSpec,
+    ) -> (KernelSpec, Score, usize) {
+        let mut score = eval.evaluate(&cand);
+        let mut evals = 1;
+        let mut repairs_left = self.config.repair_budget;
+        while let Some(failure) = score.failure.clone() {
+            if repairs_left == 0 {
+                break;
+            }
+            repairs_left -= 1;
+            let repairs = diagnose::repairs_for(&failure, &cand);
+            if repairs.is_empty() {
+                break;
+            }
+            cand = repairs[0].apply(&cand);
+            score = eval.evaluate(&cand);
+            evals += 1;
+        }
+        (cand, score, evals)
+    }
+
+    fn remember(&mut self, direction: Direction, produced_commit: bool) {
+        let m = self.memory.entry(direction).or_default();
+        m.tried += 1;
+        if produced_commit {
+            m.barren = 0;
+        } else {
+            m.barren += 1;
+        }
+    }
+
+    fn decay_bans(&mut self) {
+        for m in self.memory.values_mut() {
+            m.banned_for = m.banned_for.saturating_sub(1);
+        }
+    }
+
+    fn apply_directive(&mut self, directive: &Directive) {
+        for d in &directive.ban {
+            self.memory.entry(*d).or_default().banned_for = directive.ban_steps;
+        }
+        self.boosted = directive.boost.clone();
+        if directive.reset_memory {
+            for m in self.memory.values_mut() {
+                m.barren = 0;
+            }
+        }
+    }
+
+    fn step(&mut self, lineage: &mut Lineage, eval: &Evaluator, step: usize) -> StepOutcome {
+        let mut out = StepOutcome::default();
+        self.decay_bans();
+        let best = lineage.best().expect("lineage must be seeded").clone();
+
+        // 1. Profile the flagship cells of each regime in the suite.
+        let flagship: Vec<BenchConfig> = {
+            let mut seen = Vec::new();
+            let mut cells = Vec::new();
+            for c in eval.suite.iter().rev() {
+                if !seen.contains(&c.causal) {
+                    seen.push(c.causal);
+                    cells.push(c.clone());
+                }
+            }
+            cells
+        };
+        let reports: Vec<ProfileReport> = flagship
+            .iter()
+            .map(|c| profile(&eval.report(&best.spec, c)))
+            .collect();
+        let weights = self.bottleneck_weights(&reports);
+
+        // Occasional comparative read of an earlier lineage member.
+        if lineage.len() > 2 && self.rng.chance(0.3) {
+            let versions = lineage.versions();
+            let pick = versions[self.rng.below(versions.len())];
+            let _ = profile(&eval.report(&pick.spec, &flagship[0]));
+        }
+
+        // Inner loop: explore directions until the budget is spent or a
+        // commit lands.
+        let mut budget = self.config.inner_budget;
+        let mut committed = None;
+        while budget > 0 && committed.is_none() {
+            let direction = self.choose_direction(&weights, lineage.len());
+            if !out.directions.contains(&direction) {
+                out.directions.push(direction);
+            }
+
+            // (The monolith's migrant branch drew no randomness with an
+            // empty pool; the sequential replica has no migrants.)
+            let candidate = if lineage.len() > 3 && self.rng.chance(self.config.crossover_prob)
+            {
+                let versions = lineage.versions();
+                let donor = versions[self.rng.below(versions.len())];
+                best.spec.crossover(&donor.spec, &mut self.rng)
+            } else {
+                match self.propose_edit(direction, &best.spec) {
+                    Some(e) => e.apply(&best.spec),
+                    None => {
+                        budget -= 1;
+                        self.remember(direction, false);
+                        continue;
+                    }
+                }
+            };
+
+            // 4+5. Evaluate with diagnosis/repair.
+            let (mut cand, mut score, evals) = self.evaluate_with_repair(eval, candidate);
+            out.evaluations += evals;
+            budget = budget.saturating_sub(evals);
+
+            // 6. Refine: while improving, stack another edit.
+            while budget > 0
+                && score.is_correct()
+                && score.geomean() > lineage.best_geomean()
+                && self.rng.chance(0.5)
+            {
+                let Some(next) = self.propose_edit(direction, &cand) else { break };
+                let stacked = next.apply(&cand);
+                let (c2, s2, e2) = self.evaluate_with_repair(eval, stacked);
+                out.evaluations += e2;
+                budget = budget.saturating_sub(e2);
+                if s2.is_correct() && s2.geomean() > score.geomean() {
+                    cand = c2;
+                    score = s2;
+                } else {
+                    break;
+                }
+            }
+
+            // Commit strict improvements always; neutral refinements only
+            // occasionally.
+            let strict = score.geomean() > lineage.best_geomean() * (1.0 + 1e-12);
+            let produced = score.is_correct()
+                && (strict
+                    || (score.geomean() >= lineage.best_geomean() && self.rng.chance(0.15)));
+            if produced && cand != best.spec {
+                if let Ok(id) = lineage.update(cand, score.clone(), "legacy", step) {
+                    committed = Some(id);
+                }
+            }
+            self.remember(direction, committed.is_some());
+        }
+        out.committed = committed;
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The pre-refactor monolithic baselines, replicated verbatim.
+// ---------------------------------------------------------------------------
+
+struct LegacySingleTurn {
+    rng: Rng,
+    temperature: f64,
+}
+
+impl LegacySingleTurn {
+    fn new(seed: u64) -> Self {
+        LegacySingleTurn { rng: Rng::new(seed), temperature: 0.02 }
+    }
+
+    fn step(&mut self, lineage: &mut Lineage, eval: &Evaluator, step: usize) -> StepOutcome {
+        let mut out = StepOutcome::default();
+        let parent = {
+            let versions = lineage.versions();
+            let best = lineage.best_geomean().max(1.0);
+            let ws: Vec<f64> = versions
+                .iter()
+                .map(|c| ((c.score.geomean() - best) / (self.temperature * best)).exp())
+                .collect();
+            versions[self.rng.weighted(&ws)].spec.clone()
+        };
+        let edits: Vec<Edit> = all_edits()
+            .into_iter()
+            .filter(|e| !e.is_noop(&parent))
+            .collect();
+        let edit = edits[self.rng.below(edits.len())].clone();
+        out.directions.push(edit.direction);
+        let cand = edit.apply(&parent);
+        let score = eval.evaluate(&cand);
+        out.evaluations = 1;
+        if score.is_correct() && score.geomean() >= lineage.best_geomean() {
+            if let Ok(id) = lineage.update(cand, score, "legacy", step) {
+                out.committed = Some(id);
+            }
+        }
+        out
+    }
+}
+
+struct LegacyFixedPipeline {
+    rng: Rng,
+    stats: HashMap<Direction, (usize, usize)>,
+    kb: KnowledgeBase,
+}
+
+impl LegacyFixedPipeline {
+    fn new(seed: u64) -> Self {
+        LegacyFixedPipeline {
+            rng: Rng::new(seed),
+            stats: HashMap::new(),
+            kb: KnowledgeBase::paper_kb(),
+        }
+    }
+
+    fn step(&mut self, lineage: &mut Lineage, eval: &Evaluator, step: usize) -> StepOutcome {
+        let mut out = StepOutcome::default();
+        // MAP-Elites-lite parent selection.  Deliberate deviation from the
+        // monolith, shared with the rewrite: a BTreeMap cell index (the
+        // monolith's HashMap iterated in per-instance random order, so the
+        // old operator could not be pinned at all).
+        let parent = {
+            let mut elites: BTreeMap<(u32, u32), &avo::store::Commit> = BTreeMap::new();
+            for c in lineage.versions() {
+                let key = (c.spec.block_q, c.spec.block_k);
+                let cur = elites.entry(key).or_insert(c);
+                if c.score.geomean() > cur.score.geomean() {
+                    *cur = c;
+                }
+            }
+            let elites: Vec<&avo::store::Commit> = elites.into_values().collect();
+            let best = lineage.best_geomean().max(1.0);
+            let ws: Vec<f64> = elites
+                .iter()
+                .map(|c| ((c.score.geomean() - best) / (0.03 * best)).exp())
+                .collect();
+            elites[self.rng.weighted(&ws)].spec.clone()
+        };
+
+        // PLAN: best summarized success rate.
+        let direction = *Direction::ALL
+            .iter()
+            .max_by(|a, b| {
+                let rate = |d| {
+                    let (ok, tried) = self.stats.get(d).copied().unwrap_or((0, 0));
+                    (ok as f64 + 1.0) / (tried as f64 + 2.0)
+                };
+                rate(a).partial_cmp(&rate(b)).unwrap()
+            })
+            .unwrap();
+        out.directions.push(direction);
+
+        // EXECUTE: one KB-weighted edit, single retry on failure.
+        let candidates: Vec<(Edit, f64)> = self
+            .kb
+            .edits_for(direction)
+            .into_iter()
+            .filter(|(e, _)| !e.is_noop(&parent))
+            .collect();
+        if candidates.is_empty() {
+            self.stats.entry(direction).or_insert((0, 0)).1 += 1;
+            return out;
+        }
+        let ws: Vec<f64> = candidates.iter().map(|(_, w)| *w).collect();
+        let edit = candidates[self.rng.weighted(&ws)].0.clone();
+        let mut cand = edit.apply(&parent);
+        let mut score = eval.evaluate(&cand);
+        out.evaluations = 1;
+        if let Some(failure) = score.failure.clone() {
+            if let Some(repair) = diagnose::repairs_for(&failure, &cand).first() {
+                cand = repair.apply(&cand);
+                score = eval.evaluate(&cand);
+                out.evaluations += 1;
+            }
+        }
+
+        // SUMMARIZE + Update.
+        let entry = self.stats.entry(direction).or_insert((0, 0));
+        entry.1 += 1;
+        if score.is_correct() && score.geomean() >= lineage.best_geomean() {
+            if let Ok(id) = lineage.update(cand, score, "legacy", step) {
+                self.stats.entry(direction).or_insert((0, 0)).0 += 1;
+                out.committed = Some(id);
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Harnesses.
+// ---------------------------------------------------------------------------
+
+fn seeded_lineage(eval: &Evaluator) -> Lineage {
+    let mut lineage = Lineage::new();
+    let seed = KernelSpec::naive();
+    let score = eval.evaluate(&seed);
+    lineage.seed(seed, score, "seed x0: naive tiled attention");
+    lineage
+}
+
+fn archive_ids(lineage: &Lineage) -> Vec<u64> {
+    lineage.versions().iter().map(|c| c.id.0).collect()
+}
+
+/// Run a staged pipeline operator under the driver's per-step supervisor
+/// loop (the same loop the legacy replicas run under).
+fn pipeline_archive(
+    op: &mut dyn VariationOperator,
+    target_commits: usize,
+    max_steps: usize,
+) -> Vec<u64> {
+    let eval = Evaluator::new(mha_suite());
+    let mut lineage = seeded_lineage(&eval);
+    let mut supervisor = Supervisor::new(SupervisorConfig::default());
+    let mut steps = 0usize;
+    while lineage.len() < target_commits + 1 && steps < max_steps {
+        steps += 1;
+        let outcome = op.step(&mut lineage, &eval, steps);
+        if let Some(d) = supervisor.observe(&outcome, &lineage) {
+            op.apply_directive(&d);
+        }
+    }
+    archive_ids(&lineage)
+}
+
+#[test]
+fn avo_pipeline_matches_monolith_byte_for_byte() {
+    for seed in [5u64, 1234] {
+        let eval = Evaluator::new(mha_suite());
+        let mut lineage = seeded_lineage(&eval);
+        let mut legacy = LegacyAvo::new(AvoConfig::default(), seed);
+        let mut supervisor = Supervisor::new(SupervisorConfig::default());
+        let mut steps = 0usize;
+        while lineage.len() < 9 && steps < 40 {
+            steps += 1;
+            let outcome = legacy.step(&mut lineage, &eval, steps);
+            if let Some(d) = supervisor.observe(&outcome, &lineage) {
+                legacy.apply_directive(&d);
+            }
+        }
+        let golden = archive_ids(&lineage);
+        assert!(golden.len() > 1, "seed {seed}: monolith replica never committed");
+
+        let mut agent = AvoAgent::new(AvoConfig::default(), seed);
+        let staged = pipeline_archive(&mut agent, 8, 40);
+        assert_eq!(staged, golden, "seed {seed}: staged AVO diverged from the monolith");
+    }
+}
+
+#[test]
+fn single_turn_pipeline_matches_monolith_byte_for_byte() {
+    for seed in [3u64, 77] {
+        let eval = Evaluator::new(mha_suite());
+        let mut lineage = seeded_lineage(&eval);
+        let mut legacy = LegacySingleTurn::new(seed);
+        for step in 1..=40usize {
+            let _ = legacy.step(&mut lineage, &eval, step);
+        }
+        let golden = archive_ids(&lineage);
+        assert!(golden.len() > 1, "seed {seed}: monolith replica never committed");
+
+        let eval = Evaluator::new(mha_suite());
+        let mut lineage = seeded_lineage(&eval);
+        let mut op = SingleTurnOperator::new(seed);
+        for step in 1..=40usize {
+            let _ = op.step(&mut lineage, &eval, step);
+        }
+        assert_eq!(
+            archive_ids(&lineage),
+            golden,
+            "seed {seed}: staged single-turn diverged from the monolith"
+        );
+    }
+}
+
+#[test]
+fn fixed_pipeline_matches_monolith_with_deterministic_elites() {
+    for seed in [3u64, 19] {
+        let eval = Evaluator::new(mha_suite());
+        let mut lineage = seeded_lineage(&eval);
+        let mut legacy = LegacyFixedPipeline::new(seed);
+        for step in 1..=40usize {
+            let _ = legacy.step(&mut lineage, &eval, step);
+        }
+        let golden = archive_ids(&lineage);
+        assert!(golden.len() > 1, "seed {seed}: monolith replica never committed");
+
+        let eval = Evaluator::new(mha_suite());
+        let mut lineage = seeded_lineage(&eval);
+        let mut op = FixedPipelineOperator::new(seed);
+        for step in 1..=40usize {
+            let _ = op.step(&mut lineage, &eval, step);
+        }
+        assert_eq!(
+            archive_ids(&lineage),
+            golden,
+            "seed {seed}: staged fixed-pipeline diverged from the replica"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lookahead contract.
+// ---------------------------------------------------------------------------
+
+fn recorded_run(config: AvoConfig, seed: u64, steps: usize) -> (Vec<u64>, u64, u64, u64) {
+    let rec = CountingBackend::new(Evaluator::new(mha_suite()));
+    let mut lineage = seeded_lineage(rec.inner());
+    let mut agent = AvoAgent::new(config, seed);
+    for step in 1..=steps {
+        let _ = agent.step(&mut lineage, &rec, step);
+    }
+    (archive_ids(&lineage), rec.calls(), rec.evals(), rec.max_width())
+}
+
+#[test]
+fn lookahead_one_changes_nothing() {
+    // `--lookahead 1` is the explicit spelling of the default: same
+    // archive, same evaluate_batch call count, all batches singletons.
+    let (ids_default, calls_default, evals_default, width_default) =
+        recorded_run(AvoConfig::default(), 11, 25);
+    let mut cfg = AvoConfig::default();
+    cfg.lookahead = 1;
+    let (ids_one, calls_one, evals_one, width_one) = recorded_run(cfg, 11, 25);
+    assert_eq!(ids_one, ids_default);
+    assert_eq!(calls_one, calls_default);
+    assert_eq!(evals_one, evals_default);
+    assert_eq!((width_default, width_one), (1, 1));
+    // One-at-a-time: every evaluation is its own backend call.
+    assert_eq!(calls_default, evals_default);
+}
+
+#[test]
+fn lookahead_cuts_backend_calls_per_evaluation() {
+    // The acceptance bar: with --lookahead 8 (+ speculative repair) the
+    // agent issues measurably fewer evaluate_batch calls than the
+    // one-at-a-time path needs for the same number of evaluations.
+    // (benches/agent_stages.rs gates the same contract and threshold from
+    // the bench side — keep the two in sync.)
+    let mut cfg = AvoConfig::default();
+    cfg.lookahead = 8;
+    cfg.speculative_repair = true;
+    let (ids, calls, evals, width) = recorded_run(cfg, 11, 25);
+    assert!(ids.len() > 1, "lookahead run never committed");
+    assert!(width >= 2, "no batch ever widened");
+    assert!(
+        (calls as f64) < 0.8 * (evals as f64),
+        "expected >20% fewer backend calls than evaluations, got {calls}/{evals}"
+    );
+}

@@ -305,6 +305,49 @@ fn transfer_back_to_mha_from_decode_best() {
 }
 
 #[test]
+fn every_registered_workload_exposes_nondegenerate_anchors() {
+    // ROADMAP follow-up closed by this suite: `gqa:1` (MQA) previously
+    // parsed but had no calibrated anchors.  Every registered workload —
+    // including the MQA extreme — must now expose anchors that (a) cover
+    // every suite cell with a positive value, and (b) vary across cells
+    // (a flat curve means a placeholder, not a calibration).
+    for spec in ["mha", "gqa:1", "gqa:4", "gqa:8", "decode:8", "decode:32"] {
+        let w = avo::workload::parse(spec).unwrap();
+        let suite = w.suite();
+        let anchors = w.anchors();
+        assert!(!anchors.is_empty(), "{spec}: no anchors registered");
+        for a in &anchors {
+            for c in &suite {
+                let t = a
+                    .per_cell
+                    .iter()
+                    .find(|(n, _)| n == &c.name)
+                    .map(|(_, t)| *t)
+                    .unwrap_or(0.0);
+                assert!(t > 0.0, "{spec}/{}: missing or zero anchor for {}", a.name, c.name);
+            }
+            let first = a.per_cell[0].1;
+            assert!(
+                a.per_cell.iter().any(|(_, t)| (*t - first).abs() > 1e-9),
+                "{spec}/{}: flat (degenerate) anchor curve",
+                a.name
+            );
+        }
+        // Anchors are pairwise distinct baselines, not one curve twice.
+        for i in 0..anchors.len() {
+            for j in i + 1..anchors.len() {
+                assert!(
+                    anchors[i].per_cell != anchors[j].per_cell,
+                    "{spec}: anchors {} and {} identical",
+                    anchors[i].name,
+                    anchors[j].name
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn multi_island_decode_run_shares_cache_and_migrates() {
     let mut cfg = workload_config("decode:32", 13, 5, 30);
     cfg.topology.islands = 3;
