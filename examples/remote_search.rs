@@ -1,0 +1,79 @@
+//! Two-process search demo: the coordinator evolves a kernel while remote
+//! `eval-worker` processes — each hosting its own simulator stack — absorb
+//! the `evaluate_batch` traffic over the length-prefixed JSON TCP protocol
+//! (`avo::eval::remote`).
+//!
+//!   cargo run --release --example remote_search [--workers N]
+//!
+//! The example runs the same config twice — in-process, then remote — and
+//! checks the archives match commit for commit (the determinism contract:
+//! remote evaluation never changes results, only where they are computed).
+//! The equivalent CLI flow across real machines:
+//!
+//!   machine-b$ avo eval-worker --workload decode:32 --listen 0.0.0.0:7654
+//!   machine-a$ avo evolve --workload decode:32 --connect machine-b:7654
+
+use std::path::PathBuf;
+
+use avo::coordinator::{EvolutionDriver, RunConfig};
+
+/// The `avo` binary next to this example (`target/<profile>/examples/..`),
+/// used as the worker program.  Falls back to plain `avo` on PATH.
+fn avo_binary() -> PathBuf {
+    if let Ok(me) = std::env::current_exe() {
+        if let Some(profile_dir) = me.parent().and_then(|examples| examples.parent()) {
+            let candidate = profile_dir.join(format!("avo{}", std::env::consts::EXE_SUFFIX));
+            if candidate.exists() {
+                return candidate;
+            }
+        }
+    }
+    eprintln!(
+        "note: target/<profile>/avo not found (build it with `cargo build --release`); \
+         falling back to `avo` on PATH"
+    );
+    PathBuf::from("avo")
+}
+
+fn main() {
+    let workers: usize = std::env::args()
+        .skip_while(|a| a != "--workers")
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+
+    let base = RunConfig {
+        seed: 42,
+        target_commits: 6,
+        max_steps: 30,
+        workload: "decode:32".to_string(),
+        ..RunConfig::default()
+    };
+
+    println!("== in-process reference run ==");
+    let t0 = std::time::Instant::now();
+    let local = EvolutionDriver::new(base.clone()).run();
+    println!("{}  ({:.2?})", local.summary(), t0.elapsed());
+
+    println!("\n== same search over {workers} eval-worker process(es) ==");
+    let mut cfg = base;
+    cfg.topology.remote.workers = workers;
+    cfg.topology.remote.program = Some(avo_binary());
+    let t0 = std::time::Instant::now();
+    let remote = EvolutionDriver::new(cfg).run();
+    println!("{}  ({:.2?})", remote.summary(), t0.elapsed());
+
+    let ids = |r: &avo::coordinator::RunReport| -> Vec<u64> {
+        r.lineage.versions().iter().map(|c| c.id.0).collect()
+    };
+    assert_eq!(
+        ids(&local),
+        ids(&remote),
+        "remote archive diverged from in-process"
+    );
+    println!(
+        "\narchives identical: {} commits, best {:.1} TFLOPS on both topologies",
+        local.lineage.len(),
+        local.lineage.best_geomean()
+    );
+}

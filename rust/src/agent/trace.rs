@@ -23,7 +23,11 @@
 //!
 //! Wall-clock timings are observability only — nothing downstream reads
 //! them, so the determinism contract (archives are a pure function of
-//! config + seed) is untouched.
+//! config + seed) is untouched.  They are also the ONE nondeterministic
+//! field in the trace: [`AgentTrace::to_json_with`]`(false)` (surfaced as
+//! `avo evolve --trace-deterministic`) omits the per-stage `ms` entries so
+//! two same-seed runs serialize byte-identically and trace goldens can be
+//! pinned exactly.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -100,6 +104,15 @@ impl AgentTrace {
     }
 
     pub fn to_json(&self) -> Json {
+        self.to_json_with(true)
+    }
+
+    /// JSON serialization with or without wall-clock stage timings.
+    /// Everything except the per-stage `ms` field is a pure function of
+    /// (config, seed); `timings = false` drops `ms` so the whole document
+    /// is deterministic run-to-run (`--trace-deterministic`, and the trace
+    /// goldens in the test suite).
+    pub fn to_json_with(&self, timings: bool) -> Json {
         Json::obj([
             ("steps", Json::Num(self.steps as f64)),
             ("evals", Json::Num(self.evals as f64)),
@@ -109,13 +122,11 @@ impl AgentTrace {
             (
                 "stages",
                 Json::obj_from(self.stages.iter().map(|(name, s)| {
-                    (
-                        name.to_string(),
-                        Json::obj([
-                            ("runs", Json::Num(s.runs as f64)),
-                            ("ms", Json::Num(s.nanos as f64 / 1e6)),
-                        ]),
-                    )
+                    let mut entry = vec![("runs", Json::Num(s.runs as f64))];
+                    if timings {
+                        entry.push(("ms", Json::Num(s.nanos as f64 / 1e6)));
+                    }
+                    (name.to_string(), Json::obj(entry))
                 })),
             ),
             (
@@ -176,6 +187,27 @@ mod tests {
         // must be machine-readable).
         let parsed = crate::json::parse(&j.pretty()).unwrap();
         assert_eq!(parsed.get("eval_batches").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn deterministic_json_omits_only_timings() {
+        let mut a = AgentTrace::default();
+        a.record_batch(3);
+        a.record_stage("propose", Duration::from_micros(17));
+        a.note_reason("accept: strict improvement");
+        a.steps = 1;
+        // Same counters, different wall-clock: the timed documents differ,
+        // the deterministic documents are byte-identical.
+        let mut b = a.clone();
+        b.stages.get_mut("propose").unwrap().nanos += 999;
+        assert_ne!(a.to_json().pretty(), b.to_json().pretty());
+        assert_eq!(a.to_json_with(false).pretty(), b.to_json_with(false).pretty());
+        let det = a.to_json_with(false);
+        let stage = det.get("stages").unwrap().get("propose").unwrap();
+        assert_eq!(stage.get("runs").unwrap().as_u64(), Some(1));
+        assert!(stage.get("ms").is_none());
+        // The timed document keeps ms.
+        assert!(a.to_json().get("stages").unwrap().get("propose").unwrap().get("ms").is_some());
     }
 
     #[test]

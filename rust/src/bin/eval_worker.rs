@@ -1,0 +1,68 @@
+//! `eval_worker` — a standalone remote evaluation worker.
+//!
+//! Identical to `avo eval-worker` (the subcommand the coordinator
+//! self-spawns); this thin binary exists for deployments that ship workers
+//! without the full CLI.  The worker binds a [`std::net::TcpListener`],
+//! announces `AVO_WORKER_LISTENING <addr>` on stdout, and serves
+//! length-prefixed JSON `evaluate_batch` requests against its own
+//! simulator stack — see [`avo::eval::remote`] for the protocol.
+//!
+//!   eval_worker --workload decode:32 --listen 0.0.0.0:7654
+//!   avo evolve --workload decode:32 --connect host:7654 ...
+
+use avo::eval::remote::WorkerOptions;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: eval_worker --workload {} [--listen ADDR] [--once] \
+         [--eval-workers N] [--fail-after N]\n\
+         \n\
+         --workload SPEC   registered workload to score against (default mha);\n\
+         \u{20}                 must match the coordinator's or the handshake rejects\n\
+         --listen ADDR     bind address (default 127.0.0.1:0 = ephemeral port,\n\
+         \u{20}                 printed as 'AVO_WORKER_LISTENING <addr>')\n\
+         --once            exit after the first connection closes\n\
+         --eval-workers N  threads for in-worker batch fan-out (0 = all cores)\n\
+         --fail-after N    fault injection: drop the connection after N eval\n\
+         \u{20}                 frames (test suites only)",
+        avo::workload::KNOWN.join("|")
+    );
+    std::process::exit(2)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |name: &str| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .map(|s| s.as_str())
+    };
+    let mut opts = WorkerOptions::default();
+    if let Some(w) = get("--workload") {
+        opts.workload = w.to_string();
+    }
+    if let Some(l) = get("--listen") {
+        opts.listen = l.to_string();
+    }
+    opts.once = args.iter().any(|a| a == "--once");
+    if let Some(n) = get("--fail-after") {
+        match n.parse() {
+            Ok(n) => opts.fail_after = Some(n),
+            Err(_) => usage(),
+        }
+    }
+    if let Some(n) = get("--eval-workers") {
+        match n.parse() {
+            Ok(n) => opts.eval_workers = n,
+            Err(_) => usage(),
+        }
+    }
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        usage();
+    }
+    if let Err(e) = avo::eval::remote::run_worker(&opts) {
+        eprintln!("eval_worker: {e}");
+        std::process::exit(1);
+    }
+}

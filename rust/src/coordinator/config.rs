@@ -3,6 +3,7 @@
 //! `key = value` config file and overridable from the CLI.
 
 use crate::agent::AvoConfig;
+use crate::eval::RemoteTopology;
 use crate::islands::MigrationPolicy;
 use crate::score::Evaluator;
 use crate::supervisor::SupervisorConfig;
@@ -52,6 +53,15 @@ pub struct SearchTopology {
     /// Worker threads driving islands (0 = one per island, machine-capped).
     /// Archive contents are identical for every worker count.
     pub workers: usize,
+    /// Process-level tier: `avo eval-worker` processes to self-spawn
+    /// (`--remote-workers <n>`) and/or external workers to attach
+    /// (`--connect host:port,...`).  Disabled by default — the in-process
+    /// `Persistent<Cached<Sim>>` stack is the reference semantics, and
+    /// remote runs reproduce its archives byte-for-byte.  Orthogonal to
+    /// `workers` (`--island-workers`): that tier parallelizes *islands
+    /// over threads* in the coordinator, this one parallelizes
+    /// *evaluations over processes*; they compose freely.
+    pub remote: RemoteTopology,
 }
 
 impl Default for SearchTopology {
@@ -63,6 +73,7 @@ impl Default for SearchTopology {
             adaptive_migration: false,
             adaptive_stall_epochs: 2,
             workers: 0,
+            remote: RemoteTopology::default(),
         }
     }
 }
@@ -169,6 +180,12 @@ impl RunConfig {
                 "island_workers" => {
                     cfg.topology.workers = v.parse().map_err(|e| bad(&e))?
                 }
+                "remote_workers" => {
+                    cfg.topology.remote.workers = v.parse().map_err(|e| bad(&e))?
+                }
+                "connect" => {
+                    cfg.topology.remote.connect = parse_connect_list(v).map_err(|e| bad(&e))?
+                }
                 "lineage_path" => cfg.lineage_path = Some(v.into()),
                 "warm_start" => cfg.warm_start = Some(v.into()),
                 "eval_cache_path" => cfg.eval_cache_path = Some(v.into()),
@@ -234,6 +251,32 @@ impl RunConfig {
             self.operator_mix[island % self.operator_mix.len()]
         }
     }
+}
+
+/// Parse a comma-separated `host:port` list (`--connect` / `connect =`).
+/// Rejects empty segments, missing hosts, and missing/non-numeric ports
+/// so a typo'd list fails at parse time, not at attach time.
+pub fn parse_connect_list(v: &str) -> Result<Vec<String>, String> {
+    let addrs: Vec<String> = v
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    for a in &addrs {
+        if a.is_empty() {
+            return Err("empty address in connect list".to_string());
+        }
+        // rsplit keeps bracketed IPv6 hosts ([::1]:7654) intact.
+        let Some((host, port)) = a.rsplit_once(':') else {
+            return Err(format!("address '{a}' is missing a :port"));
+        };
+        if host.is_empty() {
+            return Err(format!("address '{a}' is missing a host"));
+        }
+        if port.parse::<u16>().is_err() {
+            return Err(format!("address '{a}' has an invalid port '{port}'"));
+        }
+    }
+    Ok(addrs)
 }
 
 /// Parse a comma-separated operator list (`avo,single_turn,fixed_pipeline`).
@@ -372,6 +415,34 @@ mod tests {
         assert_eq!(cfg.operator_for_island(0), OperatorKind::Avo);
         assert_eq!(cfg.operator_for_island(1), OperatorKind::SingleTurn);
         assert_eq!(cfg.operator_for_island(2), OperatorKind::Avo);
+    }
+
+    #[test]
+    fn parse_remote_topology_keys() {
+        let cfg = RunConfig::parse(
+            "remote_workers = 2\n\
+             connect = 10.0.0.1:7654, 10.0.0.2:7654\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.topology.remote.workers, 2);
+        assert_eq!(
+            cfg.topology.remote.connect,
+            vec!["10.0.0.1:7654".to_string(), "10.0.0.2:7654".to_string()]
+        );
+        assert!(cfg.topology.remote.enabled());
+        assert!(cfg.topology.remote.program.is_none());
+        assert!(cfg.topology.remote.fail_after.is_none());
+        // Default stays disabled: the in-process stack is the reference.
+        assert!(!RunConfig::default().topology.remote.enabled());
+        assert!(RunConfig::parse("remote_workers = banana\n").is_err());
+        assert!(RunConfig::parse("connect = 10.0.0.1\n").is_err());
+        assert!(RunConfig::parse("connect = a:1,,b:2\n").is_err());
+        // Malformed ports and missing hosts fail at parse time too, not
+        // as an attach-time panic mid-run.
+        assert!(RunConfig::parse("connect = 10.0.0.1:\n").is_err());
+        assert!(RunConfig::parse("connect = hostA:76x4\n").is_err());
+        assert!(RunConfig::parse("connect = :7654\n").is_err());
+        assert!(RunConfig::parse("connect = [::1]:7654\n").is_ok());
     }
 
     #[test]

@@ -98,6 +98,19 @@ impl RunReport {
         if halvings > 0 {
             s.push_str(&format!(", {halvings} migration-interval halvings"));
         }
+        // Process-level tier in one clause: fleet size, plus fault
+        // recovery counters when anything actually died mid-run.
+        let remote = self.metrics.counter("remote_workers");
+        if remote > 0 {
+            s.push_str(&format!(", {remote} remote eval workers"));
+            let deaths = self.metrics.counter("remote_worker_deaths");
+            if deaths > 0 {
+                s.push_str(&format!(
+                    " ({deaths} died, {} specs requeued)",
+                    self.metrics.counter("remote_requeued_specs")
+                ));
+            }
+        }
         // The agent-side batching picture in one clause: how many backend
         // round-trips the step loop's evaluations rode in (lookahead and
         // speculative repair push mean width above 1), and where the
@@ -143,11 +156,17 @@ impl RunReport {
     /// The machine-readable trace artifact (`avo evolve --trace-out`):
     /// the aggregate [`AgentTrace`] plus one entry per island.  Schema of
     /// the per-trace objects: see [`crate::agent::trace`].
-    pub fn trace_json(&self) -> Json {
+    ///
+    /// `deterministic = true` omits the wall-clock stage timings — the one
+    /// run-to-run nondeterministic field — so the document is a pure
+    /// function of (config, seed) and can be pinned as a byte-exact golden
+    /// (`avo evolve --trace-deterministic`).
+    pub fn trace_json(&self, deterministic: bool) -> Json {
+        let timings = !deterministic;
         Json::obj([
             ("workload", Json::Str(self.workload.clone())),
             ("steps", Json::Num(self.steps as f64)),
-            ("aggregate", self.trace.to_json()),
+            ("aggregate", self.trace.to_json_with(timings)),
             (
                 "islands",
                 Json::arr(self.islands.iter().map(|i| {
@@ -155,7 +174,7 @@ impl RunReport {
                         ("id", Json::Num(i.id as f64)),
                         ("operator", Json::Str(i.operator.to_string())),
                         ("steps", Json::Num(i.steps as f64)),
-                        ("trace", i.trace.to_json()),
+                        ("trace", i.trace.to_json_with(timings)),
                     ])
                 })),
             ),
@@ -391,7 +410,7 @@ mod tests {
     fn trace_json_parses_and_carries_island_traces() {
         let report = EvolutionDriver::new(small_config(8)).run();
         assert!(report.summary().contains("eval batches"), "{}", report.summary());
-        let parsed = crate::json::parse(&report.trace_json().pretty()).unwrap();
+        let parsed = crate::json::parse(&report.trace_json(false).pretty()).unwrap();
         assert_eq!(parsed.get("workload").unwrap().as_str(), Some("mha"));
         let islands = parsed.get("islands").unwrap().as_arr().unwrap();
         assert_eq!(islands.len(), 1);
@@ -408,6 +427,28 @@ mod tests {
                 .as_u64(),
             Some(1)
         );
+    }
+
+    #[test]
+    fn deterministic_trace_is_pure_function_of_config_and_seed() {
+        // Two same-seed runs serialize byte-identically in deterministic
+        // mode (wall-clock omitted) — what lets trace goldens be pinned.
+        let a = EvolutionDriver::new(small_config(8)).run();
+        let b = EvolutionDriver::new(small_config(8)).run();
+        assert_eq!(a.trace_json(true).pretty(), b.trace_json(true).pretty());
+        let det = a.trace_json(true);
+        let stages = det
+            .get("aggregate")
+            .unwrap()
+            .get("stages")
+            .unwrap()
+            .as_obj()
+            .unwrap();
+        assert!(!stages.is_empty());
+        for (name, s) in stages {
+            assert!(s.get("ms").is_none(), "stage {name} leaked wall-clock");
+            assert!(s.get("runs").is_some(), "stage {name} missing runs");
+        }
     }
 
     #[test]

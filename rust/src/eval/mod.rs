@@ -20,7 +20,13 @@
 //!   a new archipelago re-uses every evaluation a prior run paid for;
 //! * [`CountingBackend`] — transparent instrumentation (calls /
 //!   evaluations / max batch width) used by the agent-stage bench and the
-//!   operator-parity suite to pin the batching contract backend-side.
+//!   operator-parity suite to pin the batching contract backend-side;
+//! * [`RemoteBackend`] — the process-level tier: fans `evaluate_batch`
+//!   out over a length-prefixed JSON TCP protocol to `avo eval-worker`
+//!   processes (self-spawned via `--remote-workers <n>` or attached via
+//!   `--connect host:port,...`), each hosting its own simulator stack and
+//!   handshake-checked against the coordinator's cache fingerprint.  See
+//!   [`remote`] for the wire format, handshake, and requeue semantics.
 //!
 //! **Determinism contract.** Evolution runs noise-free, so a Score is a
 //! pure function of (genome, suite, functional seed, machine model) — the
@@ -31,20 +37,23 @@
 //! determinism suite leans on; it lives here, not in the archipelago.
 //!
 //! Layer order is `PersistentBackend<CachedBackend<SimBackend>>` in the
-//! driver; a future parallel or multi-machine topology slots in as another
-//! `EvalBackend` implementation (e.g. a remote batch RPC) without touching
-//! operator code — operators already propose candidates through the
-//! batched entry point.
+//! driver — or `PersistentBackend<CachedBackend<RemoteBackend>>` when a
+//! remote topology is configured, so the shared cache and warm-start
+//! semantics carry over unchanged and each batch's distinct misses reach
+//! the worker fleet as one batch.  Operators never see the difference:
+//! they already propose candidates through the batched entry point.
 
 pub mod backend;
 pub mod cache;
 pub mod cached;
 pub mod persist;
+pub mod remote;
 
 pub use backend::{CountingBackend, SimBackend};
 pub use cache::{EvalCache, DEFAULT_SHARDS};
 pub use cached::CachedBackend;
 pub use persist::{PersistentBackend, CACHE_FILE};
+pub use remote::{RemoteBackend, RemoteTopology};
 
 use crate::kernelspec::KernelSpec;
 use crate::score::{BenchConfig, Score};

@@ -1,0 +1,986 @@
+//! Remote evaluation: fan `evaluate_batch` out over TCP to worker
+//! processes, each hosting its own simulator stack — the process-level
+//! tier of the search topology (the multi-machine item the [`EvalBackend`]
+//! seam was designed for).
+//!
+//! # Wire format
+//!
+//! Zero-dependency, length-prefixed JSON over `std::net` (the offline
+//! image vendors no RPC crates; [`crate::json`] is the only codec):
+//!
+//! ```text
+//! frame := u32 big-endian payload length | payload (UTF-8 JSON object)
+//! ```
+//!
+//! Every payload is an object with a `"type"` field:
+//!
+//! | direction | message | fields |
+//! |-----------|---------|--------|
+//! | c → w | `hello`    | `protocol`, `fingerprint` (16-hex cache tag), `workload` |
+//! | w → c | `hello`    | `protocol`, `fingerprint`, `workload`, `pid` |
+//! | c → w | `eval`     | `specs`: array of [`KernelSpec`] JSON |
+//! | w → c | `scores`   | `scores`: array of [`Score`] JSON, one per spec, in order |
+//! | c → w | `shutdown` | — (worker closes the connection) |
+//! | either | `error`   | `message` |
+//!
+//! # Handshake
+//!
+//! The coordinator opens with a `hello` carrying its
+//! [`EvalBackend::cache_tag`] — `suite_tag ^ MachineSpec::fingerprint()`,
+//! the exact quantity that keys every cache entry.  The worker compares it
+//! against its own tag and answers `error` on any mismatch (different
+//! workload suite, functional seed, or machine model), so a misconfigured
+//! worker is rejected at attach time instead of silently corrupting
+//! scores; the coordinator double-checks the fingerprint echoed in the
+//! worker's `hello` as a defense in depth.
+//!
+//! # Requeue semantics
+//!
+//! [`RemoteBackend::evaluate_batch`] splits a batch into contiguous chunks
+//! across the live workers (one frame round-trip per chunk, rotating the
+//! starting worker between calls).  A worker that dies mid-batch — broken
+//! connection, malformed reply, wrong score count — is marked dead and its
+//! in-flight chunk is requeued onto the surviving workers; if every worker
+//! is gone, the remaining specs are evaluated on the coordinator's own
+//! local simulator so the run always completes.  Scores are a pure
+//! function of the spec (the determinism contract in [`crate::eval`]) and
+//! f64s round-trip through JSON bit-exactly, so no scheduling, death, or
+//! requeue decision can change a result — remote archives are
+//! byte-identical to in-process archives.
+//!
+//! Profiling reads ([`EvalBackend::report`]) and suite access stay on the
+//! coordinator's local simulator: workers exist to absorb `evaluate_batch`
+//! throughput, and the local stack is bit-identical by construction.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::eval::{EvalBackend, SimBackend};
+use crate::json::{parse, FromJson, Json, ToJson};
+use crate::kernelspec::KernelSpec;
+use crate::score::{BenchConfig, Evaluator, Score};
+use crate::sim::pipeline::CycleReport;
+
+/// Wire protocol version; bumped on any incompatible frame change.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Upper bound on a single frame (a batch of a few hundred genomes is
+/// ~100 KiB; anything near this limit is a framing bug, not a workload).
+pub const MAX_FRAME_BYTES: u32 = 64 << 20;
+
+/// Stdout line a worker prints once its listener is bound:
+/// `AVO_WORKER_LISTENING <addr>`.  Self-spawning coordinators read it to
+/// learn the ephemeral port.
+pub const LISTEN_LINE_PREFIX: &str = "AVO_WORKER_LISTENING ";
+
+// ---------------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------------
+
+/// Write one length-prefixed JSON frame.
+pub fn write_frame(w: &mut impl Write, msg: &Json) -> std::io::Result<()> {
+    let payload = msg.compact();
+    let bytes = payload.as_bytes();
+    if bytes.len() as u64 > MAX_FRAME_BYTES as u64 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("frame of {} bytes exceeds MAX_FRAME_BYTES", bytes.len()),
+        ));
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()
+}
+
+/// Read one length-prefixed JSON frame.  A clean EOF at a frame boundary
+/// surfaces as `UnexpectedEof` with an empty partial read.
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<Json> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_be_bytes(len_buf);
+    if len > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds MAX_FRAME_BYTES (corrupt stream?)"),
+        ));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    let text = std::str::from_utf8(&payload)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
+    parse(text).map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+}
+
+fn msg_type(frame: &Json) -> Option<&str> {
+    frame.get("type").and_then(Json::as_str)
+}
+
+fn error_frame(message: String) -> Json {
+    Json::obj([
+        ("type", Json::Str("error".into())),
+        ("message", Json::Str(message)),
+    ])
+}
+
+fn hello_frame(tag: u64, workload: &str, pid: Option<u32>) -> Json {
+    let mut entries = vec![
+        ("type", Json::Str("hello".into())),
+        ("protocol", PROTOCOL_VERSION.to_json()),
+        ("fingerprint", Json::Str(format!("{tag:016x}"))),
+        ("workload", Json::Str(workload.to_string())),
+    ];
+    if let Some(pid) = pid {
+        entries.push(("pid", pid.to_json()));
+    }
+    Json::obj(entries)
+}
+
+fn fingerprint_of(frame: &Json) -> Result<u64, String> {
+    let hex = frame
+        .get("fingerprint")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "hello frame missing fingerprint".to_string())?;
+    u64::from_str_radix(hex, 16).map_err(|_| format!("bad fingerprint '{hex}'"))
+}
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+/// Options for one worker process (`avo eval-worker`).
+#[derive(Debug, Clone)]
+pub struct WorkerOptions {
+    /// Registered workload spec the worker scores against (`mha`,
+    /// `gqa:<kv>`, `decode:<batch>`); its suite + machine model form the
+    /// handshake fingerprint.
+    pub workload: String,
+    /// Listen address; port 0 binds an ephemeral port (announced on
+    /// stdout via [`LISTEN_LINE_PREFIX`]).
+    pub listen: String,
+    /// Exit after the first connection closes (how self-spawned workers
+    /// run); standalone workers default to serving connections forever.
+    pub once: bool,
+    /// Fault-injection hook: serve exactly this many `eval` frames, then
+    /// drop the connection with the next request in flight (a `--once`
+    /// worker process exits as a result) — used by the fault-tolerance
+    /// suite to exercise coordinator requeue.
+    pub fail_after: Option<u64>,
+    /// Worker threads for fanning out a batch inside this process
+    /// (0 = machine parallelism).
+    pub eval_workers: usize,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        WorkerOptions {
+            workload: "mha".to_string(),
+            listen: "127.0.0.1:0".to_string(),
+            once: false,
+            fail_after: None,
+            eval_workers: 0,
+        }
+    }
+}
+
+/// Run a worker process: bind, announce the address on stdout, serve.
+/// This is the whole body of `avo eval-worker` and the `eval_worker` bin.
+pub fn run_worker(opts: &WorkerOptions) -> Result<(), String> {
+    let workload = crate::workload::parse(&opts.workload)?;
+    let eval = Evaluator::for_workload(&*workload);
+    let listener = TcpListener::bind(&opts.listen)
+        .map_err(|e| format!("bind {}: {e}", opts.listen))?;
+    let local = listener.local_addr().map_err(|e| e.to_string())?;
+    // Stdout is line-buffered, so the coordinator's pipe read sees this
+    // immediately.
+    println!("{LISTEN_LINE_PREFIX}{local}");
+    serve(listener, &eval, &opts.workload, opts.once, opts.fail_after, opts.eval_workers)
+}
+
+/// Serve eval connections on an already-bound listener (tests host this
+/// on a thread to exercise the protocol without process spawning).
+pub fn serve(
+    listener: TcpListener,
+    eval: &Evaluator,
+    workload_name: &str,
+    once: bool,
+    fail_after: Option<u64>,
+    eval_workers: usize,
+) -> Result<(), String> {
+    let threads = if eval_workers == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        eval_workers
+    };
+    let backend = SimBackend::new(eval.clone(), threads);
+    // Process-lifetime frame counter so `fail_after` spans reconnects.
+    let served = AtomicU64::new(0);
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                // Transient accept failures (e.g. ECONNABORTED from a
+                // client resetting before accept) must not take a
+                // long-lived fleet worker down.
+                eprintln!("eval-worker: accept failed: {e}");
+                continue;
+            }
+        };
+        stream.set_nodelay(true).ok();
+        // A failed connection (handshake rejection, peer vanishing) must
+        // not take the worker down; the next coordinator can still attach.
+        if let Err(e) = handle_connection(stream, &backend, workload_name, fail_after, &served)
+        {
+            if e.kind() != std::io::ErrorKind::UnexpectedEof {
+                eprintln!("eval-worker: connection ended: {e}");
+            }
+        }
+        if once {
+            return Ok(());
+        }
+    }
+    Ok(())
+}
+
+fn handle_connection(
+    mut stream: TcpStream,
+    backend: &SimBackend,
+    workload_name: &str,
+    fail_after: Option<u64>,
+    served: &AtomicU64,
+) -> std::io::Result<()> {
+    let my_tag = EvalBackend::cache_tag(backend);
+    let hello = read_frame(&mut stream)?;
+    let reject = |stream: &mut TcpStream, message: String| -> std::io::Result<()> {
+        write_frame(stream, &error_frame(message))
+    };
+    if msg_type(&hello) != Some("hello") {
+        return reject(&mut stream, "expected hello frame".to_string());
+    }
+    match hello.get("protocol").and_then(Json::as_u64) {
+        Some(PROTOCOL_VERSION) => {}
+        other => {
+            return reject(
+                &mut stream,
+                format!("unsupported protocol {other:?} (worker speaks {PROTOCOL_VERSION})"),
+            );
+        }
+    }
+    match fingerprint_of(&hello) {
+        Ok(tag) if tag == my_tag => {}
+        Ok(tag) => {
+            let their_workload = hello
+                .get("workload")
+                .and_then(Json::as_str)
+                .unwrap_or("?");
+            return reject(
+                &mut stream,
+                format!(
+                    "fingerprint mismatch: coordinator {tag:016x} (workload \
+                     '{their_workload}') vs worker {my_tag:016x} (workload \
+                     '{workload_name}') — different suite, functional seed, or \
+                     machine model"
+                ),
+            );
+        }
+        Err(e) => return reject(&mut stream, e),
+    }
+    write_frame(
+        &mut stream,
+        &hello_frame(my_tag, workload_name, Some(std::process::id())),
+    )?;
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
+            Err(e) => return Err(e),
+        };
+        match msg_type(&frame) {
+            Some("eval") => {
+                let specs: Result<Vec<KernelSpec>, String> = frame
+                    .get("specs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| "eval frame missing specs".to_string())
+                    .and_then(|arr| arr.iter().map(KernelSpec::from_json).collect());
+                let specs = match specs {
+                    Ok(s) => s,
+                    Err(e) => {
+                        write_frame(&mut stream, &error_frame(format!("bad eval frame: {e}")))?;
+                        continue;
+                    }
+                };
+                if let Some(limit) = fail_after {
+                    // Simulated crash: drop the connection with the
+                    // request in flight — the coordinator has sent specs
+                    // and will see EOF instead of scores.  (A `--once`
+                    // worker process exits as a consequence; an in-thread
+                    // test server must NOT take the host process down.)
+                    if served.fetch_add(1, Ordering::SeqCst) >= limit {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::ConnectionAborted,
+                            "fault injection: worker died mid-batch",
+                        ));
+                    }
+                }
+                let scores = backend.evaluate_batch(&specs);
+                let reply = Json::obj([
+                    ("type", Json::Str("scores".into())),
+                    ("scores", Json::arr(scores.iter().map(Score::to_json))),
+                ]);
+                write_frame(&mut stream, &reply)?;
+            }
+            Some("shutdown") => return Ok(()),
+            other => {
+                write_frame(
+                    &mut stream,
+                    &error_frame(format!("unknown frame type {other:?}")),
+                )?;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Topology config
+// ---------------------------------------------------------------------------
+
+/// Process-level tier of the search topology: how many worker processes to
+/// self-spawn and/or which external workers to attach.  Lives here (not in
+/// the coordinator) so the backend can be built from it without a layering
+/// inversion; `SearchTopology` embeds it.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RemoteTopology {
+    /// Local worker processes to self-spawn (`--remote-workers <n>`): the
+    /// coordinator launches `<argv0> eval-worker --workload <spec> --once`
+    /// per worker and reaps them when the run ends.
+    pub workers: usize,
+    /// External workers to attach (`--connect host:port,...`), already
+    /// running `avo eval-worker` somewhere.
+    pub connect: Vec<String>,
+    /// Worker binary override (tests point this at the cargo-built `avo`;
+    /// None = `std::env::current_exe()`).
+    pub program: Option<PathBuf>,
+    /// Fault-injection hook (programmatic only, never parsed from config):
+    /// the FIRST self-spawned worker dies after serving this many eval
+    /// frames, exercising mid-batch requeue.
+    pub fail_after: Option<u64>,
+}
+
+impl RemoteTopology {
+    /// Whether any process-level tier is configured.
+    pub fn enabled(&self) -> bool {
+        self.workers > 0 || !self.connect.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator side
+// ---------------------------------------------------------------------------
+
+/// Requeue/fault counters, shared out via [`RemoteBackend::stats`] so the
+/// coordinator can surface them in run metrics after the backend is gone.
+#[derive(Debug, Default)]
+pub struct RemoteStats {
+    pub worker_deaths: AtomicU64,
+    pub requeued_specs: AtomicU64,
+    pub remote_batches: AtomicU64,
+    /// Specs scored on the coordinator's local simulator because every
+    /// worker had died.
+    pub fallback_specs: AtomicU64,
+}
+
+struct RemoteWorker {
+    addr: String,
+    alive: AtomicBool,
+    conn: Mutex<TcpStream>,
+}
+
+impl RemoteWorker {
+    /// One chunk round-trip.  Any failure (IO, malformed reply, wrong
+    /// score count) is returned as an error for the caller to requeue.
+    fn evaluate(&self, chunk: &[usize], specs: &[KernelSpec]) -> Result<Vec<Score>, String> {
+        let mut conn = self.conn.lock().unwrap_or_else(|e| e.into_inner());
+        if !self.alive.load(Ordering::SeqCst) {
+            return Err("worker already marked dead".to_string());
+        }
+        let req = Json::obj([
+            ("type", Json::Str("eval".into())),
+            ("specs", Json::arr(chunk.iter().map(|&i| specs[i].to_json()))),
+        ]);
+        write_frame(&mut *conn, &req).map_err(|e| format!("send: {e}"))?;
+        let reply = read_frame(&mut *conn).map_err(|e| format!("recv: {e}"))?;
+        match msg_type(&reply) {
+            Some("scores") => {
+                let arr = reply
+                    .get("scores")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| "scores frame missing scores".to_string())?;
+                if arr.len() != chunk.len() {
+                    return Err(format!(
+                        "worker returned {} scores for {} specs",
+                        arr.len(),
+                        chunk.len()
+                    ));
+                }
+                arr.iter().map(Score::from_json).collect()
+            }
+            Some("error") => Err(reply
+                .get("message")
+                .and_then(Json::as_str)
+                .unwrap_or("unspecified worker error")
+                .to_string()),
+            other => Err(format!("unexpected reply type {other:?}")),
+        }
+    }
+}
+
+/// A worker process this backend spawned (reaped on drop).
+struct SpawnedChild {
+    child: Child,
+}
+
+/// The remote evaluation backend: a local [`Evaluator`] for suite /
+/// profiling / fingerprint duties plus a pool of worker connections that
+/// absorb `evaluate_batch` traffic.  Compose as
+/// `Persistent<Cached<RemoteBackend>>` so the shared cache and warm-start
+/// semantics carry over unchanged (the cached layer forwards each batch's
+/// distinct misses here as one batch).
+pub struct RemoteBackend {
+    eval: Evaluator,
+    workers: Vec<RemoteWorker>,
+    children: Mutex<Vec<SpawnedChild>>,
+    next_worker: AtomicUsize,
+    stats: Arc<RemoteStats>,
+}
+
+impl RemoteBackend {
+    /// Attach to already-running workers (`--connect host:port,...`),
+    /// handshaking each against `eval`'s fingerprint.
+    pub fn connect(eval: Evaluator, addrs: &[String]) -> Result<Self, String> {
+        let label = suite_hint(&eval);
+        Self::build_with_children(eval, Vec::new(), addrs, &label)
+    }
+
+    /// Self-spawn `n` local worker processes bound to `workload` and
+    /// attach to them.  `program` overrides the worker binary (tests use
+    /// the cargo-built `avo`); None spawns `current_exe()`.  `fail_after`
+    /// arms the fault-injection hook on the FIRST worker only.
+    pub fn spawn_local(
+        eval: Evaluator,
+        workload: &str,
+        n: usize,
+        program: Option<&std::path::Path>,
+        fail_after: Option<u64>,
+    ) -> Result<Self, String> {
+        Self::from_topology(
+            eval,
+            workload,
+            &RemoteTopology {
+                workers: n,
+                connect: Vec::new(),
+                program: program.map(|p| p.to_path_buf()),
+                fail_after,
+            },
+        )
+    }
+
+    /// Build the backend a [`RemoteTopology`] describes: self-spawned
+    /// workers first, then external attachments.
+    pub fn from_topology(
+        eval: Evaluator,
+        workload: &str,
+        topo: &RemoteTopology,
+    ) -> Result<Self, String> {
+        if !topo.enabled() {
+            return Err("remote topology has no workers configured".to_string());
+        }
+        let mut spawned = Vec::new();
+        for i in 0..topo.workers {
+            let fail = if i == 0 { topo.fail_after } else { None };
+            match spawn_worker(topo.program.as_deref(), workload, fail) {
+                Ok(w) => spawned.push(w),
+                Err(e) => {
+                    for mut s in spawned {
+                        s.child.kill().ok();
+                        s.child.wait().ok();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let mut addrs: Vec<String> = spawned.iter().map(|w| w.addr.clone()).collect();
+        addrs.extend(topo.connect.iter().cloned());
+        let children: Vec<SpawnedChild> =
+            spawned.into_iter().map(|w| SpawnedChild { child: w.child }).collect();
+        Self::build_with_children(eval, children, &addrs, workload)
+    }
+
+    fn build_with_children(
+        eval: Evaluator,
+        children: Vec<SpawnedChild>,
+        addrs: &[String],
+        workload_label: &str,
+    ) -> Result<Self, String> {
+        if addrs.is_empty() {
+            return Err("remote backend needs at least one worker".to_string());
+        }
+        let tag = EvalBackend::cache_tag(&eval);
+        let mut workers = Vec::new();
+        for addr in addrs {
+            match attach(addr, tag, workload_label) {
+                Ok(conn) => workers.push(RemoteWorker {
+                    addr: addr.clone(),
+                    alive: AtomicBool::new(true),
+                    conn: Mutex::new(conn),
+                }),
+                Err(e) => {
+                    for mut c in children {
+                        c.child.kill().ok();
+                        c.child.wait().ok();
+                    }
+                    return Err(format!("worker {addr}: {e}"));
+                }
+            }
+        }
+        Ok(RemoteBackend {
+            eval,
+            workers,
+            children: Mutex::new(children),
+            next_worker: AtomicUsize::new(0),
+            stats: Arc::new(RemoteStats::default()),
+        })
+    }
+
+    /// Shared fault counters (keep a clone to read after the run consumes
+    /// the backend).
+    pub fn stats(&self) -> Arc<RemoteStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Workers attached at construction.
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Workers currently alive.
+    pub fn live_workers(&self) -> usize {
+        self.workers
+            .iter()
+            .filter(|w| w.alive.load(Ordering::SeqCst))
+            .count()
+    }
+
+    /// The local evaluator backing suite/profiling duties.
+    pub fn evaluator(&self) -> &Evaluator {
+        &self.eval
+    }
+}
+
+/// First suite-cell name, as a human hint in handshake errors.
+fn suite_hint(eval: &Evaluator) -> String {
+    eval.suite.first().map(|c| c.name.clone()).unwrap_or_default()
+}
+
+/// Connect + handshake one worker.
+fn attach(addr: &str, tag: u64, workload_hint: &str) -> Result<TcpStream, String> {
+    let mut stream = TcpStream::connect(addr).map_err(|e| format!("connect: {e}"))?;
+    stream.set_nodelay(true).ok();
+    write_frame(&mut stream, &hello_frame(tag, workload_hint, None))
+        .map_err(|e| format!("handshake send: {e}"))?;
+    let reply = read_frame(&mut stream).map_err(|e| format!("handshake recv: {e}"))?;
+    match msg_type(&reply) {
+        Some("hello") => {
+            let theirs = fingerprint_of(&reply)?;
+            if theirs != tag {
+                return Err(format!(
+                    "fingerprint mismatch: worker {theirs:016x} vs coordinator {tag:016x}"
+                ));
+            }
+            Ok(stream)
+        }
+        Some("error") => Err(reply
+            .get("message")
+            .and_then(Json::as_str)
+            .unwrap_or("unspecified handshake error")
+            .to_string()),
+        other => Err(format!("unexpected handshake reply {other:?}")),
+    }
+}
+
+struct SpawnedWorkerProc {
+    child: Child,
+    addr: String,
+}
+
+/// Spawn one `eval-worker` process and read its announced address.
+fn spawn_worker(
+    program: Option<&std::path::Path>,
+    workload: &str,
+    fail_after: Option<u64>,
+) -> Result<SpawnedWorkerProc, String> {
+    let prog = match program {
+        Some(p) => p.to_path_buf(),
+        None => std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?,
+    };
+    let mut cmd = Command::new(&prog);
+    cmd.arg("eval-worker")
+        .arg("--workload")
+        .arg(workload)
+        .arg("--listen")
+        .arg("127.0.0.1:0")
+        .arg("--once")
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped());
+    if let Some(n) = fail_after {
+        cmd.arg("--fail-after").arg(n.to_string());
+    }
+    let mut child = cmd
+        .spawn()
+        .map_err(|e| format!("spawn {}: {e}", prog.display()))?;
+    let stdout = child.stdout.take().expect("stdout piped");
+    let mut lines = BufReader::new(stdout).lines();
+    loop {
+        match lines.next() {
+            Some(Ok(line)) => {
+                if let Some(addr) = line.strip_prefix(LISTEN_LINE_PREFIX) {
+                    return Ok(SpawnedWorkerProc { child, addr: addr.trim().to_string() });
+                }
+            }
+            _ => {
+                child.kill().ok();
+                child.wait().ok();
+                return Err(format!(
+                    "worker {} exited before announcing its address \
+                     (is 'eval-worker' a valid subcommand of that binary?)",
+                    prog.display()
+                ));
+            }
+        }
+    }
+}
+
+/// Split `pending` (non-empty) into at most `k` contiguous non-empty
+/// chunks.
+fn chunk_indices(pending: &[usize], k: usize) -> Vec<Vec<usize>> {
+    debug_assert!(!pending.is_empty());
+    let k = k.clamp(1, pending.len());
+    let base = pending.len() / k;
+    let extra = pending.len() % k;
+    let mut chunks = Vec::with_capacity(k);
+    let mut start = 0usize;
+    for c in 0..k {
+        let take = base + usize::from(c < extra);
+        chunks.push(pending[start..start + take].to_vec());
+        start += take;
+    }
+    chunks
+}
+
+impl EvalBackend for RemoteBackend {
+    /// Fan the batch out across live workers; requeue on death; fall back
+    /// to the local simulator only when no worker survives.  Result order
+    /// matches input order regardless of scheduling.
+    fn evaluate_batch(&self, specs: &[KernelSpec]) -> Vec<Score> {
+        if specs.is_empty() {
+            return Vec::new();
+        }
+        let mut out: Vec<Option<Score>> = vec![None; specs.len()];
+        let mut pending: Vec<usize> = (0..specs.len()).collect();
+        while !pending.is_empty() {
+            let live: Vec<usize> = self
+                .workers
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| w.alive.load(Ordering::SeqCst))
+                .map(|(i, _)| i)
+                .collect();
+            if live.is_empty() {
+                self.stats
+                    .fallback_specs
+                    .fetch_add(pending.len() as u64, Ordering::SeqCst);
+                eprintln!(
+                    "warning: all {} remote eval workers are dead; evaluating {} \
+                     spec(s) on the coordinator's local simulator",
+                    self.workers.len(),
+                    pending.len()
+                );
+                for &i in &pending {
+                    out[i] = Some(self.eval.evaluate(&specs[i]));
+                }
+                break;
+            }
+            let chunks = chunk_indices(&pending, live.len());
+            // Rotate the starting worker between calls so width-1 batches
+            // (the agent's inner loop) spread across the fleet.
+            let offset = self.next_worker.fetch_add(1, Ordering::Relaxed);
+            let results = if chunks.len() == 1 {
+                // The agent's inner loop at lookahead 1 issues width-1
+                // batches; score the single chunk on the caller thread
+                // rather than paying a thread scope + channel per
+                // evaluation (the same reasoning as SimBackend's
+                // singleton fast path).
+                let chunk = chunks.into_iter().next().expect("one chunk");
+                let widx = live[offset % live.len()];
+                let result = self.workers[widx].evaluate(&chunk, specs);
+                vec![(widx, chunk, result)]
+            } else {
+                let (tx, rx) = mpsc::channel();
+                std::thread::scope(|scope| {
+                    for (c, chunk) in chunks.into_iter().enumerate() {
+                        let widx = live[(c + offset) % live.len()];
+                        let worker = &self.workers[widx];
+                        let tx = tx.clone();
+                        scope.spawn(move || {
+                            let result = worker.evaluate(&chunk, specs);
+                            let _ = tx.send((widx, chunk, result));
+                        });
+                    }
+                });
+                drop(tx);
+                rx.into_iter().collect()
+            };
+            self.stats.remote_batches.fetch_add(1, Ordering::SeqCst);
+            let mut failed: Vec<usize> = Vec::new();
+            for (widx, chunk, result) in results {
+                match result {
+                    Ok(scores) => {
+                        for (&i, s) in chunk.iter().zip(scores) {
+                            out[i] = Some(s);
+                        }
+                    }
+                    Err(e) => {
+                        // swap() so two batches observing the same death
+                        // count it once.
+                        if self.workers[widx].alive.swap(false, Ordering::SeqCst) {
+                            self.stats.worker_deaths.fetch_add(1, Ordering::SeqCst);
+                            eprintln!(
+                                "warning: remote eval worker {} failed ({e}); \
+                                 requeueing {} in-flight spec(s)",
+                                self.workers[widx].addr,
+                                chunk.len()
+                            );
+                        }
+                        self.stats
+                            .requeued_specs
+                            .fetch_add(chunk.len() as u64, Ordering::SeqCst);
+                        failed.extend_from_slice(&chunk);
+                    }
+                }
+            }
+            failed.sort_unstable();
+            pending = failed;
+        }
+        out.into_iter()
+            .map(|s| s.expect("every batch slot filled"))
+            .collect()
+    }
+
+    fn suite(&self) -> &[BenchConfig] {
+        &self.eval.suite
+    }
+
+    fn report(&self, spec: &KernelSpec, cfg: &BenchConfig) -> CycleReport {
+        self.eval.report(spec, cfg)
+    }
+
+    fn cache_tag(&self) -> u64 {
+        EvalBackend::cache_tag(&self.eval)
+    }
+
+    fn is_deterministic(&self) -> bool {
+        EvalBackend::is_deterministic(&self.eval)
+    }
+}
+
+impl Drop for RemoteBackend {
+    fn drop(&mut self) {
+        // Polite shutdown first (lets --once workers exit cleanly)...
+        for w in &self.workers {
+            if w.alive.load(Ordering::SeqCst) {
+                if let Ok(mut conn) = w.conn.lock() {
+                    let _ = write_frame(
+                        &mut *conn,
+                        &Json::obj([("type", Json::Str("shutdown".into()))]),
+                    );
+                }
+            }
+        }
+        // ...then reap self-spawned children unconditionally.
+        let children = self.children.get_mut().unwrap_or_else(|e| e.into_inner());
+        for c in children.iter_mut() {
+            c.child.kill().ok();
+            c.child.wait().ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::score::mha_suite;
+
+    /// Host a real worker on a thread (full TCP protocol, no process).
+    fn worker_thread(
+        workload: &str,
+        once: bool,
+        fail_after: Option<u64>,
+    ) -> (String, std::thread::JoinHandle<Result<(), String>>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let w = crate::workload::parse(workload).unwrap();
+        let eval = Evaluator::for_workload(&*w);
+        let name = workload.to_string();
+        let handle = std::thread::spawn(move || {
+            serve(listener, &eval, &name, once, fail_after, 2)
+        });
+        (addr, handle)
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let msg = hello_frame(0xDEAD_BEEF, "mha", Some(42));
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        let back = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(back, msg);
+        assert_eq!(fingerprint_of(&back).unwrap(), 0xDEAD_BEEF);
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME_BYTES + 1).to_be_bytes());
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn truncated_frame_is_eof() {
+        let msg = error_frame("x".into());
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        buf.truncate(buf.len() - 2);
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn remote_scores_match_local_bit_for_bit() {
+        let (addr, handle) = worker_thread("mha", true, None);
+        let eval = Evaluator::new(mha_suite());
+        let backend = RemoteBackend::connect(eval.clone(), &[addr]).unwrap();
+        let specs = vec![
+            KernelSpec::naive(),
+            crate::baselines::fa4_genome(),
+            crate::baselines::evolved_genome(),
+        ];
+        let remote = backend.evaluate_batch(&specs);
+        for (r, s) in remote.iter().zip(&specs) {
+            let local = eval.evaluate(s);
+            assert_eq!(r.per_config, local.per_config);
+            assert_eq!(r.failure, local.failure);
+        }
+        assert_eq!(backend.stats().worker_deaths.load(Ordering::SeqCst), 0);
+        drop(backend); // shutdown frame lets the --once server return
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn failed_candidates_roundtrip_the_wire() {
+        let (addr, handle) = worker_thread("mha", true, None);
+        let eval = Evaluator::new(mha_suite());
+        let backend = RemoteBackend::connect(eval.clone(), &[addr]).unwrap();
+        let mut bad = KernelSpec::naive();
+        bad.fence_kind = crate::kernelspec::FenceKind::NonBlocking;
+        let remote = backend.evaluate(&bad);
+        let local = eval.evaluate(&bad);
+        assert_eq!(remote.failure, local.failure);
+        assert!(!remote.is_correct());
+        drop(backend);
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn handshake_rejects_mismatched_fingerprint() {
+        // Worker hosts gqa:4; coordinator expects mha.
+        let (addr, handle) = worker_thread("gqa:4", true, None);
+        let err = RemoteBackend::connect(Evaluator::new(mha_suite()), &[addr])
+            .err()
+            .expect("mismatched fingerprint must be rejected");
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn worker_death_requeues_in_flight_specs() {
+        // Worker A dies after 1 eval frame; worker B absorbs the requeue.
+        let (addr_a, _ha) = worker_thread("mha", true, Some(1));
+        let (addr_b, hb) = worker_thread("mha", true, None);
+        let eval = Evaluator::new(mha_suite());
+        let backend = RemoteBackend::connect(eval.clone(), &[addr_a, addr_b]).unwrap();
+        let specs = vec![
+            KernelSpec::naive(),
+            crate::baselines::fa4_genome(),
+            crate::baselines::evolved_genome(),
+            crate::baselines::cudnn_genome(),
+        ];
+        // First batch: both workers serve one chunk each (A's frame #1 is
+        // within its budget).  Second batch: A's next frame kills it...
+        let first = backend.evaluate_batch(&specs);
+        let second = backend.evaluate_batch(&specs);
+        for (batch, name) in [(&first, "first"), (&second, "second")] {
+            for (r, s) in batch.iter().zip(&specs) {
+                assert_eq!(r.per_config, eval.evaluate(s).per_config, "{name}");
+            }
+        }
+        let stats = backend.stats();
+        assert_eq!(stats.worker_deaths.load(Ordering::SeqCst), 1);
+        assert!(stats.requeued_specs.load(Ordering::SeqCst) > 0);
+        assert_eq!(backend.live_workers(), 1);
+        // ...and the survivor alone still serves full batches.
+        let third = backend.evaluate_batch(&specs);
+        assert_eq!(third[0].per_config, first[0].per_config);
+        drop(backend);
+        hb.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn all_workers_dead_falls_back_to_local_sim() {
+        let (addr, _h) = worker_thread("mha", true, Some(0));
+        let eval = Evaluator::new(mha_suite());
+        let backend = RemoteBackend::connect(eval.clone(), &[addr]).unwrap();
+        let spec = KernelSpec::naive();
+        let score = backend.evaluate(&spec);
+        assert_eq!(score.per_config, eval.evaluate(&spec).per_config);
+        let stats = backend.stats();
+        assert_eq!(stats.worker_deaths.load(Ordering::SeqCst), 1);
+        assert!(stats.fallback_specs.load(Ordering::SeqCst) >= 1);
+        assert_eq!(backend.live_workers(), 0);
+    }
+
+    #[test]
+    fn chunking_covers_all_indices_without_overlap() {
+        for (n, k) in [(1usize, 4usize), (4, 2), (7, 3), (10, 1), (3, 3)] {
+            let pending: Vec<usize> = (100..100 + n).collect();
+            let chunks = chunk_indices(&pending, k);
+            assert!(chunks.len() <= k.max(1));
+            assert!(chunks.iter().all(|c| !c.is_empty()), "n={n} k={k}");
+            let flat: Vec<usize> = chunks.into_iter().flatten().collect();
+            assert_eq!(flat, pending, "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn topology_enabled_logic() {
+        let mut t = RemoteTopology::default();
+        assert!(!t.enabled());
+        t.workers = 2;
+        assert!(t.enabled());
+        t.workers = 0;
+        t.connect = vec!["127.0.0.1:7654".to_string()];
+        assert!(t.enabled());
+    }
+}

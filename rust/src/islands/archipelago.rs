@@ -18,7 +18,9 @@ use crate::agent::{AgentAction, AgentTrace, VariationOperator};
 use crate::coordinator::config::RunConfig;
 use crate::coordinator::driver::{build_operator, RunReport};
 use crate::coordinator::metrics::Metrics;
-use crate::eval::{CacheStats, CachedBackend, EvalBackend, PersistentBackend, SimBackend};
+use crate::eval::{
+    CacheStats, CachedBackend, EvalBackend, PersistentBackend, RemoteBackend, SimBackend,
+};
 use crate::evolution::Lineage;
 use crate::islands::migration::Migrant;
 use crate::kernelspec::KernelSpec;
@@ -95,18 +97,72 @@ impl Archipelago {
 
     /// Run the archipelago from a seed genome (committed unconditionally to
     /// every island, as the paper seeds from a working baseline).
+    ///
+    /// With a remote topology configured (`--remote-workers` /
+    /// `--connect`), the ground-truth tier is a [`RemoteBackend`] — worker
+    /// processes absorbing `evaluate_batch` traffic, with in-flight
+    /// requeue on worker death — instead of the in-process [`SimBackend`];
+    /// the cache and persistence layers above are identical, and so (by
+    /// the determinism contract) is the archive.
     pub fn run_from(&self, seed_spec: KernelSpec, seed_message: &str) -> RunReport {
+        let cfg = &self.config;
+        if cfg.topology.remote.enabled() {
+            // Attach/spawn failures abort here, like a rejected warm-start
+            // below: the CLI pre-validates what it cheaply can (`--connect`
+            // list syntax), but reachability and handshake can only be
+            // probed by actually connecting — and a probe connection would
+            // consume a `--once` worker's single session.
+            let remote = RemoteBackend::from_topology(
+                cfg.evaluator(),
+                &cfg.workload,
+                &cfg.topology.remote,
+            )
+            .unwrap_or_else(|e| panic!("remote topology: {e}"));
+            let workers = remote.worker_count() as u64;
+            let stats = remote.stats();
+            let mut report = self.run_with(remote, seed_spec, seed_message);
+            use std::sync::atomic::Ordering;
+            report.metrics.incr("remote_workers", workers);
+            report
+                .metrics
+                .incr("remote_worker_deaths", stats.worker_deaths.load(Ordering::SeqCst));
+            report
+                .metrics
+                .incr("remote_requeued_specs", stats.requeued_specs.load(Ordering::SeqCst));
+            report
+                .metrics
+                .incr("remote_eval_batches", stats.remote_batches.load(Ordering::SeqCst));
+            report
+                .metrics
+                .incr("remote_fallback_specs", stats.fallback_specs.load(Ordering::SeqCst));
+            report
+        } else {
+            self.run_with(
+                SimBackend::new(cfg.evaluator(), cfg.eval_workers),
+                seed_spec,
+                seed_message,
+            )
+        }
+    }
+
+    /// The run loop over any ground-truth tier: wrap `inner` in the shared
+    /// cache + persistence layers, then drive the islands.
+    fn run_with<B: EvalBackend>(
+        &self,
+        inner: B,
+        seed_spec: KernelSpec,
+        seed_message: &str,
+    ) -> RunReport {
         let cfg = &self.config;
         let n = cfg.topology.islands.max(1);
         // The scenario this run optimizes: suite, KB shard, phase
         // schedule, and the tag isolating its cache entries.
         let workload = cfg.workload();
-        // The layered evaluation stack: simulator -> shared cache ->
+        // The layered evaluation stack: ground truth -> shared cache ->
         // persistence.  Warm-starting seeds the cache from a prior run's
         // saved evaluations; a rejected file (corrupt or fingerprint
         // mismatch) aborts rather than silently running cold.
-        let mut cached =
-            CachedBackend::new(SimBackend::new(cfg.evaluator(), cfg.eval_workers));
+        let mut cached = CachedBackend::new(inner);
         if let Some(max) = cfg.eval_cache_max_entries {
             cached.set_max_entries(max);
         }

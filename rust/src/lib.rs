@@ -28,20 +28,30 @@
 //!   decode over a batched KV cache, priced by a split-KV path in the
 //!   simulator).  `EvolutionDriver::transfer_to` adapts an evolved genome
 //!   across workloads, generalizing the paper's §4.3 GQA transfer.
-//! * **Scale-out** — an island model ([`islands`]): N concurrent lineages
-//!   with per-island PRNG streams and elite migration (ring /
-//!   broadcast-best / random pairs, with optional adaptive intervals for
-//!   stalled islands); the paper's sequential regime is the one-island
-//!   special case.
+//! * **Scale-out** — two orthogonal tiers behind one `SearchTopology`
+//!   config.  *Thread tier* ([`islands`]): N concurrent lineages with
+//!   per-island PRNG streams and elite migration (ring / broadcast-best /
+//!   random pairs, with optional adaptive intervals for stalled islands);
+//!   the paper's sequential regime is the one-island special case.
+//!   *Process tier* ([`eval::remote`]): `avo eval-worker` processes absorb
+//!   `evaluate_batch` traffic over a zero-dependency length-prefixed JSON
+//!   TCP protocol — self-spawned (`--remote-workers <n>`) or attached
+//!   across machines (`--connect host:port,...`), handshake-checked on
+//!   `suite_tag ^ MachineSpec::fingerprint()`, with in-flight requeue when
+//!   a worker dies mid-batch.  Remote archives are byte-identical to
+//!   in-process archives (pinned by `rust/tests/remote_eval.rs`, including
+//!   a mid-run worker kill).
 //! * **Evaluation subsystem** ([`eval`]) — the batched [`eval::EvalBackend`]
 //!   seam every scoring-function call goes through: [`eval::SimBackend`]
 //!   (the simulator, with worker fan-out for batches),
+//!   [`eval::RemoteBackend`] (the worker-fleet ground truth above),
 //!   [`eval::CachedBackend`] (shared content-addressed memoization — with
 //!   an optional oldest-first entry cap for week-long runs — so duplicate
 //!   genomes are never re-simulated), and [`eval::PersistentBackend`]
 //!   (JSON cache persistence + `--warm-start`, carrying evaluations across
-//!   runs; files are fingerprinted per workload).  The determinism
-//!   contract for cached and warm-started scores lives here.
+//!   runs; files are fingerprinted per workload and interchangeable
+//!   between in-process and remote runs).  The determinism contract for
+//!   cached, warm-started, and remote scores lives here.
 //! * **Layer 2/1 (build-time Python)** — a parameterized Pallas
 //!   flash-attention kernel realizing the genome's algorithmic space,
 //!   AOT-lowered to HLO text artifacts the `runtime` module (behind the

@@ -1,14 +1,17 @@
 //! `avo` — the Layer-3 coordinator CLI.
 //!
 //! Subcommands (hand-rolled parser; clap is not vendored offline):
-//!   evolve    run the AVO evolution loop (the paper's main experiment) on
-//!             any registered workload, optionally as an N-island
-//!             archipelago
-//!   transfer  adapt an evolved lineage to another workload (§4.3
-//!             generalized: gqa:<kv>, decode:<batch>, mha)
-//!   compare   AVO vs single-turn vs fixed-pipeline at equal budget
-//!   show      print a lineage file (versions, scores, sources)
-//!   profile   print the profiler report for a genome on one config
+//!   evolve       run the AVO evolution loop (the paper's main experiment)
+//!                on any registered workload, optionally as an N-island
+//!                archipelago and/or over remote eval workers
+//!   eval-worker  host a remote evaluation worker: serve evaluate_batch
+//!                requests over TCP for a coordinator running with
+//!                --remote-workers / --connect (see avo::eval::remote)
+//!   transfer     adapt an evolved lineage to another workload (§4.3
+//!                generalized: gqa:<kv>, decode:<batch>, mha)
+//!   compare      AVO vs single-turn vs fixed-pipeline at equal budget
+//!   show         print a lineage file (versions, scores, sources)
+//!   profile      print the profiler report for a genome on one config
 //!
 //! Examples:
 //!   avo evolve --seed 42 --commits 40 --out runs/mha
@@ -17,6 +20,9 @@
 //!   avo evolve --islands 3 --operators avo,single_turn,fixed_pipeline
 //!   avo evolve --warm-start runs/mha --out runs/mha2   # reuse evaluations
 //!   avo evolve --adaptive-migration --eval-cache-max-entries 100000
+//!   avo evolve --remote-workers 4                      # spawn local workers
+//!   avo eval-worker --workload mha --listen 0.0.0.0:7654   # on each machine
+//!   avo evolve --connect hostA:7654,hostB:7654         # attach to them
 //!   avo evolve --config runs/mha.cfg
 //!   avo transfer --lineage runs/mha/lineage.json --workload gqa:4
 //!   avo transfer --lineage runs/mha/lineage.json --workload decode:32
@@ -36,19 +42,24 @@ type CliError = Box<dyn std::error::Error>;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: avo <evolve|transfer|compare|show|profile> [flags]\n\
+        "usage: avo <evolve|eval-worker|transfer|compare|show|profile> [flags]\n\
          \n\
          evolve   --workload {} (default mha)\n\
          \u{20}         --seed N --commits N --steps N --operator avo|single_turn|pes\n\
          \u{20}         --operators OP[,OP...]  (heterogeneous islands, round-robin)\n\
          \u{20}         --islands N --migration ring|broadcast_best|random_pairs\n\
          \u{20}         --migrate-every K --island-workers N\n\
+         \u{20}         --remote-workers N  (self-spawn N eval-worker processes)\n\
+         \u{20}         --connect HOST:PORT[,HOST:PORT...]  (attach external workers)\n\
          \u{20}         --adaptive-migration --adaptive-stall-epochs K\n\
          \u{20}         --warm-start DIR  (reuse a prior run's eval cache)\n\
          \u{20}         --eval-cache-max-entries N  --speculative-repair\n\
          \u{20}         --lookahead K  (batch K candidate edits per direction)\n\
          \u{20}         --trace-out FILE  (agent stage/batching trace as JSON)\n\
+         \u{20}         --trace-deterministic  (omit wall-clock timings from it)\n\
          \u{20}         --config FILE --out DIR\n\
+         eval-worker --workload SPEC --listen ADDR (default 127.0.0.1:0)\n\
+         \u{20}         --once --eval-workers N --fail-after N\n\
          transfer --lineage FILE --workload SPEC (or --kv-heads 4|8)\n\
          \u{20}         --seed N --out DIR\n\
          compare  --budget N --seed N\n\
@@ -135,6 +146,13 @@ fn main() -> Result<(), CliError> {
             if let Some(w) = flags.parse_strict("--island-workers")? {
                 cfg.topology.workers = w;
             }
+            if let Some(n) = flags.parse_strict("--remote-workers")? {
+                cfg.topology.remote.workers = n;
+            }
+            if let Some(list) = flags.get("--connect") {
+                cfg.topology.remote.connect =
+                    avo::coordinator::config::parse_connect_list(list)?;
+            }
             if let Some(dir) = flags.get("--warm-start") {
                 cfg.warm_start = Some(PathBuf::from(dir));
             }
@@ -171,6 +189,7 @@ fn main() -> Result<(), CliError> {
                     .map_err(|e| format!("warm-start: {e}"))?;
             }
             let trace_out = flags.get("--trace-out").map(PathBuf::from);
+            let trace_deterministic = flags.has("--trace-deterministic");
             let suite = cfg.evaluator().suite;
             let report = EvolutionDriver::new(cfg).run();
             println!("{}", report.summary());
@@ -178,7 +197,7 @@ fn main() -> Result<(), CliError> {
                 if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
                     std::fs::create_dir_all(dir)?;
                 }
-                std::fs::write(path, report.trace_json().pretty())?;
+                std::fs::write(path, report.trace_json(trace_deterministic).pretty())?;
                 println!("wrote agent trace to {}", path.display());
             }
             if report.islands.len() > 1 {
@@ -240,6 +259,25 @@ fn main() -> Result<(), CliError> {
                 artifacts.push("eval cache");
                 println!("wrote {} to {}", artifacts.join(" + "), dir.display());
             }
+        }
+        "eval-worker" => {
+            // The worker process the coordinator self-spawns for
+            // --remote-workers (and the one you run by hand on each
+            // machine for --connect).  Body lives in avo::eval::remote.
+            let mut opts = avo::eval::remote::WorkerOptions::default();
+            if let Some(w) = flags.get("--workload") {
+                avo::workload::parse(w)?; // validate against the registry
+                opts.workload = w.to_string();
+            }
+            if let Some(l) = flags.get("--listen") {
+                opts.listen = l.to_string();
+            }
+            opts.once = flags.has("--once");
+            opts.fail_after = flags.parse_strict("--fail-after")?;
+            if let Some(n) = flags.parse_strict("--eval-workers")? {
+                opts.eval_workers = n;
+            }
+            avo::eval::remote::run_worker(&opts)?;
         }
         "transfer" => {
             let lineage_path = flags.get("--lineage").unwrap_or_else(|| usage());

@@ -2,10 +2,13 @@
 //! place of proptest, which is not vendored offline).  Each property runs
 //! hundreds of randomized cases; failures print the offending seed/spec.
 
+use avo::eval::{
+    CachedBackend, CountingBackend, EvalBackend, PersistentBackend, RemoteBackend, SimBackend,
+};
 use avo::evolution::Lineage;
 use avo::kernelspec::{all_edits, KernelSpec};
 use avo::prng::Rng;
-use avo::score::{geomean, mha_suite, Evaluator};
+use avo::score::{geomean, mha_suite, Evaluator, Score};
 use avo::sim::functional;
 use avo::sim::machine::MachineSpec;
 use avo::sim::pipeline::simulate;
@@ -183,6 +186,110 @@ fn prop_edits_compose_with_crossover() {
         let same = a.crossover(&a.clone(), &mut rng);
         assert_eq!(same, a);
     }
+}
+
+#[test]
+fn prop_decode_respects_one_cta_critical_path_floor() {
+    // Across seeded-random genomes and decode cells, the decode makespan
+    // can never beat a single CTA's own critical path: at most 16 split
+    // CTAs share one tile's KV stream, so some CTA streams at least
+    // ceil(blocks/16) K/V blocks, each costing no less than its raw HBM
+    // transfer (pipeline-depth discount capped at 6%).  This pins the
+    // floor added after the PR-3 review (fewer CTAs than SMs must not
+    // "finish" faster than one work item can run).
+    let mut rng = Rng::new(0xDEC0DE);
+    let m = MachineSpec::b200();
+    let batches = [1u32, 2, 4, 8, 32];
+    let kv_lens = [2048u32, 4096, 16384, 32768];
+    let kv_heads = [1u32, 2, 4, 8, 16, 32];
+    let mut priced = 0usize;
+    for case in 0..300 {
+        let spec = random_spec(&mut rng);
+        if spec.validate().is_err() {
+            continue;
+        }
+        let cfg = BenchConfig::decode(
+            batches[rng.below(batches.len())],
+            kv_lens[rng.below(kv_lens.len())],
+            32,
+            kv_heads[rng.below(kv_heads.len())],
+        );
+        let r = simulate(&spec, &cfg, &m);
+        assert!(
+            r.tflops.is_finite() && r.tflops > 0.0,
+            "case {case}: non-finite decode TFLOPS for {spec:?}"
+        );
+        assert!(r.tflops < m.peak_bf16_tflops, "case {case}: above peak");
+        let n_blocks = (cfg.seq_len as u64).div_ceil(spec.block_k as u64).max(1);
+        let kv_bytes = 2.0 * spec.block_k as f64 * cfg.head_dim as f64 * 2.0;
+        let floor =
+            n_blocks.div_ceil(16) as f64 * (kv_bytes / m.hbm_bytes_per_cycle()) * 0.94;
+        assert!(
+            r.total_cycles >= floor - 1e-6,
+            "case {case}: makespan {} beats the one-CTA floor {floor} \
+             ({n_blocks} blocks, {} on {:?})",
+            r.total_cycles,
+            cfg.name,
+            spec
+        );
+        priced += 1;
+    }
+    assert!(priced >= 100, "generator priced too few valid decode cases: {priced}");
+}
+
+#[test]
+fn prop_batched_equals_sequential_for_every_backend_layer() {
+    // Whatever random batch is submitted — duplicates included — every
+    // layer of the evaluation stack returns exactly the scores a
+    // one-at-a-time pass over the bare Evaluator produces, in input
+    // order.  The remote layer runs the real wire protocol against an
+    // in-thread worker, so JSON f64 round-tripping is covered too.
+    let mut rng = Rng::new(0x0B47C4);
+    let eval = Evaluator::new(mha_suite());
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server_eval = eval.clone();
+    let server = std::thread::spawn(move || {
+        avo::eval::remote::serve(listener, &server_eval, "mha", true, None, 2)
+    });
+    let remote = RemoteBackend::connect(eval.clone(), &[addr]).unwrap();
+    let layers: Vec<(&str, Box<dyn EvalBackend>)> = vec![
+        ("evaluator", Box::new(eval.clone())),
+        ("sim", Box::new(SimBackend::new(eval.clone(), 4))),
+        ("cached", Box::new(CachedBackend::new(SimBackend::new(eval.clone(), 2)))),
+        ("persistent", Box::new(PersistentBackend::new(CachedBackend::new(eval.clone())))),
+        ("counting", Box::new(CountingBackend::new(eval.clone()))),
+        ("remote", Box::new(remote)),
+    ];
+    for round in 0..6 {
+        let mut specs: Vec<KernelSpec> = Vec::new();
+        for _ in 0..rng.below(5) + 2 {
+            specs.push(random_spec(&mut rng));
+        }
+        // In-batch duplicate: the dedup paths must serve the same bits.
+        specs.push(specs[0].clone());
+        let reference: Vec<Score> = specs.iter().map(|s| eval.evaluate(s)).collect();
+        for (name, layer) in &layers {
+            let batched = layer.evaluate_batch(&specs);
+            assert_eq!(batched.len(), specs.len(), "round {round} layer {name}");
+            for (i, (b, r)) in batched.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    b.per_config, r.per_config,
+                    "round {round} layer {name} spec {i}: batched != sequential"
+                );
+                assert_eq!(b.failure, r.failure, "round {round} layer {name} spec {i}");
+            }
+            for (i, s) in specs.iter().enumerate() {
+                let one = layer.evaluate(s);
+                assert_eq!(
+                    one.per_config, reference[i].per_config,
+                    "round {round} layer {name} spec {i}: one-at-a-time diverges"
+                );
+            }
+        }
+    }
+    drop(layers); // drops the RemoteBackend: shutdown frame ends the server
+    server.join().unwrap().unwrap();
 }
 
 #[test]

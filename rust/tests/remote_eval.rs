@@ -1,0 +1,211 @@
+//! Cross-backend equivalence and fault-injection suite for the remote
+//! evaluation tier (real worker *processes*, spawned from the cargo-built
+//! `avo` binary).
+//!
+//! The contract under test: a remote-backed evolve is indistinguishable
+//! from the in-process `Persistent<Cached<Sim>>` stack — byte-identical
+//! archives, identical cache hit/miss accounting, interchangeable
+//! persisted caches — on every registered workload, and stays that way
+//! when a worker is killed mid-batch (in-flight specs are requeued onto
+//! the survivors).  The protocol-level unit tests (framing, in-thread
+//! requeue, local fallback) live in `avo::eval::remote`; this file covers
+//! the process topology end to end.
+
+use std::path::PathBuf;
+
+use avo::coordinator::{EvolutionDriver, RunConfig};
+use avo::eval::RemoteBackend;
+use avo::kernelspec::KernelSpec;
+use avo::score::Evaluator;
+use avo::EvalBackend;
+
+/// The cargo-built coordinator binary, doubling as the worker program
+/// (`avo eval-worker`).
+fn worker_program() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_avo"))
+}
+
+fn tempdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("avo_remote_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn base_config(workload: &str, seed: u64) -> RunConfig {
+    RunConfig {
+        seed,
+        target_commits: 3,
+        max_steps: 15,
+        workload: workload.to_string(),
+        ..RunConfig::default()
+    }
+}
+
+fn remote_config(workload: &str, seed: u64, workers: usize) -> RunConfig {
+    let mut cfg = base_config(workload, seed);
+    cfg.topology.remote.workers = workers;
+    cfg.topology.remote.program = Some(worker_program());
+    cfg
+}
+
+/// One workload's equivalence check: remote-backed evolve == in-process
+/// evolve, byte for byte, with identical cache accounting.
+fn assert_remote_matches_local(workload: &str) {
+    let dir = tempdir(&format!("eq_{}", workload.replace(':', "_")));
+
+    let mut local_cfg = base_config(workload, 11);
+    local_cfg.lineage_path = Some(dir.join("local_lineage.json"));
+    let local = EvolutionDriver::new(local_cfg).run();
+
+    let mut remote_cfg = remote_config(workload, 11, 2);
+    remote_cfg.lineage_path = Some(dir.join("remote_lineage.json"));
+    let remote = EvolutionDriver::new(remote_cfg).run();
+
+    let a = std::fs::read(dir.join("local_lineage.json")).unwrap();
+    let b = std::fs::read(dir.join("remote_lineage.json")).unwrap();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "{workload}: remote archive diverges from in-process");
+
+    // The cached layer above the backend saw the identical key sequence.
+    for key in ["evaluations", "eval_cache_hits", "eval_cache_misses", "commits", "eval_batches"]
+    {
+        assert_eq!(
+            local.metrics.counter(key),
+            remote.metrics.counter(key),
+            "{workload}: {key} diverges"
+        );
+    }
+    assert_eq!(remote.metrics.counter("remote_workers"), 2, "{workload}");
+    assert_eq!(remote.metrics.counter("remote_worker_deaths"), 0, "{workload}");
+    assert_eq!(remote.metrics.counter("remote_fallback_specs"), 0, "{workload}");
+    assert!(remote.summary().contains("remote eval workers"), "{}", remote.summary());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn remote_matches_local_mha() {
+    assert_remote_matches_local("mha");
+}
+
+#[test]
+fn remote_matches_local_mqa() {
+    assert_remote_matches_local("gqa:1");
+}
+
+#[test]
+fn remote_matches_local_gqa4() {
+    assert_remote_matches_local("gqa:4");
+}
+
+#[test]
+fn remote_matches_local_decode32() {
+    assert_remote_matches_local("decode:32");
+}
+
+#[test]
+fn warm_start_roundtrips_across_backends() {
+    let dir = tempdir("warm");
+
+    // Cold remote run persists its evaluation cache.
+    let mut cold_cfg = remote_config("decode:32", 5, 2);
+    cold_cfg.lineage_path = Some(dir.join("cold_lineage.json"));
+    cold_cfg.eval_cache_path = Some(dir.join(avo::eval::CACHE_FILE));
+    EvolutionDriver::new(cold_cfg).run();
+    let cold = std::fs::read(dir.join("cold_lineage.json")).unwrap();
+
+    // Remote warm start: every evaluation served from the cold run's
+    // cache, archive byte-identical.
+    let mut warm_cfg = remote_config("decode:32", 5, 2);
+    warm_cfg.lineage_path = Some(dir.join("warm_lineage.json"));
+    warm_cfg.warm_start = Some(dir.clone());
+    let warm = EvolutionDriver::new(warm_cfg).run();
+    assert_eq!(cold, std::fs::read(dir.join("warm_lineage.json")).unwrap());
+    assert!(warm.metrics.counter("eval_cache_warm_entries") > 0);
+    assert_eq!(
+        warm.metrics.counter("eval_cache_misses"),
+        0,
+        "warm remote run recomputed a cached evaluation"
+    );
+
+    // In-process warm start from the REMOTE-produced cache file: the
+    // fingerprint and every entry are backend-agnostic.
+    let mut local_cfg = base_config("decode:32", 5);
+    local_cfg.lineage_path = Some(dir.join("local_warm_lineage.json"));
+    local_cfg.warm_start = Some(dir.clone());
+    let local = EvolutionDriver::new(local_cfg).run();
+    assert_eq!(cold, std::fs::read(dir.join("local_warm_lineage.json")).unwrap());
+    assert_eq!(local.metrics.counter("eval_cache_misses"), 0);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn worker_killed_mid_batch_requeues_and_archive_is_identical() {
+    let dir = tempdir("fault");
+    // Lookahead widens eval batches so the death strands several
+    // in-flight specs at once, not just a singleton.
+    let mut nofault_cfg = remote_config("mha", 7, 2);
+    nofault_cfg.agent.lookahead = 4;
+    nofault_cfg.lineage_path = Some(dir.join("nofault_lineage.json"));
+    let nofault = EvolutionDriver::new(nofault_cfg).run();
+    assert_eq!(nofault.metrics.counter("remote_worker_deaths"), 0);
+
+    // Identical config, but worker 0 dies after serving 3 eval frames —
+    // its next request is dropped mid-flight.
+    let mut fault_cfg = remote_config("mha", 7, 2);
+    fault_cfg.agent.lookahead = 4;
+    fault_cfg.topology.remote.fail_after = Some(3);
+    fault_cfg.lineage_path = Some(dir.join("fault_lineage.json"));
+    let fault = EvolutionDriver::new(fault_cfg).run();
+
+    assert_eq!(fault.metrics.counter("remote_worker_deaths"), 1);
+    assert!(
+        fault.metrics.counter("remote_requeued_specs") > 0,
+        "death produced no requeue"
+    );
+    assert!(
+        fault.summary().contains("died"),
+        "summary hides the fault: {}",
+        fault.summary()
+    );
+    // No score divergence: the requeued evaluations produced the exact
+    // archive and cache accounting of the healthy run.
+    let a = std::fs::read(dir.join("nofault_lineage.json")).unwrap();
+    let b = std::fs::read(dir.join("fault_lineage.json")).unwrap();
+    assert_eq!(a, b, "mid-batch worker kill changed the archive");
+    for key in ["evaluations", "eval_cache_hits", "eval_cache_misses", "commits"] {
+        assert_eq!(
+            nofault.metrics.counter(key),
+            fault.metrics.counter(key),
+            "{key} diverges under fault"
+        );
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn handshake_rejects_worker_with_mismatched_fingerprint() {
+    // Coordinator scores mha; the spawned worker process hosts gqa:4.
+    // The worker advertises/checks `suite_tag ^ MachineSpec::fingerprint()`
+    // and must reject the attach instead of serving incomparable scores.
+    let eval = Evaluator::for_workload(&*avo::workload::parse("mha").unwrap());
+    let err = RemoteBackend::spawn_local(eval, "gqa:4", 1, Some(&worker_program()), None)
+        .err()
+        .expect("mismatched worker must be rejected at handshake");
+    assert!(err.contains("fingerprint mismatch"), "{err}");
+}
+
+#[test]
+fn standalone_eval_worker_binary_serves_identical_scores() {
+    // The thin `eval_worker` bin speaks the same protocol as the
+    // `avo eval-worker` subcommand.
+    let eval = Evaluator::for_workload(&*avo::workload::parse("mha").unwrap());
+    let program = PathBuf::from(env!("CARGO_BIN_EXE_eval_worker"));
+    let backend =
+        RemoteBackend::spawn_local(eval.clone(), "mha", 1, Some(&program), None).unwrap();
+    for spec in [KernelSpec::naive(), avo::baselines::evolved_genome()] {
+        let remote = backend.evaluate(&spec);
+        let local = eval.evaluate(&spec);
+        assert_eq!(remote.per_config, local.per_config);
+        assert_eq!(remote.failure, local.failure);
+    }
+}
