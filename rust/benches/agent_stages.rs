@@ -50,13 +50,17 @@ fn main() {
     b.finish();
 
     // Stage breakdown of a representative run (observability, not a gate).
-    let (_, trace, _, _, _) = run(AvoConfig::default(), 7, 15);
-    println!("stage breakdown (15 default steps):");
+    // ms/eval normalizes each stage's wall-clock by the evaluations the run
+    // performed, so stage costs stay comparable across configurations with
+    // different batching shapes.
+    let (_, trace, _, run_evals, _) = run(AvoConfig::default(), 7, 15);
+    println!("stage breakdown (15 default steps, {run_evals} evals):");
     for (stage, stat) in &trace.stages {
+        let ms = stat.nanos as f64 / 1e6;
         println!(
-            "  {stage:<10} {:>5} runs  {:>8.2} ms",
+            "  {stage:<10} {:>5} runs  {ms:>8.2} ms  {:>8.4} ms/eval",
             stat.runs,
-            stat.nanos as f64 / 1e6
+            ms / run_evals.max(1) as f64
         );
     }
 

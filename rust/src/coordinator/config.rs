@@ -7,6 +7,7 @@ use crate::eval::RemoteTopology;
 use crate::islands::MigrationPolicy;
 use crate::score::Evaluator;
 use crate::supervisor::SupervisorConfig;
+use crate::telemetry::TelemetryConfig;
 use crate::workload::Workload;
 
 /// Which variation operator drives the run.
@@ -112,6 +113,9 @@ pub struct RunConfig {
     /// oldest-first (`--eval-cache-max-entries`); None = unbounded.  Keeps
     /// week-long runs from growing `eval_cache.json` without limit.
     pub eval_cache_max_entries: Option<usize>,
+    /// Observability: JSONL journal + live metrics endpoint (both off by
+    /// default; telemetry never perturbs archives).
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for RunConfig {
@@ -133,6 +137,7 @@ impl Default for RunConfig {
             warm_start: None,
             eval_cache_path: None,
             eval_cache_max_entries: None,
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -191,6 +196,14 @@ impl RunConfig {
                 "eval_cache_path" => cfg.eval_cache_path = Some(v.into()),
                 "eval_cache_max_entries" => {
                     cfg.eval_cache_max_entries = Some(v.parse().map_err(|e| bad(&e))?)
+                }
+                "journal" => cfg.telemetry.journal = Some(v.into()),
+                "metrics_addr" => cfg.telemetry.metrics_addr = Some(v.to_string()),
+                "metrics_linger_ms" => {
+                    cfg.telemetry.linger_ms = v.parse().map_err(|e| bad(&e))?
+                }
+                "remote_read_timeout_ms" => {
+                    cfg.topology.remote.read_timeout_ms = v.parse().map_err(|e| bad(&e))?
                 }
                 "inner_budget" => cfg.agent.inner_budget = v.parse().map_err(|e| bad(&e))?,
                 "repair_budget" => cfg.agent.repair_budget = v.parse().map_err(|e| bad(&e))?,
@@ -443,6 +456,28 @@ mod tests {
         assert!(RunConfig::parse("connect = hostA:76x4\n").is_err());
         assert!(RunConfig::parse("connect = :7654\n").is_err());
         assert!(RunConfig::parse("connect = [::1]:7654\n").is_ok());
+    }
+
+    #[test]
+    fn parse_telemetry_keys() {
+        let cfg = RunConfig::parse(
+            "journal = runs/a/journal.jsonl\n\
+             metrics_addr = 127.0.0.1:0\n\
+             metrics_linger_ms = 2500\n\
+             remote_read_timeout_ms = 250\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.telemetry.journal.as_deref(),
+            Some(std::path::Path::new("runs/a/journal.jsonl"))
+        );
+        assert_eq!(cfg.telemetry.metrics_addr.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(cfg.telemetry.linger_ms, 2500);
+        assert_eq!(cfg.topology.remote.read_timeout_ms, 250);
+        assert!(cfg.telemetry.enabled());
+        // Off by default: telemetry is opt-in.
+        assert!(!RunConfig::default().telemetry.enabled());
+        assert!(RunConfig::parse("metrics_linger_ms = soon\n").is_err());
     }
 
     #[test]

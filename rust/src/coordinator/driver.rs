@@ -110,6 +110,41 @@ impl RunReport {
                     self.metrics.counter("remote_requeued_specs")
                 ));
             }
+            let timeouts = self.metrics.counter("remote_read_timeouts");
+            if timeouts > 0 {
+                s.push_str(&format!(", {timeouts} read timeouts"));
+            }
+            // Fleet saturation: what fraction of worker-time no round-trip
+            // occupied.  Capacity is run wall-clock x fleet size.
+            let capacity = self.metrics.counter("remote_capacity_ms");
+            if capacity > 0 {
+                let busy = self.metrics.counter("remote_busy_ms").min(capacity);
+                s.push_str(&format!(
+                    ", fleet idle {:.0}%",
+                    100.0 * (1.0 - busy as f64 / capacity as f64)
+                ));
+            }
+        }
+        // Island-worker saturation (threaded epochs only; serial runs have
+        // no idle worker to report).
+        let island_capacity = self.metrics.counter("island_capacity_ms");
+        if island_capacity > 0 {
+            let busy = self.metrics.counter("island_busy_ms").min(island_capacity);
+            s.push_str(&format!(
+                ", island workers idle {:.0}%",
+                100.0 * (1.0 - busy as f64 / island_capacity as f64)
+            ));
+        }
+        // Eval-batch latency distribution from the telemetry tier (only
+        // present when batches actually reached the ground-truth backend).
+        if let Some(h) = self.metrics.histogram("eval_batch") {
+            if !h.is_empty() {
+                s.push_str(&format!(
+                    ", eval batch p50 {}us p95 {}us",
+                    h.quantile_micros(0.5),
+                    h.quantile_micros(0.95)
+                ));
+            }
         }
         // The agent-side batching picture in one clause: how many backend
         // round-trips the step loop's evaluations rode in (lookahead and

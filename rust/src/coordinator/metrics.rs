@@ -1,17 +1,39 @@
-//! Run metrics: counters and timers the driver reports at the end of a run
-//! (the paper's §4.4 scale statistics: directions explored, commits,
-//! interventions, evaluations).
+//! Run metrics: counters, timers, and latency histograms the driver
+//! reports at the end of a run (the paper's §4.4 scale statistics:
+//! directions explored, commits, interventions, evaluations — plus the
+//! telemetry layer's saturation profile).
+//!
+//! Timers have an explicit [`Metrics::start`] / [`Metrics::stop`] pair
+//! with re-entrancy accounting: if the same timer is started again while
+//! already running (a stage timed inside a batch that is itself timed),
+//! only the *outermost* stop records elapsed time, so nested or
+//! overlapping uses of one name never double-count wall-clock — in the
+//! cumulative timer or in the histogram.  [`Metrics::time`] is the
+//! closure-shaped convenience over the same mechanism.
+//!
+//! Every completed timer observation also lands in a fixed-bucket
+//! [`Histogram`] of the same name, so `to_json()` carries distributions
+//! (p50/p95/max), not just totals.
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use crate::json::{Json, ToJson};
+use crate::telemetry::Histogram;
+
+#[derive(Debug)]
+struct ActiveTimer {
+    depth: u32,
+    started: Instant,
+}
 
 /// A simple metrics registry.
 #[derive(Debug, Default)]
 pub struct Metrics {
     counters: BTreeMap<&'static str, u64>,
     timers: BTreeMap<&'static str, Duration>,
+    histograms: BTreeMap<String, Histogram>,
+    active: BTreeMap<&'static str, ActiveTimer>,
 }
 
 impl Metrics {
@@ -27,11 +49,43 @@ impl Metrics {
         self.counters.get(name).copied().unwrap_or(0)
     }
 
-    /// Time a closure under a named timer.
+    /// Start (or re-enter) a named timer.  Only the first `start` of a
+    /// nest records the clock; see the module docs.
+    pub fn start(&mut self, name: &'static str) {
+        let entry = self
+            .active
+            .entry(name)
+            .or_insert(ActiveTimer { depth: 0, started: Instant::now() });
+        if entry.depth == 0 {
+            entry.started = Instant::now();
+        }
+        entry.depth += 1;
+    }
+
+    /// Stop a named timer.  Returns the elapsed duration recorded by this
+    /// stop, which is nonzero only for the outermost stop of a nest
+    /// (inner stops — and stops without a matching start — return zero
+    /// and record nothing).
+    pub fn stop(&mut self, name: &'static str) -> Duration {
+        let Some(entry) = self.active.get_mut(name) else {
+            return Duration::ZERO;
+        };
+        entry.depth -= 1;
+        if entry.depth > 0 {
+            return Duration::ZERO;
+        }
+        let elapsed = entry.started.elapsed();
+        self.active.remove(name);
+        *self.timers.entry(name).or_insert(Duration::ZERO) += elapsed;
+        self.record_duration(name, elapsed);
+        elapsed
+    }
+
+    /// Time a closure under a named timer (start/stop convenience).
     pub fn time<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
-        let start = Instant::now();
+        self.start(name);
         let out = f();
-        *self.timers.entry(name).or_insert(Duration::ZERO) += start.elapsed();
+        self.stop(name);
         out
     }
 
@@ -39,14 +93,46 @@ impl Metrics {
         self.timers.get(name).copied().unwrap_or(Duration::ZERO)
     }
 
-    /// Fold another registry into this one (summing counters and timers) —
-    /// how per-island metrics aggregate into the run report.
+    /// Record one observation into the named histogram (without touching
+    /// the cumulative timers) — used for externally timed durations like
+    /// per-stage trace deltas.
+    pub fn record_duration(&mut self, name: &str, d: Duration) {
+        if let Some(h) = self.histograms.get(name) {
+            h.record(d);
+            return;
+        }
+        let h = Histogram::new();
+        h.record(d);
+        self.histograms.insert(name.to_string(), h);
+    }
+
+    /// The named histogram, if any observation has been recorded.
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Fold an externally owned histogram (e.g. the telemetry layer's
+    /// eval-batch or remote round-trip histogram) into this registry.
+    pub fn merge_histogram(&mut self, name: &str, other: &Histogram) {
+        if let Some(h) = self.histograms.get(name) {
+            h.merge_from(other);
+            return;
+        }
+        self.histograms.insert(name.to_string(), other.clone());
+    }
+
+    /// Fold another registry into this one (summing counters, timers, and
+    /// histogram buckets) — how per-island metrics aggregate into the run
+    /// report.  Active (unstopped) timers do not transfer.
     pub fn merge(&mut self, other: &Metrics) {
         for (&k, &v) in &other.counters {
             *self.counters.entry(k).or_insert(0) += v;
         }
         for (&k, &v) in &other.timers {
             *self.timers.entry(k).or_insert(Duration::ZERO) += v;
+        }
+        for (k, h) in &other.histograms {
+            self.merge_histogram(k, h);
         }
     }
 
@@ -66,6 +152,14 @@ impl Metrics {
                     (k.to_string(), Json::Num(v.as_secs_f64() * 1e3))
                 })),
             ),
+            (
+                "histograms",
+                Json::obj_from(
+                    self.histograms
+                        .iter()
+                        .map(|(k, h)| (k.clone(), h.to_json())),
+                ),
+            ),
         ])
     }
 
@@ -76,6 +170,18 @@ impl Metrics {
         }
         for (k, v) in &self.timers {
             s.push_str(&format!("  {k:<28} {:.1} ms\n", v.as_secs_f64() * 1e3));
+        }
+        for (k, h) in &self.histograms {
+            if h.is_empty() {
+                continue;
+            }
+            s.push_str(&format!(
+                "  {k:<28} n={} p50={}us p95={}us max={}us\n",
+                h.count(),
+                h.quantile_micros(0.5),
+                h.quantile_micros(0.95),
+                h.max_micros()
+            ));
         }
         s
     }
@@ -103,6 +209,29 @@ mod tests {
         });
         assert_eq!(x, 42);
         assert!(m.elapsed("work") >= Duration::from_millis(2));
+        // The observation also landed in the histogram.
+        assert_eq!(m.histogram("work").unwrap().count(), 1);
+    }
+
+    /// The satellite fix: a timer re-entered while running (stage inside
+    /// batch) must count its wall-clock once, not once per nesting level.
+    #[test]
+    fn nested_same_name_timers_do_not_double_count() {
+        let mut m = Metrics::new();
+        m.start("work");
+        m.start("work"); // overlapping start of the same timer
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(m.stop("work"), Duration::ZERO, "inner stop records nothing");
+        let outer = m.stop("work");
+        assert!(outer >= Duration::from_millis(5));
+        assert!(
+            m.elapsed("work") < Duration::from_millis(500),
+            "double-counted: {:?}",
+            m.elapsed("work")
+        );
+        assert_eq!(m.histogram("work").unwrap().count(), 1);
+        // Unmatched stop is benign.
+        assert_eq!(m.stop("work"), Duration::ZERO);
     }
 
     #[test]
@@ -118,17 +247,39 @@ mod tests {
         assert_eq!(a.counter("evals"), 7);
         assert_eq!(a.counter("commits"), 1);
         assert!(a.elapsed("work") >= Duration::from_millis(2));
+        assert_eq!(a.histogram("work").unwrap().count(), 2);
+    }
+
+    #[test]
+    fn record_duration_feeds_histogram_without_timer() {
+        let mut m = Metrics::new();
+        m.record_duration("stage_consult", Duration::from_micros(300));
+        m.record_duration("stage_consult", Duration::from_micros(900));
+        assert_eq!(m.elapsed("stage_consult"), Duration::ZERO);
+        assert_eq!(m.histogram("stage_consult").unwrap().count(), 2);
     }
 
     #[test]
     fn json_and_text_reports() {
         let mut m = Metrics::new();
         m.incr("commits", 40);
+        m.record_duration("work", Duration::from_micros(10));
         let j = m.to_json();
         assert_eq!(
             j.get("counters").unwrap().get("commits").unwrap().as_u64(),
             Some(40)
         );
+        assert_eq!(
+            j.get("histograms")
+                .unwrap()
+                .get("work")
+                .unwrap()
+                .get("count")
+                .unwrap()
+                .as_u64(),
+            Some(1)
+        );
         assert!(m.report().contains("commits"));
+        assert!(m.report().contains("p95="));
     }
 }

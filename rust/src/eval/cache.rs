@@ -14,9 +14,10 @@
 use std::collections::hash_map::Entry;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::score::Score;
+use crate::telemetry::{Event, TelemetrySink};
 
 /// Default shard count (power of two; collisions only cost lock sharing).
 pub const DEFAULT_SHARDS: usize = 16;
@@ -40,6 +41,9 @@ pub struct EvalCache {
     max_entries: Option<usize>,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
+    /// Telemetry bus for `cache_evict` events (None = no telemetry).
+    sink: Option<Arc<dyn TelemetrySink>>,
 }
 
 impl EvalCache {
@@ -52,6 +56,25 @@ impl EvalCache {
             max_entries: None,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            sink: None,
+        }
+    }
+
+    /// Attach the telemetry bus (publishes `cache_evict` as entries are
+    /// pushed out; hit/miss events are the [`crate::eval::CachedBackend`]
+    /// layer's job, which knows the per-spec request order).
+    pub fn set_sink(&mut self, sink: Arc<dyn TelemetrySink>) {
+        self.sink = Some(sink);
+    }
+
+    /// Count one eviction (and publish it).
+    fn note_evict(&self, key: u64) {
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+        if let Some(sink) = &self.sink {
+            if sink.enabled() {
+                sink.publish(&Event::CacheEvict { key });
+            }
         }
     }
 
@@ -89,6 +112,7 @@ impl EvalCache {
             };
             if self.shard(victim).lock().unwrap().remove(&victim).is_some() {
                 *self.live.get_mut() -= 1;
+                self.note_evict(victim);
             }
         }
     }
@@ -114,6 +138,7 @@ impl EvalCache {
             let Some(victim) = victim else { break };
             if self.shard(victim).lock().unwrap().remove(&victim).is_some() {
                 self.live.fetch_sub(1, Ordering::Relaxed);
+                self.note_evict(victim);
             }
         }
     }
@@ -199,6 +224,11 @@ impl EvalCache {
 
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Entries pushed out by the oldest-first cap.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
     }
 
     /// Distinct genomes scored so far.
@@ -373,6 +403,29 @@ mod tests {
         assert_eq!(cache.len(), 2);
         assert!(cache.get(5).is_none(), "oldest survivor evicted on tighten");
         assert!(cache.get(9).is_some() && cache.get(7).is_some());
+    }
+
+    #[test]
+    fn evictions_are_counted_and_published() {
+        let mut cache = EvalCache::new(2);
+        let sink = Arc::new(crate::telemetry::VecSink::new());
+        cache.set_sink(sink.clone());
+        cache.set_max_entries(2);
+        let eval = Evaluator::new(mha_suite());
+        let score = eval.evaluate(&KernelSpec::naive());
+        for key in [1u64, 2, 3, 4] {
+            cache.insert(key, score.clone());
+        }
+        assert_eq!(cache.evictions(), 2);
+        let evicted: Vec<u64> = sink
+            .take()
+            .into_iter()
+            .filter_map(|e| match e {
+                crate::telemetry::Event::CacheEvict { key } => Some(key),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(evicted, vec![1, 2], "oldest-first eviction order");
     }
 
     #[test]

@@ -8,11 +8,14 @@
 //! pure function of (config, seed genome) no matter how many islands,
 //! worker threads, or warm-started runs share the cache.
 
+use std::sync::Arc;
+
 use crate::eval::cache::EvalCache;
 use crate::eval::{CacheStats, EvalBackend};
 use crate::kernelspec::KernelSpec;
 use crate::score::{BenchConfig, Score};
 use crate::sim::pipeline::CycleReport;
+use crate::telemetry::{Event, NullSink, TelemetrySink};
 
 /// A caching layer over an inner backend.  Hit/miss accounting is exact:
 /// every requested spec counts as exactly one hit or one miss, so
@@ -20,15 +23,28 @@ use crate::sim::pipeline::CycleReport;
 pub struct CachedBackend<B: EvalBackend> {
     inner: B,
     cache: EvalCache,
+    sink: Arc<dyn TelemetrySink>,
 }
 
 impl<B: EvalBackend> CachedBackend<B> {
     pub fn new(inner: B) -> Self {
-        CachedBackend { inner, cache: EvalCache::default() }
+        CachedBackend { inner, cache: EvalCache::default(), sink: Arc::new(NullSink) }
     }
 
     pub fn with_shards(inner: B, shards: usize) -> Self {
-        CachedBackend { inner, cache: EvalCache::new(shards) }
+        CachedBackend {
+            inner,
+            cache: EvalCache::new(shards),
+            sink: Arc::new(NullSink),
+        }
+    }
+
+    /// Attach a telemetry sink: hit/miss events on lookups, evict events
+    /// from the underlying store.  Purely observational — counting is
+    /// identical with or without a sink attached.
+    pub fn set_telemetry(&mut self, sink: Arc<dyn TelemetrySink>) {
+        self.cache.set_sink(Arc::clone(&sink));
+        self.sink = sink;
     }
 
     /// Bound the cache to `max` distinct genomes, evicted oldest-first
@@ -76,9 +92,23 @@ impl<B: EvalBackend> EvalBackend for CachedBackend<B> {
             // The single-candidate path is the agent inner loop's; keep it
             // on the racy-but-idempotent fast path (no batch bookkeeping).
             [one] => {
-                vec![self
-                    .cache
-                    .get_or_compute(self.key(one), || self.inner.evaluate(one))]
+                let key = self.key(one);
+                if !self.sink.enabled() {
+                    return vec![self
+                        .cache
+                        .get_or_compute(key, || self.inner.evaluate(one))];
+                }
+                // Telemetry path: same counting as get_or_compute (lookup
+                // counts the hit or the miss; insert is silent), spelled
+                // out so the event matches the counter.
+                if let Some(score) = self.cache.lookup(key) {
+                    self.sink.publish(&Event::CacheHit { key });
+                    return vec![score];
+                }
+                self.sink.publish(&Event::CacheMiss { key });
+                let score = self.inner.evaluate(one);
+                self.cache.insert(key, score.clone());
+                vec![score]
             }
             _ => {
                 let n = specs.len();
@@ -87,14 +117,24 @@ impl<B: EvalBackend> EvalBackend for CachedBackend<B> {
                 let mut pending: Vec<(u64, usize)> = Vec::new();
                 // (input index, pending index) of in-batch duplicates.
                 let mut dups: Vec<(usize, usize)> = Vec::new();
+                let publish = self.sink.enabled();
                 for (i, spec) in specs.iter().enumerate() {
                     let key = self.key(spec);
                     if let Some(p) = pending.iter().position(|&(k, _)| k == key) {
                         self.cache.credit_hit();
+                        if publish {
+                            self.sink.publish(&Event::CacheHit { key });
+                        }
                         dups.push((i, p));
                     } else if let Some(score) = self.cache.lookup(key) {
+                        if publish {
+                            self.sink.publish(&Event::CacheHit { key });
+                        }
                         out[i] = Some(score);
                     } else {
+                        if publish {
+                            self.sink.publish(&Event::CacheMiss { key });
+                        }
                         pending.push((key, i));
                     }
                 }
@@ -144,6 +184,7 @@ impl<B: EvalBackend> EvalBackend for CachedBackend<B> {
             misses: self.cache.misses(),
             entries: self.cache.len() as u64,
             warm_entries: 0,
+            evictions: self.cache.evictions(),
         }
     }
 }
@@ -242,6 +283,35 @@ mod tests {
         let stats = noisy.cache_stats();
         assert_eq!((stats.hits, stats.misses, stats.entries), (0, 0, 0));
         assert!(!noisy.is_deterministic());
+    }
+
+    #[test]
+    fn telemetry_events_match_hit_miss_counters() {
+        use crate::telemetry::{Event, VecSink};
+        let mut cached = backend();
+        let sink = std::sync::Arc::new(VecSink::new());
+        cached.set_telemetry(sink.clone());
+        let naive = KernelSpec::naive();
+        cached.evaluate(&naive); // singleton miss
+        cached.evaluate(&naive); // singleton hit
+        // Batch: 1 warm hit, 1 fresh miss, 1 in-batch duplicate hit.
+        cached.evaluate_batch(&[
+            naive.clone(),
+            crate::baselines::fa4_genome(),
+            crate::baselines::fa4_genome(),
+        ]);
+        let (mut hits, mut misses) = (0u64, 0u64);
+        for e in sink.take() {
+            match e {
+                Event::CacheHit { .. } => hits += 1,
+                Event::CacheMiss { .. } => misses += 1,
+                other => panic!("unexpected event {}", other.name()),
+            }
+        }
+        let stats = cached.cache_stats();
+        assert_eq!((hits, misses), (stats.hits, stats.misses));
+        assert_eq!((hits, misses), (3, 2));
+        assert_eq!(stats.evictions, 0);
     }
 
     #[test]

@@ -36,12 +36,16 @@
 //! cache key pins every score input.  This is the contract the island
 //! determinism suite leans on; it lives here, not in the archipelago.
 //!
-//! Layer order is `PersistentBackend<CachedBackend<SimBackend>>` in the
-//! driver — or `PersistentBackend<CachedBackend<RemoteBackend>>` when a
-//! remote topology is configured, so the shared cache and warm-start
+//! Layer order is
+//! `PersistentBackend<CachedBackend<InstrumentedBackend<SimBackend>>>` in
+//! the driver — with [`RemoteBackend`] in place of [`SimBackend`] when a
+//! remote topology is configured — so the shared cache and warm-start
 //! semantics carry over unchanged and each batch's distinct misses reach
-//! the worker fleet as one batch.  Operators never see the difference:
-//! they already propose candidates through the batched entry point.
+//! the worker fleet as one batch.  The telemetry tier
+//! ([`crate::telemetry::InstrumentedBackend`]) sits *inside* the cache:
+//! its eval-batch latency histogram times real evaluations, never cache
+//! hits.  Operators never see the difference: they already propose
+//! candidates through the batched entry point.
 
 pub mod backend;
 pub mod cache;
@@ -68,6 +72,8 @@ pub struct CacheStats {
     pub entries: u64,
     /// Entries seeded from a prior run's persisted cache (warm start).
     pub warm_entries: u64,
+    /// Entries pushed out by the oldest-first entry cap.
+    pub evictions: u64,
 }
 
 /// A (possibly layered) evaluation backend: everything the search needs

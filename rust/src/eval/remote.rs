@@ -48,6 +48,17 @@
 //! requeue decision can change a result — remote archives are
 //! byte-identical to in-process archives.
 //!
+//! # Read deadlines
+//!
+//! A worker that *hangs* (rather than dying) would stall the whole batch,
+//! so every coordinator-side connection carries a socket read deadline
+//! ([`RemoteTopology::read_timeout_ms`], default 120 s, 0 disables): a
+//! chunk round-trip that exceeds it is treated exactly like a death — the
+//! worker is marked dead and the chunk requeued — and additionally counted
+//! in `RemoteStats::read_timeouts` / published as a `worker_timeout`
+//! telemetry event.  The `--stall-after` fault hook on the worker makes
+//! this testable without a real hang.
+//!
 //! Profiling reads ([`EvalBackend::report`]) and suite access stay on the
 //! coordinator's local simulator: workers exist to absorb `evaluate_batch`
 //! throughput, and the local stack is bit-identical by construction.
@@ -59,11 +70,14 @@ use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
+use std::time::{Duration, Instant};
+
 use crate::eval::{EvalBackend, SimBackend};
 use crate::json::{parse, FromJson, Json, ToJson};
 use crate::kernelspec::KernelSpec;
 use crate::score::{BenchConfig, Evaluator, Score};
 use crate::sim::pipeline::CycleReport;
+use crate::telemetry::{Event, Histogram, NullSink, TelemetrySink};
 
 /// Wire protocol version; bumped on any incompatible frame change.
 pub const PROTOCOL_VERSION: u64 = 1;
@@ -76,6 +90,10 @@ pub const MAX_FRAME_BYTES: u32 = 64 << 20;
 /// `AVO_WORKER_LISTENING <addr>`.  Self-spawning coordinators read it to
 /// learn the ephemeral port.
 pub const LISTEN_LINE_PREFIX: &str = "AVO_WORKER_LISTENING ";
+
+/// Default coordinator-side socket read deadline per chunk round-trip
+/// (see [`RemoteTopology::read_timeout_ms`]).
+pub const DEFAULT_READ_TIMEOUT_MS: u64 = 120_000;
 
 // ---------------------------------------------------------------------------
 // Framing
@@ -169,6 +187,10 @@ pub struct WorkerOptions {
     /// worker process exits as a result) — used by the fault-tolerance
     /// suite to exercise coordinator requeue.
     pub fail_after: Option<u64>,
+    /// Fault-injection hook: after serving this many `eval` frames, sleep
+    /// ~5 s before replying to each subsequent one — a *hang* rather than
+    /// a crash, used to exercise the coordinator's read deadline.
+    pub stall_after: Option<u64>,
     /// Worker threads for fanning out a batch inside this process
     /// (0 = machine parallelism).
     pub eval_workers: usize,
@@ -181,6 +203,7 @@ impl Default for WorkerOptions {
             listen: "127.0.0.1:0".to_string(),
             once: false,
             fail_after: None,
+            stall_after: None,
             eval_workers: 0,
         }
     }
@@ -197,17 +220,27 @@ pub fn run_worker(opts: &WorkerOptions) -> Result<(), String> {
     // Stdout is line-buffered, so the coordinator's pipe read sees this
     // immediately.
     println!("{LISTEN_LINE_PREFIX}{local}");
-    serve(listener, &eval, &opts.workload, opts.once, opts.fail_after, opts.eval_workers)
+    serve(
+        listener,
+        &eval,
+        &opts.workload,
+        opts.once,
+        opts.fail_after,
+        opts.stall_after,
+        opts.eval_workers,
+    )
 }
 
 /// Serve eval connections on an already-bound listener (tests host this
 /// on a thread to exercise the protocol without process spawning).
+#[allow(clippy::too_many_arguments)]
 pub fn serve(
     listener: TcpListener,
     eval: &Evaluator,
     workload_name: &str,
     once: bool,
     fail_after: Option<u64>,
+    stall_after: Option<u64>,
     eval_workers: usize,
 ) -> Result<(), String> {
     let threads = if eval_workers == 0 {
@@ -232,7 +265,8 @@ pub fn serve(
         stream.set_nodelay(true).ok();
         // A failed connection (handshake rejection, peer vanishing) must
         // not take the worker down; the next coordinator can still attach.
-        if let Err(e) = handle_connection(stream, &backend, workload_name, fail_after, &served)
+        if let Err(e) =
+            handle_connection(stream, &backend, workload_name, fail_after, stall_after, &served)
         {
             if e.kind() != std::io::ErrorKind::UnexpectedEof {
                 eprintln!("eval-worker: connection ended: {e}");
@@ -250,6 +284,7 @@ fn handle_connection(
     backend: &SimBackend,
     workload_name: &str,
     fail_after: Option<u64>,
+    stall_after: Option<u64>,
     served: &AtomicU64,
 ) -> std::io::Result<()> {
     let my_tag = EvalBackend::cache_tag(backend);
@@ -312,17 +347,23 @@ fn handle_connection(
                         continue;
                     }
                 };
-                if let Some(limit) = fail_after {
+                if fail_after.is_some() || stall_after.is_some() {
+                    let n = served.fetch_add(1, Ordering::SeqCst);
                     // Simulated crash: drop the connection with the
                     // request in flight — the coordinator has sent specs
                     // and will see EOF instead of scores.  (A `--once`
                     // worker process exits as a consequence; an in-thread
                     // test server must NOT take the host process down.)
-                    if served.fetch_add(1, Ordering::SeqCst) >= limit {
+                    if fail_after.is_some_and(|limit| n >= limit) {
                         return Err(std::io::Error::new(
                             std::io::ErrorKind::ConnectionAborted,
                             "fault injection: worker died mid-batch",
                         ));
+                    }
+                    // Simulated hang: stay connected but go silent longer
+                    // than any reasonable read deadline before replying.
+                    if stall_after.is_some_and(|limit| n >= limit) {
+                        std::thread::sleep(Duration::from_secs(5));
                     }
                 }
                 let scores = backend.evaluate_batch(&specs);
@@ -351,7 +392,7 @@ fn handle_connection(
 /// self-spawn and/or which external workers to attach.  Lives here (not in
 /// the coordinator) so the backend can be built from it without a layering
 /// inversion; `SearchTopology` embeds it.
-#[derive(Debug, Clone, Default, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RemoteTopology {
     /// Local worker processes to self-spawn (`--remote-workers <n>`): the
     /// coordinator launches `<argv0> eval-worker --workload <spec> --once`
@@ -367,6 +408,23 @@ pub struct RemoteTopology {
     /// the FIRST self-spawned worker dies after serving this many eval
     /// frames, exercising mid-batch requeue.
     pub fail_after: Option<u64>,
+    /// Coordinator-side socket read deadline per chunk round-trip, in ms
+    /// (`--remote-read-timeout-ms` / config `remote_read_timeout_ms`;
+    /// 0 disables).  A round-trip exceeding it declares the worker dead
+    /// and requeues its chunk.
+    pub read_timeout_ms: u64,
+}
+
+impl Default for RemoteTopology {
+    fn default() -> Self {
+        RemoteTopology {
+            workers: 0,
+            connect: Vec::new(),
+            program: None,
+            fail_after: None,
+            read_timeout_ms: DEFAULT_READ_TIMEOUT_MS,
+        }
+    }
 }
 
 impl RemoteTopology {
@@ -390,6 +448,29 @@ pub struct RemoteStats {
     /// Specs scored on the coordinator's local simulator because every
     /// worker had died.
     pub fallback_specs: AtomicU64,
+    /// Chunk round-trips that exceeded the socket read deadline (each one
+    /// also counts as a worker death).
+    pub read_timeouts: AtomicU64,
+    /// Total nanoseconds coordinator threads spent inside worker
+    /// round-trips — the numerator of the fleet idle-fraction metric
+    /// (capacity = workers x run wall-clock).
+    pub busy_nanos: AtomicU64,
+    /// Chunk round-trip latency distribution.
+    pub rtt: Histogram,
+}
+
+/// Why one chunk round-trip failed — timeouts are split out so the
+/// coordinator can count them (and publish `worker_timeout`) separately
+/// from crashes, while sharing the death/requeue recovery path.
+struct WorkerFailure {
+    timed_out: bool,
+    msg: String,
+}
+
+impl WorkerFailure {
+    fn of(msg: String) -> Self {
+        WorkerFailure { timed_out: false, msg }
+    }
 }
 
 struct RemoteWorker {
@@ -400,39 +481,58 @@ struct RemoteWorker {
 
 impl RemoteWorker {
     /// One chunk round-trip.  Any failure (IO, malformed reply, wrong
-    /// score count) is returned as an error for the caller to requeue.
-    fn evaluate(&self, chunk: &[usize], specs: &[KernelSpec]) -> Result<Vec<Score>, String> {
+    /// score count) is returned as an error for the caller to requeue;
+    /// a recv that hits the socket read deadline is flagged `timed_out`.
+    fn evaluate(
+        &self,
+        chunk: &[usize],
+        specs: &[KernelSpec],
+    ) -> Result<Vec<Score>, WorkerFailure> {
         let mut conn = self.conn.lock().unwrap_or_else(|e| e.into_inner());
         if !self.alive.load(Ordering::SeqCst) {
-            return Err("worker already marked dead".to_string());
+            return Err(WorkerFailure::of("worker already marked dead".to_string()));
         }
         let req = Json::obj([
             ("type", Json::Str("eval".into())),
             ("specs", Json::arr(chunk.iter().map(|&i| specs[i].to_json()))),
         ]);
-        write_frame(&mut *conn, &req).map_err(|e| format!("send: {e}"))?;
-        let reply = read_frame(&mut *conn).map_err(|e| format!("recv: {e}"))?;
+        write_frame(&mut *conn, &req)
+            .map_err(|e| WorkerFailure::of(format!("send: {e}")))?;
+        let reply = read_frame(&mut *conn).map_err(|e| WorkerFailure {
+            timed_out: matches!(
+                e.kind(),
+                std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+            ),
+            msg: format!("recv: {e}"),
+        })?;
         match msg_type(&reply) {
             Some("scores") => {
                 let arr = reply
                     .get("scores")
                     .and_then(Json::as_arr)
-                    .ok_or_else(|| "scores frame missing scores".to_string())?;
+                    .ok_or_else(|| {
+                        WorkerFailure::of("scores frame missing scores".to_string())
+                    })?;
                 if arr.len() != chunk.len() {
-                    return Err(format!(
+                    return Err(WorkerFailure::of(format!(
                         "worker returned {} scores for {} specs",
                         arr.len(),
                         chunk.len()
-                    ));
+                    )));
                 }
-                arr.iter().map(Score::from_json).collect()
+                arr.iter()
+                    .map(Score::from_json)
+                    .collect::<Result<Vec<Score>, String>>()
+                    .map_err(WorkerFailure::of)
             }
-            Some("error") => Err(reply
-                .get("message")
-                .and_then(Json::as_str)
-                .unwrap_or("unspecified worker error")
-                .to_string()),
-            other => Err(format!("unexpected reply type {other:?}")),
+            Some("error") => Err(WorkerFailure::of(
+                reply
+                    .get("message")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unspecified worker error")
+                    .to_string(),
+            )),
+            other => Err(WorkerFailure::of(format!("unexpected reply type {other:?}"))),
         }
     }
 }
@@ -454,14 +554,23 @@ pub struct RemoteBackend {
     children: Mutex<Vec<SpawnedChild>>,
     next_worker: AtomicUsize,
     stats: Arc<RemoteStats>,
+    sink: Arc<dyn TelemetrySink>,
 }
 
 impl RemoteBackend {
     /// Attach to already-running workers (`--connect host:port,...`),
-    /// handshaking each against `eval`'s fingerprint.
+    /// handshaking each against `eval`'s fingerprint.  Connections carry
+    /// the default read deadline; use [`RemoteBackend::from_topology`] to
+    /// configure it.
     pub fn connect(eval: Evaluator, addrs: &[String]) -> Result<Self, String> {
         let label = suite_hint(&eval);
-        Self::build_with_children(eval, Vec::new(), addrs, &label)
+        Self::build_with_children(
+            eval,
+            Vec::new(),
+            addrs,
+            &label,
+            ms_to_timeout(DEFAULT_READ_TIMEOUT_MS),
+        )
     }
 
     /// Self-spawn `n` local worker processes bound to `workload` and
@@ -483,6 +592,7 @@ impl RemoteBackend {
                 connect: Vec::new(),
                 program: program.map(|p| p.to_path_buf()),
                 fail_after,
+                ..RemoteTopology::default()
             },
         )
     }
@@ -515,7 +625,13 @@ impl RemoteBackend {
         addrs.extend(topo.connect.iter().cloned());
         let children: Vec<SpawnedChild> =
             spawned.into_iter().map(|w| SpawnedChild { child: w.child }).collect();
-        Self::build_with_children(eval, children, &addrs, workload)
+        Self::build_with_children(
+            eval,
+            children,
+            &addrs,
+            workload,
+            ms_to_timeout(topo.read_timeout_ms),
+        )
     }
 
     fn build_with_children(
@@ -523,6 +639,7 @@ impl RemoteBackend {
         children: Vec<SpawnedChild>,
         addrs: &[String],
         workload_label: &str,
+        read_timeout: Option<Duration>,
     ) -> Result<Self, String> {
         if addrs.is_empty() {
             return Err("remote backend needs at least one worker".to_string());
@@ -530,7 +647,7 @@ impl RemoteBackend {
         let tag = EvalBackend::cache_tag(&eval);
         let mut workers = Vec::new();
         for addr in addrs {
-            match attach(addr, tag, workload_label) {
+            match attach(addr, tag, workload_label, read_timeout) {
                 Ok(conn) => workers.push(RemoteWorker {
                     addr: addr.clone(),
                     alive: AtomicBool::new(true),
@@ -551,6 +668,7 @@ impl RemoteBackend {
             children: Mutex::new(children),
             next_worker: AtomicUsize::new(0),
             stats: Arc::new(RemoteStats::default()),
+            sink: Arc::new(NullSink),
         })
     }
 
@@ -558,6 +676,18 @@ impl RemoteBackend {
     /// the backend).
     pub fn stats(&self) -> Arc<RemoteStats> {
         Arc::clone(&self.stats)
+    }
+
+    /// Attach the telemetry bus: publishes one `worker_attached` event per
+    /// worker now, and fleet fault events (`worker_died`,
+    /// `worker_timeout`, `fallback_local`) as they happen.
+    pub fn set_telemetry(&mut self, sink: Arc<dyn TelemetrySink>) {
+        if sink.enabled() {
+            for (i, w) in self.workers.iter().enumerate() {
+                sink.publish(&Event::WorkerAttached { worker: i, addr: w.addr.clone() });
+            }
+        }
+        self.sink = sink;
     }
 
     /// Workers attached at construction.
@@ -584,10 +714,25 @@ fn suite_hint(eval: &Evaluator) -> String {
     eval.suite.first().map(|c| c.name.clone()).unwrap_or_default()
 }
 
-/// Connect + handshake one worker.
-fn attach(addr: &str, tag: u64, workload_hint: &str) -> Result<TcpStream, String> {
+/// 0 means "no deadline" (matching `set_read_timeout(None)`).
+fn ms_to_timeout(ms: u64) -> Option<Duration> {
+    (ms > 0).then(|| Duration::from_millis(ms))
+}
+
+/// Connect + handshake one worker.  `read_timeout` becomes the socket
+/// read deadline for every subsequent chunk round-trip (None = block
+/// forever, the pre-deadline behavior).
+fn attach(
+    addr: &str,
+    tag: u64,
+    workload_hint: &str,
+    read_timeout: Option<Duration>,
+) -> Result<TcpStream, String> {
     let mut stream = TcpStream::connect(addr).map_err(|e| format!("connect: {e}"))?;
     stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(read_timeout)
+        .map_err(|e| format!("set_read_timeout: {e}"))?;
     write_frame(&mut stream, &hello_frame(tag, workload_hint, None))
         .map_err(|e| format!("handshake send: {e}"))?;
     let reply = read_frame(&mut stream).map_err(|e| format!("handshake recv: {e}"))?;
@@ -662,6 +807,26 @@ fn spawn_worker(
     }
 }
 
+/// One chunk round-trip with saturation accounting: wall-clock lands in
+/// the RTT histogram and the fleet busy-time counter whether the trip
+/// succeeds or fails (a timed-out trip occupied a coordinator thread for
+/// its full deadline).
+fn timed_round_trip(
+    worker: &RemoteWorker,
+    chunk: &[usize],
+    specs: &[KernelSpec],
+    stats: &RemoteStats,
+) -> Result<Vec<Score>, WorkerFailure> {
+    let start = Instant::now();
+    let result = worker.evaluate(chunk, specs);
+    let elapsed = start.elapsed();
+    stats
+        .busy_nanos
+        .fetch_add(elapsed.as_nanos() as u64, Ordering::SeqCst);
+    stats.rtt.record(elapsed);
+    result
+}
+
 /// Split `pending` (non-empty) into at most `k` contiguous non-empty
 /// chunks.
 fn chunk_indices(pending: &[usize], k: usize) -> Vec<Vec<usize>> {
@@ -701,6 +866,9 @@ impl EvalBackend for RemoteBackend {
                 self.stats
                     .fallback_specs
                     .fetch_add(pending.len() as u64, Ordering::SeqCst);
+                if self.sink.enabled() {
+                    self.sink.publish(&Event::FallbackLocal { specs: pending.len() });
+                }
                 eprintln!(
                     "warning: all {} remote eval workers are dead; evaluating {} \
                      spec(s) on the coordinator's local simulator",
@@ -724,17 +892,18 @@ impl EvalBackend for RemoteBackend {
                 // singleton fast path).
                 let chunk = chunks.into_iter().next().expect("one chunk");
                 let widx = live[offset % live.len()];
-                let result = self.workers[widx].evaluate(&chunk, specs);
+                let result = timed_round_trip(&self.workers[widx], &chunk, specs, &self.stats);
                 vec![(widx, chunk, result)]
             } else {
                 let (tx, rx) = mpsc::channel();
+                let stats = &self.stats;
                 std::thread::scope(|scope| {
                     for (c, chunk) in chunks.into_iter().enumerate() {
                         let widx = live[(c + offset) % live.len()];
                         let worker = &self.workers[widx];
                         let tx = tx.clone();
                         scope.spawn(move || {
-                            let result = worker.evaluate(&chunk, specs);
+                            let result = timed_round_trip(worker, &chunk, specs, stats);
                             let _ = tx.send((widx, chunk, result));
                         });
                     }
@@ -751,17 +920,35 @@ impl EvalBackend for RemoteBackend {
                             out[i] = Some(s);
                         }
                     }
-                    Err(e) => {
+                    Err(failure) => {
+                        let addr = &self.workers[widx].addr;
+                        if failure.timed_out {
+                            self.stats.read_timeouts.fetch_add(1, Ordering::SeqCst);
+                            if self.sink.enabled() {
+                                self.sink.publish(&Event::WorkerTimeout {
+                                    worker: widx,
+                                    addr: addr.clone(),
+                                });
+                            }
+                        }
                         // swap() so two batches observing the same death
                         // count it once.
                         if self.workers[widx].alive.swap(false, Ordering::SeqCst) {
                             self.stats.worker_deaths.fetch_add(1, Ordering::SeqCst);
                             eprintln!(
-                                "warning: remote eval worker {} failed ({e}); \
+                                "warning: remote eval worker {addr} failed ({}); \
                                  requeueing {} in-flight spec(s)",
-                                self.workers[widx].addr,
+                                failure.msg,
                                 chunk.len()
                             );
+                            if self.sink.enabled() {
+                                self.sink.publish(&Event::WorkerDied {
+                                    worker: widx,
+                                    addr: addr.clone(),
+                                    requeued: chunk.len(),
+                                    error: failure.msg.clone(),
+                                });
+                            }
                         }
                         self.stats
                             .requeued_specs
@@ -828,13 +1015,22 @@ mod tests {
         once: bool,
         fail_after: Option<u64>,
     ) -> (String, std::thread::JoinHandle<Result<(), String>>) {
+        worker_thread_with(workload, once, fail_after, None)
+    }
+
+    fn worker_thread_with(
+        workload: &str,
+        once: bool,
+        fail_after: Option<u64>,
+        stall_after: Option<u64>,
+    ) -> (String, std::thread::JoinHandle<Result<(), String>>) {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         let w = crate::workload::parse(workload).unwrap();
         let eval = Evaluator::for_workload(&*w);
         let name = workload.to_string();
         let handle = std::thread::spawn(move || {
-            serve(listener, &eval, &name, once, fail_after, 2)
+            serve(listener, &eval, &name, once, fail_after, stall_after, 2)
         });
         (addr, handle)
     }
@@ -971,6 +1167,70 @@ mod tests {
             let flat: Vec<usize> = chunks.into_iter().flatten().collect();
             assert_eq!(flat, pending, "n={n} k={k}");
         }
+    }
+
+    /// The satellite hardening: a *hung* worker (stall, not crash) trips
+    /// the coordinator's read deadline, is declared dead, and its chunk
+    /// is requeued onto the survivor — with correct scores throughout.
+    #[test]
+    fn hung_worker_times_out_and_requeues() {
+        // Worker A serves 1 eval frame then stalls ~5 s on each next one;
+        // worker B stays healthy.  (A's serve thread is left parked in its
+        // sleep — never joined — which is exactly the hang scenario.)
+        let (addr_a, _ha) = worker_thread_with("mha", true, None, Some(1));
+        let (addr_b, hb) = worker_thread("mha", true, None);
+        let eval = Evaluator::new(mha_suite());
+        let topo = RemoteTopology {
+            connect: vec![addr_a, addr_b],
+            read_timeout_ms: 250,
+            ..RemoteTopology::default()
+        };
+        let backend = RemoteBackend::from_topology(eval.clone(), "mha", &topo).unwrap();
+        let sink = Arc::new(crate::telemetry::VecSink::new());
+        {
+            // set_telemetry needs &mut; scope the borrow.
+            let mut backend = backend;
+            backend.set_telemetry(sink.clone());
+            let specs = vec![
+                KernelSpec::naive(),
+                crate::baselines::fa4_genome(),
+                crate::baselines::evolved_genome(),
+                crate::baselines::cudnn_genome(),
+            ];
+            // Batch 1: both workers within budget.  Batch 2: A stalls, the
+            // deadline fires, B absorbs the requeue.
+            let first = backend.evaluate_batch(&specs);
+            let second = backend.evaluate_batch(&specs);
+            for (batch, name) in [(&first, "first"), (&second, "second")] {
+                for (r, s) in batch.iter().zip(&specs) {
+                    assert_eq!(r.per_config, eval.evaluate(s).per_config, "{name}");
+                }
+            }
+            let stats = backend.stats();
+            assert_eq!(stats.read_timeouts.load(Ordering::SeqCst), 1);
+            assert_eq!(stats.worker_deaths.load(Ordering::SeqCst), 1);
+            assert!(stats.requeued_specs.load(Ordering::SeqCst) > 0);
+            assert!(stats.rtt.count() >= 3, "every round-trip recorded");
+            assert!(stats.busy_nanos.load(Ordering::SeqCst) > 0);
+            assert_eq!(backend.live_workers(), 1);
+            let events = sink.take();
+            assert!(events
+                .iter()
+                .any(|e| matches!(e, Event::WorkerAttached { .. })));
+            assert!(events.iter().any(|e| matches!(e, Event::WorkerTimeout { .. })));
+            assert!(events.iter().any(|e| matches!(e, Event::WorkerDied { .. })));
+        }
+        hb.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn read_timeout_config_maps_to_socket_option() {
+        assert_eq!(ms_to_timeout(0), None);
+        assert_eq!(ms_to_timeout(250), Some(Duration::from_millis(250)));
+        assert_eq!(
+            RemoteTopology::default().read_timeout_ms,
+            DEFAULT_READ_TIMEOUT_MS
+        );
     }
 
     #[test]

@@ -14,6 +14,9 @@
 //! therefore a pure function of (config, seed genome), independent of
 //! worker count, thread scheduling, and warm-start state.
 
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
 use crate::agent::{AgentAction, AgentTrace, VariationOperator};
 use crate::coordinator::config::RunConfig;
 use crate::coordinator::driver::{build_operator, RunReport};
@@ -26,6 +29,7 @@ use crate::islands::migration::Migrant;
 use crate::kernelspec::KernelSpec;
 use crate::prng::Rng;
 use crate::supervisor::Supervisor;
+use crate::telemetry::{Event, RunTelemetry, TelemetrySink};
 
 /// Per-island results, reported alongside the global aggregate.
 pub struct IslandReport {
@@ -106,22 +110,38 @@ impl Archipelago {
     /// the determinism contract) is the archive.
     pub fn run_from(&self, seed_spec: KernelSpec, seed_message: &str) -> RunReport {
         let cfg = &self.config;
-        if cfg.topology.remote.enabled() {
+        // Telemetry is purely observational: with neither a journal nor a
+        // metrics endpoint configured this is a NullSink and changes
+        // nothing on the hot path.
+        let telem = RunTelemetry::start(&cfg.telemetry, &cfg.workload)
+            .unwrap_or_else(|e| panic!("telemetry: {e}"));
+        if telem.sink().enabled() {
+            telem.sink().publish(&Event::RunStarted {
+                workload: cfg.workload.clone(),
+                seed: cfg.seed,
+                islands: cfg.topology.islands.max(1),
+            });
+        }
+        let started = Instant::now();
+        let mut report = if cfg.topology.remote.enabled() {
             // Attach/spawn failures abort here, like a rejected warm-start
             // below: the CLI pre-validates what it cheaply can (`--connect`
             // list syntax), but reachability and handshake can only be
             // probed by actually connecting — and a probe connection would
             // consume a `--once` worker's single session.
-            let remote = RemoteBackend::from_topology(
+            let mut remote = RemoteBackend::from_topology(
                 cfg.evaluator(),
                 &cfg.workload,
                 &cfg.topology.remote,
             )
             .unwrap_or_else(|e| panic!("remote topology: {e}"));
+            remote.set_telemetry(telem.sink());
             let workers = remote.worker_count() as u64;
             let stats = remote.stats();
-            let mut report = self.run_with(remote, seed_spec, seed_message);
+            telem.attach_fleet(workers as usize, Arc::clone(&stats));
+            let mut report = self.run_with(remote, &telem, seed_spec, seed_message);
             use std::sync::atomic::Ordering;
+            let wall_ms = started.elapsed().as_millis() as u64;
             report.metrics.incr("remote_workers", workers);
             report
                 .metrics
@@ -136,20 +156,48 @@ impl Archipelago {
                 .metrics
                 .incr("remote_fallback_specs", stats.fallback_specs.load(Ordering::SeqCst));
             report
+                .metrics
+                .incr("remote_read_timeouts", stats.read_timeouts.load(Ordering::SeqCst));
+            // Fleet saturation: busy = wall-clock any round-trip occupied a
+            // dispatch slot; capacity = run wall-clock x workers.  The
+            // driver summary reports idle fraction = 1 - busy/capacity.
+            report.metrics.incr(
+                "remote_busy_ms",
+                stats.busy_nanos.load(Ordering::SeqCst) / 1_000_000,
+            );
+            report
+                .metrics
+                .incr("remote_capacity_ms", (wall_ms * workers).max(1));
+            if !stats.rtt.is_empty() {
+                report.metrics.merge_histogram("remote_rtt", &stats.rtt);
+            }
+            report
         } else {
             self.run_with(
                 SimBackend::new(cfg.evaluator(), cfg.eval_workers),
+                &telem,
                 seed_spec,
                 seed_message,
             )
+        };
+        if telem.sink().enabled() {
+            telem.sink().publish(&Event::RunFinished {
+                commits: report.lineage.len().saturating_sub(1),
+                best_geomean: report.lineage.best_geomean(),
+                steps: report.steps,
+            });
         }
+        telem.finish(&mut report.metrics);
+        report
     }
 
-    /// The run loop over any ground-truth tier: wrap `inner` in the shared
-    /// cache + persistence layers, then drive the islands.
+    /// The run loop over any ground-truth tier: wrap `inner` in the
+    /// telemetry instrumentation + shared cache + persistence layers, then
+    /// drive the islands.
     fn run_with<B: EvalBackend>(
         &self,
         inner: B,
+        telem: &RunTelemetry,
         seed_spec: KernelSpec,
         seed_message: &str,
     ) -> RunReport {
@@ -158,11 +206,15 @@ impl Archipelago {
         // The scenario this run optimizes: suite, KB shard, phase
         // schedule, and the tag isolating its cache entries.
         let workload = cfg.workload();
-        // The layered evaluation stack: ground truth -> shared cache ->
-        // persistence.  Warm-starting seeds the cache from a prior run's
-        // saved evaluations; a rejected file (corrupt or fingerprint
-        // mismatch) aborts rather than silently running cold.
-        let mut cached = CachedBackend::new(inner);
+        // The layered evaluation stack: ground truth -> batch telemetry ->
+        // shared cache -> persistence.  (Instrumentation sits inside the
+        // cache so the latency histogram times real evaluations, never
+        // hits.)  Warm-starting seeds the cache from a prior run's saved
+        // evaluations; a rejected file (corrupt or fingerprint mismatch)
+        // aborts rather than silently running cold.
+        let sink = telem.sink();
+        let mut cached = CachedBackend::new(telem.instrument(inner));
+        cached.set_telemetry(Arc::clone(&sink));
         if let Some(max) = cfg.eval_cache_max_entries {
             cached.set_max_entries(max);
         }
@@ -230,15 +282,21 @@ impl Archipelago {
         // threads join and elites migrate.  N=1 runs one uninterrupted
         // epoch.
         let mut epoch = 0usize;
+        // Island-worker saturation: summed per-thread busy vs. the epoch
+        // walls x thread count (zero when epochs run serially).
+        let mut island_busy_ms = 0u64;
+        let mut island_capacity_ms = 0u64;
         while islands.iter().any(|i| !i.done(cfg)) {
-            self.run_epoch(&mut islands, &backend);
+            let (busy, capacity) = self.run_epoch(&mut islands, &backend, &sink);
+            island_busy_ms += busy;
+            island_capacity_ms += capacity;
             epoch += 1;
             if n > 1 {
                 if cfg.topology.adaptive_migration {
                     self.adapt_intervals(&mut islands, base_quota);
                 }
                 if islands.iter().any(|i| !i.done(cfg)) {
-                    self.migrate(&mut islands, epoch, &mut mig_rng);
+                    self.migrate(&mut islands, epoch, &mut mig_rng, &sink);
                 }
             }
         }
@@ -251,25 +309,42 @@ impl Archipelago {
                 eprintln!("warning: failed to persist eval cache to {}: {e}", path.display());
             }
         }
-        self.aggregate(islands, backend.cache_stats())
+        let mut report = self.aggregate(islands, backend.cache_stats());
+        if island_capacity_ms > 0 {
+            report.metrics.incr("island_busy_ms", island_busy_ms);
+            report.metrics.incr("island_capacity_ms", island_capacity_ms);
+        }
+        report
     }
 
     /// One epoch: islands advance independently (no shared mutable state
     /// beyond the cache), partitioned across worker threads.  Each island
     /// runs to its own commit quota (`Island::migrate_every`).
-    fn run_epoch(&self, islands: &mut [Island], eval: &dyn EvalBackend) {
+    ///
+    /// Returns `(busy_ms, capacity_ms)` island-worker saturation for the
+    /// epoch — summed per-thread wall-clock vs. epoch wall x thread count —
+    /// or `(0, 0)` when the epoch ran serially (one thread is never idle).
+    fn run_epoch(
+        &self,
+        islands: &mut [Island],
+        eval: &dyn EvalBackend,
+        sink: &Arc<dyn TelemetrySink>,
+    ) -> (u64, u64) {
         let cfg = &self.config;
         let workers = self.worker_count(islands.len());
         if workers <= 1 || islands.len() <= 1 {
             for isl in islands.iter_mut() {
-                run_island_epoch(isl, eval, cfg);
+                run_island_epoch(isl, eval, cfg, sink);
             }
-            return;
+            return (0, 0);
         }
         // Split islands into exactly `workers` contiguous groups (sizes
         // differing by at most one) so every requested thread is used.
         let base = islands.len() / workers;
         let extra = islands.len() % workers;
+        let epoch_start = Instant::now();
+        let busy_nanos = std::sync::atomic::AtomicU64::new(0);
+        let mut spawned = 0u64;
         std::thread::scope(|scope| {
             let mut rest = islands;
             for i in 0..workers {
@@ -279,13 +354,24 @@ impl Archipelago {
                 }
                 let (group, tail) = std::mem::take(&mut rest).split_at_mut(take);
                 rest = tail;
+                spawned += 1;
+                let busy_nanos = &busy_nanos;
                 scope.spawn(move || {
+                    let started = Instant::now();
                     for isl in group {
-                        run_island_epoch(isl, eval, cfg);
+                        run_island_epoch(isl, eval, cfg, sink);
                     }
+                    busy_nanos.fetch_add(
+                        started.elapsed().as_nanos() as u64,
+                        std::sync::atomic::Ordering::Relaxed,
+                    );
                 });
             }
         });
+        let capacity_ms = (epoch_start.elapsed().as_millis() as u64) * spawned;
+        let busy_ms =
+            busy_nanos.load(std::sync::atomic::Ordering::Relaxed) / 1_000_000;
+        (busy_ms.min(capacity_ms), capacity_ms)
     }
 
     /// Adaptive migration intervals (ROADMAP follow-up): an island whose
@@ -327,7 +413,13 @@ impl Archipelago {
     /// normal Update rule, and is always handed to the destination
     /// operator's crossover pool (so lineage consultation becomes
     /// cross-island even when the migrant doesn't immediately win).
-    fn migrate(&self, islands: &mut [Island], epoch: usize, mig_rng: &mut Rng) {
+    fn migrate(
+        &self,
+        islands: &mut [Island],
+        epoch: usize,
+        mig_rng: &mut Rng,
+        sink: &Arc<dyn TelemetrySink>,
+    ) {
         let cfg = &self.config;
         let n = islands.len();
         // Globally best island; ties break to the lowest index.
@@ -373,6 +465,7 @@ impl Archipelago {
             }
             let strictly_better =
                 migrant.score.geomean() > dst_isl.lineage.best_geomean() * (1.0 + 1e-12);
+            let mut accepted = false;
             if strictly_better {
                 let message = format!(
                     "migrant from island {src} (epoch {epoch}): {donor_message}"
@@ -388,10 +481,14 @@ impl Archipelago {
                     .is_ok()
                 {
                     dst_isl.metrics.incr("migrants_accepted", 1);
+                    accepted = true;
                 }
             }
             dst_isl.operator.receive_migrants(&[migrant]);
             dst_isl.metrics.incr("migrants_received", 1);
+            if sink.enabled() {
+                sink.publish(&Event::Migration { epoch, from: src, to: dst, accepted });
+            }
         }
     }
 
@@ -435,6 +532,9 @@ impl Archipelago {
         if stats.warm_entries > 0 {
             metrics.incr("eval_cache_warm_entries", stats.warm_entries);
         }
+        if stats.evictions > 0 {
+            metrics.incr("eval_cache_evictions", stats.evictions);
+        }
         let interventions: Vec<String> = reports
             .iter()
             .flat_map(|r| r.interventions.iter().cloned())
@@ -462,12 +562,18 @@ impl Archipelago {
 
 /// Advance one island until its epoch commit/step quota, global commit
 /// target, or step budget is reached — the body of the paper's §3.3 loop.
-fn run_island_epoch(isl: &mut Island, eval: &dyn EvalBackend, cfg: &RunConfig) {
+fn run_island_epoch(
+    isl: &mut Island,
+    eval: &dyn EvalBackend,
+    cfg: &RunConfig,
+    sink: &Arc<dyn TelemetrySink>,
+) {
     let commit_quota = isl.migrate_every;
     let step_quota = isl.migrate_every.saturating_mul(4);
     let epoch_commit_start = isl.lineage.len();
     let epoch_step_start = isl.steps;
     let Island {
+        id,
         lineage,
         operator,
         supervisor,
@@ -477,6 +583,7 @@ fn run_island_epoch(isl: &mut Island, eval: &dyn EvalBackend, cfg: &RunConfig) {
         trace,
         ..
     } = isl;
+    let island = *id;
     while lineage.len() < cfg.target_commits + 1
         && *steps < cfg.max_steps
         && lineage.len() - epoch_commit_start < commit_quota
@@ -485,12 +592,28 @@ fn run_island_epoch(isl: &mut Island, eval: &dyn EvalBackend, cfg: &RunConfig) {
         *steps += 1;
         let step = *steps;
         let outcome = metrics.time("variation_step", || operator.step(lineage, eval, step));
+        // Per-stage saturation: one histogram sample per stage per step
+        // (this step's cumulative wall-clock in that stage).
+        for (name, stat) in &outcome.trace.stages {
+            metrics.record_duration(
+                &format!("stage_{name}"),
+                Duration::from_nanos(stat.nanos),
+            );
+        }
         trace.merge(&outcome.trace);
         metrics.incr("evaluations", outcome.evaluations as u64);
         metrics.incr("eval_batches", outcome.trace.eval_batches);
         metrics.incr("directions_explored", outcome.directions.len() as u64);
-        if outcome.committed.is_some() {
+        if let Some(commit) = outcome.committed {
             metrics.incr("commits", 1);
+            if sink.enabled() {
+                sink.publish(&Event::StepCommitted {
+                    island,
+                    step,
+                    commit: commit.0,
+                    geomean: lineage.best_geomean(),
+                });
+            }
         }
         metrics.incr(
             "repairs",
@@ -503,6 +626,12 @@ fn run_island_epoch(isl: &mut Island, eval: &dyn EvalBackend, cfg: &RunConfig) {
         if let Some(directive) = supervisor.observe(&outcome, lineage) {
             metrics.incr("interventions", 1);
             interventions.push(directive.note.clone());
+            if sink.enabled() {
+                sink.publish(&Event::Intervention {
+                    island,
+                    note: directive.note.clone(),
+                });
+            }
             operator.apply_directive(&directive);
         }
     }

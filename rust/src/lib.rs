@@ -52,6 +52,18 @@
 //!   runs; files are fingerprinted per workload and interchangeable
 //!   between in-process and remote runs).  The determinism contract for
 //!   cached, warm-started, and remote scores lives here.
+//! * **Observability** ([`telemetry`]) — the window into a running
+//!   search: a structured event bus ([`telemetry::TelemetrySink`]) that
+//!   islands, eval layers, the remote fleet, and the supervisor publish
+//!   typed events to; a crash-safe JSONL flight-recorder journal
+//!   (`--journal`, byte-reproducible with `--trace-deterministic`); a
+//!   live metrics endpoint (`--metrics-addr` + the `avo monitor`
+//!   subcommand, over the remote tier's length-prefixed JSON framing);
+//!   and fixed-bucket latency histograms (eval-batch wall clock, remote
+//!   round-trip, per-stage) plus fleet idle-fraction saturation metrics,
+//!   folded into `Metrics::to_json()` and `RunReport::summary()`.
+//!   Telemetry is strictly observational: archives are byte-identical
+//!   with it on or off (pinned by `rust/tests/telemetry.rs`).
 //! * **Layer 2/1 (build-time Python)** — a parameterized Pallas
 //!   flash-attention kernel realizing the genome's algorithmic space,
 //!   AOT-lowered to HLO text artifacts the `runtime` module (behind the
@@ -86,6 +98,7 @@ pub mod score;
 pub mod sim;
 pub mod store;
 pub mod supervisor;
+pub mod telemetry;
 pub mod workload;
 
 pub use eval::EvalBackend;

@@ -7,6 +7,8 @@
 //!   eval-worker  host a remote evaluation worker: serve evaluate_batch
 //!                requests over TCP for a coordinator running with
 //!                --remote-workers / --connect (see avo::eval::remote)
+//!   monitor      attach to a running evolve's live metrics endpoint
+//!                (--metrics-addr) and stream one-line status snapshots
 //!   transfer     adapt an evolved lineage to another workload (§4.3
 //!                generalized: gqa:<kv>, decode:<batch>, mha)
 //!   compare      AVO vs single-turn vs fixed-pipeline at equal budget
@@ -23,6 +25,8 @@
 //!   avo evolve --remote-workers 4                      # spawn local workers
 //!   avo eval-worker --workload mha --listen 0.0.0.0:7654   # on each machine
 //!   avo evolve --connect hostA:7654,hostB:7654         # attach to them
+//!   avo evolve --journal runs/mha/journal.jsonl --metrics-addr 127.0.0.1:7655
+//!   avo monitor 127.0.0.1:7655                         # watch it live
 //!   avo evolve --config runs/mha.cfg
 //!   avo transfer --lineage runs/mha/lineage.json --workload gqa:4
 //!   avo transfer --lineage runs/mha/lineage.json --workload decode:32
@@ -42,7 +46,7 @@ type CliError = Box<dyn std::error::Error>;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: avo <evolve|eval-worker|transfer|compare|show|profile> [flags]\n\
+        "usage: avo <evolve|eval-worker|monitor|transfer|compare|show|profile> [flags]\n\
          \n\
          evolve   --workload {} (default mha)\n\
          \u{20}         --seed N --commits N --steps N --operator avo|single_turn|pes\n\
@@ -56,10 +60,16 @@ fn usage() -> ! {
          \u{20}         --eval-cache-max-entries N  --speculative-repair\n\
          \u{20}         --lookahead K  (batch K candidate edits per direction)\n\
          \u{20}         --trace-out FILE  (agent stage/batching trace as JSON)\n\
-         \u{20}         --trace-deterministic  (omit wall-clock timings from it)\n\
+         \u{20}         --trace-deterministic  (omit wall-clock timings from\n\
+         \u{20}          the trace, journal, and any other volatile fields)\n\
+         \u{20}         --journal FILE  (JSONL event journal, crash-safe)\n\
+         \u{20}         --metrics-addr HOST:PORT  (live metrics endpoint;\n\
+         \u{20}          port 0 picks a free port, announced on stdout)\n\
+         \u{20}         --metrics-linger-ms N --remote-read-timeout-ms N\n\
          \u{20}         --config FILE --out DIR\n\
          eval-worker --workload SPEC --listen ADDR (default 127.0.0.1:0)\n\
-         \u{20}         --once --eval-workers N --fail-after N\n\
+         \u{20}         --once --eval-workers N --fail-after N --stall-after N\n\
+         monitor  ADDR [--once] [--json] [--interval-ms N] [--retry-ms N]\n\
          transfer --lineage FILE --workload SPEC (or --kv-heads 4|8)\n\
          \u{20}         --seed N --out DIR\n\
          compare  --budget N --seed N\n\
@@ -174,6 +184,18 @@ fn main() -> Result<(), CliError> {
             if let Some(k) = flags.parse_strict("--adaptive-stall-epochs")? {
                 cfg.topology.adaptive_stall_epochs = k;
             }
+            if let Some(path) = flags.get("--journal") {
+                cfg.telemetry.journal = Some(PathBuf::from(path));
+            }
+            if let Some(addr) = flags.get("--metrics-addr") {
+                cfg.telemetry.metrics_addr = Some(addr.to_string());
+            }
+            if let Some(ms) = flags.parse_strict("--metrics-linger-ms")? {
+                cfg.telemetry.linger_ms = ms;
+            }
+            if let Some(ms) = flags.parse_strict("--remote-read-timeout-ms")? {
+                cfg.topology.remote.read_timeout_ms = ms;
+            }
             let out_dir = flags.get("--out").map(PathBuf::from);
             if let Some(dir) = &out_dir {
                 std::fs::create_dir_all(dir)?;
@@ -190,6 +212,11 @@ fn main() -> Result<(), CliError> {
             }
             let trace_out = flags.get("--trace-out").map(PathBuf::from);
             let trace_deterministic = flags.has("--trace-deterministic");
+            // One flag governs every volatile field: the agent trace AND
+            // the telemetry journal drop wall-clock under it, so same-seed
+            // runs produce byte-identical artifacts across the board.
+            cfg.telemetry.deterministic = trace_deterministic;
+            let journal_path = cfg.telemetry.journal.clone();
             let suite = cfg.evaluator().suite;
             let report = EvolutionDriver::new(cfg).run();
             println!("{}", report.summary());
@@ -229,6 +256,9 @@ fn main() -> Result<(), CliError> {
             }
             for note in &report.interventions {
                 println!("  supervisor: {note}");
+            }
+            if let Some(path) = &journal_path {
+                println!("  journal: {}", path.display());
             }
             println!("{}", report.metrics.report());
             if let Some(dir) = &out_dir {
@@ -274,10 +304,33 @@ fn main() -> Result<(), CliError> {
             }
             opts.once = flags.has("--once");
             opts.fail_after = flags.parse_strict("--fail-after")?;
+            opts.stall_after = flags.parse_strict("--stall-after")?;
             if let Some(n) = flags.parse_strict("--eval-workers")? {
                 opts.eval_workers = n;
             }
             avo::eval::remote::run_worker(&opts)?;
+        }
+        "monitor" => {
+            // First positional argument is the endpoint address (what the
+            // run printed as AVO_METRICS_LISTENING <addr>).
+            let addr = flags
+                .0
+                .first()
+                .filter(|a| !a.starts_with("--"))
+                .cloned()
+                .unwrap_or_else(|| usage());
+            let mut opts = avo::telemetry::MonitorOptions {
+                once: flags.has("--once"),
+                json: flags.has("--json"),
+                ..avo::telemetry::MonitorOptions::default()
+            };
+            if let Some(ms) = flags.parse_strict("--interval-ms")? {
+                opts.interval_ms = ms;
+            }
+            if let Some(ms) = flags.parse_strict("--retry-ms")? {
+                opts.retry_ms = ms;
+            }
+            avo::telemetry::run_monitor(&addr, &opts)?;
         }
         "transfer" => {
             let lineage_path = flags.get("--lineage").unwrap_or_else(|| usage());

@@ -1,0 +1,259 @@
+//! Fixed-bucket latency histograms for saturation profiling.
+//!
+//! A [`Histogram`] records durations into power-of-two microsecond buckets:
+//! bucket `i` counts samples with `upper(i-1) <= micros < upper(i)` where
+//! `upper(i) = 1 << i` µs (and the last bucket absorbs everything from
+//! `2^25` µs ≈ 33.6 s upward).  The edges are part of the serialized schema
+//! and are pinned by a golden test — changing them invalidates stored
+//! journals and dashboards, so don't.
+//!
+//! All state is atomic: backends record from worker threads through a
+//! shared reference while the coordinator snapshots concurrently (the
+//! live metrics endpoint reads histograms mid-run).  Quantiles are
+//! resolved to the *upper edge* of the bucket containing the requested
+//! rank — a deliberate over-estimate, which is the safe direction for
+//! latency reporting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::json::Json;
+
+/// Number of buckets, including the terminal overflow bucket.
+pub const BUCKET_COUNT: usize = 27;
+
+/// Upper edge (exclusive) of bucket `i`, in microseconds.  The last
+/// bucket's edge is `u64::MAX` (overflow).
+pub fn bucket_upper_micros(i: usize) -> u64 {
+    assert!(i < BUCKET_COUNT, "bucket index {i} out of range");
+    if i == BUCKET_COUNT - 1 {
+        u64::MAX
+    } else {
+        1u64 << i
+    }
+}
+
+/// Index of the bucket a sample of `micros` microseconds falls into.
+pub fn bucket_for(micros: u64) -> usize {
+    if micros == 0 {
+        return 0;
+    }
+    let bits = 64 - micros.leading_zeros() as usize;
+    bits.min(BUCKET_COUNT - 1)
+}
+
+/// A concurrent fixed-bucket latency histogram (see module docs).
+#[derive(Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKET_COUNT],
+    count: AtomicU64,
+    sum_nanos: AtomicU64,
+    max_micros: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample.
+    pub fn record(&self, d: Duration) {
+        self.record_parts(d.as_micros() as u64, d.as_nanos() as u64);
+    }
+
+    /// Record one sample given directly in microseconds.
+    pub fn record_micros(&self, micros: u64) {
+        self.record_parts(micros, micros.saturating_mul(1_000));
+    }
+
+    fn record_parts(&self, micros: u64, nanos: u64) {
+        self.buckets[bucket_for(micros)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+        self.max_micros.fetch_max(micros, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Total recorded time in milliseconds.
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Largest recorded sample in microseconds.
+    pub fn max_micros(&self) -> u64 {
+        self.max_micros.load(Ordering::Relaxed)
+    }
+
+    /// Mean sample in microseconds (0 when empty).
+    pub fn mean_micros(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e3 / n as f64
+    }
+
+    /// Upper bound (in microseconds) of the bucket containing the
+    /// `q`-quantile sample (`0.0 ..= 1.0`).  For samples in the overflow
+    /// bucket this returns the observed maximum instead of `u64::MAX`.
+    pub fn quantile_micros(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for i in 0..BUCKET_COUNT {
+            seen += self.buckets[i].load(Ordering::Relaxed);
+            if seen >= rank {
+                return if i == BUCKET_COUNT - 1 {
+                    self.max_micros()
+                } else {
+                    bucket_upper_micros(i)
+                };
+            }
+        }
+        self.max_micros()
+    }
+
+    /// Fold another histogram into this one (used when per-island metrics
+    /// aggregate into the run report).
+    pub fn merge_from(&self, other: &Histogram) {
+        for i in 0..BUCKET_COUNT {
+            let v = other.buckets[i].load(Ordering::Relaxed);
+            if v > 0 {
+                self.buckets[i].fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_nanos
+            .fetch_add(other.sum_nanos.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_micros
+            .fetch_max(other.max_micros.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Serialized form: summary stats plus the raw bucket counts (whose
+    /// edges are fixed — see [`bucket_upper_micros`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("count", Json::Num(self.count() as f64)),
+            ("sum_ms", Json::Num(self.sum_ms())),
+            ("p50_us", Json::Num(self.quantile_micros(0.5) as f64)),
+            ("p95_us", Json::Num(self.quantile_micros(0.95) as f64)),
+            ("max_us", Json::Num(self.max_micros() as f64)),
+            (
+                "buckets",
+                Json::arr(
+                    self.buckets
+                        .iter()
+                        .map(|b| Json::Num(b.load(Ordering::Relaxed) as f64)),
+                ),
+            ),
+        ])
+    }
+}
+
+impl Clone for Histogram {
+    fn clone(&self) -> Self {
+        let out = Histogram::new();
+        out.merge_from(self);
+        out
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count())
+            .field("p50_us", &self.quantile_micros(0.5))
+            .field("p95_us", &self.quantile_micros(0.95))
+            .field("max_us", &self.max_micros())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden: the bucket edges are a wire format — pin them.
+    #[test]
+    fn bucket_edges_are_pinned() {
+        assert_eq!(BUCKET_COUNT, 27);
+        assert_eq!(bucket_upper_micros(0), 1);
+        assert_eq!(bucket_upper_micros(1), 2);
+        assert_eq!(bucket_upper_micros(5), 32);
+        assert_eq!(bucket_upper_micros(10), 1 << 10);
+        assert_eq!(bucket_upper_micros(20), 1 << 20);
+        assert_eq!(bucket_upper_micros(25), 1 << 25);
+        assert_eq!(bucket_upper_micros(26), u64::MAX);
+    }
+
+    #[test]
+    fn bucket_placement() {
+        assert_eq!(bucket_for(0), 0);
+        assert_eq!(bucket_for(1), 1);
+        assert_eq!(bucket_for(2), 2);
+        assert_eq!(bucket_for(3), 2);
+        assert_eq!(bucket_for(4), 3);
+        assert_eq!(bucket_for(1023), 10);
+        assert_eq!(bucket_for(1024), 11);
+        assert_eq!(bucket_for((1 << 25) - 1), 25);
+        assert_eq!(bucket_for(1 << 25), 26);
+        assert_eq!(bucket_for(u64::MAX), 26);
+    }
+
+    #[test]
+    fn records_and_quantiles() {
+        let h = Histogram::new();
+        for _ in 0..90 {
+            h.record_micros(10); // bucket 4, upper edge 16
+        }
+        for _ in 0..10 {
+            h.record_micros(5_000); // bucket 13, upper edge 8192
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.quantile_micros(0.5), 16);
+        assert_eq!(h.quantile_micros(0.95), 8192);
+        assert_eq!(h.max_micros(), 5_000);
+        assert!((h.sum_ms() - (90.0 * 0.01 + 10.0 * 5.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn overflow_quantile_reports_observed_max() {
+        let h = Histogram::new();
+        h.record_micros((1 << 25) + 123);
+        assert_eq!(h.quantile_micros(0.99), (1 << 25) + 123);
+    }
+
+    #[test]
+    fn merge_folds_counts() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record_micros(10);
+        b.record_micros(10);
+        b.record_micros(40_000_000);
+        a.merge_from(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.max_micros(), 40_000_000);
+        let j = a.to_json();
+        assert_eq!(j.get("count").unwrap().as_u64(), Some(3));
+        assert_eq!(j.get("buckets").unwrap().as_arr().unwrap().len(), BUCKET_COUNT);
+    }
+
+    #[test]
+    fn empty_histogram_is_benign() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_micros(0.5), 0);
+        assert_eq!(h.mean_micros(), 0.0);
+        assert!(h.is_empty());
+    }
+}

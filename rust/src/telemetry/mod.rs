@@ -1,0 +1,620 @@
+//! Observability for long autonomous runs: a structured event bus, a
+//! crash-safe JSONL flight-recorder journal (`--journal <path>`), a live
+//! metrics endpoint (`--metrics-addr host:port` + `avo monitor`), and
+//! fixed-bucket latency [`Histogram`]s for saturation profiling.
+//!
+//! The paper's headline run is seven days of unattended search; this
+//! module is the window into one while it is still running.  Everything is
+//! std + the in-tree [`crate::json`] encoder — no dependencies — and
+//! everything is *observational*: telemetry may never perturb the
+//! determinism contract.  Archives from a run with a journal and a metrics
+//! server attached are byte-identical to the same run with telemetry
+//! disabled (pinned by `rust/tests/telemetry.rs`).
+//!
+//! # Event schema
+//!
+//! Every event serializes as one JSON object with an `"event"` tag plus
+//! the fields below.  In deterministic mode (`--trace-deterministic`) the
+//! *volatile* fields — wall-clock durations, socket addresses, transport
+//! error strings — are omitted so same-seed journals are byte-identical.
+//!
+//! | `event`            | fields                                   | volatile fields | source |
+//! |--------------------|------------------------------------------|-----------------|--------|
+//! | `run_started`      | `workload`, `seed`, `islands`            | —               | archipelago |
+//! | `step_committed`   | `island`, `step`, `commit`, `geomean`    | —               | island loop |
+//! | `batch_dispatched` | `width`                                  | —               | instrumented eval |
+//! | `batch_completed`  | `width`, `micros`                        | `micros`        | instrumented eval |
+//! | `cache_hit`        | `key`                                    | —               | eval cache |
+//! | `cache_miss`       | `key`                                    | —               | eval cache |
+//! | `cache_evict`      | `key`                                    | —               | eval cache |
+//! | `worker_attached`  | `worker`, `addr`                         | `addr`          | remote backend |
+//! | `worker_timeout`   | `worker`, `addr`                         | `addr`          | remote backend |
+//! | `worker_died`      | `worker`, `addr`, `requeued`, `error`    | `addr`, `error` | remote backend |
+//! | `fallback_local`   | `specs`                                  | —               | remote backend |
+//! | `migration`        | `epoch`, `from`, `to`, `accepted`        | —               | archipelago |
+//! | `intervention`     | `island`, `note`                         | —               | supervisor site |
+//! | `run_finished`     | `commits`, `best_geomean`, `steps`       | —               | archipelago |
+//!
+//! Cache keys and commit ids print as 16-digit lowercase hex strings (they
+//! are content hashes; JSON numbers would lose precision past 2^53).
+//!
+//! # Determinism of journal *order*
+//!
+//! Event payloads are deterministic in deterministic mode; event *order*
+//! additionally requires serial island execution (`--island-workers 1`),
+//! since concurrent islands interleave their publishes nondeterministically.
+//! The journal-diff tests and CI smoke both pin that configuration.
+
+pub mod histogram;
+pub mod monitor;
+pub mod server;
+
+pub use histogram::Histogram;
+pub use monitor::{run_monitor, MonitorOptions};
+pub use server::{MetricsHub, MetricsServer, METRICS_LINE_PREFIX};
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+use crate::eval::remote::RemoteStats;
+use crate::eval::{CacheStats, EvalBackend};
+use crate::json::Json;
+use crate::kernelspec::KernelSpec;
+use crate::score::{BenchConfig, Score};
+use crate::sim::pipeline::CycleReport;
+
+/// A typed telemetry event (see the module-level schema table).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    RunStarted { workload: String, seed: u64, islands: usize },
+    StepCommitted { island: usize, step: usize, commit: u64, geomean: f64 },
+    BatchDispatched { width: usize },
+    BatchCompleted { width: usize, micros: u64 },
+    CacheHit { key: u64 },
+    CacheMiss { key: u64 },
+    CacheEvict { key: u64 },
+    WorkerAttached { worker: usize, addr: String },
+    WorkerTimeout { worker: usize, addr: String },
+    WorkerDied { worker: usize, addr: String, requeued: usize, error: String },
+    FallbackLocal { specs: usize },
+    Migration { epoch: usize, from: usize, to: usize, accepted: bool },
+    Intervention { island: usize, note: String },
+    RunFinished { commits: usize, best_geomean: f64, steps: usize },
+}
+
+fn hex(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+fn num(v: impl Into<f64>) -> Json {
+    Json::Num(v.into())
+}
+
+impl Event {
+    /// The `"event"` tag value.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Event::RunStarted { .. } => "run_started",
+            Event::StepCommitted { .. } => "step_committed",
+            Event::BatchDispatched { .. } => "batch_dispatched",
+            Event::BatchCompleted { .. } => "batch_completed",
+            Event::CacheHit { .. } => "cache_hit",
+            Event::CacheMiss { .. } => "cache_miss",
+            Event::CacheEvict { .. } => "cache_evict",
+            Event::WorkerAttached { .. } => "worker_attached",
+            Event::WorkerTimeout { .. } => "worker_timeout",
+            Event::WorkerDied { .. } => "worker_died",
+            Event::FallbackLocal { .. } => "fallback_local",
+            Event::Migration { .. } => "migration",
+            Event::Intervention { .. } => "intervention",
+            Event::RunFinished { .. } => "run_finished",
+        }
+    }
+
+    /// Serialize.  With `deterministic` the volatile fields (wall-clock
+    /// durations, socket addresses, transport error strings) are omitted.
+    pub fn to_json(&self, deterministic: bool) -> Json {
+        let mut fields: Vec<(&'static str, Json)> =
+            vec![("event", Json::Str(self.name().to_string()))];
+        match self {
+            Event::RunStarted { workload, seed, islands } => {
+                fields.push(("workload", Json::Str(workload.clone())));
+                fields.push(("seed", num(*seed as f64)));
+                fields.push(("islands", num(*islands as f64)));
+            }
+            Event::StepCommitted { island, step, commit, geomean } => {
+                fields.push(("island", num(*island as f64)));
+                fields.push(("step", num(*step as f64)));
+                fields.push(("commit", hex(*commit)));
+                fields.push(("geomean", num(*geomean)));
+            }
+            Event::BatchDispatched { width } => {
+                fields.push(("width", num(*width as f64)));
+            }
+            Event::BatchCompleted { width, micros } => {
+                fields.push(("width", num(*width as f64)));
+                if !deterministic {
+                    fields.push(("micros", num(*micros as f64)));
+                }
+            }
+            Event::CacheHit { key } | Event::CacheMiss { key } | Event::CacheEvict { key } => {
+                fields.push(("key", hex(*key)));
+            }
+            Event::WorkerAttached { worker, addr }
+            | Event::WorkerTimeout { worker, addr } => {
+                fields.push(("worker", num(*worker as f64)));
+                if !deterministic {
+                    fields.push(("addr", Json::Str(addr.clone())));
+                }
+            }
+            Event::WorkerDied { worker, addr, requeued, error } => {
+                fields.push(("worker", num(*worker as f64)));
+                fields.push(("requeued", num(*requeued as f64)));
+                if !deterministic {
+                    fields.push(("addr", Json::Str(addr.clone())));
+                    fields.push(("error", Json::Str(error.clone())));
+                }
+            }
+            Event::FallbackLocal { specs } => {
+                fields.push(("specs", num(*specs as f64)));
+            }
+            Event::Migration { epoch, from, to, accepted } => {
+                fields.push(("epoch", num(*epoch as f64)));
+                fields.push(("from", num(*from as f64)));
+                fields.push(("to", num(*to as f64)));
+                fields.push(("accepted", Json::Bool(*accepted)));
+            }
+            Event::Intervention { island, note } => {
+                fields.push(("island", num(*island as f64)));
+                fields.push(("note", Json::Str(note.clone())));
+            }
+            Event::RunFinished { commits, best_geomean, steps } => {
+                fields.push(("commits", num(*commits as f64)));
+                fields.push(("best_geomean", num(*best_geomean)));
+                fields.push(("steps", num(*steps as f64)));
+            }
+        }
+        Json::obj(fields)
+    }
+}
+
+/// The event bus: publishers hold an `Arc<dyn TelemetrySink>` and call
+/// [`TelemetrySink::publish`].  Check [`TelemetrySink::enabled`] before
+/// building expensive events (the hot path pays one virtual call + one
+/// bool when telemetry is off).
+pub trait TelemetrySink: Send + Sync {
+    fn publish(&self, event: &Event);
+
+    /// Whether publishing has any effect.  `false` lets hot paths skip
+    /// event construction entirely.
+    fn enabled(&self) -> bool {
+        true
+    }
+}
+
+/// The disabled bus: publishing is a no-op and `enabled()` is false.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullSink;
+
+impl TelemetrySink for NullSink {
+    fn publish(&self, _event: &Event) {}
+
+    fn enabled(&self) -> bool {
+        false
+    }
+}
+
+/// Crash-safe JSONL flight recorder: one compact JSON object per line,
+/// appended and flushed per event, so a killed run leaves a valid journal
+/// up to the last event.  Write errors are swallowed after the file opens
+/// — the flight recorder must never take down the run it is recording.
+pub struct JournalSink {
+    file: Mutex<std::fs::File>,
+    deterministic: bool,
+}
+
+impl JournalSink {
+    /// Create (truncate) the journal at `path`, creating parent
+    /// directories as needed.
+    pub fn create(path: &Path, deterministic: bool) -> Result<Self, String> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| format!("journal dir {}: {e}", parent.display()))?;
+            }
+        }
+        let file = std::fs::File::create(path)
+            .map_err(|e| format!("journal {}: {e}", path.display()))?;
+        Ok(JournalSink { file: Mutex::new(file), deterministic })
+    }
+}
+
+impl TelemetrySink for JournalSink {
+    fn publish(&self, event: &Event) {
+        let mut json = event.to_json(self.deterministic);
+        if !self.deterministic {
+            if let Json::Obj(m) = &mut json {
+                let ts = std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .map(|d| d.as_millis() as f64)
+                    .unwrap_or(0.0);
+                m.insert("ts_ms".to_string(), Json::Num(ts));
+            }
+        }
+        let line = json.compact();
+        if let Ok(mut f) = self.file.lock() {
+            let _ = writeln!(f, "{line}");
+            let _ = f.flush();
+        }
+    }
+}
+
+/// Fan-out to several sinks (journal + live metrics hub).
+pub struct BroadcastSink {
+    sinks: Vec<Arc<dyn TelemetrySink>>,
+}
+
+impl BroadcastSink {
+    pub fn new(sinks: Vec<Arc<dyn TelemetrySink>>) -> Self {
+        BroadcastSink { sinks }
+    }
+}
+
+impl TelemetrySink for BroadcastSink {
+    fn publish(&self, event: &Event) {
+        for s in &self.sinks {
+            s.publish(event);
+        }
+    }
+
+    fn enabled(&self) -> bool {
+        self.sinks.iter().any(|s| s.enabled())
+    }
+}
+
+/// Shared cell the metrics server writes its bound address into — the way
+/// tests (and anything that passed port 0) learn the real endpoint.
+#[derive(Debug, Clone, Default)]
+pub struct AddrCell(Arc<Mutex<Option<String>>>);
+
+impl AddrCell {
+    pub fn set(&self, addr: String) {
+        if let Ok(mut slot) = self.0.lock() {
+            *slot = Some(addr);
+        }
+    }
+
+    pub fn get(&self) -> Option<String> {
+        self.0.lock().ok().and_then(|slot| slot.clone())
+    }
+}
+
+/// Telemetry configuration carried on `RunConfig` (config-file keys
+/// `journal`, `metrics_addr`, `metrics_linger_ms`; CLI `--journal`,
+/// `--metrics-addr`, `--metrics-linger-ms`).
+#[derive(Debug, Clone)]
+pub struct TelemetryConfig {
+    /// JSONL journal path (None = no journal).
+    pub journal: Option<PathBuf>,
+    /// Omit volatile fields so same-seed journals are byte-identical
+    /// (set alongside `--trace-deterministic`).
+    pub deterministic: bool,
+    /// Live metrics endpoint bind address (None = no server; port 0 picks
+    /// a free port, announced as `AVO_METRICS_LISTENING <addr>` on stdout).
+    pub metrics_addr: Option<String>,
+    /// After the run ends, keep serving snapshots until a `done` snapshot
+    /// has been delivered or this many ms elapse.
+    pub linger_ms: u64,
+    /// Out-parameter: the address the server actually bound.
+    pub bound_addr: AddrCell,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig {
+            journal: None,
+            deterministic: false,
+            metrics_addr: None,
+            linger_ms: 10_000,
+            bound_addr: AddrCell::default(),
+        }
+    }
+}
+
+impl TelemetryConfig {
+    pub fn enabled(&self) -> bool {
+        self.journal.is_some() || self.metrics_addr.is_some()
+    }
+}
+
+/// Everything one run's telemetry owns: the composed sink, the optional
+/// live-metrics hub + server, and the eval-batch latency histogram.
+/// Constructed by the archipelago at run start, torn down by
+/// [`RunTelemetry::finish`].
+pub struct RunTelemetry {
+    sink: Arc<dyn TelemetrySink>,
+    hub: Option<Arc<MetricsHub>>,
+    server: Option<MetricsServer>,
+    eval_batch_hist: Arc<Histogram>,
+    linger: Duration,
+}
+
+impl RunTelemetry {
+    /// Open the journal and/or bind the metrics server per `cfg`.  With
+    /// neither configured this is free: a [`NullSink`] and no server.
+    pub fn start(cfg: &TelemetryConfig, workload: &str) -> Result<Self, String> {
+        let eval_batch_hist = Arc::new(Histogram::new());
+        let mut sinks: Vec<Arc<dyn TelemetrySink>> = Vec::new();
+        if let Some(path) = &cfg.journal {
+            sinks.push(Arc::new(JournalSink::create(path, cfg.deterministic)?));
+        }
+        let mut hub = None;
+        let mut server = None;
+        if let Some(addr) = &cfg.metrics_addr {
+            let h = Arc::new(MetricsHub::new(workload, Arc::clone(&eval_batch_hist)));
+            let srv = MetricsServer::bind(addr, Arc::clone(&h))?;
+            let bound = srv.local_addr().to_string();
+            println!("{METRICS_LINE_PREFIX}{bound}");
+            cfg.bound_addr.set(bound);
+            sinks.push(Arc::clone(&h) as Arc<dyn TelemetrySink>);
+            hub = Some(h);
+            server = Some(srv);
+        }
+        let sink: Arc<dyn TelemetrySink> = match sinks.len() {
+            0 => Arc::new(NullSink),
+            1 => sinks.pop().expect("len checked"),
+            _ => Arc::new(BroadcastSink::new(sinks)),
+        };
+        Ok(RunTelemetry {
+            sink,
+            hub,
+            server,
+            eval_batch_hist,
+            linger: Duration::from_millis(cfg.linger_ms),
+        })
+    }
+
+    /// The shared event bus handle publishers hold.
+    pub fn sink(&self) -> Arc<dyn TelemetrySink> {
+        Arc::clone(&self.sink)
+    }
+
+    /// Wrap the ground-truth backend tier with batch instrumentation.
+    pub fn instrument<B: EvalBackend>(&self, inner: B) -> InstrumentedBackend<B> {
+        InstrumentedBackend {
+            inner,
+            sink: Arc::clone(&self.sink),
+            hist: Arc::clone(&self.eval_batch_hist),
+        }
+    }
+
+    /// Tell the live hub about the remote fleet so snapshots can report
+    /// worker health and idle fraction.
+    pub fn attach_fleet(&self, workers: usize, stats: Arc<RemoteStats>) {
+        if let Some(hub) = &self.hub {
+            hub.attach_fleet(workers, stats);
+        }
+    }
+
+    /// Fold the eval-batch histogram into the run metrics and shut the
+    /// server down (lingering so a monitor can collect the final, `done`
+    /// snapshot).  The caller publishes [`Event::RunFinished`] first —
+    /// that is what flips the hub's `done` flag.
+    pub fn finish(self, metrics: &mut Metrics) {
+        if !self.eval_batch_hist.is_empty() {
+            metrics.merge_histogram("eval_batch", &self.eval_batch_hist);
+        }
+        if let Some(server) = self.server {
+            server.shutdown(self.linger);
+        }
+    }
+}
+
+/// Batch-level instrumentation around the ground-truth backend tier
+/// (inside the cache, so hits are not timed and every sample is a real
+/// evaluation): publishes `batch_dispatched` / `batch_completed` and
+/// records `evaluate_batch` wall-clock into the shared [`Histogram`].
+pub struct InstrumentedBackend<B: EvalBackend> {
+    inner: B,
+    sink: Arc<dyn TelemetrySink>,
+    hist: Arc<Histogram>,
+}
+
+impl<B: EvalBackend> EvalBackend for InstrumentedBackend<B> {
+    fn evaluate_batch(&self, specs: &[KernelSpec]) -> Vec<Score> {
+        if specs.is_empty() {
+            return Vec::new();
+        }
+        if self.sink.enabled() {
+            self.sink.publish(&Event::BatchDispatched { width: specs.len() });
+        }
+        let start = Instant::now();
+        let out = self.inner.evaluate_batch(specs);
+        let elapsed = start.elapsed();
+        self.hist.record(elapsed);
+        if self.sink.enabled() {
+            self.sink.publish(&Event::BatchCompleted {
+                width: specs.len(),
+                micros: elapsed.as_micros() as u64,
+            });
+        }
+        out
+    }
+
+    fn suite(&self) -> &[BenchConfig] {
+        self.inner.suite()
+    }
+
+    fn report(&self, spec: &KernelSpec, cfg: &BenchConfig) -> CycleReport {
+        self.inner.report(spec, cfg)
+    }
+
+    fn cache_tag(&self) -> u64 {
+        self.inner.cache_tag()
+    }
+
+    fn is_deterministic(&self) -> bool {
+        self.inner.is_deterministic()
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.inner.cache_stats()
+    }
+}
+
+/// Test sink: collects events in memory (order-preserving).
+#[derive(Default)]
+pub struct VecSink {
+    pub events: Mutex<Vec<Event>>,
+    count: AtomicU64,
+}
+
+impl VecSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.count.load(Ordering::SeqCst) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn take(&self) -> Vec<Event> {
+        self.events.lock().map(|mut v| std::mem::take(&mut *v)).unwrap_or_default()
+    }
+}
+
+impl TelemetrySink for VecSink {
+    fn publish(&self, event: &Event) {
+        self.count.fetch_add(1, Ordering::SeqCst);
+        if let Ok(mut v) = self.events.lock() {
+            v.push(event.clone());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::RunStarted { workload: "mha".into(), seed: 7, islands: 3 },
+            Event::StepCommitted { island: 1, step: 4, commit: 0xDEAD_BEEF, geomean: 512.25 },
+            Event::BatchDispatched { width: 6 },
+            Event::BatchCompleted { width: 6, micros: 1234 },
+            Event::CacheHit { key: 42 },
+            Event::CacheMiss { key: 43 },
+            Event::CacheEvict { key: 44 },
+            Event::WorkerAttached { worker: 0, addr: "127.0.0.1:9".into() },
+            Event::WorkerTimeout { worker: 1, addr: "127.0.0.1:9".into() },
+            Event::WorkerDied {
+                worker: 1,
+                addr: "127.0.0.1:9".into(),
+                requeued: 3,
+                error: "recv: timed out".into(),
+            },
+            Event::FallbackLocal { specs: 5 },
+            Event::Migration { epoch: 2, from: 0, to: 1, accepted: true },
+            Event::Intervention { island: 0, note: "stall".into() },
+            Event::RunFinished { commits: 12, best_geomean: 800.5, steps: 240 },
+        ]
+    }
+
+    /// Every event round-trips through the in-tree JSON parser and keeps
+    /// its tag.
+    #[test]
+    fn event_schema_round_trips_through_json() {
+        for ev in sample_events() {
+            for det in [false, true] {
+                let encoded = ev.to_json(det).compact();
+                let parsed = crate::json::parse(&encoded).expect("parse");
+                assert_eq!(
+                    parsed.get("event").and_then(|j| j.as_str()),
+                    Some(ev.name()),
+                    "{encoded}"
+                );
+                assert_eq!(parsed, ev.to_json(det), "round-trip changed {encoded}");
+            }
+        }
+    }
+
+    /// Deterministic serialization omits exactly the volatile fields.
+    #[test]
+    fn deterministic_mode_omits_volatile_fields() {
+        let batch = Event::BatchCompleted { width: 2, micros: 99 };
+        assert!(batch.to_json(false).get("micros").is_some());
+        assert!(batch.to_json(true).get("micros").is_none());
+        assert!(batch.to_json(true).get("width").is_some());
+
+        let died = Event::WorkerDied {
+            worker: 0,
+            addr: "a".into(),
+            requeued: 1,
+            error: "e".into(),
+        };
+        let det = died.to_json(true);
+        assert!(det.get("addr").is_none() && det.get("error").is_none());
+        assert_eq!(det.get("requeued").and_then(|j| j.as_u64()), Some(1));
+    }
+
+    #[test]
+    fn hashes_serialize_as_hex_strings() {
+        let ev = Event::CacheHit { key: 0xABC };
+        assert_eq!(
+            ev.to_json(true).get("key").and_then(|j| j.as_str()),
+            Some("0000000000000abc")
+        );
+        let ev = Event::StepCommitted { island: 0, step: 0, commit: u64::MAX, geomean: 1.0 };
+        assert_eq!(
+            ev.to_json(true).get("commit").and_then(|j| j.as_str()),
+            Some("ffffffffffffffff")
+        );
+    }
+
+    #[test]
+    fn null_and_broadcast_enabled_flags() {
+        assert!(!NullSink.enabled());
+        let empty = BroadcastSink::new(vec![]);
+        assert!(!empty.enabled());
+        let with_null = BroadcastSink::new(vec![Arc::new(NullSink)]);
+        assert!(!with_null.enabled());
+        let vec_sink = Arc::new(VecSink::new());
+        let live = BroadcastSink::new(vec![Arc::new(NullSink), vec_sink.clone()]);
+        assert!(live.enabled());
+        live.publish(&Event::BatchDispatched { width: 1 });
+        assert_eq!(vec_sink.len(), 1);
+    }
+
+    #[test]
+    fn journal_sink_writes_one_line_per_event_and_is_deterministic() {
+        let dir = std::env::temp_dir().join(format!(
+            "avo-journal-test-{}",
+            std::process::id()
+        ));
+        let path = dir.join("j.jsonl");
+        for _ in 0..2 {
+            let sink = JournalSink::create(&path, true).expect("create");
+            for ev in sample_events() {
+                sink.publish(&ev);
+            }
+        }
+        let body = std::fs::read_to_string(&path).expect("read journal");
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), sample_events().len());
+        for line in &lines {
+            crate::json::parse(line).expect("journal line parses");
+        }
+        // Re-creating and re-publishing produced identical bytes both
+        // times (File::create truncates); sanity-check the first tag.
+        assert!(lines[0].contains("\"event\":\"run_started\""));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,194 @@
+//! `avo monitor <addr>` — the terminal client of the live metrics
+//! endpoint.  Connects (with retry, so it can be launched alongside the
+//! run it watches), requests a one-shot `snapshot` or a `subscribe`
+//! stream, and renders each frame as one status line:
+//!
+//! ```text
+//! gen 12 | best 801.2 [790.1 801.2 788.0] | 413.2 evals/s | cache 71% | batch p95 820us | fleet 2/2 idle 34%
+//! ```
+//!
+//! `--json` prints the raw compact frames instead (machine-readable; CI
+//! uses it to assert on snapshot fields).
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::eval::remote::{read_frame, write_frame};
+use crate::json::Json;
+
+/// Options for [`run_monitor`] (CLI: `avo monitor <addr> [--once] [--json]
+/// [--interval-ms N] [--retry-ms N]`).
+#[derive(Debug, Clone)]
+pub struct MonitorOptions {
+    /// Snapshot cadence requested from the server when subscribing.
+    pub interval_ms: u64,
+    /// Request a single snapshot and exit instead of subscribing.
+    pub once: bool,
+    /// Print raw JSON frames instead of rendered status lines.
+    pub json: bool,
+    /// Keep retrying the initial connect for this long (the monitor is
+    /// usually raced against the run's startup).
+    pub retry_ms: u64,
+}
+
+impl Default for MonitorOptions {
+    fn default() -> Self {
+        MonitorOptions { interval_ms: 1_000, once: false, json: false, retry_ms: 10_000 }
+    }
+}
+
+fn connect_with_retry(addr: &str, retry: Duration) -> Result<TcpStream, String> {
+    let deadline = Instant::now() + retry;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) if Instant::now() < deadline => {
+                let _ = e;
+                std::thread::sleep(Duration::from_millis(100));
+            }
+            Err(e) => return Err(format!("connect {addr}: {e}")),
+        }
+    }
+}
+
+/// Render one snapshot frame as a single status line.  Missing fields
+/// degrade gracefully (the monitor must tolerate newer/older servers).
+pub fn render_status(snap: &Json) -> String {
+    let num = |key: &str| snap.get(key).and_then(|j| j.as_f64()).unwrap_or(0.0);
+    let mut line = format!("gen {:.0} | best {:.1}", num("gen"), num("best"));
+    if let Some(islands) = snap.get("islands").and_then(|j| j.as_arr()) {
+        if islands.len() > 1 {
+            let bests: Vec<String> = islands
+                .iter()
+                .map(|i| format!("{:.1}", i.get("best").and_then(|j| j.as_f64()).unwrap_or(0.0)))
+                .collect();
+            line.push_str(&format!(" [{}]", bests.join(" ")));
+        }
+    }
+    line.push_str(&format!(" | {:.1} evals/s", num("evals_per_sec")));
+    if let Some(cache) = snap.get("cache") {
+        let rate = cache.get("hit_rate").and_then(|j| j.as_f64()).unwrap_or(0.0);
+        line.push_str(&format!(" | cache {:.0}%", rate * 100.0));
+    }
+    if let Some(batch) = snap.get("eval_batch") {
+        if batch.get("count").and_then(|j| j.as_u64()).unwrap_or(0) > 0 {
+            let p95 = batch.get("p95_us").and_then(|j| j.as_f64()).unwrap_or(0.0);
+            line.push_str(&format!(" | batch p95 {p95:.0}us"));
+        }
+    }
+    if let Some(fleet) = snap.get("fleet") {
+        if let Some(workers) = fleet.get("workers").and_then(|j| j.as_u64()) {
+            let live = fleet.get("live").and_then(|j| j.as_u64()).unwrap_or(workers);
+            let idle =
+                fleet.get("idle_fraction").and_then(|j| j.as_f64()).unwrap_or(0.0);
+            line.push_str(&format!(
+                " | fleet {live}/{workers} idle {:.0}%",
+                idle * 100.0
+            ));
+            let timeouts =
+                fleet.get("read_timeouts").and_then(|j| j.as_u64()).unwrap_or(0);
+            if timeouts > 0 {
+                line.push_str(&format!(" ({timeouts} timeouts)"));
+            }
+        }
+    }
+    if snap.get("done").and_then(|j| j.as_bool()) == Some(true) {
+        line.push_str(" | done");
+    }
+    line
+}
+
+/// Connect to a metrics endpoint and print status until the run finishes
+/// (or once, with `--once`).
+pub fn run_monitor(addr: &str, opts: &MonitorOptions) -> Result<(), String> {
+    let mut stream = connect_with_retry(addr, Duration::from_millis(opts.retry_ms))?;
+    let _ = stream.set_nodelay(true);
+    let print = |frame: &Json| {
+        if opts.json {
+            println!("{}", frame.compact());
+        } else {
+            println!("{}", render_status(frame));
+        }
+    };
+    if opts.once {
+        write_frame(&mut stream, &Json::obj([("type", Json::Str("snapshot".into()))]))
+            .map_err(|e| format!("send snapshot request: {e}"))?;
+        let frame = read_frame(&mut stream).map_err(|e| format!("recv snapshot: {e}"))?;
+        print(&frame);
+        return Ok(());
+    }
+    write_frame(
+        &mut stream,
+        &Json::obj([
+            ("type", Json::Str("subscribe".into())),
+            ("interval_ms", Json::Num(opts.interval_ms as f64)),
+        ]),
+    )
+    .map_err(|e| format!("send subscribe request: {e}"))?;
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            // The stream naturally ends when the server shuts down.
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
+            Err(e) => return Err(format!("recv stream: {e}")),
+        };
+        let done = frame.get("done").and_then(|j| j.as_bool()) == Some(true);
+        print(&frame);
+        if done {
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_status_includes_islands_cache_and_fleet() {
+        let snap = Json::obj([
+            ("gen", Json::Num(12.0)),
+            ("best", Json::Num(801.25)),
+            (
+                "islands",
+                Json::arr([
+                    Json::obj([("id", Json::Num(0.0)), ("best", Json::Num(790.1))]),
+                    Json::obj([("id", Json::Num(1.0)), ("best", Json::Num(801.25))]),
+                ]),
+            ),
+            ("evals_per_sec", Json::Num(413.2)),
+            ("cache", Json::obj([("hit_rate", Json::Num(0.71))])),
+            (
+                "eval_batch",
+                Json::obj([("count", Json::Num(4.0)), ("p95_us", Json::Num(820.0))]),
+            ),
+            (
+                "fleet",
+                Json::obj([
+                    ("workers", Json::Num(2.0)),
+                    ("live", Json::Num(1.0)),
+                    ("idle_fraction", Json::Num(0.34)),
+                    ("read_timeouts", Json::Num(1.0)),
+                ]),
+            ),
+            ("done", Json::Bool(true)),
+        ]);
+        let line = render_status(&snap);
+        assert!(line.contains("gen 12"), "{line}");
+        assert!(line.contains("[790.1 801.2]") || line.contains("[790.1 801.3]"), "{line}");
+        assert!(line.contains("413.2 evals/s"), "{line}");
+        assert!(line.contains("cache 71%"), "{line}");
+        assert!(line.contains("batch p95 820us"), "{line}");
+        assert!(line.contains("fleet 1/2 idle 34%"), "{line}");
+        assert!(line.contains("(1 timeouts)"), "{line}");
+        assert!(line.ends_with("| done"), "{line}");
+    }
+
+    #[test]
+    fn render_status_degrades_without_optional_sections() {
+        let snap = Json::obj([("gen", Json::Num(0.0)), ("best", Json::Num(0.0))]);
+        let line = render_status(&snap);
+        assert!(line.starts_with("gen 0 | best 0.0"), "{line}");
+        assert!(!line.contains("fleet"), "{line}");
+    }
+}

@@ -1,0 +1,481 @@
+//! Live metrics endpoint: a [`MetricsHub`] that folds the event stream
+//! into a queryable snapshot, and a [`MetricsServer`] that serves it over
+//! the same length-prefixed JSON TCP framing as [`crate::eval::remote`].
+//!
+//! Protocol (client → server requests, one JSON frame each):
+//!
+//! * `{"type": "snapshot"}` — reply with one snapshot frame;
+//! * `{"type": "subscribe", "interval_ms": N}` — stream snapshot frames
+//!   every `N` ms (min 50, default 1000) until the run finishes (the
+//!   frame with `"done": true` is the last) or the client disconnects.
+//!
+//! Snapshot frames are `{"type": "snapshot", ...}` — see
+//! [`MetricsHub::snapshot`].  Unknown requests get
+//! `{"type": "error", "error": ...}`.  The server binds before the run
+//! starts and announces `AVO_METRICS_LISTENING <addr>` on stdout (the same
+//! pattern as the eval worker's listen announce), so port 0 works for
+//! tests and CI.
+
+use std::collections::BTreeMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::eval::remote::{read_frame, write_frame, RemoteStats};
+use crate::json::Json;
+use crate::telemetry::{Event, Histogram, TelemetrySink};
+
+/// Stdout announce prefix for the bound metrics address (mirrors the eval
+/// worker's `AVO_WORKER_LISTENING` line).
+pub const METRICS_LINE_PREFIX: &str = "AVO_METRICS_LISTENING ";
+
+#[derive(Default, Clone)]
+struct IslandView {
+    commits: u64,
+    best: f64,
+    last_step: u64,
+}
+
+#[derive(Default)]
+struct HubState {
+    seed: u64,
+    islands: BTreeMap<usize, IslandView>,
+    cache_hits: u64,
+    cache_misses: u64,
+    cache_evictions: u64,
+    batches_dispatched: u64,
+    migrations: u64,
+    migrations_accepted: u64,
+    interventions: u64,
+    fallback_specs: u64,
+    done: bool,
+}
+
+struct FleetView {
+    workers: usize,
+    stats: Arc<RemoteStats>,
+}
+
+/// Folds published [`Event`]s into a live snapshot for the metrics
+/// endpoint.  Also a [`TelemetrySink`], so it composes with the journal
+/// under a `BroadcastSink`.
+pub struct MetricsHub {
+    workload: String,
+    started: Instant,
+    state: Mutex<HubState>,
+    batch_hist: Arc<Histogram>,
+    fleet: Mutex<Option<FleetView>>,
+}
+
+impl MetricsHub {
+    pub fn new(workload: &str, batch_hist: Arc<Histogram>) -> Self {
+        MetricsHub {
+            workload: workload.to_string(),
+            started: Instant::now(),
+            state: Mutex::new(HubState::default()),
+            batch_hist,
+            fleet: Mutex::new(None),
+        }
+    }
+
+    /// Register the remote fleet so snapshots report worker health and
+    /// idle fraction (computed from `RemoteStats::busy_nanos` against
+    /// `workers x elapsed` capacity).
+    pub fn attach_fleet(&self, workers: usize, stats: Arc<RemoteStats>) {
+        if let Ok(mut slot) = self.fleet.lock() {
+            *slot = Some(FleetView { workers, stats });
+        }
+    }
+
+    fn fleet_json(&self) -> Json {
+        let guard = match self.fleet.lock() {
+            Ok(g) => g,
+            Err(_) => return Json::Null,
+        };
+        let Some(fleet) = guard.as_ref() else {
+            return Json::Null;
+        };
+        let deaths = fleet.stats.worker_deaths.load(Ordering::SeqCst);
+        let timeouts = fleet.stats.read_timeouts.load(Ordering::SeqCst);
+        let requeued = fleet.stats.requeued_specs.load(Ordering::SeqCst);
+        let busy_ms = fleet.stats.busy_nanos.load(Ordering::SeqCst) as f64 / 1e6;
+        let capacity_ms =
+            self.started.elapsed().as_secs_f64() * 1e3 * fleet.workers as f64;
+        let idle = if capacity_ms > 0.0 {
+            (1.0 - busy_ms / capacity_ms).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        Json::obj([
+            ("workers", Json::Num(fleet.workers as f64)),
+            (
+                "live",
+                Json::Num(fleet.workers.saturating_sub(deaths as usize) as f64),
+            ),
+            ("deaths", Json::Num(deaths as f64)),
+            ("read_timeouts", Json::Num(timeouts as f64)),
+            ("requeued_specs", Json::Num(requeued as f64)),
+            ("busy_ms", Json::Num(busy_ms)),
+            ("idle_fraction", Json::Num(idle)),
+            ("rtt", fleet.stats.rtt.to_json()),
+        ])
+    }
+
+    /// The live snapshot frame.
+    pub fn snapshot(&self) -> Json {
+        let elapsed = self.started.elapsed();
+        let state = match self.state.lock() {
+            Ok(s) => s,
+            Err(p) => p.into_inner(),
+        };
+        let evals = state.cache_hits + state.cache_misses;
+        let evals_per_sec = if elapsed.as_secs_f64() > 0.0 {
+            evals as f64 / elapsed.as_secs_f64()
+        } else {
+            0.0
+        };
+        let hit_rate = if evals > 0 {
+            state.cache_hits as f64 / evals as f64
+        } else {
+            0.0
+        };
+        let gen: u64 = state.islands.values().map(|i| i.commits).sum();
+        let best = state
+            .islands
+            .values()
+            .map(|i| i.best)
+            .fold(0.0f64, f64::max);
+        Json::obj([
+            ("type", Json::Str("snapshot".to_string())),
+            ("workload", Json::Str(self.workload.clone())),
+            ("seed", Json::Num(state.seed as f64)),
+            ("done", Json::Bool(state.done)),
+            ("elapsed_ms", Json::Num(elapsed.as_secs_f64() * 1e3)),
+            ("gen", Json::Num(gen as f64)),
+            ("best", Json::Num(best)),
+            (
+                "islands",
+                Json::arr(state.islands.iter().map(|(id, isl)| {
+                    Json::obj([
+                        ("id", Json::Num(*id as f64)),
+                        ("commits", Json::Num(isl.commits as f64)),
+                        ("best", Json::Num(isl.best)),
+                        ("last_step", Json::Num(isl.last_step as f64)),
+                    ])
+                })),
+            ),
+            ("evals", Json::Num(evals as f64)),
+            ("evals_per_sec", Json::Num(evals_per_sec)),
+            (
+                "cache",
+                Json::obj([
+                    ("hits", Json::Num(state.cache_hits as f64)),
+                    ("misses", Json::Num(state.cache_misses as f64)),
+                    ("evictions", Json::Num(state.cache_evictions as f64)),
+                    ("hit_rate", Json::Num(hit_rate)),
+                ]),
+            ),
+            ("batches", Json::Num(state.batches_dispatched as f64)),
+            ("eval_batch", self.batch_hist.to_json()),
+            ("fleet", self.fleet_json()),
+            ("migrations", Json::Num(state.migrations as f64)),
+            (
+                "migrations_accepted",
+                Json::Num(state.migrations_accepted as f64),
+            ),
+            ("interventions", Json::Num(state.interventions as f64)),
+            ("fallback_specs", Json::Num(state.fallback_specs as f64)),
+        ])
+    }
+}
+
+impl TelemetrySink for MetricsHub {
+    fn publish(&self, event: &Event) {
+        let mut state = match self.state.lock() {
+            Ok(s) => s,
+            Err(p) => p.into_inner(),
+        };
+        match event {
+            Event::RunStarted { seed, islands, .. } => {
+                state.seed = *seed;
+                // Pre-fill so early snapshots already show every island.
+                for id in 0..*islands {
+                    state.islands.entry(id).or_default();
+                }
+            }
+            Event::StepCommitted { island, step, geomean, .. } => {
+                let isl = state.islands.entry(*island).or_default();
+                isl.commits += 1;
+                isl.best = isl.best.max(*geomean);
+                isl.last_step = *step as u64;
+            }
+            Event::BatchDispatched { .. } => state.batches_dispatched += 1,
+            Event::BatchCompleted { .. } => {}
+            Event::CacheHit { .. } => state.cache_hits += 1,
+            Event::CacheMiss { .. } => state.cache_misses += 1,
+            Event::CacheEvict { .. } => state.cache_evictions += 1,
+            Event::WorkerAttached { .. }
+            | Event::WorkerTimeout { .. }
+            | Event::WorkerDied { .. } => {
+                // Fleet health reads RemoteStats directly (authoritative).
+            }
+            Event::FallbackLocal { specs } => state.fallback_specs += *specs as u64,
+            Event::Migration { accepted, .. } => {
+                state.migrations += 1;
+                if *accepted {
+                    state.migrations_accepted += 1;
+                }
+            }
+            Event::Intervention { .. } => state.interventions += 1,
+            Event::RunFinished { .. } => state.done = true,
+        }
+    }
+}
+
+/// The TCP server side of the metrics endpoint.  One accept-loop thread;
+/// each connection gets a detached handler thread (clients are few:
+/// monitors and dashboards, not the eval fleet).
+pub struct MetricsServer {
+    local: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    served_final: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (port 0 allowed) and start accepting.
+    pub fn bind(addr: &str, hub: Arc<MetricsHub>) -> Result<Self, String> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| format!("metrics bind {addr}: {e}"))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| format!("metrics local_addr: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let served_final = Arc::new(AtomicBool::new(false));
+        let accept_stop = Arc::clone(&stop);
+        let accept_served = Arc::clone(&served_final);
+        let accept_handle = std::thread::Builder::new()
+            .name("avo-metrics-accept".to_string())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if accept_stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let hub = Arc::clone(&hub);
+                    let stop = Arc::clone(&accept_stop);
+                    let served = Arc::clone(&accept_served);
+                    let _ = std::thread::Builder::new()
+                        .name("avo-metrics-conn".to_string())
+                        .spawn(move || handle_client(stream, &hub, &stop, &served));
+                }
+            })
+            .map_err(|e| format!("metrics accept thread: {e}"))?;
+        Ok(MetricsServer {
+            local,
+            stop,
+            served_final,
+            accept_handle: Some(accept_handle),
+        })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.local
+    }
+
+    /// Stop accepting and join the accept loop.  Lingers up to `linger`
+    /// first, so a monitor that is mid-poll can still collect the final
+    /// `done` snapshot; ends early once one has been delivered.
+    pub fn shutdown(mut self, linger: Duration) {
+        let deadline = Instant::now() + linger;
+        while Instant::now() < deadline && !self.served_final.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        // Self-connect to unblock the accept loop.
+        let _ = TcpStream::connect(self.local);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn send_snapshot(
+    stream: &mut TcpStream,
+    hub: &MetricsHub,
+    served_final: &AtomicBool,
+) -> std::io::Result<bool> {
+    let snap = hub.snapshot();
+    write_frame(stream, &snap)?;
+    let done = snap.get("done").and_then(|j| j.as_bool()) == Some(true);
+    if done {
+        served_final.store(true, Ordering::SeqCst);
+    }
+    Ok(done)
+}
+
+fn handle_client(
+    mut stream: TcpStream,
+    hub: &MetricsHub,
+    stop: &AtomicBool,
+    served_final: &AtomicBool,
+) {
+    let _ = stream.set_nodelay(true);
+    // Poll the request socket so the handler notices shutdown.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue;
+            }
+            Err(_) => return,
+        };
+        match frame.get("type").and_then(|j| j.as_str()) {
+            Some("snapshot") => {
+                if send_snapshot(&mut stream, hub, served_final).is_err() {
+                    return;
+                }
+            }
+            Some("subscribe") => {
+                let interval = frame
+                    .get("interval_ms")
+                    .and_then(|j| j.as_u64())
+                    .unwrap_or(1_000)
+                    .max(50);
+                loop {
+                    match send_snapshot(&mut stream, hub, served_final) {
+                        Ok(true) | Err(_) => return,
+                        Ok(false) => {}
+                    }
+                    if stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(interval));
+                }
+            }
+            other => {
+                let reply = Json::obj([
+                    ("type", Json::Str("error".to_string())),
+                    (
+                        "error",
+                        Json::Str(format!(
+                            "unknown request type {:?}",
+                            other.unwrap_or("<missing>")
+                        )),
+                    ),
+                ]);
+                if write_frame(&mut stream, &reply).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hub_with_traffic() -> Arc<MetricsHub> {
+        let hist = Arc::new(Histogram::new());
+        hist.record_micros(500);
+        let hub = Arc::new(MetricsHub::new("mha", hist));
+        hub.publish(&Event::RunStarted { workload: "mha".into(), seed: 9, islands: 2 });
+        hub.publish(&Event::CacheMiss { key: 1 });
+        hub.publish(&Event::CacheMiss { key: 2 });
+        hub.publish(&Event::CacheHit { key: 1 });
+        hub.publish(&Event::StepCommitted {
+            island: 1,
+            step: 3,
+            commit: 0xFEED,
+            geomean: 640.0,
+        });
+        hub
+    }
+
+    #[test]
+    fn hub_folds_events_into_snapshot() {
+        let hub = hub_with_traffic();
+        let snap = hub.snapshot();
+        assert_eq!(snap.get("type").unwrap().as_str(), Some("snapshot"));
+        assert_eq!(snap.get("done").unwrap().as_bool(), Some(false));
+        assert_eq!(snap.get("evals").unwrap().as_u64(), Some(3));
+        assert_eq!(snap.get("gen").unwrap().as_u64(), Some(1));
+        let islands = snap.get("islands").unwrap().as_arr().unwrap();
+        assert_eq!(islands.len(), 2, "pre-filled from run_started");
+        assert_eq!(islands[1].get("best").unwrap().as_f64(), Some(640.0));
+        let cache = snap.get("cache").unwrap();
+        assert!((cache.get("hit_rate").unwrap().as_f64().unwrap() - 1.0 / 3.0).abs() < 1e-9);
+        assert_eq!(snap.get("fleet").unwrap(), &Json::Null);
+        assert_eq!(
+            snap.get("eval_batch").unwrap().get("count").unwrap().as_u64(),
+            Some(1)
+        );
+        hub.publish(&Event::RunFinished { commits: 1, best_geomean: 640.0, steps: 10 });
+        assert_eq!(hub.snapshot().get("done").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn server_serves_snapshot_and_subscribe_frames() {
+        let hub = hub_with_traffic();
+        let server = MetricsServer::bind("127.0.0.1:0", Arc::clone(&hub)).expect("bind");
+        let addr = server.local_addr();
+
+        // One-shot snapshot request.
+        let mut conn = TcpStream::connect(addr).expect("connect");
+        write_frame(&mut conn, &Json::obj([("type", Json::Str("snapshot".into()))]))
+            .expect("send");
+        let reply = read_frame(&mut conn).expect("reply");
+        assert_eq!(reply.get("type").unwrap().as_str(), Some("snapshot"));
+        assert_eq!(reply.get("evals").unwrap().as_u64(), Some(3));
+
+        // Unknown request type gets an error frame on the same connection.
+        write_frame(&mut conn, &Json::obj([("type", Json::Str("bogus".into()))]))
+            .expect("send");
+        let reply = read_frame(&mut conn).expect("reply");
+        assert_eq!(reply.get("type").unwrap().as_str(), Some("error"));
+        drop(conn);
+
+        // Subscribe: stream ends with the done frame.
+        let mut sub = TcpStream::connect(addr).expect("connect");
+        write_frame(
+            &mut sub,
+            &Json::obj([
+                ("type", Json::Str("subscribe".into())),
+                ("interval_ms", Json::Num(50.0)),
+            ]),
+        )
+        .expect("send");
+        let first = read_frame(&mut sub).expect("streamed frame");
+        assert_eq!(first.get("done").unwrap().as_bool(), Some(false));
+        hub.publish(&Event::RunFinished { commits: 1, best_geomean: 640.0, steps: 10 });
+        let mut saw_done = false;
+        for _ in 0..50 {
+            match read_frame(&mut sub) {
+                Ok(f) => {
+                    if f.get("done").and_then(|j| j.as_bool()) == Some(true) {
+                        saw_done = true;
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        assert!(saw_done, "subscribe stream should deliver the done frame");
+
+        // Final snapshot delivered => shutdown returns without lingering.
+        let start = Instant::now();
+        server.shutdown(Duration::from_secs(30));
+        assert!(start.elapsed() < Duration::from_secs(10));
+    }
+}

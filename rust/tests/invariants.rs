@@ -250,7 +250,7 @@ fn prop_batched_equals_sequential_for_every_backend_layer() {
     let addr = listener.local_addr().unwrap().to_string();
     let server_eval = eval.clone();
     let server = std::thread::spawn(move || {
-        avo::eval::remote::serve(listener, &server_eval, "mha", true, None, 2)
+        avo::eval::remote::serve(listener, &server_eval, "mha", true, None, None, 2)
     });
     let remote = RemoteBackend::connect(eval.clone(), &[addr]).unwrap();
     let layers: Vec<(&str, Box<dyn EvalBackend>)> = vec![

@@ -1,0 +1,257 @@
+//! End-to-end telemetry suite: the journal's reproducibility contract,
+//! the live metrics endpoint over real TCP, and — the acceptance bar —
+//! that telemetry is purely observational: a remote multi-island run with
+//! a journal and a metrics server attached produces an archive
+//! byte-identical to the same run with telemetry disabled.
+
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use avo::coordinator::{EvolutionDriver, RunConfig};
+use avo::eval::remote::{read_frame, write_frame};
+use avo::json::Json;
+
+fn worker_program() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_avo"))
+}
+
+fn tempdir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("avo_telemetry_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// 3 serial islands (`island_workers = 1`): journal event *order* is
+/// deterministic, not just the per-event payloads.
+fn journal_config(seed: u64, journal: PathBuf) -> RunConfig {
+    let mut cfg = RunConfig {
+        seed,
+        target_commits: 3,
+        max_steps: 30,
+        ..RunConfig::default()
+    };
+    cfg.topology.islands = 3;
+    cfg.topology.migrate_every = 2;
+    cfg.topology.workers = 1;
+    cfg.telemetry.journal = Some(journal);
+    cfg.telemetry.deterministic = true;
+    cfg
+}
+
+fn parsed_journal(path: &PathBuf) -> Vec<Json> {
+    let body = std::fs::read_to_string(path).unwrap();
+    body.lines()
+        .map(|l| avo::json::parse(l).unwrap_or_else(|e| panic!("bad journal line {l}: {e}")))
+        .collect()
+}
+
+fn tag(event: &Json) -> &str {
+    event.get("event").and_then(|j| j.as_str()).unwrap_or("?")
+}
+
+#[test]
+fn same_seed_journals_are_byte_identical() {
+    let dir = tempdir("repro");
+    let a_path = dir.join("a.jsonl");
+    let b_path = dir.join("b.jsonl");
+    EvolutionDriver::new(journal_config(23, a_path.clone())).run();
+    EvolutionDriver::new(journal_config(23, b_path.clone())).run();
+    let a = std::fs::read(&a_path).unwrap();
+    let b = std::fs::read(&b_path).unwrap();
+    assert!(!a.is_empty(), "journal is empty");
+    assert_eq!(a, b, "same-seed deterministic journals diverge");
+
+    // Schema sanity on the shared bytes: a well-formed flight recording
+    // brackets the run and records commits against their islands.
+    let events = parsed_journal(&a_path);
+    assert_eq!(tag(&events[0]), "run_started");
+    assert_eq!(tag(events.last().unwrap()), "run_finished");
+    assert_eq!(
+        events[0].get("islands").and_then(|j| j.as_u64()),
+        Some(3),
+        "{}",
+        events[0].compact()
+    );
+    let commits: Vec<&Json> =
+        events.iter().filter(|e| tag(e) == "step_committed").collect();
+    assert!(!commits.is_empty(), "no step_committed events");
+    for c in &commits {
+        assert!(c.get("island").and_then(|j| j.as_u64()).is_some(), "{}", c.compact());
+        // Commit ids are 16-hex strings (content hashes would lose
+        // precision as JSON numbers).
+        let id = c.get("commit").and_then(|j| j.as_str()).unwrap();
+        assert_eq!(id.len(), 16, "{}", c.compact());
+    }
+    // Deterministic mode leaves no wall-clock anywhere.
+    for e in &events {
+        assert!(e.get("ts_ms").is_none(), "{}", e.compact());
+        assert!(e.get("micros").is_none(), "{}", e.compact());
+    }
+    assert!(
+        events.iter().any(|e| tag(e) == "cache_hit")
+            && events.iter().any(|e| tag(e) == "cache_miss"),
+        "cache traffic missing from journal"
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Poll the metrics endpoint until a `done` snapshot arrives; returns
+/// every snapshot observed (at least the final one).
+fn poll_until_done(addr_cell: avo::telemetry::AddrCell) -> Vec<Json> {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    // The server binds early in the run; wait for the announced address.
+    let addr = loop {
+        if let Some(a) = addr_cell.get() {
+            break a;
+        }
+        assert!(Instant::now() < deadline, "metrics server never bound");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    let mut stream = loop {
+        match TcpStream::connect(&addr) {
+            Ok(s) => break s,
+            Err(_) => {
+                assert!(Instant::now() < deadline, "could not connect to {addr}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    };
+    stream.set_nodelay(true).ok();
+    let mut snapshots = Vec::new();
+    loop {
+        assert!(Instant::now() < deadline, "no done snapshot before deadline");
+        write_frame(&mut stream, &Json::obj([("type", Json::Str("snapshot".into()))]))
+            .expect("send snapshot request");
+        let snap = read_frame(&mut stream).expect("read snapshot");
+        assert_eq!(snap.get("type").and_then(|j| j.as_str()), Some("snapshot"));
+        let done = snap.get("done").and_then(|j| j.as_bool()) == Some(true);
+        snapshots.push(snap);
+        if done {
+            return snapshots;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// The acceptance run: 3 islands over 2 remote eval workers with a
+/// journal AND a live metrics endpoint; snapshots stream per-island
+/// bests, eval-batch latency, cache traffic, and fleet health — and the
+/// archive is byte-identical to the same run with telemetry disabled.
+#[test]
+fn live_metrics_stream_and_archive_identity_under_full_telemetry() {
+    let dir = tempdir("live");
+
+    let base = |lineage: &str| {
+        let mut cfg = RunConfig {
+            seed: 11,
+            target_commits: 3,
+            max_steps: 30,
+            ..RunConfig::default()
+        };
+        cfg.topology.islands = 3;
+        cfg.topology.migrate_every = 2;
+        cfg.topology.workers = 1;
+        cfg.topology.remote.workers = 2;
+        cfg.topology.remote.program = Some(worker_program());
+        cfg.lineage_path = Some(dir.join(lineage));
+        cfg
+    };
+
+    // Reference: telemetry fully disabled.
+    EvolutionDriver::new(base("plain_lineage.json")).run();
+
+    // Instrumented: journal + metrics endpoint on an ephemeral port.
+    let mut cfg = base("telemetry_lineage.json");
+    cfg.telemetry.journal = Some(dir.join("journal.jsonl"));
+    cfg.telemetry.metrics_addr = Some("127.0.0.1:0".to_string());
+    cfg.telemetry.deterministic = true;
+    let addr_cell = cfg.telemetry.bound_addr.clone();
+    let poller = std::thread::spawn(move || poll_until_done(addr_cell));
+    let report = EvolutionDriver::new(cfg).run();
+    let snapshots = poller.join().expect("poller panicked");
+
+    // Telemetry is observational: byte-identical archive.
+    let plain = std::fs::read(dir.join("plain_lineage.json")).unwrap();
+    let instrumented = std::fs::read(dir.join("telemetry_lineage.json")).unwrap();
+    assert!(!plain.is_empty());
+    assert_eq!(plain, instrumented, "telemetry perturbed the archive");
+
+    // The final snapshot carries the full saturation picture.
+    let last = snapshots.last().unwrap();
+    assert_eq!(last.get("done").and_then(|j| j.as_bool()), Some(true));
+    assert_eq!(last.get("workload").and_then(|j| j.as_str()), Some("mha"));
+    let islands = last.get("islands").and_then(|j| j.as_arr()).unwrap();
+    assert_eq!(islands.len(), 3, "{}", last.compact());
+    assert!(
+        islands
+            .iter()
+            .any(|i| i.get("best").and_then(|j| j.as_f64()).unwrap_or(0.0) > 0.0),
+        "no island reported a best score: {}",
+        last.compact()
+    );
+    assert!(last.get("gen").and_then(|j| j.as_u64()).unwrap_or(0) > 0);
+    let cache = last.get("cache").unwrap();
+    assert!(
+        cache.get("hits").and_then(|j| j.as_u64()).unwrap_or(0)
+            + cache.get("misses").and_then(|j| j.as_u64()).unwrap_or(0)
+            > 0
+    );
+    let batch = last.get("eval_batch").unwrap();
+    assert!(
+        batch.get("count").and_then(|j| j.as_u64()).unwrap_or(0) > 0,
+        "eval-batch histogram is empty: {}",
+        last.compact()
+    );
+    let fleet = last.get("fleet").unwrap();
+    assert_eq!(fleet.get("workers").and_then(|j| j.as_u64()), Some(2));
+    assert_eq!(fleet.get("deaths").and_then(|j| j.as_u64()), Some(0));
+    let idle = fleet.get("idle_fraction").and_then(|j| j.as_f64()).unwrap();
+    assert!((0.0..=1.0).contains(&idle), "idle fraction {idle} out of range");
+
+    // The run report folded the same histograms + saturation counters.
+    assert!(report.metrics.histogram("eval_batch").is_some());
+    assert!(report.metrics.counter("remote_capacity_ms") > 0);
+    assert!(
+        report.summary().contains("eval batch p50"),
+        "{}",
+        report.summary()
+    );
+
+    // The monitor's renderer digests a real snapshot into one line.
+    let line = avo::telemetry::monitor::render_status(last);
+    assert!(line.contains("fleet 2/2"), "{line}");
+    assert!(line.ends_with("| done"), "{line}");
+
+    // And the journal recorded the whole run.
+    let events = parsed_journal(&dir.join("journal.jsonl"));
+    assert_eq!(tag(&events[0]), "run_started");
+    assert_eq!(tag(events.last().unwrap()), "run_finished");
+    assert!(events.iter().any(|e| tag(e) == "worker_attached"));
+    assert!(events.iter().any(|e| tag(e) == "batch_dispatched"));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Histograms surface through `Metrics::to_json()` and the text report
+/// for plain (non-remote, non-telemetry) runs too: the per-stage
+/// saturation profile is always on.
+#[test]
+fn run_metrics_carry_stage_histograms() {
+    let cfg = RunConfig {
+        seed: 3,
+        target_commits: 2,
+        max_steps: 10,
+        ..RunConfig::default()
+    };
+    let report = EvolutionDriver::new(cfg).run();
+    let j = report.metrics.to_json();
+    let hists = j.get("histograms").unwrap().as_obj().unwrap();
+    assert!(
+        hists.keys().any(|k| k.starts_with("stage_")),
+        "no per-stage histograms in {:?}",
+        hists.keys().collect::<Vec<_>>()
+    );
+    assert!(hists.contains_key("eval_batch"), "eval_batch histogram missing");
+    assert!(report.metrics.report().contains("p95="), "{}", report.metrics.report());
+}
