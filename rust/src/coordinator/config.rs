@@ -30,6 +30,44 @@ impl std::str::FromStr for OperatorKind {
     }
 }
 
+/// How islands are scheduled relative to each other.
+///
+/// * [`Barrier`](SchedulingMode::Barrier) (the default) steps every
+///   island under epoch barriers with synchronized migration exchanges.
+///   Archives are byte-identical for every worker count — this is the
+///   reference regime, pinned by the determinism suites.
+/// * [`SteadyState`](SchedulingMode::SteadyState) lets islands advance
+///   independently on a shared worker pool; migrants flow through
+///   bounded per-island mailboxes drained at commit points, so the
+///   slowest island no longer sets the pace.  Seed-deterministic only
+///   under `--island-workers 1`; with more workers, archives depend on
+///   scheduling order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulingMode {
+    Barrier,
+    SteadyState,
+}
+
+impl std::str::FromStr for SchedulingMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "barrier" => Ok(SchedulingMode::Barrier),
+            "steady_state" | "steady-state" | "steady" => Ok(SchedulingMode::SteadyState),
+            other => Err(format!("unknown scheduling mode '{other}'")),
+        }
+    }
+}
+
+impl std::fmt::Display for SchedulingMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SchedulingMode::Barrier => write!(f, "barrier"),
+            SchedulingMode::SteadyState => write!(f, "steady_state"),
+        }
+    }
+}
+
 /// Shape of the search: how many concurrent lineages, and how they
 /// exchange elites.  The default (1 island) is the paper's sequential
 /// regime; budgets in [`RunConfig`] are per island.
@@ -52,8 +90,16 @@ pub struct SearchTopology {
     /// island's interval halves (adaptive migration only).
     pub adaptive_stall_epochs: usize,
     /// Worker threads driving islands (0 = one per island, machine-capped).
-    /// Archive contents are identical for every worker count.
+    /// In barrier mode archive contents are identical for every worker
+    /// count; steady-state mode is deterministic only at `workers = 1`.
     pub workers: usize,
+    /// Island scheduling regime: epoch barriers (default, byte-pinned)
+    /// or steady-state (`--steady-state`, barrier-free throughput).
+    pub scheduling: SchedulingMode,
+    /// Bounded capacity of each island's steady-state migrant mailbox;
+    /// overflow drops the *oldest* buffered migrant (freshest elites
+    /// win).  Ignored in barrier mode.  Floored at 1.
+    pub mailbox_capacity: usize,
     /// Process-level tier: `avo eval-worker` processes to self-spawn
     /// (`--remote-workers <n>`) and/or external workers to attach
     /// (`--connect host:port,...`).  Disabled by default — the in-process
@@ -74,6 +120,8 @@ impl Default for SearchTopology {
             adaptive_migration: false,
             adaptive_stall_epochs: 2,
             workers: 0,
+            scheduling: SchedulingMode::Barrier,
+            mailbox_capacity: 8,
             remote: RemoteTopology::default(),
         }
     }
@@ -184,6 +232,13 @@ impl RunConfig {
                 }
                 "island_workers" => {
                     cfg.topology.workers = v.parse().map_err(|e| bad(&e))?
+                }
+                "scheduling" => {
+                    cfg.topology.scheduling = v.parse().map_err(|e: String| bad(&e))?
+                }
+                "mailbox_capacity" => {
+                    cfg.topology.mailbox_capacity =
+                        v.parse::<usize>().map_err(|e| bad(&e))?.max(1)
                 }
                 "remote_workers" => {
                     cfg.topology.remote.workers = v.parse().map_err(|e| bad(&e))?
@@ -317,6 +372,9 @@ mod tests {
         assert_eq!(c.topology.islands, 1);
         assert_eq!(c.topology.migration, MigrationPolicy::Ring);
         assert!(!c.topology.adaptive_migration);
+        // Barrier scheduling is the byte-pinned reference regime.
+        assert_eq!(c.topology.scheduling, SchedulingMode::Barrier);
+        assert_eq!(c.topology.mailbox_capacity, 8);
         assert!(c.eval_cache_max_entries.is_none());
         assert!(!c.agent.speculative_repair);
         // One-at-a-time refinement: the pre-refactor behavior.
@@ -337,6 +395,35 @@ mod tests {
         assert_eq!(cfg.topology.migrate_every, 3);
         assert_eq!(cfg.topology.workers, 2);
         assert!(RunConfig::parse("migration = sideways\n").is_err());
+    }
+
+    #[test]
+    fn parse_scheduling_keys() {
+        let cfg = RunConfig::parse(
+            "scheduling = steady_state\n\
+             mailbox_capacity = 3\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.topology.scheduling, SchedulingMode::SteadyState);
+        assert_eq!(cfg.topology.mailbox_capacity, 3);
+        // Hyphenated and short spellings parse too; Display round-trips.
+        for s in ["steady-state", "steady"] {
+            assert_eq!(
+                s.parse::<SchedulingMode>().unwrap(),
+                SchedulingMode::SteadyState
+            );
+        }
+        assert_eq!(SchedulingMode::SteadyState.to_string(), "steady_state");
+        assert_eq!(
+            "barrier".parse::<SchedulingMode>().unwrap().to_string(),
+            "barrier"
+        );
+        // Capacity floors at 1: a zero-capacity mailbox would drop every
+        // migrant silently.
+        let floored = RunConfig::parse("mailbox_capacity = 0\n").unwrap();
+        assert_eq!(floored.topology.mailbox_capacity, 1);
+        assert!(RunConfig::parse("scheduling = lockstep\n").is_err());
+        assert!(RunConfig::parse("mailbox_capacity = banana\n").is_err());
     }
 
     #[test]

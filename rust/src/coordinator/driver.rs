@@ -98,6 +98,12 @@ impl RunReport {
         if halvings > 0 {
             s.push_str(&format!(", {halvings} migration-interval halvings"));
         }
+        // Steady-state mailbox overflow: elites evicted unread (the
+        // oldest-dropped bound doing its job under a fast donor).
+        let dropped = self.metrics.counter("migrants_dropped");
+        if dropped > 0 {
+            s.push_str(&format!(", {dropped} migrants dropped"));
+        }
         // Process-level tier in one clause: fleet size, plus fault
         // recovery counters when anything actually died mid-run.
         let remote = self.metrics.counter("remote_workers");
@@ -113,6 +119,12 @@ impl RunReport {
             let timeouts = self.metrics.counter("remote_read_timeouts");
             if timeouts > 0 {
                 s.push_str(&format!(", {timeouts} read timeouts"));
+            }
+            // Work-stealing dispatch: chunks a worker pulled off another
+            // worker's home slot (nonzero whenever oversplitting engaged).
+            let stolen = self.metrics.counter("remote_chunks_stolen");
+            if stolen > 0 {
+                s.push_str(&format!(", {stolen} chunks stolen"));
             }
             // Fleet saturation: what fraction of worker-time no round-trip
             // occupied.  Capacity is run wall-clock x fleet size.

@@ -11,7 +11,7 @@ pub mod driver;
 pub mod metrics;
 pub mod pool;
 
-pub use config::{RunConfig, SearchTopology};
+pub use config::{RunConfig, SchedulingMode, SearchTopology};
 pub use driver::{EvolutionDriver, RunReport};
 pub use metrics::Metrics;
 pub use pool::EvalPool;

@@ -105,6 +105,75 @@ impl EvalBackend for SimBackend {
     }
 }
 
+/// A latency-skew injection layer for saturation experiments: each
+/// distinct *calling thread* is bound, first-come, to a slot in the
+/// multiplier table, and every `evaluate_batch` sleeps
+/// `delay x multiplier x batch-width` before delegating.  This models a
+/// heterogeneous fleet (a 4x straggler among fast workers) without any
+/// real remote processes: scores are untouched — skew reorders
+/// wall-clock only — so determinism suites still hold.  The
+/// archipelago steady-state bench wraps [`SimBackend`] in it to compare
+/// how much island idle time each scheduling mode leaves on the table.
+pub struct SkewBackend<B> {
+    inner: B,
+    delay: std::time::Duration,
+    multipliers: Vec<u32>,
+    slots: std::sync::Mutex<std::collections::HashMap<std::thread::ThreadId, usize>>,
+}
+
+impl<B: EvalBackend> SkewBackend<B> {
+    /// Wrap `inner`, assigning each calling thread the next multiplier in
+    /// `multipliers` (first come, first bound; the table wraps around).
+    /// An empty table degenerates to a uniform 1x fleet.
+    pub fn new(inner: B, delay: std::time::Duration, multipliers: Vec<u32>) -> Self {
+        let multipliers = if multipliers.is_empty() { vec![1] } else { multipliers };
+        SkewBackend {
+            inner,
+            delay,
+            multipliers,
+            slots: std::sync::Mutex::new(std::collections::HashMap::new()),
+        }
+    }
+
+    /// Distinct calling threads bound to slots so far.
+    pub fn threads_seen(&self) -> usize {
+        self.slots.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+}
+
+impl<B: EvalBackend> EvalBackend for SkewBackend<B> {
+    fn evaluate_batch(&self, specs: &[KernelSpec]) -> Vec<Score> {
+        let slot = {
+            let mut slots = self.slots.lock().unwrap_or_else(|e| e.into_inner());
+            let next = slots.len();
+            *slots.entry(std::thread::current().id()).or_insert(next)
+        };
+        let mult = self.multipliers[slot % self.multipliers.len()];
+        std::thread::sleep(self.delay * mult * specs.len() as u32);
+        self.inner.evaluate_batch(specs)
+    }
+
+    fn suite(&self) -> &[BenchConfig] {
+        self.inner.suite()
+    }
+
+    fn report(&self, spec: &KernelSpec, cfg: &BenchConfig) -> CycleReport {
+        self.inner.report(spec, cfg)
+    }
+
+    fn cache_tag(&self) -> u64 {
+        self.inner.cache_tag()
+    }
+
+    fn is_deterministic(&self) -> bool {
+        self.inner.is_deterministic()
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.inner.cache_stats()
+    }
+}
+
 /// Instrumentation layer: counts `evaluate_batch` calls, total
 /// evaluations, and the widest batch observed, delegating everything else
 /// to the inner backend.  This pins the batching contract from the
@@ -228,6 +297,27 @@ mod tests {
         let eval = Evaluator::new(mha_suite());
         let backend = SimBackend::new(eval.clone(), 2);
         assert_eq!(EvalBackend::cache_tag(&backend), EvalBackend::cache_tag(&eval));
+    }
+
+    #[test]
+    fn skew_backend_delays_but_never_perturbs_scores() {
+        let skewed = SkewBackend::new(
+            Evaluator::new(mha_suite()),
+            std::time::Duration::from_micros(10),
+            vec![1, 4],
+        );
+        let plain = Evaluator::new(mha_suite());
+        let batch = specs();
+        let out = std::thread::scope(|scope| {
+            let a = scope.spawn(|| skewed.evaluate_batch(&batch));
+            let b = scope.spawn(|| skewed.evaluate_batch(&batch));
+            (a.join().unwrap(), b.join().unwrap())
+        });
+        for (o, s) in out.0.iter().chain(out.1.iter()).zip(batch.iter().cycle()) {
+            assert_eq!(o.per_config, plain.evaluate(s).per_config);
+        }
+        assert_eq!(skewed.threads_seen(), 2, "each thread binds its own slot");
+        assert!(skewed.evaluate_batch(&[]).is_empty());
     }
 
     #[test]

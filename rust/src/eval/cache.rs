@@ -180,6 +180,13 @@ impl EvalCache {
         self.hits.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count a miss that was established without a counted lookup (the
+    /// batch path probes every key in one uncounted pass, then credits
+    /// hits/misses per spec in request order).
+    pub(crate) fn credit_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Publish an entry without touching the counters (batch fills and
     /// warm-start seeding).  Returns true if the key was fresh.
     pub fn insert(&self, key: u64, score: Score) -> bool {
@@ -199,6 +206,29 @@ impl EvalCache {
     /// Peek without computing or counting.
     pub fn get(&self, key: u64) -> Option<Score> {
         self.shard(key).lock().unwrap().get(&key).cloned()
+    }
+
+    /// Batched peek for lookahead prefetching: resolve every key in one
+    /// pass, locking each touched shard exactly once instead of once per
+    /// key.  Counts nothing — the [`crate::eval::CachedBackend`] layer
+    /// credits hits/misses per spec in request order.  Returns one slot
+    /// per input key, in input order.
+    pub fn probe_batch(&self, keys: &[u64]) -> Vec<Option<Score>> {
+        let mut out: Vec<Option<Score>> = vec![None; keys.len()];
+        let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        for (pos, key) in keys.iter().enumerate() {
+            by_shard[(key % self.shards.len() as u64) as usize].push(pos);
+        }
+        for (shard, positions) in self.shards.iter().zip(&by_shard) {
+            if positions.is_empty() {
+                continue;
+            }
+            let map = shard.lock().unwrap();
+            for &pos in positions {
+                out[pos] = map.get(&keys[pos]).cloned();
+            }
+        }
+        out
     }
 
     /// All entries, sorted by key (deterministic persistence order).
@@ -327,6 +357,23 @@ mod tests {
         assert_eq!((cache.hits(), cache.misses()), (0, 1));
         assert!(cache.lookup(7).is_some());
         assert_eq!((cache.hits(), cache.misses()), (1, 1));
+    }
+
+    #[test]
+    fn probe_batch_peeks_without_counting() {
+        let cache = EvalCache::new(4);
+        let eval = Evaluator::new(mha_suite());
+        let score = eval.evaluate(&KernelSpec::naive());
+        cache.insert(2, score.clone());
+        cache.insert(5, score.clone());
+        let probed = cache.probe_batch(&[5, 9, 2, 5]);
+        assert_eq!(probed.len(), 4);
+        assert!(probed[0].is_some());
+        assert!(probed[1].is_none());
+        assert!(probed[2].is_some());
+        assert!(probed[3].is_some(), "duplicate keys resolve independently");
+        assert_eq!((cache.hits(), cache.misses()), (0, 0), "probing is uncounted");
+        assert!(cache.probe_batch(&[]).is_empty());
     }
 
     #[test]

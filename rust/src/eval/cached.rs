@@ -75,11 +75,15 @@ impl<B: EvalBackend> CachedBackend<B> {
 }
 
 impl<B: EvalBackend> EvalBackend for CachedBackend<B> {
-    /// Batched lookup: known genomes are served from the cache, distinct
-    /// misses go to the inner backend as ONE batch (so a parallel or
-    /// remote inner backend sees the full width), and in-batch duplicates
-    /// of a miss share that single computation — counted as hits, exactly
-    /// as a sequential pass over the batch would have counted them.
+    /// Batched lookup with lookahead-aware prefetching: every key in the
+    /// batch is probed against the cache in ONE pass (each shard locked
+    /// once — see [`EvalCache::probe_batch`]), known genomes are served
+    /// from the probe, and only the distinct misses go to the inner
+    /// backend as ONE batch (so a parallel or remote inner backend sees
+    /// the full width, and an already-cached lookahead candidate never
+    /// occupies a remote dispatch slot).  In-batch duplicates of a miss
+    /// share that single computation — counted as hits, exactly as a
+    /// sequential pass over the batch would have counted them.
     fn evaluate_batch(&self, specs: &[KernelSpec]) -> Vec<Score> {
         // A noisy measurement protocol must never be frozen into the
         // cache (the invariant the old Evaluator cache guard enforced):
@@ -113,25 +117,35 @@ impl<B: EvalBackend> EvalBackend for CachedBackend<B> {
             _ => {
                 let n = specs.len();
                 let mut out: Vec<Option<Score>> = vec![None; n];
+                // Prefetch pass: resolve all n keys against the sharded
+                // cache at once (each touched shard locked exactly once)
+                // instead of n counted lookups.  Counters and telemetry
+                // events are then credited per spec, in input order, with
+                // the same totals a sequential pass would have produced.
+                let keys: Vec<u64> = specs.iter().map(|s| self.key(s)).collect();
+                let probed = self.cache.probe_batch(&keys);
                 // (key, input index) of each distinct miss, in input order.
                 let mut pending: Vec<(u64, usize)> = Vec::new();
                 // (input index, pending index) of in-batch duplicates.
                 let mut dups: Vec<(usize, usize)> = Vec::new();
                 let publish = self.sink.enabled();
-                for (i, spec) in specs.iter().enumerate() {
-                    let key = self.key(spec);
-                    if let Some(p) = pending.iter().position(|&(k, _)| k == key) {
+                for (i, (&key, hit)) in keys.iter().zip(probed).enumerate() {
+                    if let Some(score) = hit {
+                        // Cached before this batch (or a duplicate of such
+                        // an entry): served straight from the probe.
+                        self.cache.credit_hit();
+                        if publish {
+                            self.sink.publish(&Event::CacheHit { key });
+                        }
+                        out[i] = Some(score);
+                    } else if let Some(p) = pending.iter().position(|&(k, _)| k == key) {
                         self.cache.credit_hit();
                         if publish {
                             self.sink.publish(&Event::CacheHit { key });
                         }
                         dups.push((i, p));
-                    } else if let Some(score) = self.cache.lookup(key) {
-                        if publish {
-                            self.sink.publish(&Event::CacheHit { key });
-                        }
-                        out[i] = Some(score);
                     } else {
+                        self.cache.credit_miss();
                         if publish {
                             self.sink.publish(&Event::CacheMiss { key });
                         }

@@ -25,8 +25,14 @@
 //!   out over a length-prefixed JSON TCP protocol to `avo eval-worker`
 //!   processes (self-spawned via `--remote-workers <n>` or attached via
 //!   `--connect host:port,...`), each hosting its own simulator stack and
-//!   handshake-checked against the coordinator's cache fingerprint.  See
-//!   [`remote`] for the wire format, handshake, and requeue semantics.
+//!   handshake-checked against the coordinator's cache fingerprint.
+//!   Multi-chunk batches are oversplit into a shared work-stealing
+//!   dispatch queue so fast workers steal chunks a slow worker would
+//!   otherwise serialize.  See [`remote`] for the wire format, handshake,
+//!   stealing, and requeue semantics;
+//! * [`SkewBackend`] — a latency-skew injection layer (per-calling-thread
+//!   delay multipliers) for saturation experiments; scores pass through
+//!   untouched.
 //!
 //! **Determinism contract.** Evolution runs noise-free, so a Score is a
 //! pure function of (genome, suite, functional seed, machine model) — the
@@ -53,7 +59,7 @@ pub mod cached;
 pub mod persist;
 pub mod remote;
 
-pub use backend::{CountingBackend, SimBackend};
+pub use backend::{CountingBackend, SimBackend, SkewBackend};
 pub use cache::{EvalCache, DEFAULT_SHARDS};
 pub use cached::CachedBackend;
 pub use persist::{PersistentBackend, CACHE_FILE};

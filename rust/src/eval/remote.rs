@@ -451,6 +451,10 @@ pub struct RemoteStats {
     /// Chunk round-trips that exceeded the socket read deadline (each one
     /// also counts as a worker death).
     pub read_timeouts: AtomicU64,
+    /// Chunks a worker pulled off the shared dispatch queue that were not
+    /// homed to it — the work-stealing saturation signal (a fast worker
+    /// absorbing a slow sibling's backlog, or surplus oversplit chunks).
+    pub chunks_stolen: AtomicU64,
     /// Total nanoseconds coordinator threads spent inside worker
     /// round-trips — the numerator of the fleet idle-fraction metric
     /// (capacity = workers x run wall-clock).
@@ -827,6 +831,28 @@ fn timed_round_trip(
     result
 }
 
+/// How many chunks the dispatch queue oversplits a batch into, per live
+/// worker.  Finer chunks are what make stealing effective: a worker that
+/// finishes early pulls surplus chunks instead of idling until the
+/// slowest sibling's single oversized chunk completes.  4 keeps chunks
+/// large enough that framing overhead stays negligible.
+const OVERSPLIT: usize = 4;
+
+/// Pop the next chunk for `me` from the shared dispatch queue: prefer a
+/// chunk homed to this worker; otherwise steal the queue head (surplus
+/// chunks have no home and always count as steals).  Returns
+/// `(stolen, chunk)`.
+fn pop_chunk(
+    queue: &Mutex<std::collections::VecDeque<(Option<usize>, Vec<usize>)>>,
+    me: usize,
+) -> Option<(bool, Vec<usize>)> {
+    let mut q = queue.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(pos) = q.iter().position(|(home, _)| *home == Some(me)) {
+        return q.remove(pos).map(|(_, chunk)| (false, chunk));
+    }
+    q.pop_front().map(|(home, chunk)| (home != Some(me), chunk))
+}
+
 /// Split `pending` (non-empty) into at most `k` contiguous non-empty
 /// chunks.
 fn chunk_indices(pending: &[usize], k: usize) -> Vec<Vec<usize>> {
@@ -845,9 +871,12 @@ fn chunk_indices(pending: &[usize], k: usize) -> Vec<Vec<usize>> {
 }
 
 impl EvalBackend for RemoteBackend {
-    /// Fan the batch out across live workers; requeue on death; fall back
-    /// to the local simulator only when no worker survives.  Result order
-    /// matches input order regardless of scheduling.
+    /// Fan the batch out across live workers through a work-stealing
+    /// dispatch queue (oversplit into [`OVERSPLIT`] chunks per worker, so
+    /// fast workers absorb slow siblings' backlogs); requeue on death;
+    /// fall back to the local simulator only when no worker survives.
+    /// Result order matches input order regardless of scheduling, and
+    /// scores are pure — archives are identical under any steal pattern.
     fn evaluate_batch(&self, specs: &[KernelSpec]) -> Vec<Score> {
         if specs.is_empty() {
             return Vec::new();
@@ -880,10 +909,11 @@ impl EvalBackend for RemoteBackend {
                 }
                 break;
             }
-            let chunks = chunk_indices(&pending, live.len());
+            let chunks = chunk_indices(&pending, live.len().saturating_mul(OVERSPLIT));
             // Rotate the starting worker between calls so width-1 batches
             // (the agent's inner loop) spread across the fleet.
             let offset = self.next_worker.fetch_add(1, Ordering::Relaxed);
+            let mut never_dispatched: Vec<usize> = Vec::new();
             let results = if chunks.len() == 1 {
                 // The agent's inner loop at lookahead 1 issues width-1
                 // batches; score the single chunk on the caller thread
@@ -895,24 +925,75 @@ impl EvalBackend for RemoteBackend {
                 let result = timed_round_trip(&self.workers[widx], &chunk, specs, &self.stats);
                 vec![(widx, chunk, result)]
             } else {
+                // Work-stealing dispatch: the first `live` chunks are each
+                // homed to one worker (round-robin from `offset`); the
+                // oversplit surplus is homeless.  One puller thread per
+                // live worker drains the queue — preferring its homed
+                // chunk, then stealing — so a slow worker's backlog flows
+                // to its fast siblings instead of stalling the batch.
+                // Scores are pure functions of the spec, so which worker
+                // evaluates a chunk never affects the archive.
+                if self.sink.enabled() {
+                    self.sink.publish(&Event::QueueDepth { depth: chunks.len() });
+                }
+                let queue: Mutex<std::collections::VecDeque<(Option<usize>, Vec<usize>)>> =
+                    Mutex::new(
+                        chunks
+                            .into_iter()
+                            .enumerate()
+                            .map(|(c, chunk)| {
+                                let home = (c < live.len())
+                                    .then(|| live[(c + offset) % live.len()]);
+                                (home, chunk)
+                            })
+                            .collect(),
+                    );
                 let (tx, rx) = mpsc::channel();
                 let stats = &self.stats;
+                let sink = &self.sink;
                 std::thread::scope(|scope| {
-                    for (c, chunk) in chunks.into_iter().enumerate() {
-                        let widx = live[(c + offset) % live.len()];
+                    for &widx in &live {
                         let worker = &self.workers[widx];
                         let tx = tx.clone();
+                        let queue = &queue;
                         scope.spawn(move || {
-                            let result = timed_round_trip(worker, &chunk, specs, stats);
-                            let _ = tx.send((widx, chunk, result));
+                            while let Some((stolen, chunk)) = pop_chunk(queue, widx) {
+                                if stolen {
+                                    stats.chunks_stolen.fetch_add(1, Ordering::SeqCst);
+                                    if sink.enabled() {
+                                        sink.publish(&Event::ChunkStolen {
+                                            worker: widx,
+                                            specs: chunk.len(),
+                                        });
+                                    }
+                                }
+                                let result = timed_round_trip(worker, &chunk, specs, stats);
+                                let failed = result.is_err();
+                                let _ = tx.send((widx, chunk, result));
+                                if failed {
+                                    // A dead or hung worker stops pulling;
+                                    // the survivors absorb the rest of the
+                                    // queue.
+                                    break;
+                                }
+                            }
                         });
                     }
                 });
                 drop(tx);
+                // Chunks no surviving worker ever popped (the whole fleet
+                // failed mid-round) go straight back to pending — they
+                // were never in flight, so they don't count as requeued.
+                never_dispatched = queue
+                    .into_inner()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .into_iter()
+                    .flat_map(|(_, chunk)| chunk)
+                    .collect();
                 rx.into_iter().collect()
             };
             self.stats.remote_batches.fetch_add(1, Ordering::SeqCst);
-            let mut failed: Vec<usize> = Vec::new();
+            let mut failed: Vec<usize> = never_dispatched;
             for (widx, chunk, result) in results {
                 match result {
                     Ok(scores) => {

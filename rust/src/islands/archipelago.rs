@@ -1,24 +1,37 @@
 //! The archipelago: N independent lineages ("islands"), each driven by its
 //! own variation operator + supervisor on a worker thread, exchanging
-//! elites at migration barriers and sharing one content-addressed
-//! evaluation cache.
+//! elites through one of two scheduling regimes and sharing one
+//! content-addressed evaluation cache.
 //!
-//! Determinism contract: island i's operator PRNG is derived from the run
-//! seed and i alone; islands share no mutable state between barriers
-//! except the evaluation cache.  The cache side of the contract — a hit
-//! (in-memory or warm-started) equals a recomputation bit-for-bit — now
-//! lives in [`crate::eval::CachedBackend`] (see the [`crate::eval`] module
-//! docs); the archipelago only relies on it.  Migration happens only with
-//! all worker threads joined, walking routes in a deterministic order with
-//! randomness from a dedicated migration stream.  Archive contents are
-//! therefore a pure function of (config, seed genome), independent of
-//! worker count, thread scheduling, and warm-start state.
+//! # Scheduling modes
+//!
+//! * **Barrier** (default, [`SchedulingMode::Barrier`]): islands step
+//!   under epoch barriers; migration is a synchronized exchange applied
+//!   with all worker threads joined, walking routes in a deterministic
+//!   order with randomness from a dedicated migration stream.  Archive
+//!   contents are a pure function of (config, seed genome), independent
+//!   of worker count, thread scheduling, and warm-start state.
+//! * **Steady-state** ([`SchedulingMode::SteadyState`], `--steady-state`):
+//!   islands advance independently on a shared worker pool and migrants
+//!   flow through bounded per-island mailboxes
+//!   ([`crate::islands::migration::MigrantMailbox`]) drained at commit
+//!   points — no island ever waits for a sibling.  See
+//!   [`crate::islands::steady`].  Seed-deterministic only under
+//!   `--island-workers 1`; with more workers, archives depend on
+//!   scheduling order (throughput mode, not the reference regime).
+//!
+//! Shared determinism machinery: island i's operator PRNG is derived from
+//! the run seed and i alone; islands share no mutable state mid-epoch (or
+//! mid-quantum) except the evaluation cache.  The cache side of the
+//! contract — a hit (in-memory or warm-started) equals a recomputation
+//! bit-for-bit — lives in [`crate::eval::CachedBackend`] (see the
+//! [`crate::eval`] module docs); the archipelago only relies on it.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::agent::{AgentAction, AgentTrace, VariationOperator};
-use crate::coordinator::config::RunConfig;
+use crate::coordinator::config::{RunConfig, SchedulingMode};
 use crate::coordinator::driver::{build_operator, RunReport};
 use crate::coordinator::metrics::Metrics;
 use crate::eval::{
@@ -51,26 +64,29 @@ pub struct IslandReport {
 }
 
 /// One island's full run state (operator + supervisor + archive).
-struct Island {
-    id: usize,
-    lineage: Lineage,
-    operator: Box<dyn VariationOperator + Send>,
-    supervisor: Supervisor,
-    metrics: Metrics,
-    interventions: Vec<String>,
-    steps: usize,
-    trace: AgentTrace,
-    /// Current epoch commit quota (`usize::MAX` for the N = 1 regime;
-    /// adaptive migration halves it while the island stalls).
-    migrate_every: usize,
-    /// Consecutive barriers without a best-geomean improvement.
-    stall_epochs: usize,
-    /// Best geomean observed at the previous barrier.
-    best_at_barrier: f64,
+/// `pub(crate)` so the steady-state scheduler ([`crate::islands::steady`])
+/// can move islands through its work queue.
+pub(crate) struct Island {
+    pub(crate) id: usize,
+    pub(crate) lineage: Lineage,
+    pub(crate) operator: Box<dyn VariationOperator + Send>,
+    pub(crate) supervisor: Supervisor,
+    pub(crate) metrics: Metrics,
+    pub(crate) interventions: Vec<String>,
+    pub(crate) steps: usize,
+    pub(crate) trace: AgentTrace,
+    /// Current epoch/quantum commit quota (`usize::MAX` for the N = 1
+    /// regime; adaptive migration halves it while the island stalls).
+    pub(crate) migrate_every: usize,
+    /// Consecutive barriers (epochs in barrier mode, this island's own
+    /// quanta in steady-state mode) without a best-geomean improvement.
+    pub(crate) stall_epochs: usize,
+    /// Best geomean observed at the previous barrier/quantum boundary.
+    pub(crate) best_at_barrier: f64,
 }
 
 impl Island {
-    fn done(&self, cfg: &RunConfig) -> bool {
+    pub(crate) fn done(&self, cfg: &RunConfig) -> bool {
         self.lineage.len() >= cfg.target_commits + 1 || self.steps >= cfg.max_steps
     }
 }
@@ -89,7 +105,7 @@ impl Archipelago {
 
     /// Worker threads for the next epoch (0 in config = one per island,
     /// capped by the machine).
-    fn worker_count(&self, islands: usize) -> usize {
+    pub(crate) fn worker_count(&self, islands: usize) -> usize {
         let configured = self.config.topology.workers;
         let cap = if configured == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
@@ -158,6 +174,9 @@ impl Archipelago {
             report
                 .metrics
                 .incr("remote_read_timeouts", stats.read_timeouts.load(Ordering::SeqCst));
+            report
+                .metrics
+                .incr("remote_chunks_stolen", stats.chunks_stolen.load(Ordering::SeqCst));
             // Fleet saturation: busy = wall-clock any round-trip occupied a
             // dispatch slot; capacity = run wall-clock x workers.  The
             // driver summary reports idle fraction = 1 - busy/capacity.
@@ -274,30 +293,52 @@ impl Archipelago {
             isl.metrics.incr("evaluations", 1);
         }
 
-        // Epochs: every island runs until it lands its commit quota
-        // (`migrate_every` fresh commits, possibly halved by adaptive
-        // migration) — or 4x that many steps, so a stalled island still
-        // reaches the barrier and can receive the migrants that would
-        // unstick it instead of burning its whole budget alone.  Then all
-        // threads join and elites migrate.  N=1 runs one uninterrupted
-        // epoch.
-        let mut epoch = 0usize;
-        // Island-worker saturation: summed per-thread busy vs. the epoch
-        // walls x thread count (zero when epochs run serially).
+        // Island-worker saturation: summed per-thread busy vs. the
+        // scheduler walls x thread count (zero when islands run serially).
         let mut island_busy_ms = 0u64;
         let mut island_capacity_ms = 0u64;
-        while islands.iter().any(|i| !i.done(cfg)) {
-            let (busy, capacity) = self.run_epoch(&mut islands, &backend, &sink);
-            island_busy_ms += busy;
-            island_capacity_ms += capacity;
-            epoch += 1;
-            if n > 1 {
-                if cfg.topology.adaptive_migration {
-                    self.adapt_intervals(&mut islands, base_quota);
+        let mut migrants_dropped = 0u64;
+        match cfg.topology.scheduling {
+            // Barrier mode (default): every island runs until it lands its
+            // commit quota (`migrate_every` fresh commits, possibly halved
+            // by adaptive migration) — or 4x that many steps, so a stalled
+            // island still reaches the barrier and can receive the
+            // migrants that would unstick it instead of burning its whole
+            // budget alone.  Then all threads join and elites migrate.
+            // N=1 runs one uninterrupted epoch.
+            SchedulingMode::Barrier => {
+                let mut epoch = 0usize;
+                while islands.iter().any(|i| !i.done(cfg)) {
+                    let (busy, capacity) = self.run_epoch(&mut islands, &backend, &sink);
+                    island_busy_ms += busy;
+                    island_capacity_ms += capacity;
+                    epoch += 1;
+                    if n > 1 {
+                        if cfg.topology.adaptive_migration {
+                            self.adapt_intervals(&mut islands, base_quota);
+                        }
+                        if islands.iter().any(|i| !i.done(cfg)) {
+                            self.migrate(&mut islands, epoch, &mut mig_rng, &sink);
+                        }
+                    }
                 }
-                if islands.iter().any(|i| !i.done(cfg)) {
-                    self.migrate(&mut islands, epoch, &mut mig_rng, &sink);
-                }
+            }
+            // Steady-state mode: no barriers — islands advance
+            // independently on a shared worker pool and migrants flow
+            // through bounded mailboxes (see `islands::steady`).
+            SchedulingMode::SteadyState => {
+                let outcome = crate::islands::steady::run(
+                    self,
+                    islands,
+                    &backend,
+                    &sink,
+                    &mut mig_rng,
+                    base_quota,
+                );
+                islands = outcome.islands;
+                island_busy_ms = outcome.busy_ms;
+                island_capacity_ms = outcome.capacity_ms;
+                migrants_dropped = outcome.migrants_dropped;
             }
         }
 
@@ -314,6 +355,43 @@ impl Archipelago {
             report.metrics.incr("island_busy_ms", island_busy_ms);
             report.metrics.incr("island_capacity_ms", island_capacity_ms);
         }
+        if migrants_dropped > 0 {
+            report.metrics.incr("migrants_dropped", migrants_dropped);
+        }
+        report
+    }
+
+    /// Run from a seed genome over a caller-supplied ground-truth tier.
+    /// Identical to the non-remote path of [`Archipelago::run_from`] — the
+    /// telemetry, cache, and persistence layers are the same — but with
+    /// `inner` replacing the default [`SimBackend`].  Benches inject
+    /// latency-skew wrappers (e.g. [`crate::eval::SkewBackend`]) here to
+    /// measure scheduler saturation under adversarial fleets.
+    pub fn run_from_with<B: EvalBackend>(
+        &self,
+        inner: B,
+        seed_spec: KernelSpec,
+        seed_message: &str,
+    ) -> RunReport {
+        let cfg = &self.config;
+        let telem = RunTelemetry::start(&cfg.telemetry, &cfg.workload)
+            .unwrap_or_else(|e| panic!("telemetry: {e}"));
+        if telem.sink().enabled() {
+            telem.sink().publish(&Event::RunStarted {
+                workload: cfg.workload.clone(),
+                seed: cfg.seed,
+                islands: cfg.topology.islands.max(1),
+            });
+        }
+        let mut report = self.run_with(inner, &telem, seed_spec, seed_message);
+        if telem.sink().enabled() {
+            telem.sink().publish(&Event::RunFinished {
+                commits: report.lineage.len().saturating_sub(1),
+                best_geomean: report.lineage.best_geomean(),
+                steps: report.steps,
+            });
+        }
+        telem.finish(&mut report.metrics);
         report
     }
 

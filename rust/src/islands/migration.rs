@@ -1,9 +1,21 @@
 //! Migration between islands: which elites travel where, every K commits.
 //!
-//! Migration is applied at epoch barriers only (all worker threads joined),
-//! in island-index order, with any randomness drawn from a dedicated
-//! migration PRNG stream — so the exchange pattern is a pure function of
-//! (run seed, epoch) and never of thread scheduling.
+//! Under **barrier** scheduling, migration is applied at epoch barriers
+//! only (all worker threads joined), in island-index order, with any
+//! randomness drawn from a dedicated migration PRNG stream — so the
+//! exchange pattern is a pure function of (run seed, epoch) and never of
+//! thread scheduling.
+//!
+//! Under **steady-state** scheduling there are no barriers: donors push
+//! into each receiver's bounded [`MigrantMailbox`] and the receiver
+//! drains it at its own commit points.  Overflow drops the *oldest*
+//! buffered migrant — a fresher elite from the same donor supersedes a
+//! stale one, and a slow island can never exert backpressure on a fast
+//! one.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::kernelspec::KernelSpec;
 use crate::prng::Rng;
@@ -20,6 +32,77 @@ pub struct Migrant {
     pub commit: CommitId,
     pub spec: KernelSpec,
     pub score: Score,
+}
+
+/// A bounded, oldest-dropped migrant inbox for one island under
+/// steady-state scheduling.  Donors [`push`](MigrantMailbox::push)
+/// without blocking; the owning island [`drain`](MigrantMailbox::drain)s
+/// at its commit points.  Each entry carries the donor's commit message
+/// so the receiver can cite provenance, exactly like barrier migration.
+///
+/// All methods take `&self` (internal locking): mailboxes live in a
+/// shared `Vec` indexed by island id, pushed to and drained from
+/// different worker threads.
+#[derive(Debug)]
+pub struct MigrantMailbox {
+    capacity: usize,
+    inbox: Mutex<VecDeque<(Migrant, String)>>,
+    dropped: AtomicU64,
+}
+
+impl MigrantMailbox {
+    /// A mailbox holding at most `capacity` migrants (floored at 1).
+    pub fn new(capacity: usize) -> Self {
+        MigrantMailbox {
+            capacity: capacity.max(1),
+            inbox: Mutex::new(VecDeque::new()),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Buffer a migrant.  At capacity, the *oldest* buffered migrant is
+    /// evicted and returned so the caller can account for the drop; the
+    /// new migrant always lands.  Never blocks beyond the inbox lock.
+    pub fn push(&self, migrant: Migrant, message: String) -> Option<Migrant> {
+        let mut inbox = match self.inbox.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let evicted = if inbox.len() >= self.capacity {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            inbox.pop_front().map(|(m, _)| m)
+        } else {
+            None
+        };
+        inbox.push_back((migrant, message));
+        evicted
+    }
+
+    /// Take every buffered migrant, oldest first.
+    pub fn drain(&self) -> Vec<(Migrant, String)> {
+        let mut inbox = match self.inbox.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        inbox.drain(..).collect()
+    }
+
+    /// Migrants evicted by overflow so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Currently buffered migrants.
+    pub fn len(&self) -> usize {
+        match self.inbox.lock() {
+            Ok(g) => g.len(),
+            Err(p) => p.into_inner().len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 /// How elites are exchanged at a migration barrier.
@@ -150,6 +233,53 @@ mod tests {
         ] {
             assert!(p.routes(1, 0, &mut rng).is_empty());
         }
+    }
+
+    fn migrant(from: usize, commit: u64) -> Migrant {
+        Migrant {
+            from_island: from,
+            commit: CommitId(commit),
+            spec: KernelSpec::naive(),
+            score: Score { per_config: Vec::new(), failure: None },
+        }
+    }
+
+    #[test]
+    fn mailbox_drains_fifo() {
+        let mb = MigrantMailbox::new(4);
+        assert!(mb.is_empty());
+        mb.push(migrant(0, 10), "a".into());
+        mb.push(migrant(1, 11), "b".into());
+        assert_eq!(mb.len(), 2);
+        let got = mb.drain();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].0.commit, CommitId(10));
+        assert_eq!(got[0].1, "a");
+        assert_eq!(got[1].0.commit, CommitId(11));
+        assert!(mb.is_empty());
+        assert_eq!(mb.dropped(), 0);
+    }
+
+    #[test]
+    fn mailbox_overflow_drops_oldest() {
+        let mb = MigrantMailbox::new(2);
+        assert!(mb.push(migrant(0, 1), String::new()).is_none());
+        assert!(mb.push(migrant(0, 2), String::new()).is_none());
+        // Third push evicts the oldest (commit 1); the newcomer lands.
+        let evicted = mb.push(migrant(0, 3), String::new()).expect("evicts oldest");
+        assert_eq!(evicted.commit, CommitId(1));
+        assert_eq!(mb.dropped(), 1);
+        let kept: Vec<u64> = mb.drain().iter().map(|(m, _)| m.commit.0).collect();
+        assert_eq!(kept, vec![2, 3]);
+    }
+
+    #[test]
+    fn mailbox_capacity_floors_at_one() {
+        let mb = MigrantMailbox::new(0);
+        assert!(mb.push(migrant(0, 1), String::new()).is_none());
+        let evicted = mb.push(migrant(0, 2), String::new()).expect("capacity 1 evicts");
+        assert_eq!(evicted.commit, CommitId(1));
+        assert_eq!(mb.drain().len(), 1);
     }
 
     #[test]

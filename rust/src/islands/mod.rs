@@ -2,28 +2,37 @@
 //! sequential lineage (§3.3) to a population of concurrent lineages.
 //!
 //! * [`archipelago::Archipelago`] — N independent [`crate::evolution::Lineage`]s,
-//!   each driven by its own variation operator + supervisor on a worker
-//!   thread with a per-island PRNG stream derived from the run seed;
-//! * [`migration::MigrationPolicy`] — elites exchanged at epoch barriers
-//!   (ring / broadcast-best / random pairs, every K commits), fed into the
-//!   agent's existing crossover path so lineage consultation becomes
-//!   cross-island;
-//! * a shared content-addressed evaluation cache — now the generic
+//!   each driven by its own variation operator + supervisor with a
+//!   per-island PRNG stream derived from the run seed;
+//! * two **scheduling modes** ([`crate::coordinator::SchedulingMode`]):
+//!   - **barrier** (default): islands step under epoch barriers and
+//!     [`migration::MigrationPolicy`] exchanges elites with all worker
+//!     threads joined (ring / broadcast-best / random pairs, every K
+//!     commits).  Archives are byte-identical for every worker count —
+//!     the reference regime, pinned by the determinism suites;
+//!   - **steady-state** (`--steady-state`, [`steady`]): islands advance
+//!     independently on a shared worker pool and elites flow through
+//!     bounded, oldest-dropped [`migration::MigrantMailbox`]es drained at
+//!     commit points, so the slowest island never sets the pace.
+//!     Seed-deterministic only under `--island-workers 1`;
+//! * a shared content-addressed evaluation cache — the generic
 //!   [`crate::eval::CachedBackend`] layer (the sharded map itself lives in
 //!   [`crate::eval::cache`]; PR 1's `islands::EvalCache` path is kept as a
 //!   re-export) — so duplicate genomes proposed by different islands are
 //!   never re-simulated.
 //!
 //! The paper's own commit criterion and content-addressed store generalize
-//! directly: migrants pass through the same Update rule as any candidate,
-//! and cache hits are bit-identical to recomputation (evolution runs
-//! noise-free — the determinism contract spelled out in [`crate::eval`]),
-//! so results are reproducible regardless of worker count or thread
-//! scheduling.
+//! directly: migrants pass through the same Update rule as any candidate
+//! in both modes, and cache hits are bit-identical to recomputation
+//! (evolution runs noise-free — the determinism contract spelled out in
+//! [`crate::eval`]), so barrier-mode results are reproducible regardless
+//! of worker count or thread scheduling, and steady-state results are
+//! reproducible whenever scheduling order is fixed (one island worker).
 
 pub mod archipelago;
 pub mod migration;
+pub mod steady;
 
 pub use archipelago::{Archipelago, IslandReport};
 pub use crate::eval::EvalCache;
-pub use migration::{Migrant, MigrationPolicy};
+pub use migration::{Migrant, MigrantMailbox, MigrationPolicy};

@@ -1,0 +1,448 @@
+//! Steady-state island scheduling: barrier-free throughput mode.
+//!
+//! Instead of stepping every island under an epoch barrier (where the
+//! slowest island sets the pace), a shared pool of worker threads pulls
+//! islands off a work queue, runs each for one *quantum* — the same
+//! commit/step quota an epoch would have granted it — and pushes it back.
+//! Migration never synchronizes: at the end of a quantum that landed at
+//! least one commit, the island pushes its elite into its targets'
+//! bounded [`MigrantMailbox`]es (oldest-dropped on overflow), and every
+//! island drains its own mailbox at its commit points — at quantum start
+//! and again after each commit it lands.
+//!
+//! # Determinism contract
+//!
+//! With `--island-workers 1` the queue degrades to a serial FIFO: quanta,
+//! drains, and publishes happen in a fixed order, so archives are a pure
+//! function of (config, seed genome) — pinned by
+//! `rust/tests/steady_state.rs`.  With more workers, quantum interleaving
+//! (and therefore mailbox arrival order) depends on thread scheduling;
+//! steady-state trades that reproducibility for saturation.  Barrier mode
+//! ([`crate::coordinator::SchedulingMode::Barrier`], the default) remains
+//! the reference regime at any worker count.
+//!
+//! # Migration policies without barriers
+//!
+//! * `Ring` — island i mails its elite to island (i+1) mod N.
+//! * `BroadcastBest` — an island mails every sibling iff its own best
+//!   matches the fleet-wide best, tracked in a lock-free scoreboard of
+//!   geomean bits (`f64::to_bits` is monotonic for non-negative floats).
+//! * `RandomPairs` — one partner per publish, drawn from the island's own
+//!   migration PRNG stream (forked per island from the run's migration
+//!   stream, so the serial regime stays seed-deterministic).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::agent::AgentAction;
+use crate::coordinator::config::RunConfig;
+use crate::eval::EvalBackend;
+use crate::islands::archipelago::{Archipelago, Island};
+use crate::islands::migration::{Migrant, MigrantMailbox, MigrationPolicy};
+use crate::prng::Rng;
+use crate::telemetry::{Event, TelemetrySink};
+
+/// What the steady-state scheduler hands back to the archipelago.
+pub(crate) struct SteadyOutcome {
+    /// All islands, re-sorted by id (they finish in scheduling order).
+    pub(crate) islands: Vec<Island>,
+    /// Summed per-thread busy wall-clock (0 when run serially).
+    pub(crate) busy_ms: u64,
+    /// Run wall-clock x spawned threads (0 when run serially).
+    pub(crate) capacity_ms: u64,
+    /// Migrants evicted from full mailboxes across the whole run.
+    pub(crate) migrants_dropped: u64,
+}
+
+/// Shared context every quantum sees: mailboxes, the best-geomean
+/// scoreboard, and per-island completion flags (so publishers skip
+/// islands that can no longer drain).
+struct Shared<'a> {
+    cfg: &'a RunConfig,
+    sink: &'a Arc<dyn TelemetrySink>,
+    mailboxes: Vec<MigrantMailbox>,
+    /// `f64::to_bits` of each island's best geomean (monotonic max).
+    scoreboard: Vec<AtomicU64>,
+    done_flags: Vec<AtomicBool>,
+    base_quota: usize,
+}
+
+/// Drive `islands` to completion under steady-state scheduling.
+pub(crate) fn run(
+    arch: &Archipelago,
+    islands: Vec<Island>,
+    eval: &dyn EvalBackend,
+    sink: &Arc<dyn TelemetrySink>,
+    mig_rng: &mut Rng,
+    base_quota: usize,
+) -> SteadyOutcome {
+    let cfg = &arch.config;
+    let n = islands.len();
+    // Per-island migration streams, forked in index order from the run's
+    // migration stream: a pure function of the seed, independent of
+    // scheduling.
+    let rngs: Vec<Rng> = (0..n).map(|i| mig_rng.fork(i as u64)).collect();
+    let shared = Shared {
+        cfg,
+        sink,
+        mailboxes: (0..n)
+            .map(|_| MigrantMailbox::new(cfg.topology.mailbox_capacity))
+            .collect(),
+        scoreboard: islands
+            .iter()
+            .map(|isl| AtomicU64::new(isl.lineage.best_geomean().to_bits()))
+            .collect(),
+        done_flags: (0..n).map(|_| AtomicBool::new(false)).collect(),
+        base_quota,
+    };
+    let workers = arch.worker_count(n);
+
+    let (mut islands, busy_ms, capacity_ms) = if workers <= 1 || n <= 1 {
+        (run_serial(islands, rngs, eval, &shared), 0, 0)
+    } else {
+        run_parallel(islands, rngs, eval, &shared, workers)
+    };
+
+    islands.sort_by_key(|isl| isl.id);
+    let migrants_dropped = shared.mailboxes.iter().map(|m| m.dropped()).sum();
+    SteadyOutcome { islands, busy_ms, capacity_ms, migrants_dropped }
+}
+
+/// The deterministic degenerate case: one worker, plain FIFO over the
+/// islands.  No threads are spawned, so busy/capacity stay (0, 0) like
+/// the barrier scheduler's serial path.
+fn run_serial(
+    islands: Vec<Island>,
+    rngs: Vec<Rng>,
+    eval: &dyn EvalBackend,
+    shared: &Shared<'_>,
+) -> Vec<Island> {
+    let mut queue: VecDeque<(Island, Rng)> = islands.into_iter().zip(rngs).collect();
+    let mut finished = Vec::new();
+    while let Some((mut isl, mut rng)) = queue.pop_front() {
+        run_quantum(&mut isl, &mut rng, eval, shared);
+        if isl.done(shared.cfg) {
+            shared.done_flags[isl.id].store(true, Ordering::SeqCst);
+            finished.push(isl);
+        } else {
+            queue.push_back((isl, rng));
+        }
+    }
+    finished
+}
+
+/// The work-queue pool: `workers` threads pull islands, run one quantum,
+/// and push unfinished islands back.  A thread exits only when the queue
+/// is empty AND nothing is in flight (an in-flight island may come back),
+/// both checked under the same lock — so no island is ever stranded.
+/// Waiting threads sleep-spin rather than block on a condvar: the waits
+/// are rare (queue exhaustion near run end) and a missed wakeup could
+/// deadlock the scheduler.
+fn run_parallel(
+    islands: Vec<Island>,
+    rngs: Vec<Rng>,
+    eval: &dyn EvalBackend,
+    shared: &Shared<'_>,
+    workers: usize,
+) -> (Vec<Island>, u64, u64) {
+    struct QueueState {
+        queue: VecDeque<(Island, Rng)>,
+        in_flight: usize,
+    }
+    let state = Mutex::new(QueueState {
+        queue: islands.into_iter().zip(rngs).collect(),
+        in_flight: 0,
+    });
+    let finished: Mutex<Vec<Island>> = Mutex::new(Vec::new());
+    let busy_nanos = AtomicU64::new(0);
+    let run_start = Instant::now();
+    let mut spawned = 0u64;
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            spawned += 1;
+            let state = &state;
+            let finished = &finished;
+            let busy_nanos = &busy_nanos;
+            scope.spawn(move || loop {
+                let task = {
+                    let mut st = match state.lock() {
+                        Ok(g) => g,
+                        Err(p) => p.into_inner(),
+                    };
+                    match st.queue.pop_front() {
+                        Some(t) => {
+                            st.in_flight += 1;
+                            Some(t)
+                        }
+                        None if st.in_flight == 0 => return,
+                        None => None,
+                    }
+                };
+                let Some((mut isl, mut rng)) = task else {
+                    std::thread::sleep(Duration::from_micros(500));
+                    continue;
+                };
+                let quantum_start = Instant::now();
+                run_quantum(&mut isl, &mut rng, eval, shared);
+                busy_nanos.fetch_add(
+                    quantum_start.elapsed().as_nanos() as u64,
+                    Ordering::Relaxed,
+                );
+                let done = isl.done(shared.cfg);
+                if done {
+                    shared.done_flags[isl.id].store(true, Ordering::SeqCst);
+                    match finished.lock() {
+                        Ok(mut f) => f.push(isl),
+                        Err(p) => p.into_inner().push(isl),
+                    }
+                    let mut st = match state.lock() {
+                        Ok(g) => g,
+                        Err(p) => p.into_inner(),
+                    };
+                    st.in_flight -= 1;
+                } else {
+                    let mut st = match state.lock() {
+                        Ok(g) => g,
+                        Err(p) => p.into_inner(),
+                    };
+                    st.queue.push_back((isl, rng));
+                    st.in_flight -= 1;
+                }
+            });
+        }
+    });
+    let capacity_ms = (run_start.elapsed().as_millis() as u64) * spawned;
+    let busy_ms = busy_nanos.load(Ordering::Relaxed) / 1_000_000;
+    (finished.into_inner().unwrap_or_else(|p| p.into_inner()), busy_ms.min(capacity_ms), capacity_ms)
+}
+
+/// One quantum: drain the mailbox, advance the island to the same
+/// commit/step quota a barrier epoch would grant it (draining again after
+/// every commit it lands), then publish its elite and adapt its interval.
+///
+/// The stepping body deliberately mirrors the barrier scheduler's
+/// `run_island_epoch` — the two regimes must apply identical per-step
+/// accounting so metrics and traces stay comparable across modes.
+fn run_quantum(
+    isl: &mut Island,
+    rng: &mut Rng,
+    eval: &dyn EvalBackend,
+    shared: &Shared<'_>,
+) {
+    let cfg = shared.cfg;
+    let commit_quota = isl.migrate_every;
+    let step_quota = isl.migrate_every.saturating_mul(4);
+    let quantum_commit_start = isl.lineage.len();
+    let quantum_step_start = isl.steps;
+    {
+        let Island { id, lineage, operator, supervisor, metrics, interventions, steps, trace, .. } =
+            isl;
+        let island = *id;
+        drain_mailbox(island, lineage, operator, metrics, steps, shared);
+        while lineage.len() < cfg.target_commits + 1
+            && *steps < cfg.max_steps
+            && lineage.len() - quantum_commit_start < commit_quota
+            && *steps - quantum_step_start < step_quota
+        {
+            *steps += 1;
+            let step = *steps;
+            let outcome =
+                metrics.time("variation_step", || operator.step(lineage, eval, step));
+            for (name, stat) in &outcome.trace.stages {
+                metrics.record_duration(
+                    &format!("stage_{name}"),
+                    Duration::from_nanos(stat.nanos),
+                );
+            }
+            trace.merge(&outcome.trace);
+            metrics.incr("evaluations", outcome.evaluations as u64);
+            metrics.incr("eval_batches", outcome.trace.eval_batches);
+            metrics.incr("directions_explored", outcome.directions.len() as u64);
+            if let Some(commit) = outcome.committed {
+                metrics.incr("commits", 1);
+                if shared.sink.enabled() {
+                    shared.sink.publish(&Event::StepCommitted {
+                        island,
+                        step,
+                        commit: commit.0,
+                        geomean: lineage.best_geomean(),
+                    });
+                }
+                // A commit is a mailbox commit point: deliver anything
+                // that arrived while this island was stepping.
+                drain_mailbox(island, lineage, operator, metrics, steps, shared);
+            }
+            metrics.incr(
+                "repairs",
+                outcome
+                    .actions
+                    .iter()
+                    .filter(|a| matches!(a, AgentAction::Diagnose { .. }))
+                    .count() as u64,
+            );
+            if let Some(directive) = supervisor.observe(&outcome, lineage) {
+                metrics.incr("interventions", 1);
+                interventions.push(directive.note.clone());
+                if shared.sink.enabled() {
+                    shared.sink.publish(&Event::Intervention {
+                        island,
+                        note: directive.note.clone(),
+                    });
+                }
+                operator.apply_directive(&directive);
+            }
+        }
+    }
+    let committed = isl.lineage.len() > quantum_commit_start;
+    let n = shared.mailboxes.len();
+    if n > 1 {
+        // Keep the scoreboard fresh even on a commit-less quantum, then
+        // publish only landed progress.
+        shared.scoreboard[isl.id]
+            .fetch_max(isl.lineage.best_geomean().to_bits(), Ordering::SeqCst);
+        if committed {
+            publish_elite(isl, rng, shared);
+        }
+        if cfg.topology.adaptive_migration && !isl.done(cfg) {
+            adapt_interval(isl, shared.base_quota, cfg.topology.adaptive_stall_epochs);
+        }
+    }
+}
+
+/// Deliver every buffered migrant to this island, oldest first, through
+/// the same Update rule barrier migration uses: a migrant that strictly
+/// beats the island's best is committed; every migrant (accepted or not)
+/// lands in the operator's crossover pool.
+fn drain_mailbox(
+    island: usize,
+    lineage: &mut crate::evolution::Lineage,
+    operator: &mut Box<dyn crate::agent::VariationOperator + Send>,
+    metrics: &mut crate::coordinator::metrics::Metrics,
+    steps: &usize,
+    shared: &Shared<'_>,
+) {
+    let inbox = shared.mailboxes[island].drain();
+    if inbox.is_empty() {
+        return;
+    }
+    let received = inbox.len();
+    let mut accepted_total = 0usize;
+    for (migrant, donor_message) in inbox {
+        let src = migrant.from_island;
+        let strictly_better =
+            migrant.score.geomean() > lineage.best_geomean() * (1.0 + 1e-12);
+        let mut accepted = false;
+        if strictly_better {
+            let message = format!(
+                "migrant from island {src} (commit {}): {donor_message}",
+                migrant.commit
+            );
+            if lineage
+                .update(migrant.spec.clone(), migrant.score.clone(), &message, *steps)
+                .is_ok()
+            {
+                metrics.incr("migrants_accepted", 1);
+                accepted = true;
+                accepted_total += 1;
+            }
+        }
+        operator.receive_migrants(&[migrant]);
+        metrics.incr("migrants_received", 1);
+        if shared.sink.enabled() {
+            // `epoch` reports the receiver's committed progress: steady
+            // state has no global epochs, only per-island commit counts.
+            shared.sink.publish(&Event::Migration {
+                epoch: lineage.len().saturating_sub(1),
+                from: src,
+                to: island,
+                accepted,
+            });
+        }
+    }
+    if shared.sink.enabled() {
+        shared.sink.publish(&Event::MailboxDrained {
+            island,
+            received,
+            accepted: accepted_total,
+        });
+    }
+}
+
+/// Push this island's elite into its policy targets' mailboxes.
+fn publish_elite(isl: &Island, rng: &mut Rng, shared: &Shared<'_>) {
+    let n = shared.mailboxes.len();
+    let i = isl.id;
+    let Some(donor) = isl.lineage.best() else { return };
+    let targets: Vec<usize> = match shared.cfg.topology.migration {
+        MigrationPolicy::Ring => vec![(i + 1) % n],
+        MigrationPolicy::BroadcastBest => {
+            let own = shared.scoreboard[i].load(Ordering::SeqCst);
+            let fleet_best = shared
+                .scoreboard
+                .iter()
+                .map(|s| s.load(Ordering::SeqCst))
+                .max()
+                .unwrap_or(0);
+            if own >= fleet_best {
+                (0..n).filter(|&j| j != i).collect()
+            } else {
+                Vec::new()
+            }
+        }
+        MigrationPolicy::RandomPairs => {
+            // One partner per publish; `below` needs n >= 2 (guaranteed:
+            // publish is only reached when n > 1).
+            let mut j = rng.below(n - 1);
+            if j >= i {
+                j += 1;
+            }
+            vec![j]
+        }
+    };
+    for j in targets {
+        if shared.done_flags[j].load(Ordering::SeqCst) {
+            continue; // a finished island will never drain again
+        }
+        let migrant = Migrant {
+            from_island: i,
+            commit: donor.id,
+            spec: donor.spec.clone(),
+            score: donor.score.clone(),
+        };
+        let evicted = shared.mailboxes[j].push(migrant, donor.message.clone());
+        if shared.sink.enabled() {
+            shared.sink.publish(&Event::MigrantBuffered { island: j, from: i });
+            if let Some(old) = evicted {
+                shared
+                    .sink
+                    .publish(&Event::MigrantDropped { island: j, from: old.from_island });
+            }
+        }
+    }
+}
+
+/// Per-island adaptive migration interval (the steady-state analogue of
+/// the barrier scheduler's `adapt_intervals`): "stalled" is measured in
+/// this island's own quanta — windows of `migrate_every` committed steps
+/// — never in global epochs, which no longer exist here.
+fn adapt_interval(isl: &mut Island, base_quota: usize, stall_after: usize) {
+    let stall_after = stall_after.max(1);
+    let best = isl.lineage.best_geomean();
+    if best > isl.best_at_barrier * (1.0 + 1e-12) {
+        isl.stall_epochs = 0;
+        if isl.migrate_every < base_quota {
+            isl.migrate_every = base_quota;
+            isl.metrics.incr("migration_interval_restores", 1);
+        }
+    } else {
+        isl.stall_epochs += 1;
+        if isl.stall_epochs >= stall_after && isl.migrate_every > 1 {
+            isl.migrate_every = (isl.migrate_every / 2).max(1);
+            isl.metrics.incr("migration_interval_halvings", 1);
+            isl.stall_epochs = 0;
+        }
+    }
+    isl.best_at_barrier = best;
+}

@@ -32,15 +32,26 @@
 //!   config.  *Thread tier* ([`islands`]): N concurrent lineages with
 //!   per-island PRNG streams and elite migration (ring / broadcast-best /
 //!   random pairs, with optional adaptive intervals for stalled islands);
-//!   the paper's sequential regime is the one-island special case.
+//!   the paper's sequential regime is the one-island special case.  Two
+//!   scheduling modes ([`coordinator::SchedulingMode`]): **barrier** (the
+//!   default) steps islands under epoch barriers — archives are
+//!   byte-identical at every worker count — and **steady-state**
+//!   (`--steady-state`, [`islands::steady`]) lets islands free-run on a
+//!   shared worker pool with elites flowing through bounded,
+//!   oldest-dropped [`islands::MigrantMailbox`]es, so one slow island (or
+//!   one slow eval round) never stalls the rest; seed-deterministic with
+//!   `--island-workers 1`.
 //!   *Process tier* ([`eval::remote`]): `avo eval-worker` processes absorb
 //!   `evaluate_batch` traffic over a zero-dependency length-prefixed JSON
 //!   TCP protocol — self-spawned (`--remote-workers <n>`) or attached
 //!   across machines (`--connect host:port,...`), handshake-checked on
 //!   `suite_tag ^ MachineSpec::fingerprint()`, with in-flight requeue when
-//!   a worker dies mid-batch.  Remote archives are byte-identical to
+//!   a worker dies mid-batch and a work-stealing dispatch queue
+//!   (oversplit chunks, home-worker affinity) that keeps fast workers fed
+//!   while a straggler finishes.  Remote archives are byte-identical to
 //!   in-process archives (pinned by `rust/tests/remote_eval.rs`, including
-//!   a mid-run worker kill).
+//!   a mid-run worker kill; `benches/archipelago_steadystate.rs` measures
+//!   the idle-fraction win under injected latency skew).
 //! * **Evaluation subsystem** ([`eval`]) — the batched [`eval::EvalBackend`]
 //!   seam every scoring-function call goes through: [`eval::SimBackend`]
 //!   (the simulator, with worker fan-out for batches),

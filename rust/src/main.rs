@@ -35,7 +35,7 @@
 
 use std::path::PathBuf;
 
-use avo::coordinator::{config::OperatorKind, EvolutionDriver, RunConfig};
+use avo::coordinator::{config::OperatorKind, EvolutionDriver, RunConfig, SchedulingMode};
 use avo::evolution::Lineage;
 use avo::islands::MigrationPolicy;
 use avo::kernelspec::KernelSpec;
@@ -53,6 +53,11 @@ fn usage() -> ! {
          \u{20}         --operators OP[,OP...]  (heterogeneous islands, round-robin)\n\
          \u{20}         --islands N --migration ring|broadcast_best|random_pairs\n\
          \u{20}         --migrate-every K --island-workers N\n\
+         \u{20}         --barrier | --steady-state  (island scheduling mode;\n\
+         \u{20}          barrier epochs are the byte-pinned default, steady-state\n\
+         \u{20}          lets islands free-run with mailbox migration)\n\
+         \u{20}         --mailbox-capacity N  (steady-state migrant inbox bound,\n\
+         \u{20}          oldest dropped on overflow; default 8)\n\
          \u{20}         --remote-workers N  (self-spawn N eval-worker processes)\n\
          \u{20}         --connect HOST:PORT[,HOST:PORT...]  (attach external workers)\n\
          \u{20}         --adaptive-migration --adaptive-stall-epochs K\n\
@@ -183,6 +188,17 @@ fn main() -> Result<(), CliError> {
             }
             if let Some(k) = flags.parse_strict("--adaptive-stall-epochs")? {
                 cfg.topology.adaptive_stall_epochs = k;
+            }
+            if flags.has("--steady-state") {
+                if flags.has("--barrier") {
+                    return Err("--steady-state and --barrier are mutually exclusive".into());
+                }
+                cfg.topology.scheduling = SchedulingMode::SteadyState;
+            } else if flags.has("--barrier") {
+                cfg.topology.scheduling = SchedulingMode::Barrier;
+            }
+            if let Some(c) = flags.parse_strict::<usize>("--mailbox-capacity")? {
+                cfg.topology.mailbox_capacity = c.max(1);
             }
             if let Some(path) = flags.get("--journal") {
                 cfg.telemetry.journal = Some(PathBuf::from(path));

@@ -31,7 +31,12 @@
 //! | `worker_timeout`   | `worker`, `addr`                         | `addr`          | remote backend |
 //! | `worker_died`      | `worker`, `addr`, `requeued`, `error`    | `addr`, `error` | remote backend |
 //! | `fallback_local`   | `specs`                                  | —               | remote backend |
+//! | `chunk_stolen`     | `worker`, `specs`                        | —               | remote backend |
+//! | `queue_depth`      | `depth`                                  | —               | remote backend |
 //! | `migration`        | `epoch`, `from`, `to`, `accepted`        | —               | archipelago |
+//! | `migrant_buffered` | `island`, `from`                         | —               | steady scheduler |
+//! | `migrant_dropped`  | `island`, `from`                         | —               | steady scheduler |
+//! | `mailbox_drained`  | `island`, `received`, `accepted`         | —               | steady scheduler |
 //! | `intervention`     | `island`, `note`                         | —               | supervisor site |
 //! | `run_finished`     | `commits`, `best_geomean`, `steps`       | —               | archipelago |
 //!
@@ -81,7 +86,12 @@ pub enum Event {
     WorkerTimeout { worker: usize, addr: String },
     WorkerDied { worker: usize, addr: String, requeued: usize, error: String },
     FallbackLocal { specs: usize },
+    ChunkStolen { worker: usize, specs: usize },
+    QueueDepth { depth: usize },
     Migration { epoch: usize, from: usize, to: usize, accepted: bool },
+    MigrantBuffered { island: usize, from: usize },
+    MigrantDropped { island: usize, from: usize },
+    MailboxDrained { island: usize, received: usize, accepted: usize },
     Intervention { island: usize, note: String },
     RunFinished { commits: usize, best_geomean: f64, steps: usize },
 }
@@ -109,7 +119,12 @@ impl Event {
             Event::WorkerTimeout { .. } => "worker_timeout",
             Event::WorkerDied { .. } => "worker_died",
             Event::FallbackLocal { .. } => "fallback_local",
+            Event::ChunkStolen { .. } => "chunk_stolen",
+            Event::QueueDepth { .. } => "queue_depth",
             Event::Migration { .. } => "migration",
+            Event::MigrantBuffered { .. } => "migrant_buffered",
+            Event::MigrantDropped { .. } => "migrant_dropped",
+            Event::MailboxDrained { .. } => "mailbox_drained",
             Event::Intervention { .. } => "intervention",
             Event::RunFinished { .. } => "run_finished",
         }
@@ -161,6 +176,22 @@ impl Event {
             }
             Event::FallbackLocal { specs } => {
                 fields.push(("specs", num(*specs as f64)));
+            }
+            Event::ChunkStolen { worker, specs } => {
+                fields.push(("worker", num(*worker as f64)));
+                fields.push(("specs", num(*specs as f64)));
+            }
+            Event::QueueDepth { depth } => {
+                fields.push(("depth", num(*depth as f64)));
+            }
+            Event::MigrantBuffered { island, from } | Event::MigrantDropped { island, from } => {
+                fields.push(("island", num(*island as f64)));
+                fields.push(("from", num(*from as f64)));
+            }
+            Event::MailboxDrained { island, received, accepted } => {
+                fields.push(("island", num(*island as f64)));
+                fields.push(("received", num(*received as f64)));
+                fields.push(("accepted", num(*accepted as f64)));
             }
             Event::Migration { epoch, from, to, accepted } => {
                 fields.push(("epoch", num(*epoch as f64)));
@@ -522,7 +553,12 @@ mod tests {
                 error: "recv: timed out".into(),
             },
             Event::FallbackLocal { specs: 5 },
+            Event::ChunkStolen { worker: 1, specs: 4 },
+            Event::QueueDepth { depth: 7 },
             Event::Migration { epoch: 2, from: 0, to: 1, accepted: true },
+            Event::MigrantBuffered { island: 2, from: 1 },
+            Event::MigrantDropped { island: 2, from: 0 },
+            Event::MailboxDrained { island: 2, received: 2, accepted: 1 },
             Event::Intervention { island: 0, note: "stall".into() },
             Event::RunFinished { commits: 12, best_geomean: 800.5, steps: 240 },
         ]

@@ -221,6 +221,15 @@ impl TelemetrySink for MetricsHub {
                 // Fleet health reads RemoteStats directly (authoritative).
             }
             Event::FallbackLocal { specs } => state.fallback_specs += *specs as u64,
+            Event::ChunkStolen { .. } | Event::QueueDepth { .. } => {
+                // Dispatch-queue health reads RemoteStats directly.
+            }
+            Event::MigrantBuffered { .. }
+            | Event::MigrantDropped { .. }
+            | Event::MailboxDrained { .. } => {
+                // Mailbox traffic folds into `migration` events at drain
+                // time; the snapshot keys off those.
+            }
             Event::Migration { accepted, .. } => {
                 state.migrations += 1;
                 if *accepted {
