@@ -15,7 +15,7 @@ use avo::eval::remote::WorkerOptions;
 fn usage() -> ! {
     eprintln!(
         "usage: eval_worker --workload {} [--listen ADDR] [--once] \
-         [--eval-workers N] [--fail-after N]\n\
+         [--eval-workers N] [--fail-after N] [--remote-secret TOKEN]\n\
          \n\
          --workload SPEC   registered workload to score against (default mha);\n\
          \u{20}                 must match the coordinator's or the handshake rejects\n\
@@ -23,6 +23,9 @@ fn usage() -> ! {
          \u{20}                 printed as 'AVO_WORKER_LISTENING <addr>')\n\
          --once            exit after the first connection closes\n\
          --eval-workers N  threads for in-worker batch fan-out (0 = all cores)\n\
+         --remote-secret TOKEN  shared handshake secret; coordinators that\n\
+         \u{20}                 don't present it are rejected (env\n\
+         \u{20}                 AVO_REMOTE_SECRET is the fallback)\n\
          --fail-after N    fault injection: drop the connection after N eval\n\
          \u{20}                 frames (test suites only)",
         avo::workload::KNOWN.join("|")
@@ -58,6 +61,9 @@ fn main() {
             Err(_) => usage(),
         }
     }
+    opts.secret = get("--remote-secret")
+        .map(str::to_string)
+        .or_else(|| std::env::var("AVO_REMOTE_SECRET").ok().filter(|s| !s.is_empty()));
     if args.iter().any(|a| a == "--help" || a == "-h") {
         usage();
     }

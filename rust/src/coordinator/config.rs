@@ -260,6 +260,14 @@ impl RunConfig {
                 "remote_read_timeout_ms" => {
                     cfg.topology.remote.read_timeout_ms = v.parse().map_err(|e| bad(&e))?
                 }
+                "remote_secret" => cfg.topology.remote.secret = Some(v.to_string()),
+                "remote_gossip" => {
+                    cfg.topology.remote.gossip = v.parse().map_err(|e| bad(&e))?
+                }
+                "remote_reattach_cooldown_ms" => {
+                    cfg.topology.remote.reattach_cooldown_ms =
+                        v.parse().map_err(|e| bad(&e))?
+                }
                 "inner_budget" => cfg.agent.inner_budget = v.parse().map_err(|e| bad(&e))?,
                 "repair_budget" => cfg.agent.repair_budget = v.parse().map_err(|e| bad(&e))?,
                 "speculative_repair" => {
@@ -543,6 +551,26 @@ mod tests {
         assert!(RunConfig::parse("connect = hostA:76x4\n").is_err());
         assert!(RunConfig::parse("connect = :7654\n").is_err());
         assert!(RunConfig::parse("connect = [::1]:7654\n").is_ok());
+    }
+
+    #[test]
+    fn parse_cache_fabric_keys() {
+        let cfg = RunConfig::parse(
+            "remote_secret = hunter2\n\
+             remote_gossip = false\n\
+             remote_reattach_cooldown_ms = 1500\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.topology.remote.secret.as_deref(), Some("hunter2"));
+        assert!(!cfg.topology.remote.gossip);
+        assert_eq!(cfg.topology.remote.reattach_cooldown_ms, 1500);
+        // Fabric defaults: gossip on, no secret, throttled re-attach.
+        let defaults = RunConfig::default().topology.remote;
+        assert!(defaults.gossip);
+        assert!(defaults.secret.is_none());
+        assert!(defaults.reattach_cooldown_ms > 0);
+        assert!(RunConfig::parse("remote_gossip = sideways\n").is_err());
+        assert!(RunConfig::parse("remote_reattach_cooldown_ms = soon\n").is_err());
     }
 
     #[test]

@@ -126,6 +126,17 @@ impl RunReport {
             if stolen > 0 {
                 s.push_str(&format!(", {stolen} chunks stolen"));
             }
+            // Fleet cache fabric: evaluations the worker-side caches
+            // absorbed (gossip fan-out, snapshot warm-up, requeued
+            // re-sends) instead of re-simulating.
+            let saved = self.metrics.counter("remote_dedup_saved");
+            if saved > 0 {
+                s.push_str(&format!(", fleet dedup saved {saved}"));
+            }
+            let reattached = self.metrics.counter("remote_reattaches");
+            if reattached > 0 {
+                s.push_str(&format!(", {reattached} re-attached"));
+            }
             // Fleet saturation: what fraction of worker-time no round-trip
             // occupied.  Capacity is run wall-clock x fleet size.
             let capacity = self.metrics.counter("remote_capacity_ms");

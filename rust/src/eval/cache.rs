@@ -203,6 +203,20 @@ impl EvalCache {
         fresh
     }
 
+    /// Union-merge externally computed entries (gossiped fabric deltas or
+    /// a re-attach snapshot) into the cache, returning how many were new.
+    /// Keys are content-addressed and scores are pure, so two entries with
+    /// the same key always carry the same score: first-write-wins equals
+    /// last-write-wins, and merging is commutative, associative, and
+    /// idempotent — deltas may arrive in any order, any number of times.
+    /// Counts nothing (a merged entry is neither a hit nor a miss).
+    pub fn merge_entries(&self, entries: &[(u64, Score)]) -> usize {
+        entries
+            .iter()
+            .filter(|(k, s)| self.insert(*k, s.clone()))
+            .count()
+    }
+
     /// Peek without computing or counting.
     pub fn get(&self, key: u64) -> Option<Score> {
         self.shard(key).lock().unwrap().get(&key).cloned()
@@ -305,6 +319,54 @@ mod tests {
         assert_eq!(cache.hits(), 1);
         assert_eq!(cache.misses(), 1);
         assert_eq!(cache.len(), 1);
+    }
+
+    /// The gossip-fabric correctness property: union-merging the same
+    /// delta set in any order, partitioning, or duplication yields the
+    /// same cache state — so the coordinator never has to sequence
+    /// deltas arriving from racing workers.
+    #[test]
+    fn merge_entries_is_order_and_duplication_insensitive() {
+        let eval = Evaluator::new(mha_suite());
+        let score = |bq: u32| {
+            let mut s = KernelSpec::naive();
+            s.block_q = bq;
+            eval.evaluate(&s)
+        };
+        let deltas: Vec<(u64, Score)> =
+            (0..8u64).map(|i| (i * 0x9E37_79B9, score(16 << (i % 3)))).collect();
+        // Reference: one in-order merge.
+        let reference = EvalCache::new(4);
+        assert_eq!(reference.merge_entries(&deltas), deltas.len());
+        let want = reference.snapshot();
+        // A deterministic xorshift drives shuffles and re-delivery (no
+        // std RNG in this crate).
+        let mut state = 0x1234_5678_9ABC_DEF0u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for _ in 0..16 {
+            let mut shuffled = deltas.clone();
+            for i in (1..shuffled.len()).rev() {
+                shuffled.swap(i, (next() % (i as u64 + 1)) as usize);
+            }
+            // Duplicate a random prefix (re-delivered gossip) and split
+            // into two batches merged separately.
+            let dup = (next() % shuffled.len() as u64) as usize;
+            let mut replayed = shuffled[..dup].to_vec();
+            replayed.extend(shuffled.iter().cloned());
+            let split = (next() % (replayed.len() as u64 + 1)) as usize;
+            let cache = EvalCache::new(4);
+            let fresh =
+                cache.merge_entries(&replayed[..split]) + cache.merge_entries(&replayed[split..]);
+            assert_eq!(fresh, deltas.len(), "every key fresh exactly once");
+            assert_eq!(cache.snapshot(), want, "state independent of delivery");
+            assert_eq!(cache.hits(), 0, "merges are counter-silent");
+            assert_eq!(cache.misses(), 0);
+        }
     }
 
     #[test]

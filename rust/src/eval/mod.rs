@@ -24,12 +24,18 @@
 //! * [`RemoteBackend`] — the process-level tier: fans `evaluate_batch`
 //!   out over a length-prefixed JSON TCP protocol to `avo eval-worker`
 //!   processes (self-spawned via `--remote-workers <n>` or attached via
-//!   `--connect host:port,...`), each hosting its own simulator stack and
-//!   handshake-checked against the coordinator's cache fingerprint.
-//!   Multi-chunk batches are oversplit into a shared work-stealing
-//!   dispatch queue so fast workers steal chunks a slow worker would
-//!   otherwise serialize.  See [`remote`] for the wire format, handshake,
-//!   stealing, and requeue semantics;
+//!   `--connect host:port,...`), each hosting its own `Cached<Sim>`
+//!   stack and handshake-checked against the coordinator's cache
+//!   fingerprint (optionally under a shared-secret token).  Multi-chunk
+//!   batches are oversplit into a shared work-stealing dispatch queue so
+//!   fast workers steal chunks a slow worker would otherwise serialize.
+//!   Freshly computed entries gossip back piggybacked on `scores`
+//!   frames; the coordinator's fabric ledger fans them out to the other
+//!   workers on later `eval` frames, so a spec computed anywhere in the
+//!   fleet is never re-simulated — and a worker that dies and comes back
+//!   on the same endpoint is re-attached and re-warmed from that ledger.
+//!   See [`remote`] for the wire format, handshake/auth, gossip,
+//!   stealing, re-attach, and requeue semantics;
 //! * [`SkewBackend`] — a latency-skew injection layer (per-calling-thread
 //!   delay multipliers) for saturation experiments; scores pass through
 //!   untouched.

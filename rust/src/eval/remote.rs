@@ -16,12 +16,20 @@
 //!
 //! | direction | message | fields |
 //! |-----------|---------|--------|
-//! | c → w | `hello`    | `protocol`, `fingerprint` (16-hex cache tag), `workload` |
-//! | w → c | `hello`    | `protocol`, `fingerprint`, `workload`, `pid` |
-//! | c → w | `eval`     | `specs`: array of [`KernelSpec`] JSON |
-//! | w → c | `scores`   | `scores`: array of [`Score`] JSON, one per spec, in order |
+//! | c → w | `hello`    | `protocol`, `protocol_max`, `fingerprint` (16-hex cache tag), `workload`, `gossip`, `token`? |
+//! | w → c | `hello`    | `protocol` (negotiated), `fingerprint`, `workload`, `pid`, `token`? |
+//! | c → w | `eval`     | `specs`: array of [`KernelSpec`] JSON; `deltas`?: gossiped cache entries |
+//! | w → c | `scores`   | `scores`: array of [`Score`] JSON, one per spec, in order; `cache_hits`?, `cache_misses`?, `deltas`? |
+//! | c → w | `cache`    | `entries`: cache snapshot shipped after a re-attach (no reply) |
 //! | c → w | `shutdown` | — (worker closes the connection) |
 //! | either | `error`   | `message` |
+//!
+//! Fields marked `?` are the protocol-2 extensions; a v1 peer never sends
+//! them and ignores them if present.  The coordinator's `protocol` field
+//! stays pinned at the v1 baseline (v1 workers require an exact match);
+//! `protocol_max` advertises the newest version the coordinator speaks and
+//! the worker's reply `protocol` is the negotiated version for the
+//! connection.
 //!
 //! # Handshake
 //!
@@ -33,6 +41,45 @@
 //! worker is rejected at attach time instead of silently corrupting
 //! scores; the coordinator double-checks the fingerprint echoed in the
 //! worker's `hello` as a defense in depth.
+//!
+//! With a shared secret configured (`--remote-secret` /
+//! `AVO_REMOTE_SECRET`) the hello additionally carries an [`auth_token`] —
+//! FNV-1a (the same primitive as [`KernelSpec::content_hash`]) over the
+//! secret bytes mixed with the handshake fingerprint, so a captured token
+//! does not replay across workloads or machine models.  A worker holding a
+//! secret rejects any hello whose token is wrong or missing, and echoes a
+//! complement-keyed token of its own so a secret-bearing coordinator
+//! symmetrically rejects impostor workers.  Secrets require protocol-2
+//! peers on both ends; a worker without a secret ignores tokens.
+//!
+//! # Fleet cache fabric (protocol 2)
+//!
+//! Every worker hosts its own `Cached<Sim>` stack, so the fleet — not the
+//! coordinator — owns deduplication.  Per `eval` frame the worker reports
+//! how many specs it served from cache (`cache_hits`, accumulated into
+//! [`RemoteStats::dedup_saved`]) versus actually simulated
+//! (`cache_misses`), and piggybacks its freshly computed entries on the
+//! `scores` reply as content-addressed `(genome_hash ^ cache_tag) → Score`
+//! deltas.  The coordinator union-merges incoming deltas into a fabric
+//! ledger and fans the accumulated log out to the *other* workers on
+//! subsequent `eval` frames, so a score computed once anywhere stops being
+//! recomputed everywhere.  Merging is a set union of deterministic values
+//! — delta ordering, duplication, and loss never matter (a lost delta only
+//! costs a recomputation).  Gossip is strictly observational: scores are
+//! pure functions of the spec, so archives stay byte-identical with the
+//! fabric on, off, or degraded.
+//!
+//! # Re-attach
+//!
+//! External (`--connect`) endpoints outlive transient failures: the
+//! coordinator keeps every address it attached, and at each batch start
+//! retries dead external workers (throttled by
+//! [`RemoteTopology::reattach_cooldown_ms`]), replaying the full handshake
+//! and shipping the fabric ledger as `cache` snapshot frames so a rejoined
+//! worker is warm immediately.  Re-attach is purely capacity-restoring —
+//! the requeue determinism contract already guarantees results are
+//! unaffected.  Self-spawned `--once` workers exit on failure and are
+//! never retried.
 //!
 //! # Requeue semantics
 //!
@@ -63,6 +110,7 @@
 //! coordinator's local simulator: workers exist to absorb `evaluate_batch`
 //! throughput, and the local stack is bit-identical by construction.
 
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -72,15 +120,21 @@ use std::sync::{mpsc, Arc, Mutex};
 
 use std::time::{Duration, Instant};
 
-use crate::eval::{EvalBackend, SimBackend};
+use crate::eval::{CachedBackend, EvalBackend, SimBackend};
 use crate::json::{parse, FromJson, Json, ToJson};
 use crate::kernelspec::KernelSpec;
 use crate::score::{BenchConfig, Evaluator, Score};
 use crate::sim::pipeline::CycleReport;
 use crate::telemetry::{Event, Histogram, NullSink, TelemetrySink};
 
-/// Wire protocol version; bumped on any incompatible frame change.
-pub const PROTOCOL_VERSION: u64 = 1;
+/// Newest wire protocol version this build speaks (2 = fleet cache
+/// fabric: gossip deltas, snapshot frames, handshake auth tokens).
+pub const PROTOCOL_VERSION: u64 = 2;
+
+/// The v1 baseline every coordinator hello pins its `protocol` field to —
+/// v1 workers require an exact match, so compatibility rides on additive
+/// fields (`protocol_max`, `gossip`, `token`) that v1 never reads.
+pub const BASE_PROTOCOL: u64 = 1;
 
 /// Upper bound on a single frame (a batch of a few hundred genomes is
 /// ~100 KiB; anything near this limit is a framing bug, not a workload).
@@ -94,6 +148,15 @@ pub const LISTEN_LINE_PREFIX: &str = "AVO_WORKER_LISTENING ";
 /// Default coordinator-side socket read deadline per chunk round-trip
 /// (see [`RemoteTopology::read_timeout_ms`]).
 pub const DEFAULT_READ_TIMEOUT_MS: u64 = 120_000;
+
+/// Default throttle between re-attach attempts per dead external worker
+/// (see [`RemoteTopology::reattach_cooldown_ms`]).
+pub const DEFAULT_REATTACH_COOLDOWN_MS: u64 = 500;
+
+/// Cache-snapshot frames shipped on re-attach carry at most this many
+/// entries each, keeping every frame far under [`MAX_FRAME_BYTES`] even
+/// for week-long ledgers.
+const SNAPSHOT_CHUNK_ENTRIES: usize = 4096;
 
 // ---------------------------------------------------------------------------
 // Framing
@@ -144,17 +207,85 @@ fn error_frame(message: String) -> Json {
     ])
 }
 
-fn hello_frame(tag: u64, workload: &str, pid: Option<u32>) -> Json {
+/// Coordinator → worker greeting.  `protocol` stays pinned at
+/// [`BASE_PROTOCOL`] so v1 workers (which require an exact match) still
+/// attach; `protocol_max` advertises the newest version the coordinator
+/// speaks.
+fn coordinator_hello(tag: u64, workload: &str, gossip: bool, token: Option<u64>) -> Json {
     let mut entries = vec![
         ("type", Json::Str("hello".into())),
-        ("protocol", PROTOCOL_VERSION.to_json()),
+        ("protocol", BASE_PROTOCOL.to_json()),
+        ("protocol_max", PROTOCOL_VERSION.to_json()),
         ("fingerprint", Json::Str(format!("{tag:016x}"))),
         ("workload", Json::Str(workload.to_string())),
+        ("gossip", Json::Bool(gossip)),
     ];
-    if let Some(pid) = pid {
-        entries.push(("pid", pid.to_json()));
+    if let Some(token) = token {
+        entries.push(("token", Json::Str(format!("{token:016x}"))));
     }
     Json::obj(entries)
+}
+
+/// Worker → coordinator reply: `protocol` is the negotiated version for
+/// this connection (min of the coordinator's `protocol_max` and ours).
+fn worker_hello(tag: u64, workload: &str, negotiated: u64, token: Option<u64>) -> Json {
+    let mut entries = vec![
+        ("type", Json::Str("hello".into())),
+        ("protocol", negotiated.to_json()),
+        ("fingerprint", Json::Str(format!("{tag:016x}"))),
+        ("workload", Json::Str(workload.to_string())),
+        ("pid", std::process::id().to_json()),
+    ];
+    if let Some(token) = token {
+        entries.push(("token", Json::Str(format!("{token:016x}"))));
+    }
+    Json::obj(entries)
+}
+
+/// Shared-secret handshake token: FNV-1a (the genome-hash primitive,
+/// [`KernelSpec::content_hash`]'s construction) over the secret bytes,
+/// then over the handshake fingerprint, so a captured token does not
+/// replay across workloads or machine models.  The worker's echoed token
+/// keys off the complemented fingerprint so a reply is never a reflection
+/// of the request.
+pub fn auth_token(secret: &str, fingerprint: u64) -> u64 {
+    let h = crate::score::fnv1a(0xcbf29ce484222325, secret.as_bytes());
+    crate::score::fnv1a(h, &fingerprint.to_le_bytes())
+}
+
+/// Encode content-addressed cache entries for the wire (`deltas` /
+/// `entries` fields): `[{key: "<16-hex>", score: <Score JSON>}, ...]`,
+/// mirroring the persisted `eval_cache.json` entry shape.
+fn entries_json(entries: &[(u64, Score)]) -> Json {
+    Json::arr(entries.iter().map(|(k, s)| {
+        Json::obj([
+            ("key", Json::Str(format!("{k:016x}"))),
+            ("score", s.to_json()),
+        ])
+    }))
+}
+
+/// Decode a wire entry list from `frame[field]`; a missing field is an
+/// empty list (v1 peers never send one).
+fn parse_entries(frame: &Json, field: &str) -> Result<Vec<(u64, Score)>, String> {
+    let Some(arr) = frame.get(field).and_then(Json::as_arr) else {
+        return Ok(Vec::new());
+    };
+    arr.iter()
+        .map(|e| {
+            let hex = e
+                .get("key")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("{field} entry missing key"))?;
+            let key = u64::from_str_radix(hex, 16)
+                .map_err(|_| format!("bad {field} key '{hex}'"))?;
+            let score = e
+                .get("score")
+                .ok_or_else(|| format!("{field} entry missing score"))
+                .and_then(Score::from_json)?;
+            Ok((key, score))
+        })
+        .collect()
 }
 
 fn fingerprint_of(frame: &Json) -> Result<u64, String> {
@@ -194,6 +325,10 @@ pub struct WorkerOptions {
     /// Worker threads for fanning out a batch inside this process
     /// (0 = machine parallelism).
     pub eval_workers: usize,
+    /// Shared handshake secret (`--remote-secret` / `AVO_REMOTE_SECRET`):
+    /// when set, hellos whose [`auth_token`] is wrong or missing are
+    /// rejected; when unset, tokens are ignored.
+    pub secret: Option<String>,
 }
 
 impl Default for WorkerOptions {
@@ -205,6 +340,7 @@ impl Default for WorkerOptions {
             fail_after: None,
             stall_after: None,
             eval_workers: 0,
+            secret: None,
         }
     }
 }
@@ -220,35 +356,22 @@ pub fn run_worker(opts: &WorkerOptions) -> Result<(), String> {
     // Stdout is line-buffered, so the coordinator's pipe read sees this
     // immediately.
     println!("{LISTEN_LINE_PREFIX}{local}");
-    serve(
-        listener,
-        &eval,
-        &opts.workload,
-        opts.once,
-        opts.fail_after,
-        opts.stall_after,
-        opts.eval_workers,
-    )
+    serve(listener, &eval, opts)
 }
 
-/// Serve eval connections on an already-bound listener (tests host this
-/// on a thread to exercise the protocol without process spawning).
-#[allow(clippy::too_many_arguments)]
-pub fn serve(
-    listener: TcpListener,
-    eval: &Evaluator,
-    workload_name: &str,
-    once: bool,
-    fail_after: Option<u64>,
-    stall_after: Option<u64>,
-    eval_workers: usize,
-) -> Result<(), String> {
-    let threads = if eval_workers == 0 {
+/// Serve eval connections on an already-bound listener (tests and the
+/// fabric bench host this on a thread to exercise the protocol without
+/// process spawning).  The worker owns a `Cached<Sim>` stack: repeated
+/// specs — whether re-sent, gossiped by a sibling, or snapshot-seeded —
+/// are served from its cache instead of re-simulated, and the cache
+/// outlives connections (process-lifetime warmth).
+pub fn serve(listener: TcpListener, eval: &Evaluator, opts: &WorkerOptions) -> Result<(), String> {
+    let threads = if opts.eval_workers == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
     } else {
-        eval_workers
+        opts.eval_workers
     };
-    let backend = SimBackend::new(eval.clone(), threads);
+    let backend = CachedBackend::new(SimBackend::new(eval.clone(), threads));
     // Process-lifetime frame counter so `fail_after` spans reconnects.
     let served = AtomicU64::new(0);
     for stream in listener.incoming() {
@@ -265,11 +388,115 @@ pub fn serve(
         stream.set_nodelay(true).ok();
         // A failed connection (handshake rejection, peer vanishing) must
         // not take the worker down; the next coordinator can still attach.
-        if let Err(e) =
-            handle_connection(stream, &backend, workload_name, fail_after, stall_after, &served)
-        {
+        if let Err(e) = handle_connection(stream, &backend, opts, &served) {
             if e.kind() != std::io::ErrorKind::UnexpectedEof {
                 eprintln!("eval-worker: connection ended: {e}");
+            }
+        }
+        if opts.once {
+            return Ok(());
+        }
+    }
+    Ok(())
+}
+
+/// Frozen v1 wire behavior: exact-match protocol check, no caching, no
+/// gossip fields, plain `scores` replies.  This is NOT the production
+/// worker — it exists so interop tests (and `tests/remote_eval.rs`) can
+/// pin that a protocol-2 coordinator still drives a pre-fabric worker to
+/// byte-identical archives.
+#[doc(hidden)]
+pub fn serve_frozen_v1(
+    listener: TcpListener,
+    eval: &Evaluator,
+    workload_name: &str,
+    once: bool,
+) -> Result<(), String> {
+    let backend = SimBackend::new(eval.clone(), 2);
+    for stream in listener.incoming() {
+        let mut stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        stream.set_nodelay(true).ok();
+        let my_tag = EvalBackend::cache_tag(&backend);
+        let result: std::io::Result<()> = (|| {
+            let hello = read_frame(&mut stream)?;
+            if msg_type(&hello) != Some("hello") {
+                return write_frame(&mut stream, &error_frame("expected hello frame".into()));
+            }
+            // The v1 check this fixture exists to preserve: anything but
+            // an exact protocol match is rejected.
+            match hello.get("protocol").and_then(Json::as_u64) {
+                Some(BASE_PROTOCOL) => {}
+                other => {
+                    return write_frame(
+                        &mut stream,
+                        &error_frame(format!(
+                            "unsupported protocol {other:?} (worker speaks {BASE_PROTOCOL})"
+                        )),
+                    );
+                }
+            }
+            match fingerprint_of(&hello) {
+                Ok(tag) if tag == my_tag => {}
+                Ok(_) => {
+                    return write_frame(
+                        &mut stream,
+                        &error_frame("fingerprint mismatch".into()),
+                    );
+                }
+                Err(e) => return write_frame(&mut stream, &error_frame(e)),
+            }
+            write_frame(
+                &mut stream,
+                &worker_hello(my_tag, workload_name, BASE_PROTOCOL, None),
+            )?;
+            loop {
+                let frame = match read_frame(&mut stream) {
+                    Ok(f) => f,
+                    Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
+                    Err(e) => return Err(e),
+                };
+                match msg_type(&frame) {
+                    Some("eval") => {
+                        let specs: Result<Vec<KernelSpec>, String> = frame
+                            .get("specs")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| "eval frame missing specs".to_string())
+                            .and_then(|arr| arr.iter().map(KernelSpec::from_json).collect());
+                        let specs = match specs {
+                            Ok(s) => s,
+                            Err(e) => {
+                                write_frame(
+                                    &mut stream,
+                                    &error_frame(format!("bad eval frame: {e}")),
+                                )?;
+                                continue;
+                            }
+                        };
+                        let scores = backend.evaluate_batch(&specs);
+                        write_frame(
+                            &mut stream,
+                            &Json::obj([
+                                ("type", Json::Str("scores".into())),
+                                ("scores", Json::arr(scores.iter().map(Score::to_json))),
+                            ]),
+                        )?;
+                    }
+                    Some("shutdown") => return Ok(()),
+                    other => {
+                        write_frame(
+                            &mut stream,
+                            &error_frame(format!("unknown frame type {other:?}")),
+                        )?;
+                    }
+                }
+            }
+        })();
+        if let Err(e) = result {
+            if e.kind() != std::io::ErrorKind::UnexpectedEof {
+                eprintln!("eval-worker(v1): connection ended: {e}");
             }
         }
         if once {
@@ -281,12 +508,12 @@ pub fn serve(
 
 fn handle_connection(
     mut stream: TcpStream,
-    backend: &SimBackend,
-    workload_name: &str,
-    fail_after: Option<u64>,
-    stall_after: Option<u64>,
+    backend: &CachedBackend<SimBackend>,
+    opts: &WorkerOptions,
     served: &AtomicU64,
 ) -> std::io::Result<()> {
+    let workload_name = &opts.workload;
+    let (fail_after, stall_after) = (opts.fail_after, opts.stall_after);
     let my_tag = EvalBackend::cache_tag(backend);
     let hello = read_frame(&mut stream)?;
     let reject = |stream: &mut TcpStream, message: String| -> std::io::Result<()> {
@@ -295,38 +522,76 @@ fn handle_connection(
     if msg_type(&hello) != Some("hello") {
         return reject(&mut stream, "expected hello frame".to_string());
     }
-    match hello.get("protocol").and_then(Json::as_u64) {
-        Some(PROTOCOL_VERSION) => {}
+    let proto = match hello.get("protocol").and_then(Json::as_u64) {
+        Some(p) if (BASE_PROTOCOL..=PROTOCOL_VERSION).contains(&p) => p,
         other => {
             return reject(
                 &mut stream,
-                format!("unsupported protocol {other:?} (worker speaks {PROTOCOL_VERSION})"),
-            );
-        }
-    }
-    match fingerprint_of(&hello) {
-        Ok(tag) if tag == my_tag => {}
-        Ok(tag) => {
-            let their_workload = hello
-                .get("workload")
-                .and_then(Json::as_str)
-                .unwrap_or("?");
-            return reject(
-                &mut stream,
                 format!(
-                    "fingerprint mismatch: coordinator {tag:016x} (workload \
-                     '{their_workload}') vs worker {my_tag:016x} (workload \
-                     '{workload_name}') — different suite, functional seed, or \
-                     machine model"
+                    "unsupported protocol {other:?} (worker speaks \
+                     {BASE_PROTOCOL}..={PROTOCOL_VERSION})"
                 ),
             );
         }
+    };
+    // Version negotiation: v1 coordinators send no `protocol_max`, so the
+    // connection stays at their exact `protocol`.
+    let negotiated = hello
+        .get("protocol_max")
+        .and_then(Json::as_u64)
+        .unwrap_or(proto)
+        .clamp(proto, PROTOCOL_VERSION);
+    let claimed_tag = match fingerprint_of(&hello) {
+        Ok(tag) => tag,
         Err(e) => return reject(&mut stream, e),
+    };
+    // Auth gates everything else (including the diagnostic fingerprint
+    // message): the token binds to the *claimed* fingerprint, so it can
+    // be checked before any state is revealed.
+    if let Some(secret) = &opts.secret {
+        let want = format!("{:016x}", auth_token(secret, claimed_tag));
+        match hello.get("token").and_then(Json::as_str) {
+            Some(t) if t == want => {}
+            Some(_) => {
+                return reject(
+                    &mut stream,
+                    "secret token mismatch (coordinator and worker run different \
+                     --remote-secret values)"
+                        .to_string(),
+                );
+            }
+            None => {
+                return reject(
+                    &mut stream,
+                    "missing secret token (this worker requires --remote-secret)".to_string(),
+                );
+            }
+        }
     }
+    if claimed_tag != my_tag {
+        let their_workload = hello
+            .get("workload")
+            .and_then(Json::as_str)
+            .unwrap_or("?");
+        return reject(
+            &mut stream,
+            format!(
+                "fingerprint mismatch: coordinator {claimed_tag:016x} (workload \
+                 '{their_workload}') vs worker {my_tag:016x} (workload \
+                 '{workload_name}') — different suite, functional seed, or \
+                 machine model"
+            ),
+        );
+    }
+    let reply_token = opts.secret.as_deref().map(|s| auth_token(s, !my_tag));
     write_frame(
         &mut stream,
-        &hello_frame(my_tag, workload_name, Some(std::process::id())),
+        &worker_hello(my_tag, workload_name, negotiated, reply_token),
     )?;
+    // Per-connection gossip capability: protocol 2 plus the coordinator
+    // not having switched the fabric off (the no-gossip bench baseline).
+    let gossip_conn =
+        negotiated >= 2 && hello.get("gossip").and_then(Json::as_bool).unwrap_or(true);
     loop {
         let frame = match read_frame(&mut stream) {
             Ok(f) => f,
@@ -366,12 +631,86 @@ fn handle_connection(
                         std::thread::sleep(Duration::from_secs(5));
                     }
                 }
+                if negotiated < 2 {
+                    // v1 connection: plain scores, no gossip fields.  The
+                    // worker cache still dedups within this worker.
+                    let scores = backend.evaluate_batch(&specs);
+                    let reply = Json::obj([
+                        ("type", Json::Str("scores".into())),
+                        ("scores", Json::arr(scores.iter().map(Score::to_json))),
+                    ]);
+                    write_frame(&mut stream, &reply)?;
+                    continue;
+                }
+                // Merge gossiped sibling entries BEFORE probing: a score a
+                // sibling computed must count as a hit, not a recompute.
+                match parse_entries(&frame, "deltas") {
+                    Ok(deltas) => {
+                        backend.cache().merge_entries(&deltas);
+                    }
+                    Err(e) => {
+                        write_frame(&mut stream, &error_frame(format!("bad eval frame: {e}")))?;
+                        continue;
+                    }
+                }
+                // One uncounted probe pass decides, per spec, whether this
+                // worker would have to simulate it: fresh = the distinct
+                // keys absent from the cache (with their first-occurrence
+                // index, so scores can be paired after the batch).
+                let keys: Vec<u64> =
+                    specs.iter().map(|s| s.content_hash() ^ my_tag).collect();
+                let probed = backend.cache().probe_batch(&keys);
+                let mut seen: HashSet<u64> = HashSet::new();
+                let fresh: Vec<(u64, usize)> = keys
+                    .iter()
+                    .zip(&probed)
+                    .enumerate()
+                    .filter_map(|(i, (k, hit))| {
+                        (hit.is_none() && seen.insert(*k)).then_some((*k, i))
+                    })
+                    .collect();
                 let scores = backend.evaluate_batch(&specs);
-                let reply = Json::obj([
+                let misses = fresh.len() as u64;
+                let hits = specs.len() as u64 - misses;
+                let mut reply = vec![
                     ("type", Json::Str("scores".into())),
                     ("scores", Json::arr(scores.iter().map(Score::to_json))),
-                ]);
-                write_frame(&mut stream, &reply)?;
+                    ("cache_hits", hits.to_json()),
+                    ("cache_misses", misses.to_json()),
+                ];
+                // Gossip this chunk's freshly computed entries back: the
+                // coordinator unions them into the fabric ledger and fans
+                // them out to the other workers.
+                if gossip_conn && !fresh.is_empty() {
+                    let out_deltas: Vec<(u64, Score)> = fresh
+                        .iter()
+                        .map(|&(k, i)| (k, scores[i].clone()))
+                        .collect();
+                    reply.push(("deltas", entries_json(&out_deltas)));
+                }
+                write_frame(&mut stream, &Json::obj(reply))?;
+            }
+            Some("cache") => {
+                // Warm-up snapshot after a re-attach: union-merge and keep
+                // listening (no reply — the coordinator does not wait).
+                if negotiated >= 2 {
+                    match parse_entries(&frame, "entries") {
+                        Ok(entries) => {
+                            backend.cache().merge_entries(&entries);
+                        }
+                        Err(e) => {
+                            write_frame(
+                                &mut stream,
+                                &error_frame(format!("bad cache frame: {e}")),
+                            )?;
+                        }
+                    }
+                } else {
+                    write_frame(
+                        &mut stream,
+                        &error_frame("cache frames require protocol 2".to_string()),
+                    )?;
+                }
             }
             Some("shutdown") => return Ok(()),
             other => {
@@ -413,6 +752,20 @@ pub struct RemoteTopology {
     /// 0 disables).  A round-trip exceeding it declares the worker dead
     /// and requeues its chunk.
     pub read_timeout_ms: u64,
+    /// Shared handshake secret (`--remote-secret` / `AVO_REMOTE_SECRET` /
+    /// config `remote_secret`): hellos carry an [`auth_token`] and worker
+    /// replies must echo one, so links to untrusted machines reject
+    /// impostors in both directions.  Requires protocol-2 workers.
+    pub secret: Option<String>,
+    /// Cache-delta gossip (default on).  Programmatic off switch for the
+    /// coordinator-only-cache baseline in `benches/remote_fabric.rs`;
+    /// gossip never affects scores, only recompute counts.
+    pub gossip: bool,
+    /// Throttle between re-attach attempts per dead external worker, in
+    /// ms (config `remote_reattach_cooldown_ms`).  Attempts are cheap
+    /// (one TCP connect + handshake) but a hung endpoint can absorb a
+    /// read deadline each try.
+    pub reattach_cooldown_ms: u64,
 }
 
 impl Default for RemoteTopology {
@@ -423,6 +776,9 @@ impl Default for RemoteTopology {
             program: None,
             fail_after: None,
             read_timeout_ms: DEFAULT_READ_TIMEOUT_MS,
+            secret: None,
+            gossip: true,
+            reattach_cooldown_ms: DEFAULT_REATTACH_COOLDOWN_MS,
         }
     }
 }
@@ -461,6 +817,20 @@ pub struct RemoteStats {
     pub busy_nanos: AtomicU64,
     /// Chunk round-trip latency distribution.
     pub rtt: Histogram,
+    /// Scores workers served from their local caches instead of
+    /// re-simulating (gossip fan-out, snapshot warm-up, requeued
+    /// re-sends) — the fleet-dedup savings counter, surfaced as the
+    /// `remote_dedup_saved` run metric.
+    pub dedup_saved: AtomicU64,
+    /// Scores workers actually computed on their simulators (fleet-level
+    /// cache misses); `dedup_saved + fleet_misses` = specs the fleet was
+    /// asked to score over protocol-2 connections.
+    pub fleet_misses: AtomicU64,
+    /// Cache entries the coordinator fanned out to workers (gossip deltas
+    /// on `eval` frames plus re-attach snapshot entries).
+    pub deltas_gossiped: AtomicU64,
+    /// Dead external workers successfully re-attached mid-run.
+    pub reattaches: AtomicU64,
 }
 
 /// Why one chunk round-trip failed — timeouts are split out so the
@@ -477,30 +847,115 @@ impl WorkerFailure {
     }
 }
 
+/// The coordinator's fabric state, shared by every worker connection:
+/// the union ledger of every cache entry any worker (or the local
+/// fallback path) has reported, plus an append-only log so each worker's
+/// fan-out cursor can skip entries it already owns.
+#[derive(Default)]
+struct GossipLedger {
+    /// Union of every gossiped entry (key → score).  Merging is a set
+    /// union of deterministic values, so arrival order never matters.
+    entries: HashMap<u64, Score>,
+    /// Fresh keys in arrival order, each tagged with the worker index
+    /// that originated it ([`LOCAL_ORIGIN`] = the coordinator's fallback
+    /// simulator).
+    log: Vec<(usize, u64)>,
+}
+
+/// Ledger origin tag for entries the coordinator computed itself.
+const LOCAL_ORIGIN: usize = usize::MAX;
+
+impl GossipLedger {
+    /// Union-merge `incoming` (originated by worker `origin`); returns
+    /// how many entries were fresh.
+    fn merge(&mut self, origin: usize, incoming: Vec<(u64, Score)>) -> usize {
+        let mut fresh = 0usize;
+        for (key, score) in incoming {
+            if let std::collections::hash_map::Entry::Vacant(v) = self.entries.entry(key) {
+                v.insert(score);
+                self.log.push((origin, key));
+                fresh += 1;
+            }
+        }
+        fresh
+    }
+}
+
+/// Everything one chunk round-trip needs beyond the connection itself:
+/// which worker slot it is, whether the fabric is gossiping, and the
+/// shared counters/bus/ledger.
+struct ChunkCtx<'a> {
+    me: usize,
+    gossip: bool,
+    stats: &'a RemoteStats,
+    sink: &'a dyn TelemetrySink,
+    ledger: &'a Mutex<GossipLedger>,
+}
+
 struct RemoteWorker {
     addr: String,
     alive: AtomicBool,
     conn: Mutex<TcpStream>,
+    /// Negotiated capability of the CURRENT connection: protocol 2 with
+    /// gossip on (false for v1 workers and the no-gossip baseline).
+    gossip: AtomicBool,
+    /// External `--connect` endpoint — re-attachable after death.
+    /// Self-spawned `--once` processes exit on failure and are not.
+    external: bool,
+    /// How many ledger-log entries have already been shipped to (or were
+    /// originated by) this worker; fan-out sends `log[cursor..]`.
+    cursor: AtomicUsize,
+    /// Last re-attach attempt, for cooldown throttling.  Held across the
+    /// whole attempt so concurrent batches never double-attach.
+    last_reattach: Mutex<Option<Instant>>,
 }
 
 impl RemoteWorker {
     /// One chunk round-trip.  Any failure (IO, malformed reply, wrong
     /// score count) is returned as an error for the caller to requeue;
     /// a recv that hits the socket read deadline is flagged `timed_out`.
+    /// On gossiping connections the request piggybacks accumulated fabric
+    /// deltas from OTHER workers, and the reply's hit/miss counts and
+    /// fresh deltas are folded into the shared stats and ledger.
     fn evaluate(
         &self,
         chunk: &[usize],
         specs: &[KernelSpec],
+        ctx: &ChunkCtx<'_>,
     ) -> Result<Vec<Score>, WorkerFailure> {
         let mut conn = self.conn.lock().unwrap_or_else(|e| e.into_inner());
         if !self.alive.load(Ordering::SeqCst) {
             return Err(WorkerFailure::of("worker already marked dead".to_string()));
         }
-        let req = Json::obj([
+        let gossip = ctx.gossip && self.gossip.load(Ordering::SeqCst);
+        let mut req = vec![
             ("type", Json::Str("eval".into())),
             ("specs", Json::arr(chunk.iter().map(|&i| specs[i].to_json()))),
-        ]);
-        write_frame(&mut *conn, &req)
+        ];
+        if gossip {
+            // Fan out everything logged since this worker's cursor,
+            // skipping entries it originated.  The cursor advances
+            // optimistically: a failed send kills the worker, and a
+            // re-attach re-warms it with a full snapshot anyway.
+            let deltas: Vec<(u64, Score)> = {
+                let ledger = ctx.ledger.lock().unwrap_or_else(|e| e.into_inner());
+                let from = self.cursor.load(Ordering::SeqCst).min(ledger.log.len());
+                let out = ledger.log[from..]
+                    .iter()
+                    .filter(|(origin, _)| *origin != ctx.me)
+                    .map(|(_, k)| (*k, ledger.entries[k].clone()))
+                    .collect();
+                self.cursor.store(ledger.log.len(), Ordering::SeqCst);
+                out
+            };
+            if !deltas.is_empty() {
+                ctx.stats
+                    .deltas_gossiped
+                    .fetch_add(deltas.len() as u64, Ordering::SeqCst);
+                req.push(("deltas", entries_json(&deltas)));
+            }
+        }
+        write_frame(&mut *conn, &Json::obj(req))
             .map_err(|e| WorkerFailure::of(format!("send: {e}")))?;
         let reply = read_frame(&mut *conn).map_err(|e| WorkerFailure {
             timed_out: matches!(
@@ -524,10 +979,41 @@ impl RemoteWorker {
                         chunk.len()
                     )));
                 }
-                arr.iter()
+                let scores = arr
+                    .iter()
                     .map(Score::from_json)
                     .collect::<Result<Vec<Score>, String>>()
-                    .map_err(WorkerFailure::of)
+                    .map_err(WorkerFailure::of)?;
+                // Protocol-2 bookkeeping (absent fields = v1 worker).
+                let hits = reply.get("cache_hits").and_then(Json::as_u64).unwrap_or(0);
+                let misses =
+                    reply.get("cache_misses").and_then(Json::as_u64).unwrap_or(0);
+                if hits > 0 {
+                    ctx.stats.dedup_saved.fetch_add(hits, Ordering::SeqCst);
+                }
+                if misses > 0 {
+                    ctx.stats.fleet_misses.fetch_add(misses, Ordering::SeqCst);
+                }
+                if gossip {
+                    let incoming =
+                        parse_entries(&reply, "deltas").map_err(WorkerFailure::of)?;
+                    if !incoming.is_empty() {
+                        let count = incoming.len();
+                        let fresh = ctx
+                            .ledger
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner())
+                            .merge(ctx.me, incoming);
+                        if fresh > 0 && ctx.sink.enabled() {
+                            ctx.sink.publish(&Event::CacheDeltaGossiped {
+                                worker: ctx.me,
+                                entries: count,
+                                fresh,
+                            });
+                        }
+                    }
+                }
+                Ok(scores)
             }
             Some("error") => Err(WorkerFailure::of(
                 reply
@@ -559,22 +1045,29 @@ pub struct RemoteBackend {
     next_worker: AtomicUsize,
     stats: Arc<RemoteStats>,
     sink: Arc<dyn TelemetrySink>,
+    /// The fabric ledger: union of every entry any worker reported.
+    ledger: Mutex<GossipLedger>,
+    /// Handshake label + socket deadline + auth, retained for re-attach.
+    workload_label: String,
+    read_timeout: Option<Duration>,
+    secret: Option<String>,
+    /// Fabric-wide gossip switch ([`RemoteTopology::gossip`]).
+    gossip: bool,
+    reattach_cooldown: Duration,
 }
 
 impl RemoteBackend {
     /// Attach to already-running workers (`--connect host:port,...`),
     /// handshaking each against `eval`'s fingerprint.  Connections carry
-    /// the default read deadline; use [`RemoteBackend::from_topology`] to
-    /// configure it.
+    /// the default read deadline, gossip on, and no secret; use
+    /// [`RemoteBackend::from_topology`] to configure those.
     pub fn connect(eval: Evaluator, addrs: &[String]) -> Result<Self, String> {
         let label = suite_hint(&eval);
-        Self::build_with_children(
-            eval,
-            Vec::new(),
-            addrs,
-            &label,
-            ms_to_timeout(DEFAULT_READ_TIMEOUT_MS),
-        )
+        let topo = RemoteTopology {
+            connect: addrs.to_vec(),
+            ..RemoteTopology::default()
+        };
+        Self::build_with_children(eval, Vec::new(), addrs, &label, &topo)
     }
 
     /// Self-spawn `n` local worker processes bound to `workload` and
@@ -614,7 +1107,8 @@ impl RemoteBackend {
         let mut spawned = Vec::new();
         for i in 0..topo.workers {
             let fail = if i == 0 { topo.fail_after } else { None };
-            match spawn_worker(topo.program.as_deref(), workload, fail) {
+            match spawn_worker(topo.program.as_deref(), workload, fail, topo.secret.as_deref())
+            {
                 Ok(w) => spawned.push(w),
                 Err(e) => {
                     for mut s in spawned {
@@ -629,13 +1123,7 @@ impl RemoteBackend {
         addrs.extend(topo.connect.iter().cloned());
         let children: Vec<SpawnedChild> =
             spawned.into_iter().map(|w| SpawnedChild { child: w.child }).collect();
-        Self::build_with_children(
-            eval,
-            children,
-            &addrs,
-            workload,
-            ms_to_timeout(topo.read_timeout_ms),
-        )
+        Self::build_with_children(eval, children, &addrs, workload, topo)
     }
 
     fn build_with_children(
@@ -643,19 +1131,35 @@ impl RemoteBackend {
         children: Vec<SpawnedChild>,
         addrs: &[String],
         workload_label: &str,
-        read_timeout: Option<Duration>,
+        topo: &RemoteTopology,
     ) -> Result<Self, String> {
         if addrs.is_empty() {
             return Err("remote backend needs at least one worker".to_string());
         }
+        let read_timeout = ms_to_timeout(topo.read_timeout_ms);
         let tag = EvalBackend::cache_tag(&eval);
+        // addrs = self-spawned first (one per child), then external
+        // `--connect` endpoints — only the latter are re-attachable.
+        let spawned_count = children.len();
         let mut workers = Vec::new();
-        for addr in addrs {
-            match attach(addr, tag, workload_label, read_timeout) {
-                Ok(conn) => workers.push(RemoteWorker {
+        for (i, addr) in addrs.iter().enumerate() {
+            let attempt = attach(
+                addr,
+                tag,
+                workload_label,
+                read_timeout,
+                topo.secret.as_deref(),
+                topo.gossip,
+            );
+            match attempt {
+                Ok((conn, gossip_ok)) => workers.push(RemoteWorker {
                     addr: addr.clone(),
                     alive: AtomicBool::new(true),
                     conn: Mutex::new(conn),
+                    gossip: AtomicBool::new(gossip_ok),
+                    external: i >= spawned_count,
+                    cursor: AtomicUsize::new(0),
+                    last_reattach: Mutex::new(None),
                 }),
                 Err(e) => {
                     for mut c in children {
@@ -673,7 +1177,87 @@ impl RemoteBackend {
             next_worker: AtomicUsize::new(0),
             stats: Arc::new(RemoteStats::default()),
             sink: Arc::new(NullSink),
+            ledger: Mutex::new(GossipLedger::default()),
+            workload_label: workload_label.to_string(),
+            read_timeout,
+            secret: topo.secret.clone(),
+            gossip: topo.gossip,
+            reattach_cooldown: Duration::from_millis(topo.reattach_cooldown_ms),
         })
+    }
+
+    /// Retry every dead external worker (throttled per worker by the
+    /// re-attach cooldown): replay the handshake, re-warm the rejoined
+    /// worker with the fabric ledger as `cache` snapshot frames, and mark
+    /// it live again.  Called at each batch start; failures leave the
+    /// worker dead until the next cooldown expiry.  Purely
+    /// capacity-restoring — requeue determinism already guarantees
+    /// results are unaffected.
+    fn try_reattach(&self) {
+        let tag = EvalBackend::cache_tag(&self.eval);
+        for (i, w) in self.workers.iter().enumerate() {
+            if w.alive.load(Ordering::SeqCst) || !w.external {
+                continue;
+            }
+            // Hold the throttle slot for the whole attempt so concurrent
+            // batches never double-attach the same worker.
+            let mut last = w.last_reattach.lock().unwrap_or_else(|e| e.into_inner());
+            if w.alive.load(Ordering::SeqCst) {
+                continue; // a racing batch already revived it
+            }
+            if last.is_some_and(|t| t.elapsed() < self.reattach_cooldown) {
+                continue;
+            }
+            *last = Some(Instant::now());
+            let attempt = attach(
+                &w.addr,
+                tag,
+                &self.workload_label,
+                self.read_timeout,
+                self.secret.as_deref(),
+                self.gossip,
+            );
+            let Ok((mut conn, gossip_ok)) = attempt else { continue };
+            if gossip_ok {
+                // Ship the whole ledger (key-sorted, chunked) so the
+                // rejoined worker is warm immediately, then advance its
+                // cursor past everything the snapshot covered.
+                let (entries, log_len) = {
+                    let ledger = self.ledger.lock().unwrap_or_else(|e| e.into_inner());
+                    let mut v: Vec<(u64, Score)> =
+                        ledger.entries.iter().map(|(k, s)| (*k, s.clone())).collect();
+                    v.sort_by_key(|(k, _)| *k);
+                    (v, ledger.log.len())
+                };
+                let mut shipped = true;
+                for chunk in entries.chunks(SNAPSHOT_CHUNK_ENTRIES) {
+                    let frame = Json::obj([
+                        ("type", Json::Str("cache".into())),
+                        ("entries", entries_json(chunk)),
+                    ]);
+                    if write_frame(&mut conn, &frame).is_err() {
+                        shipped = false;
+                        break;
+                    }
+                }
+                if !shipped {
+                    continue;
+                }
+                self.stats
+                    .deltas_gossiped
+                    .fetch_add(entries.len() as u64, Ordering::SeqCst);
+                w.cursor.store(log_len, Ordering::SeqCst);
+            }
+            w.gossip.store(gossip_ok, Ordering::SeqCst);
+            *w.conn.lock().unwrap_or_else(|e| e.into_inner()) = conn;
+            w.alive.store(true, Ordering::SeqCst);
+            self.stats.reattaches.fetch_add(1, Ordering::SeqCst);
+            eprintln!("remote eval worker {} re-attached", w.addr);
+            if self.sink.enabled() {
+                self.sink
+                    .publish(&Event::WorkerReattached { worker: i, addr: w.addr.clone() });
+            }
+        }
     }
 
     /// Shared fault counters (keep a clone to read after the run consumes
@@ -725,19 +1309,23 @@ fn ms_to_timeout(ms: u64) -> Option<Duration> {
 
 /// Connect + handshake one worker.  `read_timeout` becomes the socket
 /// read deadline for every subsequent chunk round-trip (None = block
-/// forever, the pre-deadline behavior).
+/// forever, the pre-deadline behavior).  Returns the stream plus whether
+/// the connection negotiated gossip (protocol 2 with `gossip` requested).
 fn attach(
     addr: &str,
     tag: u64,
     workload_hint: &str,
     read_timeout: Option<Duration>,
-) -> Result<TcpStream, String> {
+    secret: Option<&str>,
+    gossip: bool,
+) -> Result<(TcpStream, bool), String> {
     let mut stream = TcpStream::connect(addr).map_err(|e| format!("connect: {e}"))?;
     stream.set_nodelay(true).ok();
     stream
         .set_read_timeout(read_timeout)
         .map_err(|e| format!("set_read_timeout: {e}"))?;
-    write_frame(&mut stream, &hello_frame(tag, workload_hint, None))
+    let token = secret.map(|s| auth_token(s, tag));
+    write_frame(&mut stream, &coordinator_hello(tag, workload_hint, gossip, token))
         .map_err(|e| format!("handshake send: {e}"))?;
     let reply = read_frame(&mut stream).map_err(|e| format!("handshake recv: {e}"))?;
     match msg_type(&reply) {
@@ -748,7 +1336,34 @@ fn attach(
                     "fingerprint mismatch: worker {theirs:016x} vs coordinator {tag:016x}"
                 ));
             }
-            Ok(stream)
+            // With a secret configured the worker must echo its own token
+            // (complement-keyed, so it is never a reflection of ours) —
+            // the direction that rejects impostor *workers*.
+            if let Some(s) = secret {
+                let want = format!("{:016x}", auth_token(s, !tag));
+                match reply.get("token").and_then(Json::as_str) {
+                    Some(t) if t == want => {}
+                    Some(_) => {
+                        return Err(
+                            "worker secret token mismatch (worker runs a different \
+                             --remote-secret)"
+                                .to_string(),
+                        );
+                    }
+                    None => {
+                        return Err(
+                            "worker did not echo a secret token (not running with \
+                             --remote-secret, or a pre-auth v1 worker)"
+                                .to_string(),
+                        );
+                    }
+                }
+            }
+            let negotiated = reply
+                .get("protocol")
+                .and_then(Json::as_u64)
+                .unwrap_or(BASE_PROTOCOL);
+            Ok((stream, gossip && negotiated >= 2))
         }
         Some("error") => Err(reply
             .get("message")
@@ -764,11 +1379,14 @@ struct SpawnedWorkerProc {
     addr: String,
 }
 
-/// Spawn one `eval-worker` process and read its announced address.
+/// Spawn one `eval-worker` process and read its announced address.  A
+/// configured secret travels via `AVO_REMOTE_SECRET` (not argv, which is
+/// visible in process listings).
 fn spawn_worker(
     program: Option<&std::path::Path>,
     workload: &str,
     fail_after: Option<u64>,
+    secret: Option<&str>,
 ) -> Result<SpawnedWorkerProc, String> {
     let prog = match program {
         Some(p) => p.to_path_buf(),
@@ -785,6 +1403,9 @@ fn spawn_worker(
         .stdout(Stdio::piped());
     if let Some(n) = fail_after {
         cmd.arg("--fail-after").arg(n.to_string());
+    }
+    if let Some(s) = secret {
+        cmd.env("AVO_REMOTE_SECRET", s);
     }
     let mut child = cmd
         .spawn()
@@ -819,15 +1440,15 @@ fn timed_round_trip(
     worker: &RemoteWorker,
     chunk: &[usize],
     specs: &[KernelSpec],
-    stats: &RemoteStats,
+    ctx: &ChunkCtx<'_>,
 ) -> Result<Vec<Score>, WorkerFailure> {
     let start = Instant::now();
-    let result = worker.evaluate(chunk, specs);
+    let result = worker.evaluate(chunk, specs, ctx);
     let elapsed = start.elapsed();
-    stats
+    ctx.stats
         .busy_nanos
         .fetch_add(elapsed.as_nanos() as u64, Ordering::SeqCst);
-    stats.rtt.record(elapsed);
+    ctx.stats.rtt.record(elapsed);
     result
 }
 
@@ -881,6 +1502,9 @@ impl EvalBackend for RemoteBackend {
         if specs.is_empty() {
             return Vec::new();
         }
+        // Capacity restoration first: dead external endpoints get one
+        // (cooldown-throttled) re-attach attempt per batch.
+        self.try_reattach();
         let mut out: Vec<Option<Score>> = vec![None; specs.len()];
         let mut pending: Vec<usize> = (0..specs.len()).collect();
         while !pending.is_empty() {
@@ -904,8 +1528,21 @@ impl EvalBackend for RemoteBackend {
                     self.workers.len(),
                     pending.len()
                 );
+                let tag = EvalBackend::cache_tag(&self.eval);
                 for &i in &pending {
-                    out[i] = Some(self.eval.evaluate(&specs[i]));
+                    let score = self.eval.evaluate(&specs[i]);
+                    if self.gossip {
+                        // Seed the ledger so a later re-attach warms the
+                        // rejoined worker with these too.
+                        self.ledger
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner())
+                            .merge(
+                                LOCAL_ORIGIN,
+                                vec![(specs[i].content_hash() ^ tag, score.clone())],
+                            );
+                    }
+                    out[i] = Some(score);
                 }
                 break;
             }
@@ -922,7 +1559,14 @@ impl EvalBackend for RemoteBackend {
                 // singleton fast path).
                 let chunk = chunks.into_iter().next().expect("one chunk");
                 let widx = live[offset % live.len()];
-                let result = timed_round_trip(&self.workers[widx], &chunk, specs, &self.stats);
+                let ctx = ChunkCtx {
+                    me: widx,
+                    gossip: self.gossip,
+                    stats: &self.stats,
+                    sink: &*self.sink,
+                    ledger: &self.ledger,
+                };
+                let result = timed_round_trip(&self.workers[widx], &chunk, specs, &ctx);
                 vec![(widx, chunk, result)]
             } else {
                 // Work-stealing dispatch: the first `live` chunks are each
@@ -951,12 +1595,21 @@ impl EvalBackend for RemoteBackend {
                 let (tx, rx) = mpsc::channel();
                 let stats = &self.stats;
                 let sink = &self.sink;
+                let ledger = &self.ledger;
+                let gossip = self.gossip;
                 std::thread::scope(|scope| {
                     for &widx in &live {
                         let worker = &self.workers[widx];
                         let tx = tx.clone();
                         let queue = &queue;
                         scope.spawn(move || {
+                            let ctx = ChunkCtx {
+                                me: widx,
+                                gossip,
+                                stats,
+                                sink: &**sink,
+                                ledger,
+                            };
                             while let Some((stolen, chunk)) = pop_chunk(queue, widx) {
                                 if stolen {
                                     stats.chunks_stolen.fetch_add(1, Ordering::SeqCst);
@@ -967,7 +1620,7 @@ impl EvalBackend for RemoteBackend {
                                         });
                                     }
                                 }
-                                let result = timed_round_trip(worker, &chunk, specs, stats);
+                                let result = timed_round_trip(worker, &chunk, specs, &ctx);
                                 let failed = result.is_err();
                                 let _ = tx.send((widx, chunk, result));
                                 if failed {
@@ -1096,7 +1749,16 @@ mod tests {
         once: bool,
         fail_after: Option<u64>,
     ) -> (String, std::thread::JoinHandle<Result<(), String>>) {
-        worker_thread_with(workload, once, fail_after, None)
+        worker_thread_opts(
+            WorkerOptions {
+                workload: workload.to_string(),
+                once,
+                fail_after,
+                eval_workers: 2,
+                ..WorkerOptions::default()
+            },
+            None,
+        )
     }
 
     fn worker_thread_with(
@@ -1105,25 +1767,51 @@ mod tests {
         fail_after: Option<u64>,
         stall_after: Option<u64>,
     ) -> (String, std::thread::JoinHandle<Result<(), String>>) {
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        worker_thread_opts(
+            WorkerOptions {
+                workload: workload.to_string(),
+                once,
+                fail_after,
+                stall_after,
+                eval_workers: 2,
+                ..WorkerOptions::default()
+            },
+            None,
+        )
+    }
+
+    /// Bind (optionally to a fixed addr, for re-attach tests) and serve
+    /// with the given options on a background thread.
+    fn worker_thread_opts(
+        opts: WorkerOptions,
+        bind_addr: Option<&str>,
+    ) -> (String, std::thread::JoinHandle<Result<(), String>>) {
+        let listener = TcpListener::bind(bind_addr.unwrap_or("127.0.0.1:0")).unwrap();
         let addr = listener.local_addr().unwrap().to_string();
-        let w = crate::workload::parse(workload).unwrap();
+        let w = crate::workload::parse(&opts.workload).unwrap();
         let eval = Evaluator::for_workload(&*w);
-        let name = workload.to_string();
-        let handle = std::thread::spawn(move || {
-            serve(listener, &eval, &name, once, fail_after, stall_after, 2)
-        });
+        let handle = std::thread::spawn(move || serve(listener, &eval, &opts));
         (addr, handle)
     }
 
     #[test]
     fn frame_roundtrip() {
-        let msg = hello_frame(0xDEAD_BEEF, "mha", Some(42));
+        let msg = coordinator_hello(0xDEAD_BEEF, "mha", true, Some(42));
         let mut buf = Vec::new();
         write_frame(&mut buf, &msg).unwrap();
         let back = read_frame(&mut buf.as_slice()).unwrap();
         assert_eq!(back, msg);
         assert_eq!(fingerprint_of(&back).unwrap(), 0xDEAD_BEEF);
+        assert_eq!(back.get("protocol").and_then(Json::as_u64), Some(BASE_PROTOCOL));
+        assert_eq!(
+            back.get("protocol_max").and_then(Json::as_u64),
+            Some(PROTOCOL_VERSION)
+        );
+        let reply = worker_hello(0xDEAD_BEEF, "mha", PROTOCOL_VERSION, Some(7));
+        assert_eq!(
+            reply.get("protocol").and_then(Json::as_u64),
+            Some(PROTOCOL_VERSION)
+        );
     }
 
     #[test]
@@ -1323,5 +2011,282 @@ mod tests {
         t.workers = 0;
         t.connect = vec!["127.0.0.1:7654".to_string()];
         assert!(t.enabled());
+    }
+
+    #[test]
+    fn auth_token_is_keyed_and_fingerprint_bound() {
+        let t = auth_token("hunter2", 0xAB);
+        assert_eq!(t, auth_token("hunter2", 0xAB), "deterministic");
+        assert_ne!(t, auth_token("hunter3", 0xAB), "secret-keyed");
+        assert_ne!(t, auth_token("hunter2", 0xAC), "fingerprint-bound");
+        // The worker echo is keyed by the complement fingerprint, so a
+        // reflected coordinator token never validates as a worker echo.
+        assert_ne!(t, auth_token("hunter2", !0xABu64));
+    }
+
+    #[test]
+    fn delta_entries_roundtrip_the_wire() {
+        let eval = Evaluator::new(mha_suite());
+        let s1 = eval.evaluate(&KernelSpec::naive());
+        let s2 = eval.evaluate(&crate::baselines::fa4_genome());
+        let entries = vec![(0x1234_5678_9ABC_DEF0u64, s1), (u64::MAX, s2)];
+        let frame = Json::obj([
+            ("type", Json::Str("scores".into())),
+            ("deltas", entries_json(&entries)),
+        ]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        let back = read_frame(&mut buf.as_slice()).unwrap();
+        let parsed = parse_entries(&back, "deltas").unwrap();
+        assert_eq!(parsed, entries);
+        // A frame without the field is an empty delta set, not an error.
+        let bare = Json::obj([("type", Json::Str("scores".into()))]);
+        assert_eq!(parse_entries(&bare, "deltas").unwrap(), Vec::new());
+    }
+
+    #[test]
+    fn matching_secret_handshake_succeeds() {
+        let (addr, handle) = worker_thread_opts(
+            WorkerOptions {
+                once: true,
+                eval_workers: 2,
+                secret: Some("s3cret".into()),
+                ..WorkerOptions::default()
+            },
+            None,
+        );
+        let eval = Evaluator::new(mha_suite());
+        let topo = RemoteTopology {
+            connect: vec![addr],
+            secret: Some("s3cret".into()),
+            ..RemoteTopology::default()
+        };
+        let backend = RemoteBackend::from_topology(eval.clone(), "mha", &topo).unwrap();
+        let spec = KernelSpec::naive();
+        assert_eq!(backend.evaluate(&spec).per_config, eval.evaluate(&spec).per_config);
+        drop(backend);
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn wrong_or_missing_secret_is_rejected() {
+        // Non-once worker: it survives the rejected handshakes, so one
+        // listener exercises both failure modes.
+        let (addr, _handle) = worker_thread_opts(
+            WorkerOptions {
+                eval_workers: 2,
+                secret: Some("right".into()),
+                ..WorkerOptions::default()
+            },
+            None,
+        );
+        let eval = Evaluator::new(mha_suite());
+        let wrong = RemoteTopology {
+            connect: vec![addr.clone()],
+            secret: Some("wrong".into()),
+            ..RemoteTopology::default()
+        };
+        let err = RemoteBackend::from_topology(eval.clone(), "mha", &wrong)
+            .err()
+            .expect("wrong secret must be rejected");
+        assert!(err.contains("secret token mismatch"), "{err}");
+        let missing = RemoteTopology {
+            connect: vec![addr],
+            ..RemoteTopology::default()
+        };
+        let err = RemoteBackend::from_topology(eval, "mha", &missing)
+            .err()
+            .expect("missing secret must be rejected");
+        assert!(err.contains("missing secret token"), "{err}");
+    }
+
+    #[test]
+    fn coordinator_secret_rejects_tokenless_worker() {
+        // Worker runs open; coordinator demands an echo it can't produce.
+        let (addr, _handle) = worker_thread_opts(
+            WorkerOptions {
+                eval_workers: 2,
+                ..WorkerOptions::default()
+            },
+            None,
+        );
+        let topo = RemoteTopology {
+            connect: vec![addr],
+            secret: Some("s3cret".into()),
+            ..RemoteTopology::default()
+        };
+        let err = RemoteBackend::from_topology(Evaluator::new(mha_suite()), "mha", &topo)
+            .err()
+            .expect("tokenless worker must be rejected");
+        assert!(err.contains("did not echo a secret token"), "{err}");
+    }
+
+    /// The tentpole invariant: a score computed on one worker is never
+    /// recomputed anywhere in the fleet once its delta has gossiped.
+    #[test]
+    fn gossip_dedups_across_the_fleet() {
+        let (addr_a, ha) = worker_thread("mha", true, None);
+        let (addr_b, hb) = worker_thread("mha", true, None);
+        let eval = Evaluator::new(mha_suite());
+        let topo = RemoteTopology {
+            connect: vec![addr_a, addr_b],
+            ..RemoteTopology::default()
+        };
+        let mut backend = RemoteBackend::from_topology(eval.clone(), "mha", &topo).unwrap();
+        let sink = Arc::new(crate::telemetry::VecSink::new());
+        backend.set_telemetry(sink.clone());
+        let specs = vec![
+            KernelSpec::naive(),
+            crate::baselines::fa4_genome(),
+            crate::baselines::evolved_genome(),
+        ];
+        let first = backend.evaluate_batch(&specs);
+        // Round 2: every key is in the ledger; the fan-out warms whichever
+        // worker didn't compute it, so nothing is re-simulated.
+        let second = backend.evaluate_batch(&specs);
+        for (batch, name) in [(&first, "first"), (&second, "second")] {
+            for (r, s) in batch.iter().zip(&specs) {
+                assert_eq!(r.per_config, eval.evaluate(s).per_config, "{name}");
+            }
+        }
+        let stats = backend.stats();
+        assert_eq!(
+            stats.fleet_misses.load(Ordering::SeqCst),
+            specs.len() as u64,
+            "each distinct spec simulated exactly once fleet-wide"
+        );
+        assert_eq!(
+            stats.dedup_saved.load(Ordering::SeqCst),
+            specs.len() as u64,
+            "round 2 fully served from worker caches"
+        );
+        assert!(stats.deltas_gossiped.load(Ordering::SeqCst) > 0);
+        assert!(sink
+            .take()
+            .iter()
+            .any(|e| matches!(e, Event::CacheDeltaGossiped { fresh, .. } if *fresh > 0)));
+        drop(backend);
+        ha.join().unwrap().unwrap();
+        hb.join().unwrap().unwrap();
+    }
+
+    /// Kill an external worker, restart it on the same port, and watch the
+    /// coordinator re-attach it (with a warm cache snapshot) — archives
+    /// never notice because scores are pure.
+    #[test]
+    fn dead_external_worker_reattaches_on_same_port() {
+        let (addr_a, _ha) = worker_thread("mha", true, Some(1));
+        let (addr_b, hb) = worker_thread("mha", true, None);
+        let eval = Evaluator::new(mha_suite());
+        let topo = RemoteTopology {
+            connect: vec![addr_a.clone(), addr_b],
+            // No throttle: the sweep must retry on the very next batch.
+            reattach_cooldown_ms: 0,
+            read_timeout_ms: 2_000,
+            ..RemoteTopology::default()
+        };
+        let mut backend = RemoteBackend::from_topology(eval.clone(), "mha", &topo).unwrap();
+        let sink = Arc::new(crate::telemetry::VecSink::new());
+        backend.set_telemetry(sink.clone());
+        let specs = vec![
+            KernelSpec::naive(),
+            crate::baselines::fa4_genome(),
+            crate::baselines::evolved_genome(),
+            crate::baselines::cudnn_genome(),
+        ];
+        let first = backend.evaluate_batch(&specs);
+        // A's frame budget is spent: this batch kills it.
+        let second = backend.evaluate_batch(&specs);
+        assert_eq!(backend.live_workers(), 1);
+        // Resurrect a fresh worker on the *same* endpoint, then run
+        // another batch: the pre-batch re-attach sweep finds it.
+        let (readdr, hc) = worker_thread_opts(
+            WorkerOptions {
+                once: true,
+                eval_workers: 2,
+                ..WorkerOptions::default()
+            },
+            Some(&addr_a),
+        );
+        assert_eq!(readdr, addr_a);
+        let third = backend.evaluate_batch(&specs);
+        for (batch, name) in [(&first, "first"), (&second, "second"), (&third, "third")] {
+            for (r, s) in batch.iter().zip(&specs) {
+                assert_eq!(r.per_config, eval.evaluate(s).per_config, "{name}");
+            }
+        }
+        assert_eq!(backend.live_workers(), 2);
+        let stats = backend.stats();
+        assert_eq!(stats.reattaches.load(Ordering::SeqCst), 1);
+        assert!(sink
+            .take()
+            .iter()
+            .any(|e| matches!(e, Event::WorkerReattached { worker: 0, .. })));
+        drop(backend);
+        hb.join().unwrap().unwrap();
+        hc.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn dead_endpoint_without_replacement_stays_dead() {
+        // Once the --once worker dies its listener is gone: the re-attach
+        // sweep's connect fails fast (refused), the endpoint stays dead,
+        // and batches keep flowing through the local-sim fallback.
+        let (addr, _h) = worker_thread("mha", true, Some(0));
+        let eval = Evaluator::new(mha_suite());
+        let backend = RemoteBackend::connect(eval.clone(), &[addr]).unwrap();
+        for w in &backend.workers {
+            assert!(w.external, "connect() endpoints are external");
+        }
+        let spec = KernelSpec::naive();
+        backend.evaluate(&spec);
+        assert_eq!(backend.live_workers(), 0);
+        // This batch runs a (failing) re-attach attempt first.
+        let score = backend.evaluate(&spec);
+        assert_eq!(score.per_config, eval.evaluate(&spec).per_config);
+        assert_eq!(backend.live_workers(), 0);
+        assert_eq!(backend.stats().reattaches.load(Ordering::SeqCst), 0);
+    }
+
+    /// Interop: a protocol-2 coordinator drives a frozen v1 worker (no
+    /// gossip fields, exact protocol match) to bit-identical scores.
+    #[test]
+    fn v1_worker_interops_with_v2_coordinator() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let eval = Evaluator::new(mha_suite());
+        let server_eval = eval.clone();
+        let handle =
+            std::thread::spawn(move || serve_frozen_v1(listener, &server_eval, "mha", true));
+        let backend = RemoteBackend::connect(eval.clone(), &[addr]).unwrap();
+        let specs = vec![KernelSpec::naive(), crate::baselines::fa4_genome()];
+        let scores = backend.evaluate_batch(&specs);
+        for (r, s) in scores.iter().zip(&specs) {
+            assert_eq!(r.per_config, eval.evaluate(s).per_config);
+        }
+        // v1 workers can't gossip: no deltas flow in either direction.
+        assert_eq!(backend.stats().fleet_misses.load(Ordering::SeqCst), 0);
+        assert_eq!(backend.stats().dedup_saved.load(Ordering::SeqCst), 0);
+        drop(backend);
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn gossip_ledger_union_merge_is_origin_aware() {
+        let eval = Evaluator::new(mha_suite());
+        let s = eval.evaluate(&KernelSpec::naive());
+        let mut ledger = GossipLedger::default();
+        assert_eq!(ledger.merge(0, vec![(1, s.clone()), (2, s.clone())]), 2);
+        // Duplicate keys are unioned away regardless of origin.
+        assert_eq!(ledger.merge(1, vec![(2, s.clone()), (3, s.clone())]), 1);
+        assert_eq!(ledger.entries.len(), 3);
+        assert_eq!(ledger.log.len(), 3);
+        // Fan-out for worker 0 skips its own contributions.
+        let for_w0: Vec<u64> = ledger.log[..]
+            .iter()
+            .filter(|(origin, _)| *origin != 0)
+            .map(|&(_, k)| k)
+            .collect();
+        assert_eq!(for_w0, vec![3]);
     }
 }

@@ -177,6 +177,21 @@ impl Archipelago {
             report
                 .metrics
                 .incr("remote_chunks_stolen", stats.chunks_stolen.load(Ordering::SeqCst));
+            // Fleet cache fabric: scores served from worker-side caches
+            // instead of re-simulated, plus the gossip/re-attach traffic
+            // that made those hits possible.
+            report
+                .metrics
+                .incr("remote_dedup_saved", stats.dedup_saved.load(Ordering::SeqCst));
+            report
+                .metrics
+                .incr("remote_fleet_misses", stats.fleet_misses.load(Ordering::SeqCst));
+            report
+                .metrics
+                .incr("remote_deltas_gossiped", stats.deltas_gossiped.load(Ordering::SeqCst));
+            report
+                .metrics
+                .incr("remote_reattaches", stats.reattaches.load(Ordering::SeqCst));
             // Fleet saturation: busy = wall-clock any round-trip occupied a
             // dispatch slot; capacity = run wall-clock x workers.  The
             // driver summary reports idle fraction = 1 - busy/capacity.

@@ -8,10 +8,11 @@
 //!
 //! Under **steady-state** scheduling there are no barriers: donors push
 //! into each receiver's bounded [`MigrantMailbox`] and the receiver
-//! drains it at its own commit points.  Overflow drops the *oldest*
-//! buffered migrant — a fresher elite from the same donor supersedes a
-//! stale one, and a slow island can never exert backpressure on a fast
-//! one.
+//! drains it at its own commit points — best migrant first, so a
+//! capacity-bounded mailbox always lands its strongest buffered elite.
+//! Overflow drops the *oldest* buffered migrant — a fresher elite from
+//! the same donor supersedes a stale one, and a slow island can never
+//! exert backpressure on a fast one.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -78,13 +79,27 @@ impl MigrantMailbox {
         evicted
     }
 
-    /// Take every buffered migrant, oldest first.
+    /// Take every buffered migrant, **best first** (descending donor
+    /// geomean; ties keep arrival order).  The receiver applies migrants
+    /// against a strictly-rising acceptance bar, so ordering decides which
+    /// migrant wins when several beat the lineage: best-first guarantees
+    /// the strongest buffered elite is the one that lands, instead of
+    /// whichever happened to arrive first.  Only steady-state scheduling
+    /// drains mailboxes (barrier migration routes directly), so barrier
+    /// archives are untouched by the ordering.
     pub fn drain(&self) -> Vec<(Migrant, String)> {
         let mut inbox = match self.inbox.lock() {
             Ok(g) => g,
             Err(p) => p.into_inner(),
         };
-        inbox.drain(..).collect()
+        let mut out: Vec<(Migrant, String)> = inbox.drain(..).collect();
+        out.sort_by(|a, b| {
+            b.0.score
+                .geomean()
+                .partial_cmp(&a.0.score.geomean())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        out
     }
 
     /// Migrants evicted by overflow so far.
@@ -244,8 +259,20 @@ mod tests {
         }
     }
 
+    fn scored_migrant(commit: u64, tflops: f64) -> Migrant {
+        Migrant {
+            score: Score {
+                per_config: vec![("cell".to_string(), tflops)],
+                failure: None,
+            },
+            ..migrant(0, commit)
+        }
+    }
+
     #[test]
-    fn mailbox_drains_fifo() {
+    fn mailbox_drains_ties_in_arrival_order() {
+        // Equal scores (here: all-empty, geomean 0) keep FIFO order — the
+        // best-first sort is stable.
         let mb = MigrantMailbox::new(4);
         assert!(mb.is_empty());
         mb.push(migrant(0, 10), "a".into());
@@ -258,6 +285,20 @@ mod tests {
         assert_eq!(got[1].0.commit, CommitId(11));
         assert!(mb.is_empty());
         assert_eq!(mb.dropped(), 0);
+    }
+
+    /// The satellite pin: drains are best-first regardless of arrival
+    /// order, so the strongest buffered elite is applied first (and wins
+    /// under the receiver's strictly-rising acceptance bar).
+    #[test]
+    fn mailbox_drains_best_first() {
+        let mb = MigrantMailbox::new(4);
+        mb.push(scored_migrant(1, 2.0), "mid".into());
+        mb.push(scored_migrant(2, 8.0), "best".into());
+        mb.push(scored_migrant(3, 0.5), "worst".into());
+        mb.push(scored_migrant(4, 8.0), "best-tie".into());
+        let order: Vec<u64> = mb.drain().iter().map(|(m, _)| m.commit.0).collect();
+        assert_eq!(order, vec![2, 4, 1, 3], "descending geomean, stable ties");
     }
 
     #[test]

@@ -45,13 +45,22 @@
 //!   `evaluate_batch` traffic over a zero-dependency length-prefixed JSON
 //!   TCP protocol — self-spawned (`--remote-workers <n>`) or attached
 //!   across machines (`--connect host:port,...`), handshake-checked on
-//!   `suite_tag ^ MachineSpec::fingerprint()`, with in-flight requeue when
-//!   a worker dies mid-batch and a work-stealing dispatch queue
-//!   (oversplit chunks, home-worker affinity) that keeps fast workers fed
-//!   while a straggler finishes.  Remote archives are byte-identical to
+//!   `suite_tag ^ MachineSpec::fingerprint()` (optionally authenticated
+//!   with a shared secret, `--remote-secret` / `AVO_REMOTE_SECRET`), with
+//!   in-flight requeue when a worker dies mid-batch and a work-stealing
+//!   dispatch queue (oversplit chunks, home-worker affinity) that keeps
+//!   fast workers fed while a straggler finishes.  The fleet is also a
+//!   distributed eval-cache fabric: each worker hosts a `Cached<Sim>`
+//!   stack, fresh entries gossip back piggybacked on `scores` frames and
+//!   fan out to siblings on later `eval` frames (so a spec computed
+//!   anywhere is never re-simulated), and a worker that restarts on the
+//!   same endpoint is re-attached mid-run and re-warmed from the
+//!   coordinator's ledger.  Remote archives are byte-identical to
 //!   in-process archives (pinned by `rust/tests/remote_eval.rs`, including
-//!   a mid-run worker kill; `benches/archipelago_steadystate.rs` measures
-//!   the idle-fraction win under injected latency skew).
+//!   a mid-run worker kill, a mid-run re-attach, and a protocol-1 worker
+//!   in a mixed fleet; `benches/remote_fabric.rs` gates the fleet-dedup
+//!   win, `benches/archipelago_steadystate.rs` the idle-fraction win
+//!   under injected latency skew).
 //! * **Evaluation subsystem** ([`eval`]) — the batched [`eval::EvalBackend`]
 //!   seam every scoring-function call goes through: [`eval::SimBackend`]
 //!   (the simulator, with worker fan-out for batches),

@@ -9,6 +9,9 @@
 //!                --remote-workers / --connect (see avo::eval::remote)
 //!   monitor      attach to a running evolve's live metrics endpoint
 //!                (--metrics-addr) and stream one-line status snapshots
+//!   journal-merge  merge JSONL event journals into one stable-ordered
+//!                stream (per-island `seq` lanes), so multi-worker steady
+//!                runs are diffable
 //!   transfer     adapt an evolved lineage to another workload (§4.3
 //!                generalized: gqa:<kv>, decode:<batch>, mha)
 //!   compare      AVO vs single-turn vs fixed-pipeline at equal budget
@@ -25,8 +28,11 @@
 //!   avo evolve --remote-workers 4                      # spawn local workers
 //!   avo eval-worker --workload mha --listen 0.0.0.0:7654   # on each machine
 //!   avo evolve --connect hostA:7654,hostB:7654         # attach to them
+//!   avo eval-worker --listen 0.0.0.0:7654 --remote-secret t0ken
+//!   avo evolve --connect hostA:7654 --remote-secret t0ken  # authenticated
 //!   avo evolve --journal runs/mha/journal.jsonl --metrics-addr 127.0.0.1:7655
 //!   avo monitor 127.0.0.1:7655                         # watch it live
+//!   avo journal-merge runs/a/journal.jsonl runs/b/journal.jsonl
 //!   avo evolve --config runs/mha.cfg
 //!   avo transfer --lineage runs/mha/lineage.json --workload gqa:4
 //!   avo transfer --lineage runs/mha/lineage.json --workload decode:32
@@ -46,7 +52,8 @@ type CliError = Box<dyn std::error::Error>;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: avo <evolve|eval-worker|monitor|transfer|compare|show|profile> [flags]\n\
+        "usage: avo <evolve|eval-worker|monitor|journal-merge|transfer|compare|show|profile> \
+         [flags]\n\
          \n\
          evolve   --workload {} (default mha)\n\
          \u{20}         --seed N --commits N --steps N --operator avo|single_turn|pes\n\
@@ -71,10 +78,17 @@ fn usage() -> ! {
          \u{20}         --metrics-addr HOST:PORT  (live metrics endpoint;\n\
          \u{20}          port 0 picks a free port, announced on stdout)\n\
          \u{20}         --metrics-linger-ms N --remote-read-timeout-ms N\n\
+         \u{20}         --remote-secret TOKEN  (shared handshake secret; env\n\
+         \u{20}          AVO_REMOTE_SECRET is the fallback on both sides)\n\
+         \u{20}         --no-remote-gossip  (disable worker cache-delta gossip)\n\
+         \u{20}         --remote-reattach-cooldown-ms N  (dead-endpoint retry\n\
+         \u{20}          throttle; default 500)\n\
          \u{20}         --config FILE --out DIR\n\
          eval-worker --workload SPEC --listen ADDR (default 127.0.0.1:0)\n\
          \u{20}         --once --eval-workers N --fail-after N --stall-after N\n\
+         \u{20}         --remote-secret TOKEN  (or env AVO_REMOTE_SECRET)\n\
          monitor  ADDR [--once] [--json] [--interval-ms N] [--retry-ms N]\n\
+         journal-merge FILE [FILE...] [--out FILE]  (stable-ordered merge)\n\
          transfer --lineage FILE --workload SPEC (or --kv-heads 4|8)\n\
          \u{20}         --seed N --out DIR\n\
          compare  --budget N --seed N\n\
@@ -114,6 +128,16 @@ impl Flags {
                 .map_err(|e| format!("{name}: invalid value '{v}': {e}").into()),
         }
     }
+}
+
+/// Shared handshake secret: `--remote-secret` wins, env `AVO_REMOTE_SECRET`
+/// is the fallback (and how self-spawned workers inherit it without the
+/// secret showing up in process listings).
+fn remote_secret(flags: &Flags) -> Option<String> {
+    flags
+        .get("--remote-secret")
+        .map(str::to_string)
+        .or_else(|| std::env::var("AVO_REMOTE_SECRET").ok().filter(|s| !s.is_empty()))
 }
 
 fn main() -> Result<(), CliError> {
@@ -211,6 +235,15 @@ fn main() -> Result<(), CliError> {
             }
             if let Some(ms) = flags.parse_strict("--remote-read-timeout-ms")? {
                 cfg.topology.remote.read_timeout_ms = ms;
+            }
+            if let Some(secret) = remote_secret(&flags) {
+                cfg.topology.remote.secret = Some(secret);
+            }
+            if flags.has("--no-remote-gossip") {
+                cfg.topology.remote.gossip = false;
+            }
+            if let Some(ms) = flags.parse_strict("--remote-reattach-cooldown-ms")? {
+                cfg.topology.remote.reattach_cooldown_ms = ms;
             }
             let out_dir = flags.get("--out").map(PathBuf::from);
             if let Some(dir) = &out_dir {
@@ -324,7 +357,56 @@ fn main() -> Result<(), CliError> {
             if let Some(n) = flags.parse_strict("--eval-workers")? {
                 opts.eval_workers = n;
             }
+            opts.secret = remote_secret(&flags);
             avo::eval::remote::run_worker(&opts)?;
+        }
+        "journal-merge" => {
+            // Positional args are journal paths; --out redirects the
+            // merged stream from stdout to a file.
+            let out = flags.get("--out").map(PathBuf::from);
+            let mut paths = Vec::new();
+            let mut skip = false;
+            for a in &flags.0 {
+                if skip {
+                    skip = false;
+                    continue;
+                }
+                if a == "--out" {
+                    skip = true;
+                    continue;
+                }
+                if a.starts_with("--") {
+                    return Err(format!("journal-merge: unknown flag {a}").into());
+                }
+                paths.push(PathBuf::from(a));
+            }
+            if paths.is_empty() {
+                usage();
+            }
+            let merged = avo::telemetry::merge_journals(&paths)?;
+            match &out {
+                Some(path) => {
+                    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+                        std::fs::create_dir_all(dir)?;
+                    }
+                    let mut body = merged.join("\n");
+                    if !body.is_empty() {
+                        body.push('\n');
+                    }
+                    std::fs::write(path, body)?;
+                    eprintln!(
+                        "merged {} journal(s), {} events -> {}",
+                        paths.len(),
+                        merged.len(),
+                        path.display()
+                    );
+                }
+                None => {
+                    for line in &merged {
+                        println!("{line}");
+                    }
+                }
+            }
         }
         "monitor" => {
             // First positional argument is the endpoint address (what the

@@ -163,7 +163,11 @@ impl std::fmt::Display for Failure {
 }
 
 /// Score vector for one candidate across a suite.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` is bitwise on the TFLOPS floats — exactly the equality the
+/// determinism contract promises (cache hits and gossiped deltas are
+/// byte-identical to recomputation), so tests compare whole `Score`s.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Score {
     /// (config name, TFLOPS) per suite cell; 0.0 if gated by failure.
     pub per_config: Vec<(String, f64)>,

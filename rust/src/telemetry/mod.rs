@@ -33,6 +33,8 @@
 //! | `fallback_local`   | `specs`                                  | —               | remote backend |
 //! | `chunk_stolen`     | `worker`, `specs`                        | —               | remote backend |
 //! | `queue_depth`      | `depth`                                  | —               | remote backend |
+//! | `cache_delta_gossiped` | `worker`, `entries`, `fresh`         | —               | remote backend |
+//! | `worker_reattached`| `worker`, `addr`                         | `addr`          | remote backend |
 //! | `migration`        | `epoch`, `from`, `to`, `accepted`        | —               | archipelago |
 //! | `migrant_buffered` | `island`, `from`                         | —               | steady scheduler |
 //! | `migrant_dropped`  | `island`, `from`                         | —               | steady scheduler |
@@ -88,6 +90,12 @@ pub enum Event {
     FallbackLocal { specs: usize },
     ChunkStolen { worker: usize, specs: usize },
     QueueDepth { depth: usize },
+    /// A worker's `scores` reply carried `entries` cache deltas, of which
+    /// `fresh` were new to the coordinator's fabric ledger.
+    CacheDeltaGossiped { worker: usize, entries: usize, fresh: usize },
+    /// A dead external worker came back: handshake replayed, cache
+    /// snapshot shipped, endpoint live again.
+    WorkerReattached { worker: usize, addr: String },
     Migration { epoch: usize, from: usize, to: usize, accepted: bool },
     MigrantBuffered { island: usize, from: usize },
     MigrantDropped { island: usize, from: usize },
@@ -121,6 +129,8 @@ impl Event {
             Event::FallbackLocal { .. } => "fallback_local",
             Event::ChunkStolen { .. } => "chunk_stolen",
             Event::QueueDepth { .. } => "queue_depth",
+            Event::CacheDeltaGossiped { .. } => "cache_delta_gossiped",
+            Event::WorkerReattached { .. } => "worker_reattached",
             Event::Migration { .. } => "migration",
             Event::MigrantBuffered { .. } => "migrant_buffered",
             Event::MigrantDropped { .. } => "migrant_dropped",
@@ -159,8 +169,14 @@ impl Event {
             Event::CacheHit { key } | Event::CacheMiss { key } | Event::CacheEvict { key } => {
                 fields.push(("key", hex(*key)));
             }
+            Event::CacheDeltaGossiped { worker, entries, fresh } => {
+                fields.push(("worker", num(*worker as f64)));
+                fields.push(("entries", num(*entries as f64)));
+                fields.push(("fresh", num(*fresh as f64)));
+            }
             Event::WorkerAttached { worker, addr }
-            | Event::WorkerTimeout { worker, addr } => {
+            | Event::WorkerTimeout { worker, addr }
+            | Event::WorkerReattached { worker, addr } => {
                 fields.push(("worker", num(*worker as f64)));
                 if !deterministic {
                     fields.push(("addr", Json::Str(addr.clone())));
@@ -243,9 +259,18 @@ impl TelemetrySink for NullSink {
 /// appended and flushed per event, so a killed run leaves a valid journal
 /// up to the last event.  Write errors are swallowed after the file opens
 /// — the flight recorder must never take down the run it is recording.
+///
+/// Every line carries a `seq` field: a per-lane sequence number, where an
+/// event's lane is its `island` field (events without one — fleet,
+/// cache-evict, run lifecycle — share a global lane).  Within a lane,
+/// `seq` is the publish order, which each island's own thread makes
+/// deterministic even when *inter*-island interleaving is not (steady
+/// state above one worker).  [`merge_journals`] sorts on it.
 pub struct JournalSink {
     file: Mutex<std::fs::File>,
     deterministic: bool,
+    /// Next seq per lane; index 0 is the global lane, island i is i + 1.
+    seqs: Mutex<Vec<u64>>,
 }
 
 impl JournalSink {
@@ -260,13 +285,44 @@ impl JournalSink {
         }
         let file = std::fs::File::create(path)
             .map_err(|e| format!("journal {}: {e}", path.display()))?;
-        Ok(JournalSink { file: Mutex::new(file), deterministic })
+        Ok(JournalSink {
+            file: Mutex::new(file),
+            deterministic,
+            seqs: Mutex::new(Vec::new()),
+        })
     }
+
+    /// Claim the next sequence number on `lane` (0 = global).
+    fn next_seq(&self, lane: usize) -> u64 {
+        let mut seqs = match self.seqs.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if seqs.len() <= lane {
+            seqs.resize(lane + 1, 0);
+        }
+        let n = seqs[lane];
+        seqs[lane] = n + 1;
+        n
+    }
+}
+
+/// The journal lane an already-serialized event belongs to: its `island`
+/// field + 1, or 0 (the global lane) when it has none.
+fn journal_lane(json: &Json) -> usize {
+    json.get("island")
+        .and_then(Json::as_u64)
+        .map(|i| i as usize + 1)
+        .unwrap_or(0)
 }
 
 impl TelemetrySink for JournalSink {
     fn publish(&self, event: &Event) {
         let mut json = event.to_json(self.deterministic);
+        let seq = self.next_seq(journal_lane(&json));
+        if let Json::Obj(m) = &mut json {
+            m.insert("seq".to_string(), Json::Num(seq as f64));
+        }
         if !self.deterministic {
             if let Json::Obj(m) = &mut json {
                 let ts = std::time::SystemTime::now()
@@ -282,6 +338,48 @@ impl TelemetrySink for JournalSink {
             let _ = f.flush();
         }
     }
+}
+
+/// Merge journals into one stable-ordered stream (`avo journal-merge`).
+///
+/// Ordering is a canonical function of content, never of arrival
+/// interleaving: lines sort by (lane, `seq`, input index, input line
+/// number) with the global lane first — a lane is an `island` field, see
+/// [`JournalSink`].  Lines without a `seq` (pre-fabric journals) keep
+/// their input line number as the tiebreak.  Two same-seed
+/// `--trace-deterministic` steady-state runs therefore merge to
+/// byte-identical streams even when their raw journals interleaved
+/// islands differently.  Non-JSON lines (a torn final write from a
+/// crashed run) are dropped.
+pub fn merge_journal_lines(inputs: &[Vec<String>]) -> Vec<String> {
+    let mut keyed: Vec<(usize, u64, usize, usize, String)> = Vec::new();
+    for (input_idx, lines) in inputs.iter().enumerate() {
+        for (line_idx, line) in lines.iter().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let Ok(json) = crate::json::parse(line) else { continue };
+            let lane = journal_lane(&json);
+            let seq = json
+                .get("seq")
+                .and_then(Json::as_u64)
+                .unwrap_or(line_idx as u64);
+            keyed.push((lane, seq, input_idx, line_idx, line.clone()));
+        }
+    }
+    keyed.sort_by(|a, b| (a.0, a.1, a.2, a.3).cmp(&(b.0, b.1, b.2, b.3)));
+    keyed.into_iter().map(|(_, _, _, _, line)| line).collect()
+}
+
+/// File-level wrapper over [`merge_journal_lines`].
+pub fn merge_journals(paths: &[PathBuf]) -> Result<Vec<String>, String> {
+    let mut inputs = Vec::with_capacity(paths.len());
+    for p in paths {
+        let body = std::fs::read_to_string(p)
+            .map_err(|e| format!("journal {}: {e}", p.display()))?;
+        inputs.push(body.lines().map(str::to_string).collect());
+    }
+    Ok(merge_journal_lines(&inputs))
 }
 
 /// Fan-out to several sinks (journal + live metrics hub).
@@ -555,6 +653,8 @@ mod tests {
             Event::FallbackLocal { specs: 5 },
             Event::ChunkStolen { worker: 1, specs: 4 },
             Event::QueueDepth { depth: 7 },
+            Event::CacheDeltaGossiped { worker: 1, entries: 8, fresh: 3 },
+            Event::WorkerReattached { worker: 1, addr: "127.0.0.1:9".into() },
             Event::Migration { epoch: 2, from: 0, to: 1, accepted: true },
             Event::MigrantBuffered { island: 2, from: 1 },
             Event::MigrantDropped { island: 2, from: 0 },
@@ -652,5 +752,79 @@ mod tests {
         // times (File::create truncates); sanity-check the first tag.
         assert!(lines[0].contains("\"event\":\"run_started\""));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn journal_seq_is_per_island_lane() {
+        let dir = std::env::temp_dir().join(format!(
+            "avo-journal-seq-test-{}",
+            std::process::id()
+        ));
+        let path = dir.join("j.jsonl");
+        let sink = JournalSink::create(&path, true).expect("create");
+        sink.publish(&Event::RunStarted { workload: "mha".into(), seed: 1, islands: 2 });
+        sink.publish(&Event::StepCommitted { island: 0, step: 0, commit: 1, geomean: 1.0 });
+        sink.publish(&Event::StepCommitted { island: 1, step: 0, commit: 2, geomean: 1.0 });
+        sink.publish(&Event::StepCommitted { island: 0, step: 1, commit: 3, geomean: 1.0 });
+        sink.publish(&Event::RunFinished { commits: 2, best_geomean: 1.0, steps: 2 });
+        let body = std::fs::read_to_string(&path).unwrap();
+        let seqs: Vec<(Option<u64>, u64)> = body
+            .lines()
+            .map(|l| {
+                let j = crate::json::parse(l).unwrap();
+                (
+                    j.get("island").and_then(Json::as_u64),
+                    j.get("seq").and_then(Json::as_u64).expect("every line has seq"),
+                )
+            })
+            .collect();
+        // Global lane: 0, 1; island 0 lane: 0, 1; island 1 lane: 0.
+        assert_eq!(
+            seqs,
+            vec![(None, 0), (Some(0), 0), (Some(1), 0), (Some(0), 1), (None, 1)]
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn journal_merge_order_is_interleaving_invariant() {
+        // The same per-lane streams, interleaved two different ways (the
+        // thread-dependent part of a multi-worker steady journal), plus a
+        // torn trailing line — merges must come out byte-identical.
+        let g0 = r#"{"event":"run_started","islands":2,"seq":0}"#;
+        let i0a = r#"{"event":"step_committed","island":0,"seq":0}"#;
+        let i0b = r#"{"event":"step_committed","island":0,"seq":1}"#;
+        let i1a = r#"{"event":"step_committed","island":1,"seq":0}"#;
+        let g1 = r#"{"event":"run_finished","seq":1}"#;
+        let run_a: Vec<String> =
+            [g0, i0a, i1a, i0b, g1].iter().map(|s| s.to_string()).collect();
+        let mut run_b: Vec<String> =
+            [g0, i1a, i0a, g1, i0b].iter().map(|s| s.to_string()).collect();
+        run_b.push("{\"torn".to_string());
+        let merged_a = merge_journal_lines(&[run_a.clone()]);
+        let merged_b = merge_journal_lines(&[run_b]);
+        assert_eq!(merged_a, merged_b, "merge order depended on interleaving");
+        assert_eq!(merged_a, vec![g0, g1, i0a, i0b, i1a], "global lane first, then islands");
+        // Two-input merge: same-lane same-seq lines keep input order.
+        let merged_two = merge_journal_lines(&[run_a.clone(), run_a]);
+        assert_eq!(merged_two.len(), 10);
+        assert_eq!(merged_two[0], g0);
+        assert_eq!(merged_two[1], g0);
+    }
+
+    #[test]
+    fn journal_merge_handles_seqless_legacy_lines() {
+        // Pre-fabric journals carry no seq: line order stands in.
+        let legacy: Vec<String> = [
+            r#"{"event":"run_started","islands":1}"#,
+            r#"{"event":"step_committed","island":0}"#,
+            r#"{"event":"run_finished"}"#,
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let merged = merge_journal_lines(&[legacy.clone()]);
+        assert_eq!(merged.len(), 3);
+        assert_eq!(merged[0], legacy[0]);
     }
 }

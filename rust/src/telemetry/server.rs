@@ -217,7 +217,9 @@ impl TelemetrySink for MetricsHub {
             Event::CacheEvict { .. } => state.cache_evictions += 1,
             Event::WorkerAttached { .. }
             | Event::WorkerTimeout { .. }
-            | Event::WorkerDied { .. } => {
+            | Event::WorkerDied { .. }
+            | Event::WorkerReattached { .. }
+            | Event::CacheDeltaGossiped { .. } => {
                 // Fleet health reads RemoteStats directly (authoritative).
             }
             Event::FallbackLocal { specs } => state.fallback_specs += *specs as u64,

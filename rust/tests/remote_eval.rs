@@ -11,9 +11,12 @@
 //! requeue, local fallback) live in `avo::eval::remote`; this file covers
 //! the process topology end to end.
 
+use std::net::TcpListener;
 use std::path::PathBuf;
+use std::sync::atomic::Ordering;
 
 use avo::coordinator::{EvolutionDriver, RunConfig};
+use avo::eval::remote::{serve, serve_frozen_v1, WorkerOptions};
 use avo::eval::RemoteBackend;
 use avo::kernelspec::KernelSpec;
 use avo::score::Evaluator;
@@ -178,6 +181,225 @@ fn worker_killed_mid_batch_requeues_and_archive_is_identical() {
             fault.metrics.counter(key),
             "{key} diverges under fault"
         );
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Tentpole contract, process-level: once a spec has been computed
+/// anywhere in the fleet, gossiped deltas keep every sibling from
+/// recomputing it.  Two real worker processes, the same batch twice:
+/// round one costs exactly one simulation per distinct spec fleet-wide,
+/// round two is served entirely from worker caches — zero sibling
+/// recompute, visible through the `dedup_saved` counter that backs the
+/// `remote_dedup_saved` run metric.
+#[test]
+fn fleet_gossip_prevents_sibling_recompute() {
+    let eval = Evaluator::for_workload(&*avo::workload::parse("mha").unwrap());
+    let backend =
+        RemoteBackend::spawn_local(eval.clone(), "mha", 2, Some(&worker_program()), None)
+            .unwrap();
+    let specs = vec![
+        KernelSpec::naive(),
+        avo::baselines::fa4_genome(),
+        avo::baselines::evolved_genome(),
+        avo::baselines::cudnn_genome(),
+    ];
+    let first = backend.evaluate_batch(&specs);
+    let second = backend.evaluate_batch(&specs);
+    for ((a, b), spec) in first.iter().zip(&second).zip(&specs) {
+        let local = eval.evaluate(spec);
+        assert_eq!(a.per_config, local.per_config, "cache-served score diverges");
+        assert_eq!(b.per_config, local.per_config, "cache-served score diverges");
+    }
+    let stats = backend.stats();
+    // Round 1: each distinct spec simulated exactly once, on whichever
+    // worker its chunk landed.  Round 2: every frame's piggybacked
+    // deltas are merged before the worker probes its cache, so even
+    // chunks that hop workers between rounds are pure hits.
+    assert_eq!(
+        stats.fleet_misses.load(Ordering::SeqCst),
+        specs.len() as u64,
+        "fleet recomputed a spec a sibling already produced"
+    );
+    assert_eq!(
+        stats.dedup_saved.load(Ordering::SeqCst),
+        specs.len() as u64,
+        "warm round was not served entirely from worker caches"
+    );
+}
+
+/// A worker that dies mid-run and then comes back on the SAME endpoint
+/// is re-attached (handshake replay + ledger snapshot), the re-attach is
+/// journaled, and the archive stays byte-identical to the in-process
+/// run — fault recovery is pure capacity restoration.
+#[test]
+fn midrun_reattach_keeps_archive_byte_identical_and_is_journaled() {
+    let dir = tempdir("reattach");
+
+    let mut local_cfg = base_config("mha", 13);
+    local_cfg.agent.lookahead = 4;
+    local_cfg.lineage_path = Some(dir.join("local_lineage.json"));
+    EvolutionDriver::new(local_cfg).run();
+
+    // Flaky external worker: serves 2 eval frames, drops the connection,
+    // then rebinds the same port (std listeners set SO_REUSEADDR on
+    // Unix) and serves healthy — the shape of a restarted fleet node.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let rebind = addr.clone();
+    let flaky = std::thread::spawn(move || {
+        let workload = avo::workload::parse("mha").unwrap();
+        let eval = Evaluator::for_workload(&*workload);
+        let opts = WorkerOptions {
+            once: true,
+            fail_after: Some(2),
+            eval_workers: 2,
+            ..WorkerOptions::default()
+        };
+        serve(listener, &eval, &opts).unwrap();
+        let listener = TcpListener::bind(&rebind).unwrap();
+        let opts = WorkerOptions { once: true, eval_workers: 2, ..WorkerOptions::default() };
+        serve(listener, &eval, &opts).unwrap();
+    });
+    // Healthy sibling keeps the run moving while the flaky node is down.
+    let steady_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let steady_addr = steady_listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let workload = avo::workload::parse("mha").unwrap();
+        let eval = Evaluator::for_workload(&*workload);
+        let opts = WorkerOptions { once: true, eval_workers: 2, ..WorkerOptions::default() };
+        serve(steady_listener, &eval, &opts).unwrap();
+    });
+
+    let mut cfg = base_config("mha", 13);
+    cfg.agent.lookahead = 4;
+    cfg.lineage_path = Some(dir.join("remote_lineage.json"));
+    cfg.topology.remote.connect = vec![addr, steady_addr];
+    cfg.topology.remote.reattach_cooldown_ms = 0;
+    cfg.telemetry.journal = Some(dir.join("journal.jsonl"));
+    cfg.telemetry.deterministic = true;
+    let report = EvolutionDriver::new(cfg).run();
+
+    assert_eq!(report.metrics.counter("remote_worker_deaths"), 1);
+    assert_eq!(report.metrics.counter("remote_fallback_specs"), 0);
+    assert!(
+        report.metrics.counter("remote_reattaches") >= 1,
+        "restarted worker was never re-attached"
+    );
+    assert!(
+        report.summary().contains("re-attached"),
+        "summary hides the re-attach: {}",
+        report.summary()
+    );
+    let journal = std::fs::read_to_string(dir.join("journal.jsonl")).unwrap();
+    assert!(
+        journal.contains("\"event\":\"worker_reattached\""),
+        "journal missing worker_reattached event"
+    );
+
+    let a = std::fs::read(dir.join("local_lineage.json")).unwrap();
+    let b = std::fs::read(dir.join("remote_lineage.json")).unwrap();
+    assert_eq!(a, b, "mid-run re-attach changed the archive");
+    flaky.join().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// A pre-fabric (protocol-1) worker in a mixed fleet: the coordinator
+/// downgrades that connection — no gossip fields, plain `scores`
+/// replies — and the archive still matches the in-process run byte for
+/// byte.  Rolling fleet upgrades can't corrupt a search.
+#[test]
+fn v1_worker_in_mixed_fleet_keeps_archive_byte_identical() {
+    let dir = tempdir("v1_fleet");
+
+    let mut local_cfg = base_config("gqa:1", 17);
+    local_cfg.lineage_path = Some(dir.join("local_lineage.json"));
+    EvolutionDriver::new(local_cfg).run();
+
+    let v1_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let v1_addr = v1_listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let workload = avo::workload::parse("gqa:1").unwrap();
+        let eval = Evaluator::for_workload(&*workload);
+        serve_frozen_v1(v1_listener, &eval, "gqa:1", true).unwrap();
+    });
+    let v2_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let v2_addr = v2_listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let workload = avo::workload::parse("gqa:1").unwrap();
+        let eval = Evaluator::for_workload(&*workload);
+        let opts = WorkerOptions {
+            workload: "gqa:1".to_string(),
+            once: true,
+            eval_workers: 2,
+            ..WorkerOptions::default()
+        };
+        serve(v2_listener, &eval, &opts).unwrap();
+    });
+
+    let mut cfg = base_config("gqa:1", 17);
+    cfg.lineage_path = Some(dir.join("mixed_lineage.json"));
+    cfg.topology.remote.connect = vec![v1_addr, v2_addr];
+    let report = EvolutionDriver::new(cfg).run();
+    assert_eq!(report.metrics.counter("remote_workers"), 2);
+    assert_eq!(report.metrics.counter("remote_worker_deaths"), 0);
+    assert_eq!(report.metrics.counter("remote_fallback_specs"), 0);
+
+    let a = std::fs::read(dir.join("local_lineage.json")).unwrap();
+    let b = std::fs::read(dir.join("mixed_lineage.json")).unwrap();
+    assert_eq!(a, b, "v1 worker in the fleet changed the archive");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Worker caches outlive coordinator runs: a second identical run
+/// against the SAME warm external fleet is served largely from
+/// worker-side caches (surfaced as `remote_dedup_saved`), and both runs'
+/// archives match the in-process ground truth byte for byte.
+#[test]
+fn warm_external_fleet_dedups_a_second_run() {
+    let dir = tempdir("warm_fleet");
+
+    let mut local_cfg = base_config("mha", 19);
+    local_cfg.lineage_path = Some(dir.join("local_lineage.json"));
+    EvolutionDriver::new(local_cfg).run();
+
+    // Long-lived fleet (once = false): each worker's Cached<Sim> stack
+    // persists across both coordinator attachments.
+    let mut addrs = Vec::new();
+    for _ in 0..2 {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        addrs.push(listener.local_addr().unwrap().to_string());
+        std::thread::spawn(move || {
+            let workload = avo::workload::parse("mha").unwrap();
+            let eval = Evaluator::for_workload(&*workload);
+            let opts = WorkerOptions { eval_workers: 2, ..WorkerOptions::default() };
+            serve(listener, &eval, &opts).unwrap();
+        });
+    }
+
+    let run = |tag: &str| {
+        let mut cfg = base_config("mha", 19);
+        cfg.lineage_path = Some(dir.join(format!("{tag}_lineage.json")));
+        cfg.topology.remote.connect = addrs.clone();
+        EvolutionDriver::new(cfg).run()
+    };
+    let cold = run("cold");
+    let warm = run("warm");
+    assert_eq!(cold.metrics.counter("remote_worker_deaths"), 0);
+    assert!(
+        warm.metrics.counter("remote_dedup_saved") > 0,
+        "warm fleet served nothing from cache"
+    );
+    assert!(
+        warm.summary().contains("fleet dedup saved"),
+        "summary hides the fleet dedup: {}",
+        warm.summary()
+    );
+
+    let local = std::fs::read(dir.join("local_lineage.json")).unwrap();
+    for tag in ["cold", "warm"] {
+        let bytes = std::fs::read(dir.join(format!("{tag}_lineage.json"))).unwrap();
+        assert_eq!(local, bytes, "{tag} fleet run diverges from in-process");
     }
     std::fs::remove_dir_all(dir).ok();
 }
