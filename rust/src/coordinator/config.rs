@@ -100,6 +100,15 @@ pub struct SearchTopology {
     /// overflow drops the *oldest* buffered migrant (freshest elites
     /// win).  Ignored in barrier mode.  Floored at 1.
     pub mailbox_capacity: usize,
+    /// Fleet-wide dispatch plane (`--dispatch-plane`): coalesce
+    /// cross-island steady-state eval submissions into full-width batches
+    /// before the backend stack.  Engages only in steady-state mode with
+    /// >1 island and >1 island worker; the serial regime and barrier mode
+    /// always call the stack directly, so archives stay byte-pinned.
+    pub dispatch_plane: bool,
+    /// Max specs the dispatcher merges into one coalesced batch
+    /// (`--coalesce-window-evals`).  Floored at 1.
+    pub coalesce_window_evals: usize,
     /// Process-level tier: `avo eval-worker` processes to self-spawn
     /// (`--remote-workers <n>`) and/or external workers to attach
     /// (`--connect host:port,...`).  Disabled by default — the in-process
@@ -122,6 +131,8 @@ impl Default for SearchTopology {
             workers: 0,
             scheduling: SchedulingMode::Barrier,
             mailbox_capacity: 8,
+            dispatch_plane: false,
+            coalesce_window_evals: 64,
             remote: RemoteTopology::default(),
         }
     }
@@ -238,6 +249,13 @@ impl RunConfig {
                 }
                 "mailbox_capacity" => {
                     cfg.topology.mailbox_capacity =
+                        v.parse::<usize>().map_err(|e| bad(&e))?.max(1)
+                }
+                "dispatch_plane" => {
+                    cfg.topology.dispatch_plane = v.parse().map_err(|e| bad(&e))?
+                }
+                "coalesce_window_evals" => {
+                    cfg.topology.coalesce_window_evals =
                         v.parse::<usize>().map_err(|e| bad(&e))?.max(1)
                 }
                 "remote_workers" => {
@@ -432,6 +450,26 @@ mod tests {
         assert_eq!(floored.topology.mailbox_capacity, 1);
         assert!(RunConfig::parse("scheduling = lockstep\n").is_err());
         assert!(RunConfig::parse("mailbox_capacity = banana\n").is_err());
+    }
+
+    #[test]
+    fn parse_dispatch_plane_keys() {
+        let cfg = RunConfig::parse(
+            "dispatch_plane = true\n\
+             coalesce_window_evals = 32\n",
+        )
+        .unwrap();
+        assert!(cfg.topology.dispatch_plane);
+        assert_eq!(cfg.topology.coalesce_window_evals, 32);
+        // Off by default: the direct stack is the reference semantics.
+        let defaults = RunConfig::default().topology;
+        assert!(!defaults.dispatch_plane);
+        assert_eq!(defaults.coalesce_window_evals, 64);
+        // Window floors at 1: a zero-width batch could never dispatch.
+        let floored = RunConfig::parse("coalesce_window_evals = 0\n").unwrap();
+        assert_eq!(floored.topology.coalesce_window_evals, 1);
+        assert!(RunConfig::parse("dispatch_plane = sideways\n").is_err());
+        assert!(RunConfig::parse("coalesce_window_evals = banana\n").is_err());
     }
 
     #[test]

@@ -104,6 +104,16 @@ impl RunReport {
         if dropped > 0 {
             s.push_str(&format!(", {dropped} migrants dropped"));
         }
+        // Dispatch plane: cross-island coalescing stats (steady-state with
+        // `--dispatch-plane` and >1 island worker only).
+        let coalesced = self.metrics.counter("dispatch_batches");
+        if coalesced > 0 {
+            s.push_str(&format!(
+                ", dispatch plane {coalesced} batches (mean width {:.1}, max queue {})",
+                self.metrics.counter("dispatch_coalesced_specs") as f64 / coalesced as f64,
+                self.metrics.counter("dispatch_queue_depth_max"),
+            ));
+        }
         // Process-level tier in one clause: fleet size, plus fault
         // recovery counters when anything actually died mid-run.
         let remote = self.metrics.counter("remote_workers");

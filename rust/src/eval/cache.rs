@@ -13,7 +13,7 @@
 
 use std::collections::hash_map::Entry;
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::score::Score;
@@ -37,8 +37,11 @@ pub struct EvalCache {
     /// Live entry count (kept in lock-step with the shards while capped),
     /// so the eviction cap check never has to lock every shard.
     live: AtomicU64,
-    /// Entry cap (`--eval-cache-max-entries`); None = unbounded.
-    max_entries: Option<usize>,
+    /// Entry cap (`--eval-cache-max-entries`); 0 = unbounded.  Atomic so
+    /// a cap can be applied through a shared reference mid-run — an
+    /// `eval-worker` learns its cap from the coordinator's handshake
+    /// *after* its `Cached<Sim>` stack is built and serving.
+    max_entries: AtomicUsize,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
@@ -53,7 +56,7 @@ impl EvalCache {
             shards: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
             order: Mutex::new(VecDeque::new()),
             live: AtomicU64::new(0),
-            max_entries: None,
+            max_entries: AtomicUsize::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
@@ -86,7 +89,20 @@ impl EvalCache {
     /// `eval_cache.json`.  Oldest-first is exact for a sequential caller;
     /// under concurrent inserts it follows the observed interleaving.
     pub fn set_max_entries(&mut self, max: usize) {
-        if self.max_entries.is_none() {
+        self.set_max_entries_shared(max);
+    }
+
+    /// [`Self::set_max_entries`] through a shared reference: the
+    /// handshake path applies the coordinator's cap to a worker cache
+    /// that is already built and shared with the serving threads.  The
+    /// order lock is held across the whole transition, so concurrent
+    /// setters serialize; an insert racing the 0→cap rebuild can at
+    /// worst leave one entry untracked by eviction (benign — workers
+    /// apply the cap before serving their first `eval` frame).
+    pub fn set_max_entries_shared(&self, max: usize) {
+        let max = max.max(1);
+        let mut order = self.order.lock().unwrap();
+        if self.max_entries.load(Ordering::Acquire) == 0 {
             // Eviction bookkeeping is skipped while unbounded (so the
             // default configuration never serializes inserts on the order
             // mutex or grows a mirror queue); rebuild it from the live
@@ -95,30 +111,32 @@ impl EvalCache {
             // which is all eviction promises.
             let mut keys: Vec<u64> = self
                 .shards
-                .iter_mut()
-                .flat_map(|s| s.get_mut().unwrap().keys().copied().collect::<Vec<_>>())
+                .iter()
+                .flat_map(|s| s.lock().unwrap().keys().copied().collect::<Vec<_>>())
                 .collect();
             keys.sort_unstable();
-            *self.live.get_mut() = keys.len() as u64;
-            *self.order.get_mut().unwrap() = keys.into_iter().collect();
+            self.live.store(keys.len() as u64, Ordering::Relaxed);
+            *order = keys.into_iter().collect();
         }
-        let max = max.max(1);
-        self.max_entries = Some(max);
+        self.max_entries.store(max, Ordering::Release);
         // Enforce the bound immediately: a cap set on a populated cache
         // must hold for len()/snapshot() without waiting for an insert.
-        while *self.live.get_mut() > max as u64 {
-            let Some(victim) = self.order.get_mut().unwrap().pop_front() else {
+        while self.live.load(Ordering::Relaxed) > max as u64 {
+            let Some(victim) = order.pop_front() else {
                 break;
             };
             if self.shard(victim).lock().unwrap().remove(&victim).is_some() {
-                *self.live.get_mut() -= 1;
+                self.live.fetch_sub(1, Ordering::Relaxed);
                 self.note_evict(victim);
             }
         }
     }
 
     pub fn max_entries(&self) -> Option<usize> {
-        self.max_entries
+        match self.max_entries.load(Ordering::Acquire) {
+            0 => None,
+            n => Some(n),
+        }
     }
 
     fn shard(&self, key: u64) -> &Mutex<HashMap<u64, Score>> {
@@ -130,7 +148,10 @@ impl EvalCache {
     /// no-op while unbounded: the queue and counter are only maintained
     /// (see [`Self::set_max_entries`]) when there is a cap to enforce.
     fn record_insert(&self, key: u64) {
-        let Some(max) = self.max_entries else { return };
+        let max = match self.max_entries.load(Ordering::Acquire) {
+            0 => return,
+            n => n,
+        };
         self.order.lock().unwrap().push_back(key);
         self.live.fetch_add(1, Ordering::Relaxed);
         while self.live.load(Ordering::Relaxed) > max as u64 {
@@ -535,6 +556,31 @@ mod tests {
             })
             .collect();
         assert_eq!(evicted, vec![1, 2], "oldest-first eviction order");
+    }
+
+    #[test]
+    fn shared_cap_setter_matches_exclusive_one() {
+        // The handshake path caps a worker cache through a shared
+        // reference; behavior must be identical to the &mut setter —
+        // rebuild-on-enable, immediate drain, oldest-first thereafter.
+        let cache = Arc::new(EvalCache::new(4));
+        let eval = Evaluator::new(mha_suite());
+        let score = eval.evaluate(&KernelSpec::naive());
+        for key in [5u64, 1, 9] {
+            cache.insert(key, score.clone());
+        }
+        cache.set_max_entries_shared(2);
+        assert_eq!(cache.max_entries(), Some(2));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(1).is_none(), "lowest key evicted on enable");
+        cache.insert(7, score.clone());
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(5).is_none(), "oldest survivor evicted on insert");
+        assert!(cache.get(9).is_some() && cache.get(7).is_some());
+        // A zero cap floors to 1, like the exclusive setter.
+        cache.set_max_entries_shared(0);
+        assert_eq!(cache.max_entries(), Some(1));
+        assert_eq!(cache.len(), 1);
     }
 
     #[test]

@@ -1,0 +1,408 @@
+//! Fleet-wide dispatch plane: cross-island batch coalescing.
+//!
+//! Steady-state islands each submit narrow `evaluate_batch` calls — a
+//! lookahead-k agent step is at most a handful of specs — so a remote
+//! fleet serving 8 islands sees batches an eighth the width it could,
+//! and the work-stealing queue has little to steal.  The
+//! [`DispatchPlane`] sits between the island loops and the backend
+//! stack: every submission becomes a *ticket* in a global coalescing
+//! queue, a single dispatcher thread merges queued tickets front-first
+//! into one wide batch (up to `--coalesce-window-evals` specs,
+//! lingering ~1ms for stragglers when underfilled), issues ONE
+//! `evaluate_batch` on the inner backend, and completes each ticket
+//! through its own slot — so every island receives exactly its own
+//! scores, in its own submission order.
+//!
+//! # Where it sits, and why scores stay bit-identical
+//!
+//! The plane wraps the *whole* `Persistent<Cached<Instrumented<…>>>`
+//! stack, so the shared [`crate::eval::CachedBackend`] underneath still
+//! probes all keys in one sharded pass (`EvalCache::probe_batch`) and
+//! dedups in-batch duplicates — only true misses occupy wire slots in
+//! the remote work-stealing queue.  The plane itself never reorders a
+//! ticket's specs and never mixes scores across tickets: a Score is a
+//! pure function of (genome, suite, seed, machine), so slicing the
+//! merged result vector back by ticket width returns exactly the bytes
+//! a direct call would have (pinned by `rust/tests/invariants.rs`).
+//! Batch *composition* is scheduling-dependent, which is why the plane
+//! is only engaged for steady-state runs with more than one island
+//! worker — the regime that is already scheduling-dependent.  Barrier
+//! mode and `--island-workers 1` steady-state bypass it entirely and
+//! stay byte-pinned.
+//!
+//! # Shutdown protocol
+//!
+//! [`DispatchPlane::shutdown`] flips a flag *inside* the queue mutex;
+//! submitters check the same flag under the same lock before enqueuing
+//! (after shutdown they fall through to a direct inner call), and the
+//! dispatcher only exits when it observes (empty queue && shutdown)
+//! under that lock — so no ticket can ever be stranded between a
+//! departing dispatcher and a late submitter.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::eval::{CacheStats, EvalBackend};
+use crate::kernelspec::KernelSpec;
+use crate::score::{BenchConfig, Score};
+use crate::sim::pipeline::CycleReport;
+use crate::telemetry::{Event, NullSink, TelemetrySink};
+
+/// Counters the plane keeps while coalescing (surfaced as `dispatch_*`
+/// run metrics and in `RunReport::summary()`).
+#[derive(Debug, Default)]
+pub struct DispatchStats {
+    /// Merged batches issued to the inner backend.
+    pub batches: AtomicU64,
+    /// Tickets (island submissions) absorbed into those batches.
+    pub tickets: AtomicU64,
+    /// Total specs across all merged batches; `width_sum / batches` is
+    /// the mean coalesced width.
+    pub width_sum: AtomicU64,
+    /// Deepest the ticket queue ever got.
+    pub max_queue_depth: AtomicU64,
+}
+
+/// Per-submission completion slot: the dispatcher deposits the ticket's
+/// score slice here and wakes the submitter.
+struct Slot {
+    scores: Mutex<Option<Vec<Score>>>,
+    ready: Condvar,
+}
+
+/// One island submission waiting in the coalescing queue.
+struct Ticket {
+    specs: Vec<KernelSpec>,
+    slot: Arc<Slot>,
+}
+
+/// Mutex-protected queue state; the shutdown flag lives inside the same
+/// lock so the enqueue-vs-exit race cannot exist (see module docs).
+struct Queue {
+    tickets: VecDeque<Ticket>,
+    shutdown: bool,
+}
+
+/// The coalescing layer itself.  Borrows the inner backend so it can sit
+/// above a stack the archipelago still owns; run [`run_dispatcher`]
+/// (exactly one thread) for the plane's lifetime and call [`shutdown`]
+/// once every submitter has finished.
+///
+/// [`run_dispatcher`]: DispatchPlane::run_dispatcher
+/// [`shutdown`]: DispatchPlane::shutdown
+pub struct DispatchPlane<'a> {
+    inner: &'a dyn EvalBackend,
+    queue: Mutex<Queue>,
+    /// Signaled on every enqueue and on shutdown.
+    arrived: Condvar,
+    /// Target merged-batch width in specs (floored at 1).
+    window: usize,
+    /// How long an underfilled dispatch waits for stragglers before
+    /// going out narrow anyway.
+    linger: Duration,
+    stats: DispatchStats,
+    sink: Arc<dyn TelemetrySink>,
+}
+
+impl<'a> DispatchPlane<'a> {
+    /// Wrap `inner`, merging submissions up to `window` specs per
+    /// dispatch (`--coalesce-window-evals`; 0 is floored to 1).
+    pub fn new(inner: &'a dyn EvalBackend, window: usize) -> Self {
+        DispatchPlane {
+            inner,
+            queue: Mutex::new(Queue { tickets: VecDeque::new(), shutdown: false }),
+            arrived: Condvar::new(),
+            window: window.max(1),
+            linger: Duration::from_millis(1),
+            stats: DispatchStats::default(),
+            sink: Arc::new(NullSink),
+        }
+    }
+
+    /// Publish `batch_coalesced` events to `sink` (call before the
+    /// dispatcher starts).
+    pub fn set_telemetry(&mut self, sink: Arc<dyn TelemetrySink>) {
+        self.sink = sink;
+    }
+
+    pub fn stats(&self) -> &DispatchStats {
+        &self.stats
+    }
+
+    /// Ask the dispatcher to drain the queue and exit.  Submissions that
+    /// arrive after this fall through to the inner backend directly.
+    pub fn shutdown(&self) {
+        let mut q = self.queue.lock().unwrap_or_else(|e| e.into_inner());
+        q.shutdown = true;
+        drop(q);
+        self.arrived.notify_all();
+    }
+
+    /// The dispatcher loop.  Run exactly one, on its own thread; returns
+    /// once [`shutdown`](DispatchPlane::shutdown) was called and the
+    /// queue is drained.
+    pub fn run_dispatcher(&self) {
+        loop {
+            let (batch, depth) = {
+                let mut q = self.queue.lock().unwrap_or_else(|e| e.into_inner());
+                loop {
+                    if q.tickets.is_empty() {
+                        if q.shutdown {
+                            return;
+                        }
+                        q = self.arrived.wait(q).unwrap_or_else(|e| e.into_inner());
+                        continue;
+                    }
+                    let width: usize = q.tickets.iter().map(|t| t.specs.len()).sum();
+                    if width >= self.window || q.shutdown {
+                        break;
+                    }
+                    // Underfilled: linger briefly for more islands to
+                    // submit, then go out narrow anyway.
+                    let (guard, timeout) = self
+                        .arrived
+                        .wait_timeout(q, self.linger)
+                        .unwrap_or_else(|e| e.into_inner());
+                    q = guard;
+                    if timeout.timed_out() {
+                        break;
+                    }
+                }
+                // Pop front-first until the window is full; the first
+                // ticket always goes (even if wider than the window).
+                let mut batch: Vec<Ticket> = Vec::new();
+                let mut width = 0usize;
+                while let Some(t) = q.tickets.front() {
+                    if !batch.is_empty() && width + t.specs.len() > self.window {
+                        break;
+                    }
+                    width += t.specs.len();
+                    batch.push(q.tickets.pop_front().expect("front checked"));
+                }
+                (batch, q.tickets.len())
+            };
+            if !batch.is_empty() {
+                self.dispatch(batch, depth);
+            }
+        }
+    }
+
+    /// Merge `tickets` into one inner `evaluate_batch` and complete each
+    /// ticket with exactly its own slice, in submission order.
+    fn dispatch(&self, tickets: Vec<Ticket>, depth: usize) {
+        let merged: Vec<KernelSpec> =
+            tickets.iter().flat_map(|t| t.specs.iter().cloned()).collect();
+        self.stats.batches.fetch_add(1, Ordering::Relaxed);
+        self.stats.tickets.fetch_add(tickets.len() as u64, Ordering::Relaxed);
+        self.stats.width_sum.fetch_add(merged.len() as u64, Ordering::Relaxed);
+        if self.sink.enabled() {
+            self.sink.publish(&Event::BatchCoalesced {
+                tickets: tickets.len(),
+                width: merged.len(),
+                depth,
+            });
+        }
+        let scores = self.inner.evaluate_batch(&merged);
+        assert_eq!(
+            scores.len(),
+            merged.len(),
+            "inner backend must return one score per spec"
+        );
+        let mut it = scores.into_iter();
+        for t in tickets {
+            let part: Vec<Score> = it.by_ref().take(t.specs.len()).collect();
+            let mut slot = t.slot.scores.lock().unwrap_or_else(|e| e.into_inner());
+            *slot = Some(part);
+            drop(slot);
+            t.slot.ready.notify_all();
+        }
+    }
+}
+
+impl EvalBackend for DispatchPlane<'_> {
+    /// Enqueue a ticket and block until the dispatcher completes it.
+    fn evaluate_batch(&self, specs: &[KernelSpec]) -> Vec<Score> {
+        if specs.is_empty() {
+            return Vec::new();
+        }
+        let slot =
+            Arc::new(Slot { scores: Mutex::new(None), ready: Condvar::new() });
+        {
+            let mut q = self.queue.lock().unwrap_or_else(|e| e.into_inner());
+            if q.shutdown {
+                // The dispatcher may already have exited: serve directly
+                // so no submitter can strand on an undrained ticket.
+                drop(q);
+                return self.inner.evaluate_batch(specs);
+            }
+            q.tickets
+                .push_back(Ticket { specs: specs.to_vec(), slot: Arc::clone(&slot) });
+            self.stats
+                .max_queue_depth
+                .fetch_max(q.tickets.len() as u64, Ordering::Relaxed);
+        }
+        self.arrived.notify_all();
+        let mut guard = slot.scores.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(scores) = guard.take() {
+                return scores;
+            }
+            guard = slot.ready.wait(guard).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn suite(&self) -> &[BenchConfig] {
+        self.inner.suite()
+    }
+
+    fn report(&self, spec: &KernelSpec, cfg: &BenchConfig) -> CycleReport {
+        self.inner.report(spec, cfg)
+    }
+
+    fn cache_tag(&self) -> u64 {
+        self.inner.cache_tag()
+    }
+
+    fn is_deterministic(&self) -> bool {
+        self.inner.is_deterministic()
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.inner.cache_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::score::{mha_suite, Evaluator};
+    use crate::telemetry::VecSink;
+
+    fn specs() -> Vec<KernelSpec> {
+        vec![
+            KernelSpec::naive(),
+            crate::baselines::fa4_genome(),
+            crate::baselines::evolved_genome(),
+            crate::baselines::cudnn_genome(),
+        ]
+    }
+
+    #[test]
+    fn plane_scores_match_direct_backend() {
+        let eval = Evaluator::new(mha_suite());
+        let plane = DispatchPlane::new(&eval, 4);
+        let batch = specs();
+        let out = std::thread::scope(|scope| {
+            let plane = &plane;
+            scope.spawn(move || plane.run_dispatcher());
+            let a = plane.evaluate_batch(&batch);
+            let b = plane.evaluate_batch(&batch[..2]);
+            plane.shutdown();
+            (a, b)
+        });
+        let direct = eval.evaluate_batch(&batch);
+        assert_eq!(out.0.len(), batch.len());
+        for (p, d) in out.0.iter().zip(&direct) {
+            assert_eq!(p.per_config, d.per_config);
+        }
+        for (p, d) in out.1.iter().zip(&direct[..2]) {
+            assert_eq!(p.per_config, d.per_config);
+        }
+        assert_eq!(plane.stats().tickets.load(Ordering::SeqCst), 2);
+        assert_eq!(
+            plane.stats().width_sum.load(Ordering::SeqCst),
+            batch.len() as u64 + 2
+        );
+    }
+
+    #[test]
+    fn queued_tickets_coalesce_into_one_wide_batch() {
+        // Enqueue every submission BEFORE the dispatcher starts: the
+        // first dispatch must merge all of them (window 64 >> total),
+        // each submitter getting exactly its own slice back.
+        let eval = Evaluator::new(mha_suite());
+        let mut plane = DispatchPlane::new(&eval, 64);
+        let sink = Arc::new(VecSink::new());
+        plane.set_telemetry(sink.clone());
+        let pool = specs();
+        let chunks: Vec<&[KernelSpec]> =
+            vec![&pool[0..2], &pool[2..4], &pool[1..3], &pool[0..1]];
+        let total: usize = chunks.iter().map(|c| c.len()).sum();
+        let outs = std::thread::scope(|scope| {
+            let plane = &plane;
+            let handles: Vec<_> = chunks
+                .iter()
+                .map(|chunk| scope.spawn(move || plane.evaluate_batch(chunk)))
+                .collect();
+            while (plane.stats().max_queue_depth.load(Ordering::SeqCst) as usize)
+                < chunks.len()
+            {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            scope.spawn(move || plane.run_dispatcher());
+            let outs: Vec<Vec<Score>> =
+                handles.into_iter().map(|h| h.join().expect("submitter")).collect();
+            plane.shutdown();
+            outs
+        });
+        for (chunk, out) in chunks.iter().zip(&outs) {
+            assert_eq!(out.len(), chunk.len());
+            for (spec, score) in chunk.iter().zip(out) {
+                assert_eq!(score.per_config, eval.evaluate(spec).per_config);
+            }
+        }
+        assert_eq!(plane.stats().batches.load(Ordering::SeqCst), 1);
+        assert_eq!(plane.stats().tickets.load(Ordering::SeqCst), chunks.len() as u64);
+        assert_eq!(plane.stats().width_sum.load(Ordering::SeqCst), total as u64);
+        let coalesced: Vec<Event> = sink
+            .take()
+            .into_iter()
+            .filter(|e| matches!(e, Event::BatchCoalesced { .. }))
+            .collect();
+        assert_eq!(
+            coalesced,
+            vec![Event::BatchCoalesced { tickets: chunks.len(), width: total, depth: 0 }]
+        );
+    }
+
+    #[test]
+    fn post_shutdown_submissions_fall_through_to_inner() {
+        let eval = Evaluator::new(mha_suite());
+        let plane = DispatchPlane::new(&eval, 8);
+        plane.shutdown(); // no dispatcher ever ran
+        let batch = specs();
+        let out = plane.evaluate_batch(&batch);
+        let direct = eval.evaluate_batch(&batch);
+        for (p, d) in out.iter().zip(&direct) {
+            assert_eq!(p.per_config, d.per_config);
+        }
+        // Pass-through never counts as a coalesced dispatch.
+        assert_eq!(plane.stats().batches.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn empty_batch_short_circuits() {
+        let eval = Evaluator::new(mha_suite());
+        let plane = DispatchPlane::new(&eval, 8);
+        assert!(plane.evaluate_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn window_floors_at_one_and_oversized_tickets_still_dispatch() {
+        let eval = Evaluator::new(mha_suite());
+        let plane = DispatchPlane::new(&eval, 0); // floored to 1
+        let batch = specs(); // wider than the window
+        let out = std::thread::scope(|scope| {
+            let plane = &plane;
+            scope.spawn(move || plane.run_dispatcher());
+            let out = plane.evaluate_batch(&batch);
+            plane.shutdown();
+            out
+        });
+        assert_eq!(out.len(), batch.len());
+        assert_eq!(plane.stats().batches.load(Ordering::SeqCst), 1);
+        assert_eq!(plane.stats().width_sum.load(Ordering::SeqCst), batch.len() as u64);
+    }
+}

@@ -38,7 +38,17 @@
 //!   stealing, re-attach, and requeue semantics;
 //! * [`SkewBackend`] — a latency-skew injection layer (per-calling-thread
 //!   delay multipliers) for saturation experiments; scores pass through
-//!   untouched.
+//!   untouched;
+//! * [`DispatchPlane`] — the fleet-wide coalescing tier
+//!   (`--dispatch-plane`): steady-state island quanta submit their narrow
+//!   batches as tickets into a global queue, a dispatcher thread merges
+//!   them cross-island into full-width chunks (up to
+//!   `--coalesce-window-evals` specs) and issues one `evaluate_batch` on
+//!   the stack below, then completes each ticket with exactly its own
+//!   score slice in submission order.  The plane sits *above* the whole
+//!   `Persistent<Cached<…>>` stack, so the shared cache still probes all
+//!   keys in one sharded pass and only true misses occupy slots in the
+//!   remote work-stealing queue.
 //!
 //! **Determinism contract.** Evolution runs noise-free, so a Score is a
 //! pure function of (genome, suite, functional seed, machine model) — the
@@ -52,8 +62,12 @@
 //! `PersistentBackend<CachedBackend<InstrumentedBackend<SimBackend>>>` in
 //! the driver — with [`RemoteBackend`] in place of [`SimBackend`] when a
 //! remote topology is configured — so the shared cache and warm-start
-//! semantics carry over unchanged and each batch's distinct misses reach
-//! the worker fleet as one batch.  The telemetry tier
+//! semantics carry over unchanged: [`CachedBackend`] probes every key of
+//! a batch in one sharded pass (`EvalCache::probe_batch`) and only the
+//! distinct misses reach the worker fleet, as one batch.  When the
+//! dispatch plane is engaged (steady-state, >1 island worker,
+//! `--dispatch-plane`) it wraps this whole stack, merging cross-island
+//! submissions *before* the cache probe.  The telemetry tier
 //! ([`crate::telemetry::InstrumentedBackend`]) sits *inside* the cache:
 //! its eval-batch latency histogram times real evaluations, never cache
 //! hits.  Operators never see the difference: they already propose
@@ -62,12 +76,14 @@
 pub mod backend;
 pub mod cache;
 pub mod cached;
+pub mod dispatch;
 pub mod persist;
 pub mod remote;
 
 pub use backend::{CountingBackend, SimBackend, SkewBackend};
 pub use cache::{EvalCache, DEFAULT_SHARDS};
 pub use cached::CachedBackend;
+pub use dispatch::{DispatchPlane, DispatchStats};
 pub use persist::{PersistentBackend, CACHE_FILE};
 pub use remote::{RemoteBackend, RemoteTopology};
 

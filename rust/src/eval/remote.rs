@@ -16,7 +16,7 @@
 //!
 //! | direction | message | fields |
 //! |-----------|---------|--------|
-//! | c → w | `hello`    | `protocol`, `protocol_max`, `fingerprint` (16-hex cache tag), `workload`, `gossip`, `token`? |
+//! | c → w | `hello`    | `protocol`, `protocol_max`, `fingerprint` (16-hex cache tag), `workload`, `gossip`, `token`?, `cache_cap`? |
 //! | w → c | `hello`    | `protocol` (negotiated), `fingerprint`, `workload`, `pid`, `token`? |
 //! | c → w | `eval`     | `specs`: array of [`KernelSpec`] JSON; `deltas`?: gossiped cache entries |
 //! | w → c | `scores`   | `scores`: array of [`Score`] JSON, one per spec, in order; `cache_hits`?, `cache_misses`?, `deltas`? |
@@ -25,7 +25,10 @@
 //! | either | `error`   | `message` |
 //!
 //! Fields marked `?` are the protocol-2 extensions; a v1 peer never sends
-//! them and ignores them if present.  The coordinator's `protocol` field
+//! them and ignores them if present.  `cache_cap` is the coordinator's
+//! `--eval-cache-max-entries` bound: a protocol-2 worker applies it to its
+//! own `Cached<Sim>` stack (oldest-first eviction, like the coordinator's)
+//! so week-long fleet runs bound memory on both sides of the wire.  The coordinator's `protocol` field
 //! stays pinned at the v1 baseline (v1 workers require an exact match);
 //! `protocol_max` advertises the newest version the coordinator speaks and
 //! the worker's reply `protocol` is the negotiated version for the
@@ -211,7 +214,13 @@ fn error_frame(message: String) -> Json {
 /// [`BASE_PROTOCOL`] so v1 workers (which require an exact match) still
 /// attach; `protocol_max` advertises the newest version the coordinator
 /// speaks.
-fn coordinator_hello(tag: u64, workload: &str, gossip: bool, token: Option<u64>) -> Json {
+fn coordinator_hello(
+    tag: u64,
+    workload: &str,
+    gossip: bool,
+    token: Option<u64>,
+    cache_cap: Option<usize>,
+) -> Json {
     let mut entries = vec![
         ("type", Json::Str("hello".into())),
         ("protocol", BASE_PROTOCOL.to_json()),
@@ -222,6 +231,9 @@ fn coordinator_hello(tag: u64, workload: &str, gossip: bool, token: Option<u64>)
     ];
     if let Some(token) = token {
         entries.push(("token", Json::Str(format!("{token:016x}"))));
+    }
+    if let Some(cap) = cache_cap {
+        entries.push(("cache_cap", (cap as u64).to_json()));
     }
     Json::obj(entries)
 }
@@ -372,6 +384,19 @@ pub fn serve(listener: TcpListener, eval: &Evaluator, opts: &WorkerOptions) -> R
         opts.eval_workers
     };
     let backend = CachedBackend::new(SimBackend::new(eval.clone(), threads));
+    serve_with(listener, &backend, opts)
+}
+
+/// [`serve`] over a caller-built `Cached<…>` stack: the dispatch-plane
+/// bench hosts `Cached<Skew<Sim>>` workers in-thread to model straggler
+/// fleets without giving up the real wire protocol.  The stack must be a
+/// [`CachedBackend`] — the protocol-2 probe/gossip/cap paths all go
+/// through its cache.
+pub fn serve_with<B: EvalBackend>(
+    listener: TcpListener,
+    backend: &CachedBackend<B>,
+    opts: &WorkerOptions,
+) -> Result<(), String> {
     // Process-lifetime frame counter so `fail_after` spans reconnects.
     let served = AtomicU64::new(0);
     for stream in listener.incoming() {
@@ -388,7 +413,7 @@ pub fn serve(listener: TcpListener, eval: &Evaluator, opts: &WorkerOptions) -> R
         stream.set_nodelay(true).ok();
         // A failed connection (handshake rejection, peer vanishing) must
         // not take the worker down; the next coordinator can still attach.
-        if let Err(e) = handle_connection(stream, &backend, opts, &served) {
+        if let Err(e) = handle_connection(stream, backend, opts, &served) {
             if e.kind() != std::io::ErrorKind::UnexpectedEof {
                 eprintln!("eval-worker: connection ended: {e}");
             }
@@ -506,9 +531,9 @@ pub fn serve_frozen_v1(
     Ok(())
 }
 
-fn handle_connection(
+fn handle_connection<B: EvalBackend>(
     mut stream: TcpStream,
-    backend: &CachedBackend<SimBackend>,
+    backend: &CachedBackend<B>,
     opts: &WorkerOptions,
     served: &AtomicU64,
 ) -> std::io::Result<()> {
@@ -592,6 +617,16 @@ fn handle_connection(
     // not having switched the fabric off (the no-gossip bench baseline).
     let gossip_conn =
         negotiated >= 2 && hello.get("gossip").and_then(Json::as_bool).unwrap_or(true);
+    // Protocol-2 entry-cap hint: bound this worker's cache the way the
+    // coordinator's `--eval-cache-max-entries` bounds its own (applied
+    // before any eval frame is served, so eviction order is exact).  A v1
+    // connection never carries the field; an older worker build simply
+    // ignores it.
+    if negotiated >= 2 {
+        if let Some(cap) = hello.get("cache_cap").and_then(Json::as_u64) {
+            backend.cache().set_max_entries_shared(cap as usize);
+        }
+    }
     loop {
         let frame = match read_frame(&mut stream) {
             Ok(f) => f,
@@ -766,6 +801,12 @@ pub struct RemoteTopology {
     /// (one TCP connect + handshake) but a hung endpoint can absorb a
     /// read deadline each try.
     pub reattach_cooldown_ms: u64,
+    /// Entry cap shipped to protocol-2 workers in the handshake
+    /// (`cache_cap` hello field) so their `Cached<Sim>` stacks evict
+    /// oldest-first like the coordinator's.  The archipelago defaults it
+    /// to `--eval-cache-max-entries`; None ships nothing (unbounded
+    /// worker caches, the pre-cap behavior).  v1 workers ignore it.
+    pub cache_cap: Option<usize>,
 }
 
 impl Default for RemoteTopology {
@@ -779,6 +820,7 @@ impl Default for RemoteTopology {
             secret: None,
             gossip: true,
             reattach_cooldown_ms: DEFAULT_REATTACH_COOLDOWN_MS,
+            cache_cap: None,
         }
     }
 }
@@ -811,6 +853,12 @@ pub struct RemoteStats {
     /// homed to it — the work-stealing saturation signal (a fast worker
     /// absorbing a slow sibling's backlog, or surplus oversplit chunks).
     pub chunks_stolen: AtomicU64,
+    /// Every chunk round-trip attempted, successful or not; with
+    /// `chunk_specs` below this gives the mean remote chunk width —
+    /// the utilization ratio the dispatch-plane bench gates on.
+    pub chunks_dispatched: AtomicU64,
+    /// Total specs across those round-trips.
+    pub chunk_specs: AtomicU64,
     /// Total nanoseconds coordinator threads spent inside worker
     /// round-trips — the numerator of the fleet idle-fraction metric
     /// (capacity = workers x run wall-clock).
@@ -1054,6 +1102,9 @@ pub struct RemoteBackend {
     /// Fabric-wide gossip switch ([`RemoteTopology::gossip`]).
     gossip: bool,
     reattach_cooldown: Duration,
+    /// Worker-cache entry cap shipped in every handshake
+    /// ([`RemoteTopology::cache_cap`]), retained for re-attach replays.
+    cache_cap: Option<usize>,
 }
 
 impl RemoteBackend {
@@ -1150,6 +1201,7 @@ impl RemoteBackend {
                 read_timeout,
                 topo.secret.as_deref(),
                 topo.gossip,
+                topo.cache_cap,
             );
             match attempt {
                 Ok((conn, gossip_ok)) => workers.push(RemoteWorker {
@@ -1183,6 +1235,7 @@ impl RemoteBackend {
             secret: topo.secret.clone(),
             gossip: topo.gossip,
             reattach_cooldown: Duration::from_millis(topo.reattach_cooldown_ms),
+            cache_cap: topo.cache_cap,
         })
     }
 
@@ -1216,6 +1269,7 @@ impl RemoteBackend {
                 self.read_timeout,
                 self.secret.as_deref(),
                 self.gossip,
+                self.cache_cap,
             );
             let Ok((mut conn, gossip_ok)) = attempt else { continue };
             if gossip_ok {
@@ -1318,6 +1372,7 @@ fn attach(
     read_timeout: Option<Duration>,
     secret: Option<&str>,
     gossip: bool,
+    cache_cap: Option<usize>,
 ) -> Result<(TcpStream, bool), String> {
     let mut stream = TcpStream::connect(addr).map_err(|e| format!("connect: {e}"))?;
     stream.set_nodelay(true).ok();
@@ -1325,8 +1380,11 @@ fn attach(
         .set_read_timeout(read_timeout)
         .map_err(|e| format!("set_read_timeout: {e}"))?;
     let token = secret.map(|s| auth_token(s, tag));
-    write_frame(&mut stream, &coordinator_hello(tag, workload_hint, gossip, token))
-        .map_err(|e| format!("handshake send: {e}"))?;
+    write_frame(
+        &mut stream,
+        &coordinator_hello(tag, workload_hint, gossip, token, cache_cap),
+    )
+    .map_err(|e| format!("handshake send: {e}"))?;
     let reply = read_frame(&mut stream).map_err(|e| format!("handshake recv: {e}"))?;
     match msg_type(&reply) {
         Some("hello") => {
@@ -1443,6 +1501,8 @@ fn timed_round_trip(
     ctx: &ChunkCtx<'_>,
 ) -> Result<Vec<Score>, WorkerFailure> {
     let start = Instant::now();
+    ctx.stats.chunks_dispatched.fetch_add(1, Ordering::SeqCst);
+    ctx.stats.chunk_specs.fetch_add(chunk.len() as u64, Ordering::SeqCst);
     let result = worker.evaluate(chunk, specs, ctx);
     let elapsed = start.elapsed();
     ctx.stats
@@ -1796,7 +1856,7 @@ mod tests {
 
     #[test]
     fn frame_roundtrip() {
-        let msg = coordinator_hello(0xDEAD_BEEF, "mha", true, Some(42));
+        let msg = coordinator_hello(0xDEAD_BEEF, "mha", true, Some(42), Some(5000));
         let mut buf = Vec::new();
         write_frame(&mut buf, &msg).unwrap();
         let back = read_frame(&mut buf.as_slice()).unwrap();
@@ -1807,6 +1867,11 @@ mod tests {
             back.get("protocol_max").and_then(Json::as_u64),
             Some(PROTOCOL_VERSION)
         );
+        assert_eq!(back.get("cache_cap").and_then(Json::as_u64), Some(5000));
+        // Without a cap the additive field is absent, not null.
+        let bare = coordinator_hello(1, "mha", true, None, None);
+        assert!(bare.get("cache_cap").is_none());
+        assert!(bare.get("token").is_none());
         let reply = worker_hello(0xDEAD_BEEF, "mha", PROTOCOL_VERSION, Some(7));
         assert_eq!(
             reply.get("protocol").and_then(Json::as_u64),
@@ -2170,6 +2235,44 @@ mod tests {
         hb.join().unwrap().unwrap();
     }
 
+    /// `--eval-cache-max-entries` reaches worker-side `Cached<Sim>` stacks
+    /// through the v2 handshake: with the cap at 1, re-sending an evicted
+    /// spec forces a re-simulation the uncapped fleet never pays.
+    #[test]
+    fn handshake_cache_cap_bounds_worker_caches() {
+        let eval = Evaluator::new(mha_suite());
+        let spec_a = KernelSpec::naive();
+        let spec_b = crate::baselines::fa4_genome();
+        // Gossip off in both runs: a re-sent spec must be served (or not)
+        // by the worker's *own* cache, never re-warmed from the ledger.
+        let run = |cache_cap: Option<usize>| -> (u64, u64) {
+            let (addr, handle) = worker_thread("mha", true, None);
+            let topo = RemoteTopology {
+                connect: vec![addr],
+                gossip: false,
+                cache_cap,
+                ..RemoteTopology::default()
+            };
+            let backend = RemoteBackend::from_topology(eval.clone(), "mha", &topo).unwrap();
+            for spec in [&spec_a, &spec_b, &spec_a] {
+                let score = backend.evaluate(spec);
+                assert_eq!(score.per_config, eval.evaluate(spec).per_config);
+            }
+            let stats = backend.stats();
+            let out = (
+                stats.fleet_misses.load(Ordering::SeqCst),
+                stats.dedup_saved.load(Ordering::SeqCst),
+            );
+            drop(backend);
+            handle.join().unwrap().unwrap();
+            out
+        };
+        // Capped at one entry, B evicts A, so the third eval re-simulates.
+        assert_eq!(run(Some(1)), (3, 0), "cap 1: A, B, then A again all miss");
+        // Uncapped, the worker's cache still holds A.
+        assert_eq!(run(None), (2, 1), "uncapped: the re-sent A is a hit");
+    }
+
     /// Kill an external worker, restart it on the same port, and watch the
     /// coordinator re-attach it (with a warm cache snapshot) — archives
     /// never notice because scores are pure.
@@ -2258,7 +2361,15 @@ mod tests {
         let server_eval = eval.clone();
         let handle =
             std::thread::spawn(move || serve_frozen_v1(listener, &server_eval, "mha", true));
-        let backend = RemoteBackend::connect(eval.clone(), &[addr]).unwrap();
+        // A cache_cap in the topology rides the coordinator hello as an
+        // additive field: the frozen v1 worker ignores keys it doesn't
+        // know and must still negotiate and score normally.
+        let topo = RemoteTopology {
+            connect: vec![addr],
+            cache_cap: Some(4),
+            ..RemoteTopology::default()
+        };
+        let backend = RemoteBackend::from_topology(eval.clone(), "mha", &topo).unwrap();
         let specs = vec![KernelSpec::naive(), crate::baselines::fa4_genome()];
         let scores = backend.evaluate_batch(&specs);
         for (r, s) in scores.iter().zip(&specs) {

@@ -35,7 +35,8 @@ use crate::coordinator::config::{RunConfig, SchedulingMode};
 use crate::coordinator::driver::{build_operator, RunReport};
 use crate::coordinator::metrics::Metrics;
 use crate::eval::{
-    CacheStats, CachedBackend, EvalBackend, PersistentBackend, RemoteBackend, SimBackend,
+    CacheStats, CachedBackend, DispatchPlane, EvalBackend, PersistentBackend, RemoteBackend,
+    SimBackend,
 };
 use crate::evolution::Lineage;
 use crate::islands::migration::Migrant;
@@ -145,12 +146,16 @@ impl Archipelago {
             // list syntax), but reachability and handshake can only be
             // probed by actually connecting — and a probe connection would
             // consume a `--once` worker's single session.
-            let mut remote = RemoteBackend::from_topology(
-                cfg.evaluator(),
-                &cfg.workload,
-                &cfg.topology.remote,
-            )
-            .unwrap_or_else(|e| panic!("remote topology: {e}"));
+            // Worker-side caches inherit the coordinator's entry cap
+            // unless the topology pins its own: week-long fleet runs
+            // bound memory on both sides of the wire the same way.
+            let mut topo = cfg.topology.remote.clone();
+            if topo.cache_cap.is_none() {
+                topo.cache_cap = cfg.eval_cache_max_entries;
+            }
+            let mut remote =
+                RemoteBackend::from_topology(cfg.evaluator(), &cfg.workload, &topo)
+                    .unwrap_or_else(|e| panic!("remote topology: {e}"));
             remote.set_telemetry(telem.sink());
             let workers = remote.worker_count() as u64;
             let stats = remote.stats();
@@ -177,6 +182,15 @@ impl Archipelago {
             report
                 .metrics
                 .incr("remote_chunks_stolen", stats.chunks_stolen.load(Ordering::SeqCst));
+            // Mean remote chunk width = chunk_specs / chunks_dispatched;
+            // the dispatch-plane bench gates on this ratio widening.
+            report.metrics.incr(
+                "remote_chunks_dispatched",
+                stats.chunks_dispatched.load(Ordering::SeqCst),
+            );
+            report
+                .metrics
+                .incr("remote_chunk_specs", stats.chunk_specs.load(Ordering::SeqCst));
             // Fleet cache fabric: scores served from worker-side caches
             // instead of re-simulated, plus the gossip/re-attach traffic
             // that made those hits possible.
@@ -313,6 +327,9 @@ impl Archipelago {
         let mut island_busy_ms = 0u64;
         let mut island_capacity_ms = 0u64;
         let mut migrants_dropped = 0u64;
+        // (batches, tickets, width_sum, max_queue_depth) from the dispatch
+        // plane, when engaged.
+        let mut dispatch = (0u64, 0u64, 0u64, 0u64);
         match cfg.topology.scheduling {
             // Barrier mode (default): every island runs until it lands its
             // commit quota (`migrate_every` fresh commits, possibly halved
@@ -340,16 +357,52 @@ impl Archipelago {
             }
             // Steady-state mode: no barriers — islands advance
             // independently on a shared worker pool and migrants flow
-            // through bounded mailboxes (see `islands::steady`).
+            // through bounded mailboxes (see `islands::steady`).  With
+            // `--dispatch-plane` and >1 island worker, island quanta
+            // submit through a fleet-wide coalescing plane
+            // ([`DispatchPlane`]) instead of calling the stack directly;
+            // the serial regime bypasses it so `--island-workers 1`
+            // stays seed-deterministic, plane on or off.
             SchedulingMode::SteadyState => {
-                let outcome = crate::islands::steady::run(
-                    self,
-                    islands,
-                    &backend,
-                    &sink,
-                    &mut mig_rng,
-                    base_quota,
-                );
+                let use_plane = cfg.topology.dispatch_plane
+                    && n > 1
+                    && self.worker_count(n) > 1;
+                let outcome = if use_plane {
+                    let mut plane =
+                        DispatchPlane::new(&backend, cfg.topology.coalesce_window_evals);
+                    plane.set_telemetry(Arc::clone(&sink));
+                    let outcome = std::thread::scope(|scope| {
+                        let plane = &plane;
+                        scope.spawn(move || plane.run_dispatcher());
+                        let outcome = crate::islands::steady::run(
+                            self,
+                            islands,
+                            plane,
+                            &sink,
+                            &mut mig_rng,
+                            base_quota,
+                        );
+                        plane.shutdown();
+                        outcome
+                    });
+                    use std::sync::atomic::Ordering;
+                    dispatch = (
+                        plane.stats().batches.load(Ordering::SeqCst),
+                        plane.stats().tickets.load(Ordering::SeqCst),
+                        plane.stats().width_sum.load(Ordering::SeqCst),
+                        plane.stats().max_queue_depth.load(Ordering::SeqCst),
+                    );
+                    outcome
+                } else {
+                    crate::islands::steady::run(
+                        self,
+                        islands,
+                        &backend,
+                        &sink,
+                        &mut mig_rng,
+                        base_quota,
+                    )
+                };
                 islands = outcome.islands;
                 island_busy_ms = outcome.busy_ms;
                 island_capacity_ms = outcome.capacity_ms;
@@ -372,6 +425,13 @@ impl Archipelago {
         }
         if migrants_dropped > 0 {
             report.metrics.incr("migrants_dropped", migrants_dropped);
+        }
+        let (batches, tickets, width_sum, depth_max) = dispatch;
+        if batches > 0 {
+            report.metrics.incr("dispatch_batches", batches);
+            report.metrics.incr("dispatch_tickets", tickets);
+            report.metrics.incr("dispatch_coalesced_specs", width_sum);
+            report.metrics.incr("dispatch_queue_depth_max", depth_max);
         }
         report
     }

@@ -21,6 +21,14 @@
 //! ([`crate::coordinator::SchedulingMode::Barrier`], the default) remains
 //! the reference regime at any worker count.
 //!
+//! With `--dispatch-plane` the `eval` handle the scheduler passes to each
+//! quantum is a [`crate::eval::DispatchPlane`] wrapping the backend stack
+//! — island quanta become tickets in a fleet-wide coalescing queue, and
+//! every ticket still returns exactly its own scores in submission order,
+//! so nothing in this module changes.  The archipelago only engages the
+//! plane in the multi-worker regime; the serial FIFO below always calls
+//! the stack directly, keeping `--island-workers 1` byte-pinned.
+//!
 //! # Migration policies without barriers
 //!
 //! * `Ring` — island i mails its elite to island (i+1) mod N.

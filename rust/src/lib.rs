@@ -60,14 +60,27 @@
 //!   a mid-run worker kill, a mid-run re-attach, and a protocol-1 worker
 //!   in a mixed fleet; `benches/remote_fabric.rs` gates the fleet-dedup
 //!   win, `benches/archipelago_steadystate.rs` the idle-fraction win
-//!   under injected latency skew).
+//!   under injected latency skew).  The two tiers meet in the *dispatch
+//!   plane* ([`eval::DispatchPlane`], `--dispatch-plane`): steady-state
+//!   islands submit their narrow eval batches as tickets into a global
+//!   coalescing queue, a dispatcher merges them cross-island into
+//!   full-width batches for the stack below — so the work-stealing queue
+//!   sees fleet-wide batches instead of per-island slivers — and each
+//!   island gets back exactly its own scores in submission order
+//!   (`benches/dispatch_plane.rs` gates the chunk-widening and wall-clock
+//!   wins over a skewed fleet).  Worker-side caches inherit the
+//!   coordinator's `--eval-cache-max-entries` bound through the v2
+//!   handshake.
 //! * **Evaluation subsystem** ([`eval`]) — the batched [`eval::EvalBackend`]
 //!   seam every scoring-function call goes through: [`eval::SimBackend`]
 //!   (the simulator, with worker fan-out for batches),
 //!   [`eval::RemoteBackend`] (the worker-fleet ground truth above),
 //!   [`eval::CachedBackend`] (shared content-addressed memoization — with
-//!   an optional oldest-first entry cap for week-long runs — so duplicate
-//!   genomes are never re-simulated), and [`eval::PersistentBackend`]
+//!   an optional oldest-first entry cap for week-long runs, batch-wide
+//!   sharded probes, and a shared-reference cap setter the remote worker
+//!   applies from the handshake — so duplicate genomes are never
+//!   re-simulated), [`eval::DispatchPlane`] (cross-island batch
+//!   coalescing above the whole stack), and [`eval::PersistentBackend`]
 //!   (JSON cache persistence + `--warm-start`, carrying evaluations across
 //!   runs; files are fingerprinted per workload and interchangeable
 //!   between in-process and remote runs).  The determinism contract for

@@ -65,6 +65,11 @@ fn usage() -> ! {
          \u{20}          lets islands free-run with mailbox migration)\n\
          \u{20}         --mailbox-capacity N  (steady-state migrant inbox bound,\n\
          \u{20}          oldest dropped on overflow; default 8)\n\
+         \u{20}         --dispatch-plane  (coalesce cross-island steady-state\n\
+         \u{20}          eval batches before the backend stack; engages with\n\
+         \u{20}          >1 island and >1 island worker)\n\
+         \u{20}         --coalesce-window-evals N  (max specs per coalesced\n\
+         \u{20}          batch; default 64)\n\
          \u{20}         --remote-workers N  (self-spawn N eval-worker processes)\n\
          \u{20}         --connect HOST:PORT[,HOST:PORT...]  (attach external workers)\n\
          \u{20}         --adaptive-migration --adaptive-stall-epochs K\n\
@@ -223,6 +228,12 @@ fn main() -> Result<(), CliError> {
             }
             if let Some(c) = flags.parse_strict::<usize>("--mailbox-capacity")? {
                 cfg.topology.mailbox_capacity = c.max(1);
+            }
+            if flags.has("--dispatch-plane") {
+                cfg.topology.dispatch_plane = true;
+            }
+            if let Some(w) = flags.parse_strict::<usize>("--coalesce-window-evals")? {
+                cfg.topology.coalesce_window_evals = w.max(1);
             }
             if let Some(path) = flags.get("--journal") {
                 cfg.telemetry.journal = Some(PathBuf::from(path));

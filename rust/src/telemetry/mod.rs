@@ -33,6 +33,7 @@
 //! | `fallback_local`   | `specs`                                  | —               | remote backend |
 //! | `chunk_stolen`     | `worker`, `specs`                        | —               | remote backend |
 //! | `queue_depth`      | `depth`                                  | —               | remote backend |
+//! | `batch_coalesced`  | `tickets`, `width`, `depth`              | —               | dispatch plane |
 //! | `cache_delta_gossiped` | `worker`, `entries`, `fresh`         | —               | remote backend |
 //! | `worker_reattached`| `worker`, `addr`                         | `addr`          | remote backend |
 //! | `migration`        | `epoch`, `from`, `to`, `accepted`        | —               | archipelago |
@@ -90,6 +91,9 @@ pub enum Event {
     FallbackLocal { specs: usize },
     ChunkStolen { worker: usize, specs: usize },
     QueueDepth { depth: usize },
+    /// The dispatch plane merged `tickets` island submissions into one
+    /// `width`-spec batch, leaving `depth` tickets still queued.
+    BatchCoalesced { tickets: usize, width: usize, depth: usize },
     /// A worker's `scores` reply carried `entries` cache deltas, of which
     /// `fresh` were new to the coordinator's fabric ledger.
     CacheDeltaGossiped { worker: usize, entries: usize, fresh: usize },
@@ -129,6 +133,7 @@ impl Event {
             Event::FallbackLocal { .. } => "fallback_local",
             Event::ChunkStolen { .. } => "chunk_stolen",
             Event::QueueDepth { .. } => "queue_depth",
+            Event::BatchCoalesced { .. } => "batch_coalesced",
             Event::CacheDeltaGossiped { .. } => "cache_delta_gossiped",
             Event::WorkerReattached { .. } => "worker_reattached",
             Event::Migration { .. } => "migration",
@@ -198,6 +203,11 @@ impl Event {
                 fields.push(("specs", num(*specs as f64)));
             }
             Event::QueueDepth { depth } => {
+                fields.push(("depth", num(*depth as f64)));
+            }
+            Event::BatchCoalesced { tickets, width, depth } => {
+                fields.push(("tickets", num(*tickets as f64)));
+                fields.push(("width", num(*width as f64)));
                 fields.push(("depth", num(*depth as f64)));
             }
             Event::MigrantBuffered { island, from } | Event::MigrantDropped { island, from } => {
@@ -653,6 +663,7 @@ mod tests {
             Event::FallbackLocal { specs: 5 },
             Event::ChunkStolen { worker: 1, specs: 4 },
             Event::QueueDepth { depth: 7 },
+            Event::BatchCoalesced { tickets: 3, width: 12, depth: 2 },
             Event::CacheDeltaGossiped { worker: 1, entries: 8, fresh: 3 },
             Event::WorkerReattached { worker: 1, addr: "127.0.0.1:9".into() },
             Event::Migration { epoch: 2, from: 0, to: 1, accepted: true },

@@ -92,6 +92,21 @@ pub fn render_status(snap: &Json) -> String {
             }
         }
     }
+    if let Some(dispatch) = snap.get("dispatch") {
+        if let Some(batches) = dispatch.get("batches").and_then(|j| j.as_u64()) {
+            if batches > 0 {
+                let width = dispatch
+                    .get("coalesced_width")
+                    .and_then(|j| j.as_f64())
+                    .unwrap_or(0.0);
+                let depth = dispatch
+                    .get("queue_depth_max")
+                    .and_then(|j| j.as_u64())
+                    .unwrap_or(0);
+                line.push_str(&format!(" | coalesce w{width:.1} q{depth}"));
+            }
+        }
+    }
     if snap.get("done").and_then(|j| j.as_bool()) == Some(true) {
         line.push_str(" | done");
     }
@@ -171,6 +186,14 @@ mod tests {
                     ("read_timeouts", Json::Num(1.0)),
                 ]),
             ),
+            (
+                "dispatch",
+                Json::obj([
+                    ("batches", Json::Num(5.0)),
+                    ("coalesced_width", Json::Num(4.0)),
+                    ("queue_depth_max", Json::Num(7.0)),
+                ]),
+            ),
             ("done", Json::Bool(true)),
         ]);
         let line = render_status(&snap);
@@ -181,6 +204,7 @@ mod tests {
         assert!(line.contains("batch p95 820us"), "{line}");
         assert!(line.contains("fleet 1/2 idle 34%"), "{line}");
         assert!(line.contains("(1 timeouts)"), "{line}");
+        assert!(line.contains("coalesce w4.0 q7"), "{line}");
         assert!(line.ends_with("| done"), "{line}");
     }
 
@@ -190,5 +214,6 @@ mod tests {
         let line = render_status(&snap);
         assert!(line.starts_with("gen 0 | best 0.0"), "{line}");
         assert!(!line.contains("fleet"), "{line}");
+        assert!(!line.contains("coalesce"), "{line}");
     }
 }

@@ -49,6 +49,9 @@ struct HubState {
     migrations_accepted: u64,
     interventions: u64,
     fallback_specs: u64,
+    coalesced_batches: u64,
+    coalesced_specs: u64,
+    dispatch_queue_depth_max: u64,
     done: bool,
 }
 
@@ -140,6 +143,21 @@ impl MetricsHub {
         } else {
             0.0
         };
+        let dispatch = if state.coalesced_batches > 0 {
+            Json::obj([
+                ("batches", Json::Num(state.coalesced_batches as f64)),
+                (
+                    "coalesced_width",
+                    Json::Num(state.coalesced_specs as f64 / state.coalesced_batches as f64),
+                ),
+                (
+                    "queue_depth_max",
+                    Json::Num(state.dispatch_queue_depth_max as f64),
+                ),
+            ])
+        } else {
+            Json::Null
+        };
         let gen: u64 = state.islands.values().map(|i| i.commits).sum();
         let best = state
             .islands
@@ -179,6 +197,7 @@ impl MetricsHub {
             ("batches", Json::Num(state.batches_dispatched as f64)),
             ("eval_batch", self.batch_hist.to_json()),
             ("fleet", self.fleet_json()),
+            ("dispatch", dispatch),
             ("migrations", Json::Num(state.migrations as f64)),
             (
                 "migrations_accepted",
@@ -225,6 +244,12 @@ impl TelemetrySink for MetricsHub {
             Event::FallbackLocal { specs } => state.fallback_specs += *specs as u64,
             Event::ChunkStolen { .. } | Event::QueueDepth { .. } => {
                 // Dispatch-queue health reads RemoteStats directly.
+            }
+            Event::BatchCoalesced { tickets: _, width, depth } => {
+                state.coalesced_batches += 1;
+                state.coalesced_specs += *width as u64;
+                state.dispatch_queue_depth_max =
+                    state.dispatch_queue_depth_max.max(*depth as u64);
             }
             Event::MigrantBuffered { .. }
             | Event::MigrantDropped { .. }
@@ -429,9 +454,22 @@ mod tests {
         assert!((cache.get("hit_rate").unwrap().as_f64().unwrap() - 1.0 / 3.0).abs() < 1e-9);
         assert_eq!(snap.get("fleet").unwrap(), &Json::Null);
         assert_eq!(
+            snap.get("dispatch").unwrap(),
+            &Json::Null,
+            "no coalesced batches => no dispatch object"
+        );
+        assert_eq!(
             snap.get("eval_batch").unwrap().get("count").unwrap().as_u64(),
             Some(1)
         );
+        // The dispatch plane's events fold into a mean width + depth max.
+        hub.publish(&Event::BatchCoalesced { tickets: 3, width: 12, depth: 7 });
+        hub.publish(&Event::BatchCoalesced { tickets: 1, width: 4, depth: 2 });
+        let snap = hub.snapshot();
+        let dispatch = snap.get("dispatch").unwrap();
+        assert_eq!(dispatch.get("batches").unwrap().as_u64(), Some(2));
+        assert_eq!(dispatch.get("coalesced_width").unwrap().as_f64(), Some(8.0));
+        assert_eq!(dispatch.get("queue_depth_max").unwrap().as_u64(), Some(7));
         hub.publish(&Event::RunFinished { commits: 1, best_geomean: 640.0, steps: 10 });
         assert_eq!(hub.snapshot().get("done").unwrap().as_bool(), Some(true));
     }

@@ -3,7 +3,8 @@
 //! hundreds of randomized cases; failures print the offending seed/spec.
 
 use avo::eval::{
-    CachedBackend, CountingBackend, EvalBackend, PersistentBackend, RemoteBackend, SimBackend,
+    CachedBackend, CountingBackend, DispatchPlane, EvalBackend, PersistentBackend, RemoteBackend,
+    SimBackend,
 };
 use avo::evolution::Lineage;
 use avo::kernelspec::{all_edits, KernelSpec};
@@ -250,7 +251,12 @@ fn prop_batched_equals_sequential_for_every_backend_layer() {
     let addr = listener.local_addr().unwrap().to_string();
     let server_eval = eval.clone();
     let server = std::thread::spawn(move || {
-        avo::eval::remote::serve(listener, &server_eval, "mha", true, None, None, 2)
+        let opts = avo::eval::remote::WorkerOptions {
+            once: true,
+            eval_workers: 2,
+            ..avo::eval::remote::WorkerOptions::default()
+        };
+        avo::eval::remote::serve(listener, &server_eval, &opts)
     });
     let remote = RemoteBackend::connect(eval.clone(), &[addr]).unwrap();
     let layers: Vec<(&str, Box<dyn EvalBackend>)> = vec![
@@ -290,6 +296,62 @@ fn prop_batched_equals_sequential_for_every_backend_layer() {
     }
     drop(layers); // drops the RemoteBackend: shutdown frame ends the server
     server.join().unwrap().unwrap();
+}
+
+#[test]
+fn prop_plane_interleavings_bit_equal_direct() {
+    // However N concurrent "islands" interleave their submissions through
+    // the dispatch plane — narrow tickets, wide tickets, windows smaller
+    // and larger than any merged batch — each caller gets back exactly
+    // the scores a direct call on the backend stack produces, in its own
+    // submission order.  This is the byte-identity half of the plane's
+    // contract (the coalescing half is gated by the bench).
+    let eval = Evaluator::new(mha_suite());
+    let backend = CachedBackend::new(SimBackend::new(eval.clone(), 2));
+    for (round, &(islands, window)) in [(2usize, 1usize), (3, 4), (4, 64)].iter().enumerate() {
+        let plane = DispatchPlane::new(&backend, window);
+        std::thread::scope(|scope| {
+            let plane = &plane;
+            let dispatcher = scope.spawn(move || plane.run_dispatcher());
+            let mut submitters = Vec::new();
+            for island in 0..islands {
+                let eval = eval.clone();
+                submitters.push(scope.spawn(move || {
+                    let mut rng =
+                        Rng::new(0x15A_0D15 ^ ((round as u64) << 8) ^ island as u64);
+                    for batch in 0..4 {
+                        let mut specs: Vec<KernelSpec> = Vec::new();
+                        for _ in 0..rng.below(4) + 1 {
+                            specs.push(random_spec(&mut rng));
+                        }
+                        let scores = plane.evaluate_batch(&specs);
+                        assert_eq!(
+                            scores.len(),
+                            specs.len(),
+                            "round {round} island {island} batch {batch}"
+                        );
+                        for (i, (got, spec)) in scores.iter().zip(&specs).enumerate() {
+                            let want = eval.evaluate(spec);
+                            assert_eq!(
+                                got.per_config, want.per_config,
+                                "round {round} island {island} batch {batch} spec {i}: \
+                                 plane != direct"
+                            );
+                            assert_eq!(
+                                got.failure, want.failure,
+                                "round {round} island {island} batch {batch} spec {i}"
+                            );
+                        }
+                    }
+                }));
+            }
+            for s in submitters {
+                s.join().unwrap();
+            }
+            plane.shutdown();
+            dispatcher.join().unwrap();
+        });
+    }
 }
 
 #[test]

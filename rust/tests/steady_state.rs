@@ -99,6 +99,60 @@ fn steady_state_serial_runs_are_deterministic() {
 }
 
 #[test]
+fn serial_steady_archive_is_dispatch_plane_invariant() {
+    // In the serial regime the plane is bypassed entirely (one island
+    // worker has nothing to coalesce), so `--dispatch-plane` must leave
+    // the archive, step count, and dispatch metrics untouched.
+    let run = |plane: bool| {
+        let mut cfg = cfg_for("mha", 57, 3, 1);
+        cfg.topology.scheduling = SchedulingMode::SteadyState;
+        cfg.topology.dispatch_plane = plane;
+        EvolutionDriver::new(cfg).run()
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(
+        archives(&off),
+        archives(&on),
+        "--dispatch-plane perturbed the serial steady-state archive"
+    );
+    assert_eq!(off.steps, on.steps);
+    assert_eq!(on.metrics.counter("dispatch_batches"), 0, "plane engaged serially");
+}
+
+#[test]
+fn threaded_steady_plane_coalesces_and_matches_serial_best() {
+    // Multi-worker steady state with the plane on: the dispatcher must
+    // actually coalesce (nonzero batches/tickets, width accounting
+    // consistent), and — scores being pure — the run still drives every
+    // island to a budget, with correct evaluations throughout.
+    let mut cfg = cfg_for("mha", 63, 4, 4);
+    cfg.topology.scheduling = SchedulingMode::SteadyState;
+    cfg.topology.dispatch_plane = true;
+    cfg.agent.lookahead = 4;
+    let report = EvolutionDriver::new(cfg.clone()).run();
+    assert_eq!(report.islands.len(), 4);
+    for isl in &report.islands {
+        assert!(
+            isl.lineage.len() >= cfg.target_commits + 1 || isl.steps >= cfg.max_steps,
+            "island {} stalled short of both budgets",
+            isl.id
+        );
+    }
+    let batches = report.metrics.counter("dispatch_batches");
+    let tickets = report.metrics.counter("dispatch_tickets");
+    let specs = report.metrics.counter("dispatch_coalesced_specs");
+    assert!(batches > 0, "plane never dispatched: {}", report.summary());
+    assert!(tickets >= batches, "every batch carries at least one ticket");
+    assert!(specs >= tickets, "every ticket carries at least one spec");
+    assert!(
+        report.summary().contains("dispatch plane"),
+        "{}",
+        report.summary()
+    );
+}
+
+#[test]
 fn steady_adaptive_migration_is_deterministic_per_island() {
     // Adaptive intervals under steady state key off each island's own
     // quanta (there are no global epochs to count), and stay a pure
