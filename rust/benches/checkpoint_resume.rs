@@ -1,0 +1,190 @@
+//! Durable run ledger: commit latency and kill/resume determinism
+//! ([`avo::supervisor::checkpoint`]).
+//!
+//! Two claims are gated:
+//!
+//! * a generation commit (serialize the full snapshot — archives,
+//!   operator/supervisor residue, PRNG cursors — write `.tmp`, rename)
+//!   is cheap enough to run every generation: mean commit latency stays
+//!   under [`COMMIT_BUDGET_MS`] even at 8 islands;
+//! * the ledger is *correct*: a run killed between generations
+//!   (`halt_after_checkpoints`) and resumed finishes byte-identical to
+//!   the uninterrupted same-seed run, while re-simulating nothing the
+//!   interrupted run already paid for (the resume warm-starts from the
+//!   ledger's cache snapshot).
+//!
+//!   cargo bench --bench checkpoint_resume
+//!   AVO_BENCH_QUICK=1 cargo bench --bench checkpoint_resume   # CI-sized
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use avo::benchkit::Bench;
+use avo::coordinator::{EvolutionDriver, RunConfig, SchedulingMode};
+use avo::evolution::Lineage;
+use avo::json::Json;
+use avo::kernelspec::KernelSpec;
+use avo::score::{mha_suite, Evaluator};
+use avo::supervisor::checkpoint::{IslandState, RunLedger, RunSnapshot};
+
+/// Mean per-generation commit latency ceiling, in milliseconds.  A
+/// snapshot is a few tens of KB of canonical JSON plus one rename; if
+/// this ever creeps toward real generation cost (seconds), per-epoch
+/// checkpointing has become the bottleneck and the gate fails.
+const COMMIT_BUDGET_MS: f64 = 25.0;
+
+fn tempdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("avo_bench_ckpt_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+struct Sizing {
+    commits: usize,
+    steps: usize,
+    ledger_commits: usize,
+}
+
+fn sizing() -> Sizing {
+    if std::env::var("AVO_BENCH_QUICK").is_ok() {
+        Sizing { commits: 3, steps: 15, ledger_commits: 40 }
+    } else {
+        Sizing { commits: 5, steps: 25, ledger_commits: 200 }
+    }
+}
+
+/// A realistic snapshot: `islands` seeded archives plus PRNG/interval
+/// residue — the payload a barrier generation commits.
+fn synthetic_snapshot(islands: usize) -> RunSnapshot {
+    let eval = Evaluator::new(mha_suite());
+    let spec = KernelSpec::naive();
+    let score = eval.evaluate(&spec);
+    RunSnapshot {
+        mode: SchedulingMode::Barrier,
+        generation: 7,
+        mig_rng: [1, 2, 3, 4],
+        islands: (0..islands)
+            .map(|id| {
+                let mut lineage = Lineage::new();
+                lineage.seed(spec.clone(), score.clone(), "seed x0");
+                IslandState {
+                    id,
+                    lineage,
+                    operator: Json::Null,
+                    supervisor: Json::obj([]),
+                    steps: 11,
+                    migrate_every: 4,
+                    stall_epochs: 0,
+                    best_at_barrier: 1.25,
+                    interventions: Vec::new(),
+                }
+            })
+            .collect(),
+        steady: None,
+    }
+}
+
+/// Mean wall-clock of one atomic ledger commit at the given island count.
+fn commit_latency(islands: usize, commits: usize) -> Duration {
+    let dir = tempdir(&format!("commit_{islands}"));
+    let cfg = RunConfig::default();
+    let mut ledger = RunLedger::create(&dir, &cfg, 0xBEEF).unwrap();
+    let snap = synthetic_snapshot(islands);
+    let started = Instant::now();
+    for _ in 0..commits {
+        ledger.commit(&snap).unwrap();
+    }
+    let mean = started.elapsed() / commits as u32;
+    std::fs::remove_dir_all(dir).ok();
+    mean
+}
+
+fn search_cfg(seed: u64) -> RunConfig {
+    let s = sizing();
+    let mut cfg = RunConfig {
+        seed,
+        target_commits: s.commits,
+        max_steps: s.steps,
+        ..RunConfig::default()
+    };
+    cfg.topology.islands = 2;
+    cfg.topology.migrate_every = 1;
+    cfg
+}
+
+struct ResumeOutcome {
+    identical: bool,
+    warm_entries: u64,
+    cold_wall: Duration,
+    ledgered_wall: Duration,
+}
+
+/// Cold run vs killed-after-one-generation + resumed run, same seed.
+fn kill_and_resume() -> ResumeOutcome {
+    let dir = tempdir("resume");
+    let ckpt = dir.join("ckpt");
+
+    let mut cold_cfg = search_cfg(47);
+    cold_cfg.lineage_path = Some(dir.join("cold_lineage.json"));
+    let started = Instant::now();
+    EvolutionDriver::new(cold_cfg).run();
+    let cold_wall = started.elapsed();
+
+    let mut halted_cfg = search_cfg(47);
+    halted_cfg.checkpoint_dir = Some(ckpt.clone());
+    halted_cfg.halt_after_checkpoints = Some(1);
+    let started = Instant::now();
+    EvolutionDriver::new(halted_cfg).run();
+
+    let mut resumed_cfg = search_cfg(47);
+    resumed_cfg.checkpoint_dir = Some(ckpt);
+    resumed_cfg.resume = true;
+    resumed_cfg.lineage_path = Some(dir.join("resumed_lineage.json"));
+    let resumed = EvolutionDriver::new(resumed_cfg).run();
+    // Interrupted halves together, ledger commits included.
+    let ledgered_wall = started.elapsed();
+
+    let identical = std::fs::read(dir.join("cold_lineage.json")).unwrap()
+        == std::fs::read(dir.join("resumed_lineage.json")).unwrap();
+    let warm_entries = resumed.metrics.counter("eval_cache_warm_entries");
+    std::fs::remove_dir_all(dir).ok();
+    ResumeOutcome { identical, warm_entries, cold_wall, ledgered_wall }
+}
+
+fn main() {
+    let s = sizing();
+    let mut b = Bench::new("checkpoint_resume").with_iters(1, 2);
+    b.case("ledger_commit_2i", || commit_latency(2, s.ledger_commits));
+    b.case("ledger_commit_8i", || commit_latency(8, s.ledger_commits));
+    b.finish();
+
+    println!("\n== durable run ledger: commit latency ==");
+    let mut worst = Duration::ZERO;
+    for islands in [1usize, 2, 4, 8] {
+        let mean = commit_latency(islands, s.ledger_commits);
+        worst = worst.max(mean);
+        println!("  {islands} island(s): {:8.3} ms / commit", mean.as_secs_f64() * 1e3);
+    }
+    // Gate 1: per-generation commits stay ledger-cheap.
+    assert!(
+        worst.as_secs_f64() * 1e3 <= COMMIT_BUDGET_MS,
+        "ledger commit latency {:.3} ms exceeds the {COMMIT_BUDGET_MS} ms budget",
+        worst.as_secs_f64() * 1e3,
+    );
+
+    println!("\n== kill one generation in, resume, compare to uninterrupted ==");
+    let out = kill_and_resume();
+    println!(
+        "  cold {:7.1} ms | killed+resumed {:7.1} ms | warm-start entries {}",
+        out.cold_wall.as_secs_f64() * 1e3,
+        out.ledgered_wall.as_secs_f64() * 1e3,
+        out.warm_entries,
+    );
+    // Gate 2: resume determinism — the whole point of the ledger.
+    assert!(out.identical, "killed+resumed archive diverges from the uninterrupted run");
+    assert!(
+        out.warm_entries > 0,
+        "resume re-simulated the interrupted run's evaluations instead of warm-starting"
+    );
+}

@@ -143,6 +143,14 @@ impl VariationOperator for AvoAgent {
     fn apply_directive(&mut self, directive: &Directive) {
         self.pipeline.state.apply_directive(directive);
     }
+
+    fn checkpoint(&self) -> Option<crate::json::Json> {
+        Some(self.pipeline.state.snapshot())
+    }
+
+    fn restore(&mut self, snapshot: &crate::json::Json) -> Result<(), String> {
+        self.pipeline.state.restore(snapshot)
+    }
 }
 
 #[cfg(test)]

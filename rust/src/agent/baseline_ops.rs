@@ -86,6 +86,14 @@ impl VariationOperator for SingleTurnOperator {
     fn step(&mut self, lineage: &mut Lineage, eval: &dyn EvalBackend, step: usize) -> StepOutcome {
         self.pipeline.step(lineage, eval, step)
     }
+
+    fn checkpoint(&self) -> Option<crate::json::Json> {
+        Some(self.pipeline.state.snapshot())
+    }
+
+    fn restore(&mut self, snapshot: &crate::json::Json) -> Result<(), String> {
+        self.pipeline.state.restore(snapshot)
+    }
 }
 
 /// LoongFlow-style operator: a *fixed* Plan-Execute-Summarize pipeline
@@ -131,6 +139,14 @@ impl VariationOperator for FixedPipelineOperator {
 
     fn step(&mut self, lineage: &mut Lineage, eval: &dyn EvalBackend, step: usize) -> StepOutcome {
         self.pipeline.step(lineage, eval, step)
+    }
+
+    fn checkpoint(&self) -> Option<crate::json::Json> {
+        Some(self.pipeline.state.snapshot())
+    }
+
+    fn restore(&mut self, snapshot: &crate::json::Json) -> Result<(), String> {
+        self.pipeline.state.restore(snapshot)
     }
 }
 

@@ -93,6 +93,19 @@ pub trait VariationOperator {
     /// crossover) use these as cross-island donors; baseline operators
     /// ignore them by default.
     fn receive_migrants(&mut self, _migrants: &[Migrant]) {}
+    /// Checkpoint hook: serialize the operator's persistent residue (PRNG
+    /// cursor, memories) for the run ledger.  `None` means the operator
+    /// carries no state beyond what `build_operator` reconstructs, and the
+    /// ledger stores nothing for it.
+    fn checkpoint(&self) -> Option<crate::json::Json> {
+        None
+    }
+    /// Checkpoint hook: overlay a snapshot produced by
+    /// [`Self::checkpoint`] onto a freshly built operator.  Called with
+    /// `Json::Null` when the ledger holds no snapshot for this operator.
+    fn restore(&mut self, _snapshot: &crate::json::Json) -> Result<(), String> {
+        Ok(())
+    }
 }
 
 #[cfg(test)]

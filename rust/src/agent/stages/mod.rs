@@ -53,6 +53,7 @@ use crate::agent::avo::AvoConfig;
 use crate::agent::{AgentAction, StepOutcome};
 use crate::eval::EvalBackend;
 use crate::evolution::Lineage;
+use crate::json::{FromJson, Json, ToJson};
 use crate::islands::Migrant;
 use crate::kernelspec::{Direction, KernelSpec};
 use crate::knowledge::KnowledgeBase;
@@ -172,6 +173,161 @@ impl AgentState {
             let drop = self.migrants.len() - 8;
             self.migrants.drain(..drop);
         }
+    }
+
+    /// Serialize the persistent residue of the operator — everything a
+    /// resumed run cannot rebuild from (RunConfig, workload, island seed):
+    /// the PRNG cursor, per-direction memory, supervisor boosts, buffered
+    /// migrants, and the fixed-pipeline plan statistics.  `config`, `kb`,
+    /// `phases`, and `tuning` are deliberately omitted: they are pure
+    /// functions of the run configuration and workload, re-derived by
+    /// `build_operator` before [`Self::restore`] overlays this snapshot.
+    /// Map keys are direction `Display` names, emitted in sorted order so
+    /// snapshot bytes are deterministic.
+    pub fn snapshot(&self) -> Json {
+        let hex = |w: u64| Json::Str(format!("{w:016x}"));
+        let mut memory: Vec<(String, &DirMemory)> =
+            self.memory.iter().map(|(d, m)| (d.to_string(), m)).collect();
+        memory.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut plan: Vec<(String, (usize, usize))> = self
+            .plan_stats
+            .iter()
+            .map(|(d, s)| (d.to_string(), *s))
+            .collect();
+        plan.sort_by(|a, b| a.0.cmp(&b.0));
+        Json::obj([
+            ("rng", Json::arr(self.rng.state().iter().map(|w| hex(*w)))),
+            (
+                "memory",
+                Json::obj_from(memory.into_iter().map(|(name, m)| {
+                    (
+                        name,
+                        Json::obj([
+                            ("tried", m.tried.to_json()),
+                            ("barren", m.barren.to_json()),
+                            ("banned_for", m.banned_for.to_json()),
+                        ]),
+                    )
+                })),
+            ),
+            (
+                "boosted",
+                Json::arr(self.boosted.iter().map(|d| Json::Str(d.to_string()))),
+            ),
+            (
+                "migrants",
+                Json::arr(self.migrants.iter().map(|m| {
+                    Json::obj([
+                        ("from_island", m.from_island.to_json()),
+                        ("commit", hex(m.commit.0)),
+                        ("spec", m.spec.to_json()),
+                        ("score", m.score.to_json()),
+                    ])
+                })),
+            ),
+            (
+                "plan_stats",
+                Json::obj_from(plan.into_iter().map(|(name, (ok, tried))| {
+                    (
+                        name,
+                        Json::obj([("successes", ok.to_json()), ("tries", tried.to_json())]),
+                    )
+                })),
+            ),
+        ])
+    }
+
+    /// Overlay a [`Self::snapshot`] onto freshly built state.  Errors name
+    /// the offending field; on error the state may be partially updated
+    /// (callers discard the operator).
+    pub fn restore(&mut self, snap: &Json) -> Result<(), String> {
+        let hex = |j: &Json, what: &str| -> Result<u64, String> {
+            j.as_str()
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .ok_or_else(|| format!("checkpoint: bad {what}"))
+        };
+        let direction = |name: &str| {
+            Direction::from_name(name)
+                .ok_or_else(|| format!("checkpoint: unknown direction '{name}'"))
+        };
+        let usize_of = |j: Option<&Json>, what: &str| -> Result<usize, String> {
+            j.and_then(Json::as_u64)
+                .map(|v| v as usize)
+                .ok_or_else(|| format!("checkpoint: bad {what}"))
+        };
+
+        let rng = snap
+            .get("rng")
+            .and_then(Json::as_arr)
+            .filter(|a| a.len() == 4)
+            .ok_or("checkpoint: bad rng state")?;
+        let mut s = [0u64; 4];
+        for (i, w) in rng.iter().enumerate() {
+            s[i] = hex(w, "rng word")?;
+        }
+        if s.iter().all(|&w| w == 0) {
+            return Err("checkpoint: all-zero rng state".into());
+        }
+        self.rng = Rng::from_state(s);
+
+        self.memory.clear();
+        if let Some(mem) = snap.get("memory").and_then(Json::as_obj) {
+            for (name, m) in mem {
+                self.memory.insert(
+                    direction(name)?,
+                    DirMemory {
+                        tried: usize_of(m.get("tried"), "memory.tried")?,
+                        barren: usize_of(m.get("barren"), "memory.barren")?,
+                        banned_for: usize_of(m.get("banned_for"), "memory.banned_for")?,
+                    },
+                );
+            }
+        }
+
+        self.boosted = match snap.get("boosted").and_then(Json::as_arr) {
+            Some(arr) => arr
+                .iter()
+                .map(|j| {
+                    j.as_str()
+                        .ok_or("checkpoint: bad boosted entry".to_string())
+                        .and_then(direction)
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+            None => Vec::new(),
+        };
+
+        self.migrants.clear();
+        if let Some(arr) = snap.get("migrants").and_then(Json::as_arr) {
+            for m in arr {
+                self.migrants.push(Migrant {
+                    from_island: usize_of(m.get("from_island"), "migrant.from_island")?,
+                    commit: crate::store::CommitId(hex(
+                        m.get("commit").unwrap_or(&Json::Null),
+                        "migrant.commit",
+                    )?),
+                    spec: KernelSpec::from_json(
+                        m.get("spec").ok_or("checkpoint: migrant missing spec")?,
+                    )?,
+                    score: Score::from_json(
+                        m.get("score").ok_or("checkpoint: migrant missing score")?,
+                    )?,
+                });
+            }
+        }
+
+        self.plan_stats.clear();
+        if let Some(plan) = snap.get("plan_stats").and_then(Json::as_obj) {
+            for (name, s) in plan {
+                self.plan_stats.insert(
+                    direction(name)?,
+                    (
+                        usize_of(s.get("successes"), "plan_stats.successes")?,
+                        usize_of(s.get("tries"), "plan_stats.tries")?,
+                    ),
+                );
+            }
+        }
+        Ok(())
     }
 
     /// Supervisor hook body shared by pipeline operators.

@@ -30,6 +30,16 @@ impl std::str::FromStr for OperatorKind {
     }
 }
 
+impl std::fmt::Display for OperatorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            OperatorKind::Avo => "avo",
+            OperatorKind::SingleTurn => "single_turn",
+            OperatorKind::FixedPipeline => "fixed_pipeline",
+        })
+    }
+}
+
 /// How islands are scheduled relative to each other.
 ///
 /// * [`Barrier`](SchedulingMode::Barrier) (the default) steps every
@@ -175,6 +185,26 @@ pub struct RunConfig {
     /// Observability: JSONL journal + live metrics endpoint (both off by
     /// default; telemetry never perturbs archives).
     pub telemetry: TelemetryConfig,
+    /// Durable run ledger (`--checkpoint-dir <dir>`): after every
+    /// completed generation (barrier epoch, or steady-state quantum at
+    /// `--island-workers 1`), commit an atomically-renamed JSON snapshot
+    /// of the full search state to `<dir>/checkpoint.json` (plus the eval
+    /// cache alongside it), so an interrupted run can restart from its
+    /// last committed generation.  None = no ledger.
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Resume from the ledger in `checkpoint_dir` (`--resume <dir>`): the
+    /// snapshot's search configuration and state replace fresh seeding,
+    /// and the run continues byte-identically to an uninterrupted one.
+    pub resume: bool,
+    /// Test/CI hook (`--halt-after-checkpoints <n>`): return mid-run right
+    /// after the n-th ledger commit, leaving exactly the on-disk state a
+    /// SIGKILL between generations would — the resume suites' interrupted
+    /// run.  Requires `checkpoint_dir`.
+    pub halt_after_checkpoints: Option<usize>,
+    /// Cooperative cancellation, checked at the same generation
+    /// boundaries the ledger commits at; set by `avo serve` when a running
+    /// job is cancelled.  The run returns its partial report.
+    pub cancel: Option<std::sync::Arc<std::sync::atomic::AtomicBool>>,
 }
 
 impl Default for RunConfig {
@@ -197,6 +227,10 @@ impl Default for RunConfig {
             eval_cache_path: None,
             eval_cache_max_entries: None,
             telemetry: TelemetryConfig::default(),
+            checkpoint_dir: None,
+            resume: false,
+            halt_after_checkpoints: None,
+            cancel: None,
         }
     }
 }
@@ -264,6 +298,7 @@ impl RunConfig {
                 "connect" => {
                     cfg.topology.remote.connect = parse_connect_list(v).map_err(|e| bad(&e))?
                 }
+                "checkpoint_dir" => cfg.checkpoint_dir = Some(v.into()),
                 "lineage_path" => cfg.lineage_path = Some(v.into()),
                 "warm_start" => cfg.warm_start = Some(v.into()),
                 "eval_cache_path" => cfg.eval_cache_path = Some(v.into()),

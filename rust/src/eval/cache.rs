@@ -132,6 +132,17 @@ impl EvalCache {
         }
     }
 
+    /// Remove the entry cap through a shared reference: the cache goes
+    /// back to unbounded and drops its eviction bookkeeping (the queue is
+    /// rebuilt from the live entries if a cap is ever re-applied).  The
+    /// handshake path calls this when a coordinator that configured no
+    /// `cache_cap` attaches to a worker a previous coordinator had capped.
+    pub fn clear_max_entries_shared(&self) {
+        let mut order = self.order.lock().unwrap();
+        self.max_entries.store(0, Ordering::Release);
+        order.clear();
+    }
+
     pub fn max_entries(&self) -> Option<usize> {
         match self.max_entries.load(Ordering::Acquire) {
             0 => None,

@@ -8,10 +8,32 @@
 //! stack: every submission becomes a *ticket* in a global coalescing
 //! queue, a single dispatcher thread merges queued tickets front-first
 //! into one wide batch (up to `--coalesce-window-evals` specs,
-//! lingering ~1ms for stragglers when underfilled), issues ONE
+//! lingering for stragglers when underfilled), issues ONE
 //! `evaluate_batch` on the inner backend, and completes each ticket
 //! through its own slot — so every island receives exactly its own
 //! scores, in its own submission order.
+//!
+//! # Latency-aware linger
+//!
+//! How long an underfilled dispatch waits for stragglers adapts to the
+//! round-trip latency the plane itself observes on its merged inner
+//! dispatches (recorded into [`DispatchStats::rtt`]).  Until
+//! [`MIN_RTT_SAMPLES`] round trips have been seen the wait is the fixed
+//! 1ms it has always been — so short runs and cold starts behave
+//! exactly as before.  Once warmed:
+//!
+//! * RTT p50 at or under [`EAGER_RTT_MICROS`] means the fleet is
+//!   keeping up (dispatches complete faster than the old fixed linger)
+//!   — waiting would only add latency, so underfilled batches go out
+//!   immediately;
+//! * a slower p50 means round trips dominate and widening is nearly
+//!   free, so the wait grows to `p50 / `[`LINGER_RTT_DIV`], capped at
+//!   [`LINGER_CAP_MICROS`].
+//!
+//! The linger only shifts batch *composition*, never scores (see
+//! below), and the plane is only engaged in the already
+//! scheduling-dependent multi-worker steady-state regime — so
+//! byte-pinned configurations are untouched by the adaptivity.
 //!
 //! # Where it sits, and why scores stay bit-identical
 //!
@@ -42,13 +64,30 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::eval::{CacheStats, EvalBackend};
 use crate::kernelspec::KernelSpec;
 use crate::score::{BenchConfig, Score};
 use crate::sim::pipeline::CycleReport;
-use crate::telemetry::{Event, NullSink, TelemetrySink};
+use crate::telemetry::{Event, Histogram, NullSink, TelemetrySink};
+
+/// Inner round trips observed before the linger leaves its fixed 1ms
+/// default: one or two noisy cold-cache dispatches must not swing it.
+pub const MIN_RTT_SAMPLES: u64 = 8;
+
+/// RTT p50 (µs) at or below which an underfilled dispatch goes out
+/// immediately: when a whole merged round trip completes this fast the
+/// fleet is idle and any wait is pure added latency.
+pub const EAGER_RTT_MICROS: u64 = 500;
+
+/// Fraction of the RTT p50 an underfilled dispatch waits once the fleet
+/// is saturated (`linger = p50 / LINGER_RTT_DIV`).
+pub const LINGER_RTT_DIV: u64 = 4;
+
+/// Ceiling (µs) on the adaptive linger: however saturated the fleet, a
+/// straggler wait never exceeds 20ms.
+pub const LINGER_CAP_MICROS: u64 = 20_000;
 
 /// Counters the plane keeps while coalescing (surfaced as `dispatch_*`
 /// run metrics and in `RunReport::summary()`).
@@ -63,6 +102,9 @@ pub struct DispatchStats {
     pub width_sum: AtomicU64,
     /// Deepest the ticket queue ever got.
     pub max_queue_depth: AtomicU64,
+    /// Round-trip latency of each merged inner dispatch — the signal the
+    /// latency-aware linger steers by (see module docs).
+    pub rtt: Histogram,
 }
 
 /// Per-submission completion slot: the dispatcher deposits the ticket's
@@ -99,8 +141,11 @@ pub struct DispatchPlane<'a> {
     arrived: Condvar,
     /// Target merged-batch width in specs (floored at 1).
     window: usize,
-    /// How long an underfilled dispatch waits for stragglers before
-    /// going out narrow anyway.
+    /// Cold-start straggler wait for underfilled dispatches; once
+    /// [`MIN_RTT_SAMPLES`] round trips are observed, [`linger_for`]
+    /// adapts around it (see module docs).
+    ///
+    /// [`linger_for`]: DispatchPlane::linger_for
     linger: Duration,
     stats: DispatchStats,
     sink: Arc<dyn TelemetrySink>,
@@ -131,6 +176,21 @@ impl<'a> DispatchPlane<'a> {
         &self.stats
     }
 
+    /// The straggler wait for the next underfilled dispatch (module
+    /// docs, "Latency-aware linger"): the fixed cold-start default until
+    /// enough round trips are observed, zero when RTT p50 says the fleet
+    /// is keeping up, a capped fraction of p50 when it is saturated.
+    fn linger_for(&self) -> Duration {
+        if self.stats.rtt.count() < MIN_RTT_SAMPLES {
+            return self.linger;
+        }
+        let p50 = self.stats.rtt.quantile_micros(0.5);
+        if p50 <= EAGER_RTT_MICROS {
+            return Duration::ZERO;
+        }
+        Duration::from_micros((p50 / LINGER_RTT_DIV).min(LINGER_CAP_MICROS))
+    }
+
     /// Ask the dispatcher to drain the queue and exit.  Submissions that
     /// arrive after this fall through to the inner backend directly.
     pub fn shutdown(&self) {
@@ -159,11 +219,17 @@ impl<'a> DispatchPlane<'a> {
                     if width >= self.window || q.shutdown {
                         break;
                     }
-                    // Underfilled: linger briefly for more islands to
-                    // submit, then go out narrow anyway.
+                    // Underfilled: linger for more islands to submit,
+                    // then go out narrow anyway.  The wait adapts to the
+                    // observed dispatch RTT — zero when the fleet is
+                    // keeping up, wider when round trips dominate.
+                    let linger = self.linger_for();
+                    if linger.is_zero() {
+                        break;
+                    }
                     let (guard, timeout) = self
                         .arrived
-                        .wait_timeout(q, self.linger)
+                        .wait_timeout(q, linger)
                         .unwrap_or_else(|e| e.into_inner());
                     q = guard;
                     if timeout.timed_out() {
@@ -204,7 +270,9 @@ impl<'a> DispatchPlane<'a> {
                 depth,
             });
         }
+        let issued = Instant::now();
         let scores = self.inner.evaluate_batch(&merged);
+        self.stats.rtt.record(issued.elapsed());
         assert_eq!(
             scores.len(),
             merged.len(),
@@ -380,6 +448,36 @@ mod tests {
         }
         // Pass-through never counts as a coalesced dispatch.
         assert_eq!(plane.stats().batches.load(Ordering::SeqCst), 0);
+    }
+
+    /// The latency-aware linger's three regimes, driven through the RTT
+    /// histogram the dispatcher records into: fixed default until
+    /// warmed, eager (zero) when round trips say the fleet is keeping
+    /// up, a capped fraction of p50 when saturated.
+    #[test]
+    fn linger_adapts_to_observed_dispatch_rtt() {
+        let eval = Evaluator::new(mha_suite());
+        let plane = DispatchPlane::new(&eval, 8);
+        // Cold: under MIN_RTT_SAMPLES observations keeps the fixed 1ms.
+        for _ in 0..MIN_RTT_SAMPLES - 1 {
+            plane.stats().rtt.record_micros(200);
+        }
+        assert_eq!(plane.linger_for(), Duration::from_millis(1));
+        // Warmed with fast round trips (p50 bucket edge 256µs <= the
+        // eager threshold): underfilled dispatches go out immediately.
+        plane.stats().rtt.record_micros(200);
+        assert_eq!(plane.linger_for(), Duration::ZERO);
+        // Saturated: a 40ms p50 round trip widens the wait to p50/4
+        // (bucket upper edge 65536µs / 4 = 16384µs).
+        for _ in 0..4 * MIN_RTT_SAMPLES {
+            plane.stats().rtt.record_micros(40_000);
+        }
+        assert_eq!(plane.linger_for(), Duration::from_micros(16_384));
+        // However slow the fleet gets, the wait is capped at 20ms.
+        for _ in 0..64 * MIN_RTT_SAMPLES {
+            plane.stats().rtt.record_micros(500_000);
+        }
+        assert_eq!(plane.linger_for(), Duration::from_micros(LINGER_CAP_MICROS));
     }
 
     #[test]

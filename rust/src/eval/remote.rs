@@ -28,7 +28,11 @@
 //! them and ignores them if present.  `cache_cap` is the coordinator's
 //! `--eval-cache-max-entries` bound: a protocol-2 worker applies it to its
 //! own `Cached<Sim>` stack (oldest-first eviction, like the coordinator's)
-//! so week-long fleet runs bound memory on both sides of the wire.  The coordinator's `protocol` field
+//! so week-long fleet runs bound memory on both sides of the wire.  Every
+//! v2 handshake is authoritative for the cap — present re-applies, absent
+//! clears — so a worker that outlives its coordinator (restart with a
+//! different `--eval-cache-max-entries`, then re-attach) always adopts the
+//! current coordinator's bound, never a stale one.  The coordinator's `protocol` field
 //! stays pinned at the v1 baseline (v1 workers require an exact match);
 //! `protocol_max` advertises the newest version the coordinator speaks and
 //! the worker's reply `protocol` is the negotiated version for the
@@ -622,9 +626,16 @@ fn handle_connection<B: EvalBackend>(
     // before any eval frame is served, so eviction order is exact).  A v1
     // connection never carries the field; an older worker build simply
     // ignores it.
+    //
+    // Every v2 handshake is authoritative, absent field included: a
+    // worker outlives coordinators (restart, re-attach), and each new
+    // coordinator's hello replaces whatever bound the previous one set —
+    // a restart with a larger cap or none must not leave this worker
+    // evicting against the stale smaller bound.
     if negotiated >= 2 {
-        if let Some(cap) = hello.get("cache_cap").and_then(Json::as_u64) {
-            backend.cache().set_max_entries_shared(cap as usize);
+        match hello.get("cache_cap").and_then(Json::as_u64) {
+            Some(cap) => backend.cache().set_max_entries_shared(cap as usize),
+            None => backend.cache().clear_max_entries_shared(),
         }
     }
     loop {

@@ -175,6 +175,21 @@ impl Lineage {
         self.store.save(path)
     }
 
+    /// JSON encoding of the archive — identical bytes to [`Self::save`]'s
+    /// file body, so checkpoints and the serve endpoint hand out exactly
+    /// what a cold run would have written to `--out`.
+    pub fn to_json(&self) -> Json {
+        self.store.to_json()
+    }
+
+    /// Rebuild from [`Self::to_json`] output, verifying store invariants
+    /// and recomputing head/best bookkeeping (mirrors [`Self::load`]).
+    pub fn from_json(v: &Json) -> Result<Self, StoreError> {
+        let store = CommitStore::from_json(v)?;
+        store.verify()?;
+        Ok(Self::from_store(store))
+    }
+
     /// Rebuild a lineage (head/best bookkeeping included) from a store.
     pub fn from_store(store: CommitStore) -> Self {
         let head = store.last().map(|c| c.id);

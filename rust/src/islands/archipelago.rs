@@ -40,8 +40,10 @@ use crate::eval::{
 };
 use crate::evolution::Lineage;
 use crate::islands::migration::Migrant;
+use crate::json::Json;
 use crate::kernelspec::KernelSpec;
 use crate::prng::Rng;
+use crate::supervisor::checkpoint::{self, IslandState, RunLedger, RunSnapshot};
 use crate::supervisor::Supervisor;
 use crate::telemetry::{Event, RunTelemetry, TelemetrySink};
 
@@ -266,14 +268,78 @@ impl Archipelago {
         if let Some(max) = cfg.eval_cache_max_entries {
             cached.set_max_entries(max);
         }
-        let backend = match &cfg.warm_start {
+        // `--resume` implicitly warm-starts from the checkpoint
+        // directory's own cache snapshot (persisted at every ledger
+        // commit) unless the caller pinned a different `--warm-start`.
+        let warm_dir = cfg.warm_start.clone().or_else(|| match &cfg.checkpoint_dir {
+            Some(dir) if cfg.resume && dir.join(crate::eval::CACHE_FILE).exists() => {
+                Some(dir.clone())
+            }
+            _ => None,
+        });
+        let backend = match &warm_dir {
             Some(dir) => PersistentBackend::warm_start(cached, dir)
                 .unwrap_or_else(|e| panic!("warm-start rejected: {e}")),
             None => PersistentBackend::new(cached),
         };
 
-        // Epoch commit quota: N = 1 runs one uninterrupted epoch.
-        let base_quota = if n == 1 {
+        // The durable run ledger (`--checkpoint-dir`): commit a snapshot
+        // after every generation, keyed by the same fingerprint as the
+        // persistent eval cache so a snapshot from a different machine
+        // model, suite, or functional seed is rejected at load.
+        let fingerprint = backend.cache_tag();
+        let checkpointing = cfg.checkpoint_dir.is_some();
+        if checkpointing
+            && matches!(cfg.topology.scheduling, SchedulingMode::SteadyState)
+            && self.worker_count(n) > 1
+        {
+            panic!(
+                "--checkpoint-dir requires --island-workers 1 in steady-state mode: \
+                 multi-worker archives depend on thread scheduling, so no snapshot \
+                 could resume them byte-identically"
+            );
+        }
+        let resume_snap = match (&cfg.checkpoint_dir, cfg.resume) {
+            (Some(dir), true) => {
+                let snap = checkpoint::load(dir, fingerprint)
+                    .unwrap_or_else(|e| panic!("--resume: {e}"));
+                assert!(
+                    snap.mode == cfg.topology.scheduling,
+                    "--resume: checkpoint was taken under `{}` scheduling, this run uses `{}`",
+                    snap.mode,
+                    cfg.topology.scheduling,
+                );
+                assert!(
+                    snap.islands.len() == n,
+                    "--resume: checkpoint has {} islands, this run wants {n}",
+                    snap.islands.len(),
+                );
+                Some(snap)
+            }
+            _ => None,
+        };
+        let mut ledger = cfg.checkpoint_dir.as_ref().map(|dir| {
+            RunLedger::create(dir, cfg, fingerprint)
+                .unwrap_or_else(|e| panic!("checkpoint: {e}"))
+        });
+        let save_cache = || {
+            if let Some(dir) = &cfg.checkpoint_dir {
+                let path = dir.join(crate::eval::CACHE_FILE);
+                if let Err(e) = backend.save(&path) {
+                    eprintln!(
+                        "warning: failed to persist eval cache to {}: {e}",
+                        path.display()
+                    );
+                }
+            }
+        };
+
+        // Epoch commit quota: N = 1 runs one uninterrupted epoch — unless
+        // a ledger is attached, which needs generation boundaries to
+        // commit at, so the single island steps in `migrate_every`-commit
+        // epochs instead.  Behavior-identical: quotas only pause the step
+        // loop, and adaptation/migration stay disabled at N = 1.
+        let base_quota = if n == 1 && !checkpointing {
             usize::MAX
         } else {
             cfg.topology.migrate_every.max(1)
@@ -307,19 +373,61 @@ impl Archipelago {
             .collect();
         let mut mig_rng = seeder.fork(0xA5CADE);
 
+        // Resume: overlay the snapshot onto the freshly built islands.
+        // Construction above already derived the same per-island operator
+        // seeds; the overlay restores everything the run mutated since —
+        // archives, operator residue (PRNG cursors, memories), supervisor
+        // windows, step counts, adaptive intervals, and the migration
+        // stream cursor — so the loop below continues byte-identically.
+        let mut start_epoch = 0usize;
+        let mut steady_resume = None;
+        let resumed = resume_snap.is_some();
+        if let Some(snap) = resume_snap {
+            start_epoch = snap.generation as usize;
+            for (isl, st) in islands.iter_mut().zip(snap.islands) {
+                isl.lineage = st.lineage;
+                if !matches!(st.operator, Json::Null) {
+                    isl.operator.restore(&st.operator).unwrap_or_else(|e| {
+                        panic!("--resume: island {} operator: {e}", st.id)
+                    });
+                }
+                if !matches!(st.supervisor, Json::Null) {
+                    isl.supervisor.restore(&st.supervisor).unwrap_or_else(|e| {
+                        panic!("--resume: island {} supervisor: {e}", st.id)
+                    });
+                }
+                isl.steps = st.steps;
+                isl.migrate_every = st.migrate_every;
+                isl.stall_epochs = st.stall_epochs;
+                isl.best_at_barrier = st.best_at_barrier;
+                isl.interventions = st.interventions;
+            }
+            mig_rng = Rng::from_state(snap.mig_rng);
+            steady_resume = snap.steady;
+            if sink.enabled() {
+                sink.publish(&Event::RunResumed {
+                    generation: start_epoch as u64,
+                    islands: n,
+                });
+            }
+        }
+
         // Every island scores the seed itself; the cache turns all but the
         // first call into hits, and the per-island evaluation counters stay
-        // exact (hits + misses == evaluations).
-        for isl in &mut islands {
-            let seed_score =
-                isl.metrics.time("evaluate", || backend.evaluate(&seed_spec));
-            assert!(
-                seed_score.is_correct(),
-                "seed genome must be correct: {:?}",
-                seed_score.failure
-            );
-            isl.lineage.seed(seed_spec.clone(), seed_score, seed_message);
-            isl.metrics.incr("evaluations", 1);
+        // exact (hits + misses == evaluations).  A resumed run's archives
+        // already carry the seed commit, so it skips straight to the loop.
+        if !resumed {
+            for isl in &mut islands {
+                let seed_score =
+                    isl.metrics.time("evaluate", || backend.evaluate(&seed_spec));
+                assert!(
+                    seed_score.is_correct(),
+                    "seed genome must be correct: {:?}",
+                    seed_score.failure
+                );
+                isl.lineage.seed(seed_spec.clone(), seed_score, seed_message);
+                isl.metrics.incr("evaluations", 1);
+            }
         }
 
         // Island-worker saturation: summed per-thread busy vs. the
@@ -339,8 +447,11 @@ impl Archipelago {
             // budget alone.  Then all threads join and elites migrate.
             // N=1 runs one uninterrupted epoch.
             SchedulingMode::Barrier => {
-                let mut epoch = 0usize;
+                let mut epoch = start_epoch;
                 while islands.iter().any(|i| !i.done(cfg)) {
+                    if cancel_requested(cfg) {
+                        break;
+                    }
                     let (busy, capacity) = self.run_epoch(&mut islands, &backend, &sink);
                     island_busy_ms += busy;
                     island_capacity_ms += capacity;
@@ -351,6 +462,25 @@ impl Archipelago {
                         }
                         if islands.iter().any(|i| !i.done(cfg)) {
                             self.migrate(&mut islands, epoch, &mut mig_rng, &sink);
+                        }
+                    }
+                    // Generation complete (migration applied, threads
+                    // joined): commit it to the ledger before anything
+                    // else moves.
+                    if let Some(ledger) = ledger.as_mut() {
+                        let snap = RunSnapshot {
+                            mode: SchedulingMode::Barrier,
+                            generation: epoch as u64,
+                            mig_rng: mig_rng.state(),
+                            islands: islands.iter().map(island_state).collect(),
+                            steady: None,
+                        };
+                        commit_generation(ledger, &snap, &sink, &save_cache);
+                        if cfg
+                            .halt_after_checkpoints
+                            .map_or(false, |h| ledger.committed() >= h)
+                        {
+                            break;
                         }
                     }
                 }
@@ -374,6 +504,9 @@ impl Archipelago {
                     let outcome = std::thread::scope(|scope| {
                         let plane = &plane;
                         scope.spawn(move || plane.run_dispatcher());
+                        // The plane regime implies >1 island worker, which
+                        // the ledger guard above rejects — no checkpoint
+                        // hooks on this path.
                         let outcome = crate::islands::steady::run(
                             self,
                             islands,
@@ -381,6 +514,8 @@ impl Archipelago {
                             &sink,
                             &mut mig_rng,
                             base_quota,
+                            None,
+                            None,
                         );
                         plane.shutdown();
                         outcome
@@ -394,6 +529,14 @@ impl Archipelago {
                     );
                     outcome
                 } else {
+                    let hooks = ledger.as_mut().map(|ledger| {
+                        crate::islands::steady::CheckpointHooks {
+                            ledger,
+                            start_generation: start_epoch as u64,
+                            halt_after: cfg.halt_after_checkpoints,
+                            save_cache: &save_cache,
+                        }
+                    });
                     crate::islands::steady::run(
                         self,
                         islands,
@@ -401,6 +544,8 @@ impl Archipelago {
                         &sink,
                         &mut mig_rng,
                         base_quota,
+                        steady_resume,
+                        hooks,
                     )
                 };
                 islands = outcome.islands;
@@ -787,6 +932,52 @@ fn run_island_epoch(
             }
             operator.apply_directive(&directive);
         }
+    }
+}
+
+/// True when the run's cooperative cancel flag (job queue, embedding
+/// callers) has been raised; checked at generation boundaries only.
+pub(crate) fn cancel_requested(cfg: &RunConfig) -> bool {
+    cfg.cancel
+        .as_ref()
+        .map_or(false, |f| f.load(std::sync::atomic::Ordering::SeqCst))
+}
+
+/// Serialize one island's live run state for the ledger.
+pub(crate) fn island_state(isl: &Island) -> IslandState {
+    IslandState {
+        id: isl.id,
+        lineage: isl.lineage.clone(),
+        operator: isl.operator.checkpoint().unwrap_or(Json::Null),
+        supervisor: isl.supervisor.snapshot(),
+        steps: isl.steps,
+        migrate_every: isl.migrate_every,
+        stall_epochs: isl.stall_epochs,
+        best_at_barrier: isl.best_at_barrier,
+        interventions: isl.interventions.clone(),
+    }
+}
+
+/// Commit one generation to the ledger and persist the eval cache next to
+/// it.  A commit failure warns instead of aborting — a full disk must not
+/// kill a week-long run that can still finish in memory.
+pub(crate) fn commit_generation(
+    ledger: &mut RunLedger,
+    snap: &RunSnapshot,
+    sink: &Arc<dyn TelemetrySink>,
+    save_cache: &dyn Fn(),
+) {
+    match ledger.commit(snap) {
+        Ok(bytes) => {
+            if sink.enabled() {
+                sink.publish(&Event::RunCheckpointed {
+                    generation: snap.generation,
+                    bytes,
+                });
+            }
+            save_cache();
+        }
+        Err(e) => eprintln!("warning: checkpoint commit failed: {e}"),
     }
 }
 

@@ -102,6 +102,17 @@ impl MigrantMailbox {
         out
     }
 
+    /// Copy the buffered migrants in *insertion* order without consuming
+    /// them — the run-checkpoint ledger's view.  Insertion order (not the
+    /// best-first drain order) is what restoring must reproduce, because
+    /// it decides which entry a post-resume overflow evicts.
+    pub fn snapshot(&self) -> Vec<(Migrant, String)> {
+        match self.inbox.lock() {
+            Ok(g) => g.iter().cloned().collect(),
+            Err(p) => p.into_inner().iter().cloned().collect(),
+        }
+    }
+
     /// Migrants evicted by overflow so far.
     pub fn dropped(&self) -> u64 {
         self.dropped.load(Ordering::Relaxed)

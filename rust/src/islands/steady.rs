@@ -45,11 +45,14 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::agent::AgentAction;
-use crate::coordinator::config::RunConfig;
+use crate::coordinator::config::{RunConfig, SchedulingMode};
 use crate::eval::EvalBackend;
-use crate::islands::archipelago::{Archipelago, Island};
+use crate::islands::archipelago::{
+    cancel_requested, commit_generation, island_state, Archipelago, Island,
+};
 use crate::islands::migration::{Migrant, MigrantMailbox, MigrationPolicy};
 use crate::prng::Rng;
+use crate::supervisor::checkpoint::{self, RunLedger, RunSnapshot};
 use crate::telemetry::{Event, TelemetrySink};
 
 /// What the steady-state scheduler hands back to the archipelago.
@@ -77,7 +80,28 @@ struct Shared<'a> {
     base_quota: usize,
 }
 
+/// Run-ledger context the archipelago threads into the *serial* scheduler
+/// (the only steady regime whose archives a snapshot can reproduce).  One
+/// island quantum is one steady-state "generation".
+pub(crate) struct CheckpointHooks<'a> {
+    pub(crate) ledger: &'a mut RunLedger,
+    /// Quanta committed by the interrupted run being resumed; this run's
+    /// generation counter continues from here.
+    pub(crate) start_generation: u64,
+    /// Stop after this many commits from *this* process
+    /// (`--halt-after-checkpoints`, the kill-and-resume test's SIGKILL
+    /// stand-in).
+    pub(crate) halt_after: Option<usize>,
+    /// Persists the eval cache next to the snapshot.
+    pub(crate) save_cache: &'a dyn Fn(),
+}
+
 /// Drive `islands` to completion under steady-state scheduling.
+///
+/// `resume` carries the scheduler residue of a checkpointed serial run:
+/// FIFO order, per-island migration-stream cursors, mailbox contents,
+/// scoreboard, and completion flags.  `islands` must already be overlaid
+/// with the same snapshot's per-island state (the archipelago does both).
 pub(crate) fn run(
     arch: &Archipelago,
     islands: Vec<Island>,
@@ -85,31 +109,78 @@ pub(crate) fn run(
     sink: &Arc<dyn TelemetrySink>,
     mig_rng: &mut Rng,
     base_quota: usize,
+    resume: Option<checkpoint::SteadyState>,
+    ckpt: Option<CheckpointHooks<'_>>,
 ) -> SteadyOutcome {
     let cfg = &arch.config;
     let n = islands.len();
+    if let Some(st) = &resume {
+        assert!(
+            st.rngs.len() == n && st.scoreboard.len() == n && st.mailboxes.len() == n,
+            "--resume: steady residue does not cover every island"
+        );
+        assert!(
+            st.queue.len() + st.finished.len() == n,
+            "--resume: steady checkpoint does not schedule every island"
+        );
+    }
     // Per-island migration streams, forked in index order from the run's
     // migration stream: a pure function of the seed, independent of
-    // scheduling.
-    let rngs: Vec<Rng> = (0..n).map(|i| mig_rng.fork(i as u64)).collect();
+    // scheduling.  On resume the saved cursors replace the forks (the
+    // parent stream was already advanced before the snapshot was taken).
+    let rngs: Vec<Rng> = match &resume {
+        Some(st) => st.rngs.iter().map(|s| Rng::from_state(*s)).collect(),
+        None => (0..n).map(|i| mig_rng.fork(i as u64)).collect(),
+    };
+    // The parent migration cursor every snapshot records (not used again
+    // by this scheduler — forking above was its last draw).
+    let parent_rng = mig_rng.state();
     let shared = Shared {
         cfg,
         sink,
-        mailboxes: (0..n)
-            .map(|_| MigrantMailbox::new(cfg.topology.mailbox_capacity))
+        mailboxes: {
+            let boxes: Vec<MigrantMailbox> = (0..n)
+                .map(|_| MigrantMailbox::new(cfg.topology.mailbox_capacity))
+                .collect();
+            if let Some(st) = &resume {
+                for (mb, saved) in boxes.iter().zip(&st.mailboxes) {
+                    for (m, msg) in saved {
+                        mb.push(m.clone(), msg.clone());
+                    }
+                }
+            }
+            boxes
+        },
+        scoreboard: match &resume {
+            Some(st) => st.scoreboard.iter().map(|&b| AtomicU64::new(b)).collect(),
+            None => islands
+                .iter()
+                .map(|isl| AtomicU64::new(isl.lineage.best_geomean().to_bits()))
+                .collect(),
+        },
+        done_flags: (0..n)
+            .map(|i| {
+                AtomicBool::new(
+                    resume.as_ref().map_or(false, |st| st.finished.contains(&i)),
+                )
+            })
             .collect(),
-        scoreboard: islands
-            .iter()
-            .map(|isl| AtomicU64::new(isl.lineage.best_geomean().to_bits()))
-            .collect(),
-        done_flags: (0..n).map(|_| AtomicBool::new(false)).collect(),
         base_quota,
     };
     let workers = arch.worker_count(n);
 
     let (mut islands, busy_ms, capacity_ms) = if workers <= 1 || n <= 1 {
-        (run_serial(islands, rngs, eval, &shared), 0, 0)
+        let order = resume.map(|st| (st.queue, st.finished));
+        (
+            run_serial(islands, rngs, eval, &shared, order, ckpt, parent_rng),
+            0,
+            0,
+        )
     } else {
+        assert!(
+            resume.is_none() && ckpt.is_none(),
+            "steady checkpoint/resume requires the serial scheduler"
+        );
         run_parallel(islands, rngs, eval, &shared, workers)
     };
 
@@ -121,24 +192,98 @@ pub(crate) fn run(
 /// The deterministic degenerate case: one worker, plain FIFO over the
 /// islands.  No threads are spawned, so busy/capacity stay (0, 0) like
 /// the barrier scheduler's serial path.
+///
+/// This is the only steady regime the run ledger supports: after every
+/// quantum the full scheduler state — FIFO order, per-island migration
+/// cursors, mailboxes, scoreboard — is a plain value, committed via
+/// `ckpt` before the next island is popped.  `order` (from a resume
+/// snapshot) replaces the default id-order FIFO.
 fn run_serial(
     islands: Vec<Island>,
     rngs: Vec<Rng>,
     eval: &dyn EvalBackend,
     shared: &Shared<'_>,
+    order: Option<(Vec<usize>, Vec<usize>)>,
+    mut ckpt: Option<CheckpointHooks<'_>>,
+    parent_rng: [u64; 4],
 ) -> Vec<Island> {
-    let mut queue: VecDeque<(Island, Rng)> = islands.into_iter().zip(rngs).collect();
-    let mut finished = Vec::new();
-    while let Some((mut isl, mut rng)) = queue.pop_front() {
+    let mut pairs: Vec<Option<(Island, Rng)>> =
+        islands.into_iter().zip(rngs).map(Some).collect();
+    let (queue_ids, finished_ids): (Vec<usize>, Vec<usize>) = match order {
+        Some((q, f)) => (q, f),
+        None => ((0..pairs.len()).collect(), Vec::new()),
+    };
+    let claim = |pairs: &mut Vec<Option<(Island, Rng)>>, id: usize| {
+        pairs
+            .get_mut(id)
+            .and_then(Option::take)
+            .unwrap_or_else(|| panic!("--resume: bad steady schedule entry for island {id}"))
+    };
+    let mut queue: VecDeque<(Island, Rng)> =
+        queue_ids.iter().map(|&id| claim(&mut pairs, id)).collect();
+    let mut finished: Vec<(Island, Rng)> =
+        finished_ids.iter().map(|&id| claim(&mut pairs, id)).collect();
+    let mut generation = ckpt.as_ref().map_or(0, |c| c.start_generation);
+    loop {
+        if cancel_requested(shared.cfg) {
+            break;
+        }
+        let Some((mut isl, mut rng)) = queue.pop_front() else { break };
         run_quantum(&mut isl, &mut rng, eval, shared);
         if isl.done(shared.cfg) {
             shared.done_flags[isl.id].store(true, Ordering::SeqCst);
-            finished.push(isl);
+            finished.push((isl, rng));
         } else {
             queue.push_back((isl, rng));
         }
+        generation += 1;
+        if let Some(ck) = ckpt.as_mut() {
+            let snap = build_snapshot(generation, parent_rng, &queue, &finished, shared);
+            commit_generation(ck.ledger, &snap, shared.sink, ck.save_cache);
+            if ck.halt_after.map_or(false, |h| ck.ledger.committed() >= h) {
+                break;
+            }
+        }
     }
-    finished
+    // Halt/cancel leaves unfinished islands in the queue; hand them back
+    // too so the report covers every island.
+    finished.extend(queue);
+    finished.into_iter().map(|(isl, _)| isl).collect()
+}
+
+/// Capture the serial scheduler's full state as a [`RunSnapshot`].
+fn build_snapshot(
+    generation: u64,
+    parent_rng: [u64; 4],
+    queue: &VecDeque<(Island, Rng)>,
+    finished: &[(Island, Rng)],
+    shared: &Shared<'_>,
+) -> RunSnapshot {
+    let n = queue.len() + finished.len();
+    let mut islands = Vec::with_capacity(n);
+    let mut rngs = vec![[0u64; 4]; n];
+    for (isl, rng) in queue.iter().chain(finished.iter()) {
+        rngs[isl.id] = rng.state();
+        islands.push(island_state(isl));
+    }
+    islands.sort_by_key(|st| st.id);
+    RunSnapshot {
+        mode: SchedulingMode::SteadyState,
+        generation,
+        mig_rng: parent_rng,
+        islands,
+        steady: Some(checkpoint::SteadyState {
+            queue: queue.iter().map(|(isl, _)| isl.id).collect(),
+            finished: finished.iter().map(|(isl, _)| isl.id).collect(),
+            rngs,
+            scoreboard: shared
+                .scoreboard
+                .iter()
+                .map(|s| s.load(Ordering::SeqCst))
+                .collect(),
+            mailboxes: shared.mailboxes.iter().map(MigrantMailbox::snapshot).collect(),
+        }),
+    }
 }
 
 /// The work-queue pool: `workers` threads pull islands, run one quantum,

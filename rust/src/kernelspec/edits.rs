@@ -48,6 +48,12 @@ impl Direction {
         Direction::Scheduling,
         Direction::MmaIssue,
     ];
+
+    /// Inverse of the `Display`/`Debug` name — the key format run
+    /// checkpoints use for per-direction maps.
+    pub fn from_name(name: &str) -> Option<Direction> {
+        Direction::ALL.iter().copied().find(|d| d.to_string() == name)
+    }
 }
 
 impl std::fmt::Display for Direction {

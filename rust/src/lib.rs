@@ -68,9 +68,30 @@
 //!   sees fleet-wide batches instead of per-island slivers — and each
 //!   island gets back exactly its own scores in submission order
 //!   (`benches/dispatch_plane.rs` gates the chunk-widening and wall-clock
-//!   wins over a skewed fleet).  Worker-side caches inherit the
-//!   coordinator's `--eval-cache-max-entries` bound through the v2
-//!   handshake.
+//!   wins over a skewed fleet; how long an underfilled dispatch lingers
+//!   for stragglers adapts to the observed dispatch RTT p50 — eager when
+//!   the fleet is keeping up, wider when saturated).  Worker-side caches
+//!   inherit the coordinator's `--eval-cache-max-entries` bound through
+//!   the v2 handshake; every v2 handshake is authoritative for that cap
+//!   (present re-applies, absent clears), so a worker that outlives its
+//!   coordinator always adopts the current coordinator's bound.
+//! * **Run durability** ([`supervisor::checkpoint`], [`supervisor::serve`])
+//!   — the search-as-a-service tier.  `--checkpoint-dir <dir>` attaches a
+//!   crash-safe run ledger: after every generation (barrier epoch, or
+//!   steady-state quantum on the serial scheduler) the full search state —
+//!   per-island archives, operator/supervisor residue, PRNG cursors,
+//!   adaptive intervals, steady scheduler order and mailboxes — is
+//!   committed as an atomically-renamed JSON snapshot keyed by the same
+//!   `suite_tag ^ MachineSpec::fingerprint()` as the eval cache, with the
+//!   cache snapshot alongside.  `avo evolve --resume <dir>` restores the
+//!   saved search config and state and continues byte-identically to an
+//!   uninterrupted run (pinned by `rust/tests/checkpoint_resume.rs`;
+//!   `benches/checkpoint_resume.rs` gates commit latency).  On top,
+//!   `avo serve` runs a minimal job queue over the remote tier's framing:
+//!   `avo job` submits named runs (executed through the archipelago, one
+//!   at a time), polls status, cancels cooperatively at generation
+//!   boundaries, and fetches finished archives; per-job live metrics ride
+//!   the telemetry hub.
 //! * **Evaluation subsystem** ([`eval`]) — the batched [`eval::EvalBackend`]
 //!   seam every scoring-function call goes through: [`eval::SimBackend`]
 //!   (the simulator, with worker fan-out for batches),

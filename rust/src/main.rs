@@ -12,6 +12,11 @@
 //!   journal-merge  merge JSONL event journals into one stable-ordered
 //!                stream (per-island `seq` lanes), so multi-worker steady
 //!                runs are diffable
+//!   serve        host a run job queue: accept submit/status/cancel of
+//!                named evolve runs over the same length-prefixed JSON
+//!                framing the eval workers speak (see avo::supervisor::serve)
+//!   job          one-shot client for a running `avo serve` (submit,
+//!                status, cancel, archive, shutdown)
 //!   transfer     adapt an evolved lineage to another workload (§4.3
 //!                generalized: gqa:<kv>, decode:<batch>, mha)
 //!   compare      AVO vs single-turn vs fixed-pipeline at equal budget
@@ -33,6 +38,11 @@
 //!   avo evolve --journal runs/mha/journal.jsonl --metrics-addr 127.0.0.1:7655
 //!   avo monitor 127.0.0.1:7655                         # watch it live
 //!   avo journal-merge runs/a/journal.jsonl runs/b/journal.jsonl
+//!   avo evolve --checkpoint-dir runs/mha/ckpt            # crash-safe ledger
+//!   avo evolve --resume runs/mha/ckpt                    # continue it
+//!   avo serve --listen 127.0.0.1:7700                    # run job queue
+//!   avo job 127.0.0.1:7700 submit nightly --config runs/mha.cfg
+//!   avo job 127.0.0.1:7700 status nightly
 //!   avo evolve --config runs/mha.cfg
 //!   avo transfer --lineage runs/mha/lineage.json --workload gqa:4
 //!   avo transfer --lineage runs/mha/lineage.json --workload decode:32
@@ -52,8 +62,8 @@ type CliError = Box<dyn std::error::Error>;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: avo <evolve|eval-worker|monitor|journal-merge|transfer|compare|show|profile> \
-         [flags]\n\
+        "usage: avo <evolve|eval-worker|monitor|journal-merge|serve|job|transfer|compare|show|\
+         profile> [flags]\n\
          \n\
          evolve   --workload {} (default mha)\n\
          \u{20}         --seed N --commits N --steps N --operator avo|single_turn|pes\n\
@@ -73,6 +83,13 @@ fn usage() -> ! {
          \u{20}         --remote-workers N  (self-spawn N eval-worker processes)\n\
          \u{20}         --connect HOST:PORT[,HOST:PORT...]  (attach external workers)\n\
          \u{20}         --adaptive-migration --adaptive-stall-epochs K\n\
+         \u{20}         --checkpoint-dir DIR  (durable run ledger: commit the\n\
+         \u{20}          full search state after every generation, atomically)\n\
+         \u{20}         --resume DIR  (continue an interrupted checkpointed run\n\
+         \u{20}          byte-identically; the snapshot's saved search config\n\
+         \u{20}          wins, so no flags need repeating)\n\
+         \u{20}         --halt-after-checkpoints N  (stop after N more ledger\n\
+         \u{20}          commits; the kill-and-resume test's SIGKILL stand-in)\n\
          \u{20}         --warm-start DIR  (reuse a prior run's eval cache)\n\
          \u{20}         --eval-cache-max-entries N  --speculative-repair\n\
          \u{20}         --lookahead K  (batch K candidate edits per direction)\n\
@@ -93,7 +110,14 @@ fn usage() -> ! {
          \u{20}         --once --eval-workers N --fail-after N --stall-after N\n\
          \u{20}         --remote-secret TOKEN  (or env AVO_REMOTE_SECRET)\n\
          monitor  ADDR [--once] [--json] [--interval-ms N] [--retry-ms N]\n\
-         journal-merge FILE [FILE...] [--out FILE]  (stable-ordered merge)\n\
+         journal-merge FILE [FILE...] [--out FILE] [--strict]  (stable-ordered\n\
+         \u{20}         merge; torn trailing lines are dropped with a\n\
+         \u{20}         journal_torn_tail warning, nonzero exit under --strict)\n\
+         serve    [--listen ADDR]  (run job queue; default 127.0.0.1:0,\n\
+         \u{20}         announced as AVO_SERVE_LISTENING <addr>)\n\
+         job      ADDR submit NAME --config FILE [--metrics]\n\
+         \u{20}         | status NAME | cancel NAME\n\
+         \u{20}         | archive NAME [--out FILE] | shutdown\n\
          transfer --lineage FILE --workload SPEC (or --kv-heads 4|8)\n\
          \u{20}         --seed N --out DIR\n\
          compare  --budget N --seed N\n\
@@ -256,6 +280,35 @@ fn main() -> Result<(), CliError> {
             if let Some(ms) = flags.parse_strict("--remote-reattach-cooldown-ms")? {
                 cfg.topology.remote.reattach_cooldown_ms = ms;
             }
+            if let Some(dir) = flags.get("--checkpoint-dir") {
+                cfg.checkpoint_dir = Some(PathBuf::from(dir));
+            }
+            if let Some(dir) = flags.get("--resume") {
+                if flags.has("--checkpoint-dir") {
+                    return Err(
+                        "--resume DIR already names the checkpoint dir; drop --checkpoint-dir"
+                            .into(),
+                    );
+                }
+                // The overlay runs after every other flag so the
+                // snapshot's saved search config wins — any mismatched
+                // search flag would diverge from (or be rejected against)
+                // the snapshot anyway.  Output paths, telemetry, and
+                // worker counts stay CLI-controlled.
+                let dir = PathBuf::from(dir);
+                avo::supervisor::checkpoint::overlay_config(&dir, &mut cfg)
+                    .map_err(|e| format!("--resume: {e}"))?;
+                cfg.checkpoint_dir = Some(dir);
+                cfg.resume = true;
+            }
+            if let Some(n) = flags.parse_strict("--halt-after-checkpoints")? {
+                if cfg.checkpoint_dir.is_none() {
+                    return Err(
+                        "--halt-after-checkpoints requires --checkpoint-dir or --resume".into()
+                    );
+                }
+                cfg.halt_after_checkpoints = Some(n);
+            }
             let out_dir = flags.get("--out").map(PathBuf::from);
             if let Some(dir) = &out_dir {
                 std::fs::create_dir_all(dir)?;
@@ -375,6 +428,7 @@ fn main() -> Result<(), CliError> {
             // Positional args are journal paths; --out redirects the
             // merged stream from stdout to a file.
             let out = flags.get("--out").map(PathBuf::from);
+            let strict = flags.has("--strict");
             let mut paths = Vec::new();
             let mut skip = false;
             for a in &flags.0 {
@@ -386,6 +440,9 @@ fn main() -> Result<(), CliError> {
                     skip = true;
                     continue;
                 }
+                if a == "--strict" {
+                    continue;
+                }
                 if a.starts_with("--") {
                     return Err(format!("journal-merge: unknown flag {a}").into());
                 }
@@ -394,7 +451,12 @@ fn main() -> Result<(), CliError> {
             if paths.is_empty() {
                 usage();
             }
-            let merged = avo::telemetry::merge_journals(&paths)?;
+            let (merged, torn) = avo::telemetry::merge_journals_counting(&paths)?;
+            if torn > 0 {
+                // A torn tail is normal after a crash mid-append; surface
+                // it instead of silently shortening the stream.
+                eprintln!("journal_torn_tail: {torn}");
+            }
             match &out {
                 Some(path) => {
                     if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
@@ -417,6 +479,92 @@ fn main() -> Result<(), CliError> {
                         println!("{line}");
                     }
                 }
+            }
+            if strict && torn > 0 {
+                return Err(
+                    format!("journal-merge: dropped {torn} torn line(s) (--strict)").into()
+                );
+            }
+        }
+        "serve" => {
+            // The run job queue: one frame per connection, verbs
+            // submit/status/cancel/archive/shutdown (see
+            // avo::supervisor::serve for the wire table).  Blocks until a
+            // shutdown frame arrives.
+            let addr = flags.get("--listen").unwrap_or("127.0.0.1:0");
+            let bound = avo::telemetry::AddrCell::default();
+            avo::supervisor::serve::serve(addr, &bound)?;
+        }
+        "job" => {
+            // One-shot client for a running `avo serve`.
+            use avo::json::Json;
+            let addr = flags
+                .0
+                .first()
+                .filter(|a| !a.starts_with("--"))
+                .cloned()
+                .unwrap_or_else(|| usage());
+            let verb = flags.0.get(1).cloned().unwrap_or_else(|| usage());
+            let name = flags
+                .0
+                .get(2)
+                .filter(|a| !a.starts_with("--"))
+                .cloned();
+            let named = |verb: &str, name: Option<String>| -> Result<Json, CliError> {
+                let name = name.ok_or_else(|| format!("job {verb} requires a job name"))?;
+                Ok(Json::obj([
+                    ("type", Json::Str(verb.to_string())),
+                    ("name", Json::Str(name)),
+                ]))
+            };
+            let msg = match verb.as_str() {
+                "submit" => {
+                    let name =
+                        name.ok_or_else(|| "job submit requires a job name".to_string())?;
+                    let path = flags
+                        .get("--config")
+                        .ok_or_else(|| "job submit requires --config FILE".to_string())?;
+                    let config = std::fs::read_to_string(path)
+                        .map_err(|e| format!("{path}: {e}"))?;
+                    let mut fields = vec![
+                        ("type", Json::Str("submit".to_string())),
+                        ("name", Json::Str(name)),
+                        ("config", Json::Str(config)),
+                    ];
+                    if flags.has("--metrics") {
+                        fields.push(("metrics", Json::Bool(true)));
+                    }
+                    Json::obj(fields)
+                }
+                "status" | "cancel" | "archive" => named(&verb, name)?,
+                "shutdown" => Json::obj([("type", Json::Str("shutdown".to_string()))]),
+                _ => usage(),
+            };
+            let reply = avo::supervisor::serve::request(&addr, &msg)?;
+            if reply.get("type").and_then(Json::as_str) == Some("error") {
+                let message = reply
+                    .get("message")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown server error");
+                return Err(format!("job {verb}: {message}").into());
+            }
+            // `archive --out FILE` saves the archive body (a loadable
+            // lineage file); everything else prints the reply frame.
+            if verb == "archive" {
+                if let (Some(path), Some(archive)) =
+                    (flags.get("--out"), reply.get("archive"))
+                {
+                    let path = PathBuf::from(path);
+                    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+                        std::fs::create_dir_all(dir)?;
+                    }
+                    std::fs::write(&path, archive.pretty())?;
+                    println!("wrote archive to {}", path.display());
+                } else {
+                    println!("{}", reply.pretty());
+                }
+            } else {
+                println!("{}", reply.pretty());
             }
         }
         "monitor" => {

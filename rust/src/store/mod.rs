@@ -171,7 +171,10 @@ impl CommitStore {
         Ok(())
     }
 
-    fn to_json(&self) -> Json {
+    /// JSON encoding of the archive — the same shape [`Self::save`]
+    /// writes; public so run checkpoints can embed an archive inside a
+    /// larger snapshot without a detour through the filesystem.
+    pub fn to_json(&self) -> Json {
         Json::obj([(
             "commits",
             Json::arr(self.order.iter().map(|id| {
@@ -195,7 +198,10 @@ impl CommitStore {
         )])
     }
 
-    fn from_json(v: &Json) -> Result<Self, StoreError> {
+    /// Inverse of [`Self::to_json`] (no verification — callers that accept
+    /// external bytes should [`Self::verify`] the result, as
+    /// [`Self::load`] does).
+    pub fn from_json(v: &Json) -> Result<Self, StoreError> {
         let corrupt = |m: String| StoreError::Corrupt(m);
         let arr = v
             .get("commits")

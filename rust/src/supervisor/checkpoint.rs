@@ -1,0 +1,739 @@
+//! The durable run ledger behind `avo evolve --checkpoint-dir <dir>` and
+//! `--resume <dir>`: crash-safe checkpoint/resume for the paper's 7-day
+//! unattended runs.
+//!
+//! After every completed *generation* — a barrier epoch (migration
+//! applied, all worker threads joined), or one island quantum under
+//! steady-state serial scheduling — the archipelago commits a JSON
+//! snapshot of the full search state to `<dir>/checkpoint.json`:
+//!
+//! * every island's archive ([`Lineage`]), variation-operator residue
+//!   ([`crate::agent::VariationOperator::checkpoint`]), supervisor
+//!   windows, step count, and adaptive-migration interval state;
+//! * the migration PRNG cursor (and, under steady-state scheduling, the
+//!   per-island migration streams, mailbox contents, scoreboard, and
+//!   scheduler queue order);
+//! * the search-relevant configuration subset, re-encoded as the same
+//!   `key = value` text [`RunConfig::parse`] reads, so `avo evolve
+//!   --resume <dir>` needs no flags repeated.
+//!
+//! The snapshot is written to `checkpoint.json.tmp` and atomically
+//! renamed, so a kill at any instant leaves either the previous complete
+//! snapshot or the new complete snapshot — never a torn file.  Files are
+//! keyed by the same `suite_tag ^ MachineSpec::fingerprint()` the
+//! persistent eval cache uses ([`crate::eval::persist`]), so a snapshot
+//! from a different machine model, suite, or functional seed is rejected
+//! at load instead of silently resuming an incomparable run.  The eval
+//! cache is persisted alongside (`eval_cache.json`), which makes a
+//! checkpoint directory double as a `--warm-start` directory.
+//!
+//! Resume rebuilds operators through the normal
+//! [`crate::coordinator::driver::build_operator`] path (same per-island
+//! seed derivation), overlays each snapshot, and re-enters the scheduling
+//! loop at the saved generation — so a resumed run's archive is
+//! byte-identical to the same-seed uninterrupted run (pinned by
+//! `rust/tests/checkpoint_resume.rs`).
+
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::config::{RunConfig, SchedulingMode};
+use crate::evolution::Lineage;
+use crate::islands::migration::Migrant;
+use crate::json::{parse, FromJson, Json, ToJson};
+use crate::kernelspec::KernelSpec;
+use crate::score::Score;
+use crate::store::CommitId;
+
+/// File name of the run snapshot inside a checkpoint directory.
+pub const CHECKPOINT_FILE: &str = "checkpoint.json";
+
+/// Current snapshot schema version; older/newer files are rejected.
+pub const CHECKPOINT_VERSION: u64 = 1;
+
+fn hex(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+fn unhex(j: Option<&Json>, what: &str) -> Result<u64, String> {
+    let s = j
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("checkpoint: missing {what}"))?;
+    u64::from_str_radix(s, 16).map_err(|_| format!("checkpoint: bad hex in {what}: '{s}'"))
+}
+
+fn count(j: Option<&Json>, what: &str) -> Result<usize, String> {
+    j.and_then(Json::as_u64)
+        .map(|v| v as usize)
+        .ok_or_else(|| format!("checkpoint: missing {what}"))
+}
+
+fn rng_json(s: &[u64; 4]) -> Json {
+    Json::arr(s.iter().copied().map(hex))
+}
+
+fn rng_from(j: Option<&Json>, what: &str) -> Result<[u64; 4], String> {
+    let arr = j
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("checkpoint: missing {what}"))?;
+    if arr.len() != 4 {
+        return Err(format!("checkpoint: {what} must have 4 words"));
+    }
+    let mut s = [0u64; 4];
+    for (i, w) in arr.iter().enumerate() {
+        s[i] = unhex(Some(w), what)?;
+    }
+    if s.iter().all(|&w| w == 0) {
+        return Err(format!("checkpoint: all-zero PRNG state in {what}"));
+    }
+    Ok(s)
+}
+
+/// One island's serialized run state inside a [`RunSnapshot`].
+pub struct IslandState {
+    pub id: usize,
+    pub lineage: Lineage,
+    /// Operator residue from [`crate::agent::VariationOperator::checkpoint`]
+    /// (`Json::Null` for operators that carry none).
+    pub operator: Json,
+    /// Supervisor windows from [`crate::supervisor::Supervisor::snapshot`].
+    pub supervisor: Json,
+    pub steps: usize,
+    /// Hex-encoded on disk: the N = 1 sentinel is `usize::MAX`, which a
+    /// JSON number (f64) cannot carry exactly.
+    pub migrate_every: usize,
+    pub stall_epochs: usize,
+    /// Stored as `f64::to_bits` hex so resume is bit-exact.
+    pub best_at_barrier: f64,
+    pub interventions: Vec<String>,
+}
+
+impl IslandState {
+    fn to_json(&self) -> Json {
+        Json::obj([
+            ("id", self.id.to_json()),
+            ("archive", self.lineage.to_json()),
+            ("operator", self.operator.clone()),
+            ("supervisor", self.supervisor.clone()),
+            ("steps", self.steps.to_json()),
+            ("migrate_every", hex(self.migrate_every as u64)),
+            ("stall_epochs", self.stall_epochs.to_json()),
+            ("best_at_barrier", hex(self.best_at_barrier.to_bits())),
+            (
+                "interventions",
+                Json::arr(self.interventions.iter().map(|s| Json::Str(s.clone()))),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self, String> {
+        let lineage = Lineage::from_json(
+            v.get("archive")
+                .ok_or_else(|| "checkpoint: island missing archive".to_string())?,
+        )
+        .map_err(|e| format!("checkpoint: island archive: {e}"))?;
+        let interventions = v
+            .get("interventions")
+            .and_then(Json::as_arr)
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(Json::as_str)
+                    .map(str::to_string)
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(IslandState {
+            id: count(v.get("id"), "island id")?,
+            lineage,
+            operator: v.get("operator").cloned().unwrap_or(Json::Null),
+            supervisor: v.get("supervisor").cloned().unwrap_or(Json::Null),
+            steps: count(v.get("steps"), "island steps")?,
+            migrate_every: unhex(v.get("migrate_every"), "island migrate_every")? as usize,
+            stall_epochs: count(v.get("stall_epochs"), "island stall_epochs")?,
+            best_at_barrier: f64::from_bits(unhex(
+                v.get("best_at_barrier"),
+                "island best_at_barrier",
+            )?),
+            interventions,
+        })
+    }
+}
+
+fn migrant_json(m: &Migrant, message: &str) -> Json {
+    Json::obj([
+        ("from_island", m.from_island.to_json()),
+        ("commit", hex(m.commit.0)),
+        ("spec", m.spec.to_json()),
+        ("score", m.score.to_json()),
+        ("message", Json::Str(message.to_string())),
+    ])
+}
+
+fn migrant_from_json(v: &Json) -> Result<(Migrant, String), String> {
+    let spec = KernelSpec::from_json(
+        v.get("spec").ok_or_else(|| "checkpoint: migrant missing spec".to_string())?,
+    )
+    .map_err(|e| format!("checkpoint: migrant spec: {e}"))?;
+    let score = Score::from_json(
+        v.get("score").ok_or_else(|| "checkpoint: migrant missing score".to_string())?,
+    )
+    .map_err(|e| format!("checkpoint: migrant score: {e}"))?;
+    let message = v
+        .get("message")
+        .and_then(Json::as_str)
+        .unwrap_or("")
+        .to_string();
+    Ok((
+        Migrant {
+            from_island: count(v.get("from_island"), "migrant from_island")?,
+            commit: CommitId(unhex(v.get("commit"), "migrant commit")?),
+            spec,
+            score,
+        },
+        message,
+    ))
+}
+
+/// Steady-state serial scheduler residue: everything `islands::steady`
+/// owns beyond the islands themselves.  All vectors are indexed by island
+/// id except `queue`/`finished`, which record scheduling order.
+pub struct SteadyState {
+    /// Island ids still in the FIFO work queue, front first.
+    pub queue: Vec<usize>,
+    /// Island ids already finished, in completion order.
+    pub finished: Vec<usize>,
+    /// Per-island migration PRNG cursors.
+    pub rngs: Vec<[u64; 4]>,
+    /// `f64::to_bits` of each island's best geomean (the lock-free
+    /// scoreboard BroadcastBest reads).
+    pub scoreboard: Vec<u64>,
+    /// Buffered mailbox contents in insertion order (insertion order — not
+    /// drain order — decides which entry a post-resume overflow evicts).
+    pub mailboxes: Vec<Vec<(Migrant, String)>>,
+}
+
+impl SteadyState {
+    fn to_json(&self) -> Json {
+        let ids = |v: &[usize]| Json::arr(v.iter().map(|i| i.to_json()));
+        Json::obj([
+            ("queue", ids(&self.queue)),
+            ("finished", ids(&self.finished)),
+            ("rngs", Json::arr(self.rngs.iter().map(rng_json))),
+            ("scoreboard", Json::arr(self.scoreboard.iter().copied().map(hex))),
+            (
+                "mailboxes",
+                Json::arr(self.mailboxes.iter().map(|inbox| {
+                    Json::arr(inbox.iter().map(|(m, msg)| migrant_json(m, msg)))
+                })),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self, String> {
+        let ids = |j: Option<&Json>, what: &str| -> Result<Vec<usize>, String> {
+            j.and_then(Json::as_arr)
+                .ok_or_else(|| format!("checkpoint: missing steady {what}"))?
+                .iter()
+                .map(|e| count(Some(e), what))
+                .collect()
+        };
+        let rngs = v
+            .get("rngs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "checkpoint: missing steady rngs".to_string())?
+            .iter()
+            .map(|e| rng_from(Some(e), "steady rng"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let scoreboard = v
+            .get("scoreboard")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "checkpoint: missing steady scoreboard".to_string())?
+            .iter()
+            .map(|e| unhex(Some(e), "steady scoreboard"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let mailboxes = v
+            .get("mailboxes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "checkpoint: missing steady mailboxes".to_string())?
+            .iter()
+            .map(|inbox| {
+                inbox
+                    .as_arr()
+                    .ok_or_else(|| "checkpoint: steady mailbox must be an array".to_string())?
+                    .iter()
+                    .map(migrant_from_json)
+                    .collect::<Result<Vec<_>, _>>()
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(SteadyState {
+            queue: ids(v.get("queue"), "queue")?,
+            finished: ids(v.get("finished"), "finished")?,
+            rngs,
+            scoreboard,
+            mailboxes,
+        })
+    }
+}
+
+/// A full run snapshot: one committed generation's search state.
+pub struct RunSnapshot {
+    pub mode: SchedulingMode,
+    /// Completed generations (barrier epochs, or steady quanta).
+    pub generation: u64,
+    /// The archipelago's migration PRNG cursor.
+    pub mig_rng: [u64; 4],
+    /// Per-island state, sorted by id.
+    pub islands: Vec<IslandState>,
+    /// Steady-state scheduler residue (None in barrier mode).
+    pub steady: Option<SteadyState>,
+}
+
+impl RunSnapshot {
+    fn to_json(&self, fingerprint: u64, config_text: &str) -> Json {
+        let mut fields = vec![
+            ("version", CHECKPOINT_VERSION.to_json()),
+            ("fingerprint", hex(fingerprint)),
+            ("mode", Json::Str(self.mode.to_string())),
+            ("generation", self.generation.to_json()),
+            ("config", Json::Str(config_text.to_string())),
+            ("mig_rng", rng_json(&self.mig_rng)),
+            ("islands", Json::arr(self.islands.iter().map(IslandState::to_json))),
+        ];
+        if let Some(steady) = &self.steady {
+            fields.push(("steady", steady.to_json()));
+        }
+        Json::obj(fields)
+    }
+
+    fn from_json(v: &Json, expect_fingerprint: u64) -> Result<Self, String> {
+        validate_header(v, Some(expect_fingerprint))?;
+        let mode: SchedulingMode = v
+            .get("mode")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "checkpoint: missing mode".to_string())?
+            .parse()
+            .map_err(|e| format!("checkpoint: {e}"))?;
+        let generation = v
+            .get("generation")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| "checkpoint: missing generation".to_string())?;
+        let mut islands = v
+            .get("islands")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "checkpoint: missing islands".to_string())?
+            .iter()
+            .map(IslandState::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        if islands.is_empty() {
+            return Err("checkpoint: no islands".to_string());
+        }
+        islands.sort_by_key(|st| st.id);
+        for (i, st) in islands.iter().enumerate() {
+            if st.id != i {
+                return Err(format!(
+                    "checkpoint: island ids must be 0..{} (found {})",
+                    islands.len(),
+                    st.id
+                ));
+            }
+        }
+        let steady = match v.get("steady") {
+            Some(s) => Some(SteadyState::from_json(s)?),
+            None => None,
+        };
+        if steady.is_some() != matches!(mode, SchedulingMode::SteadyState) {
+            return Err("checkpoint: steady residue does not match mode".to_string());
+        }
+        Ok(RunSnapshot {
+            mode,
+            generation,
+            mig_rng: rng_from(v.get("mig_rng"), "mig_rng")?,
+            islands,
+            steady,
+        })
+    }
+}
+
+/// Version + (optional) fingerprint check shared by full loads and
+/// config-only overlays.
+fn validate_header(v: &Json, expect_fingerprint: Option<u64>) -> Result<(), String> {
+    let version = v
+        .get("version")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| "checkpoint: missing version".to_string())?;
+    if version != CHECKPOINT_VERSION {
+        return Err(format!("checkpoint: unsupported version {version}"));
+    }
+    if let Some(expect) = expect_fingerprint {
+        let tag = unhex(v.get("fingerprint"), "fingerprint")?;
+        if tag != expect {
+            return Err(format!(
+                "checkpoint fingerprint mismatch: file {tag:016x} vs run {expect:016x} \
+                 (different machine model, benchmark suite, or functional seed)"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// The search-relevant configuration subset, re-encoded as the
+/// `key = value` text [`RunConfig::parse`] reads.  Covers every key that
+/// changes archive bytes and is settable from a config file or the CLI;
+/// output paths, telemetry, worker counts, and the remote topology stay
+/// caller-controlled on resume (none of them affect archive bytes).
+pub fn config_text(cfg: &RunConfig) -> String {
+    let mut out = String::new();
+    let mut kv = |k: &str, v: String| {
+        out.push_str(k);
+        out.push_str(" = ");
+        out.push_str(&v);
+        out.push('\n');
+    };
+    if cfg.operator_mix.is_empty() {
+        kv("operator", cfg.operator.to_string());
+    } else {
+        let mix: Vec<String> = cfg.operator_mix.iter().map(|o| o.to_string()).collect();
+        kv("operators", mix.join(","));
+    }
+    kv("seed", cfg.seed.to_string());
+    kv("target_commits", cfg.target_commits.to_string());
+    kv("max_steps", cfg.max_steps.to_string());
+    kv("workload", cfg.workload.clone());
+    kv("islands", cfg.topology.islands.to_string());
+    kv("migration", cfg.topology.migration.to_string());
+    kv("migrate_every", cfg.topology.migrate_every.to_string());
+    kv("adaptive_migration", cfg.topology.adaptive_migration.to_string());
+    kv("adaptive_stall_epochs", cfg.topology.adaptive_stall_epochs.to_string());
+    kv("scheduling", cfg.topology.scheduling.to_string());
+    kv("mailbox_capacity", cfg.topology.mailbox_capacity.to_string());
+    kv("inner_budget", cfg.agent.inner_budget.to_string());
+    kv("repair_budget", cfg.agent.repair_budget.to_string());
+    kv("speculative_repair", cfg.agent.speculative_repair.to_string());
+    kv("lookahead", cfg.agent.lookahead.to_string());
+    kv("crossover_prob", cfg.agent.crossover_prob.to_string());
+    kv("stall_window", cfg.supervisor.stall_window.to_string());
+    kv("cycle_threshold", cfg.supervisor.cycle_threshold.to_string());
+    out
+}
+
+/// Overlay a checkpoint's saved search configuration onto `cfg` (the CLI
+/// calls this for `--resume <dir>` before the run starts, so the resumed
+/// run needs no flags repeated).  Only the [`config_text`] subset is
+/// overlaid; paths, telemetry, and worker counts keep their CLI values.
+/// Does not validate the fingerprint — the run's state load does, once
+/// the (overlaid) workload can be instantiated.
+pub fn overlay_config(dir: &Path, cfg: &mut RunConfig) -> Result<(), String> {
+    let v = read_snapshot_json(dir)?;
+    validate_header(&v, None)?;
+    let text = v
+        .get("config")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "checkpoint: missing config".to_string())?;
+    let saved = RunConfig::parse(text)
+        .map_err(|e| format!("checkpoint: saved config rejected: {e}"))?;
+    cfg.operator = saved.operator;
+    cfg.operator_mix = saved.operator_mix;
+    cfg.seed = saved.seed;
+    cfg.target_commits = saved.target_commits;
+    cfg.max_steps = saved.max_steps;
+    cfg.workload = saved.workload;
+    cfg.agent.inner_budget = saved.agent.inner_budget;
+    cfg.agent.repair_budget = saved.agent.repair_budget;
+    cfg.agent.speculative_repair = saved.agent.speculative_repair;
+    cfg.agent.lookahead = saved.agent.lookahead;
+    cfg.agent.crossover_prob = saved.agent.crossover_prob;
+    cfg.supervisor.stall_window = saved.supervisor.stall_window;
+    cfg.supervisor.cycle_threshold = saved.supervisor.cycle_threshold;
+    cfg.topology.islands = saved.topology.islands;
+    cfg.topology.migration = saved.topology.migration;
+    cfg.topology.migrate_every = saved.topology.migrate_every;
+    cfg.topology.adaptive_migration = saved.topology.adaptive_migration;
+    cfg.topology.adaptive_stall_epochs = saved.topology.adaptive_stall_epochs;
+    cfg.topology.scheduling = saved.topology.scheduling;
+    cfg.topology.mailbox_capacity = saved.topology.mailbox_capacity;
+    Ok(())
+}
+
+fn read_snapshot_json(dir: &Path) -> Result<Json, String> {
+    let path = dir.join(CHECKPOINT_FILE);
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Load and fully validate the snapshot in `dir` (version, fingerprint,
+/// archive integrity via [`Lineage::from_json`]'s verification).
+pub fn load(dir: &Path, fingerprint: u64) -> Result<RunSnapshot, String> {
+    RunSnapshot::from_json(&read_snapshot_json(dir)?, fingerprint)
+}
+
+/// The run ledger: owns the checkpoint directory and commits snapshots
+/// atomically (write `checkpoint.json.tmp`, then rename).
+pub struct RunLedger {
+    dir: PathBuf,
+    fingerprint: u64,
+    config_text: String,
+    committed: usize,
+}
+
+impl RunLedger {
+    /// Open (creating the directory as needed) a ledger keyed by
+    /// `fingerprint`.  An existing `checkpoint.json` is left untouched
+    /// until the first [`RunLedger::commit`] replaces it atomically.
+    pub fn create(dir: &Path, cfg: &RunConfig, fingerprint: u64) -> Result<Self, String> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("checkpoint dir {}: {e}", dir.display()))?;
+        Ok(RunLedger {
+            dir: dir.to_path_buf(),
+            fingerprint,
+            config_text: config_text(cfg),
+            committed: 0,
+        })
+    }
+
+    /// Snapshots committed by *this* ledger (i.e. this process — resume
+    /// resets the count, which is what `--halt-after-checkpoints` wants:
+    /// "kill after n more generations").
+    pub fn committed(&self) -> usize {
+        self.committed
+    }
+
+    /// Atomically replace `checkpoint.json` with `snap`.  Returns the
+    /// snapshot size in bytes (reported by `run_checkpointed`).
+    pub fn commit(&mut self, snap: &RunSnapshot) -> Result<u64, String> {
+        let body = snap.to_json(self.fingerprint, &self.config_text).pretty();
+        let tmp = self.dir.join(format!("{CHECKPOINT_FILE}.tmp"));
+        let path = self.dir.join(CHECKPOINT_FILE);
+        std::fs::write(&tmp, &body).map_err(|e| format!("{}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path).map_err(|e| format!("{}: {e}", path.display()))?;
+        self.committed += 1;
+        Ok(body.len() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::OperatorKind;
+
+    fn tempdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("avo_ckpt_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn seeded_lineage() -> Lineage {
+        let eval = crate::score::Evaluator::new(crate::score::mha_suite());
+        let mut l = Lineage::new();
+        let spec = KernelSpec::naive();
+        let score = eval.evaluate(&spec);
+        l.seed(spec, score, "seed x0");
+        l
+    }
+
+    fn sample_snapshot() -> RunSnapshot {
+        RunSnapshot {
+            mode: SchedulingMode::Barrier,
+            generation: 3,
+            mig_rng: [1, 2, 3, 4],
+            islands: vec![IslandState {
+                id: 0,
+                lineage: seeded_lineage(),
+                operator: Json::Null,
+                supervisor: Json::obj([]),
+                steps: 7,
+                migrate_every: usize::MAX,
+                stall_epochs: 1,
+                best_at_barrier: 123.456789,
+                interventions: vec!["note".to_string()],
+            }],
+            steady: None,
+        }
+    }
+
+    #[test]
+    fn snapshot_round_trips_bit_exactly() {
+        let dir = tempdir("roundtrip");
+        let cfg = RunConfig::default();
+        let mut ledger = RunLedger::create(&dir, &cfg, 0xABCD).unwrap();
+        let snap = sample_snapshot();
+        let bytes = ledger.commit(&snap).unwrap();
+        assert!(bytes > 0);
+        assert_eq!(ledger.committed(), 1);
+        let loaded = load(&dir, 0xABCD).unwrap();
+        assert_eq!(loaded.generation, 3);
+        assert_eq!(loaded.mig_rng, [1, 2, 3, 4]);
+        assert_eq!(loaded.islands.len(), 1);
+        let isl = &loaded.islands[0];
+        assert_eq!(isl.steps, 7);
+        // usize::MAX sentinel and the f64 survive exactly (hex encoding).
+        assert_eq!(isl.migrate_every, usize::MAX);
+        assert_eq!(isl.best_at_barrier.to_bits(), 123.456789f64.to_bits());
+        assert_eq!(isl.interventions, vec!["note".to_string()]);
+        assert_eq!(isl.lineage.len(), 1);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_rejected() {
+        let dir = tempdir("fprint");
+        let mut ledger = RunLedger::create(&dir, &RunConfig::default(), 1).unwrap();
+        ledger.commit(&sample_snapshot()).unwrap();
+        let err = load(&dir, 2).unwrap_err();
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn corrupt_and_missing_snapshots_are_rejected() {
+        let dir = tempdir("corrupt");
+        assert!(load(&dir, 1).is_err(), "missing file must fail");
+        std::fs::write(dir.join(CHECKPOINT_FILE), "{torn").unwrap();
+        assert!(load(&dir, 1).is_err(), "corrupt file must fail");
+        std::fs::write(
+            dir.join(CHECKPOINT_FILE),
+            "{\"version\": 99, \"fingerprint\": \"0000000000000001\"}",
+        )
+        .unwrap();
+        let err = load(&dir, 1).unwrap_err();
+        assert!(err.contains("unsupported version"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn commit_is_atomic_rename() {
+        let dir = tempdir("atomic");
+        let mut ledger = RunLedger::create(&dir, &RunConfig::default(), 5).unwrap();
+        ledger.commit(&sample_snapshot()).unwrap();
+        // No .tmp residue after a successful commit.
+        assert!(!dir.join(format!("{CHECKPOINT_FILE}.tmp")).exists());
+        assert!(dir.join(CHECKPOINT_FILE).exists());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn config_text_round_trips_through_parse() {
+        let mut cfg = RunConfig::default();
+        cfg.seed = 77;
+        cfg.target_commits = 9;
+        cfg.workload = "gqa:4".to_string();
+        cfg.operator_mix = vec![OperatorKind::Avo, OperatorKind::SingleTurn];
+        cfg.topology.islands = 3;
+        cfg.topology.scheduling = SchedulingMode::SteadyState;
+        cfg.agent.lookahead = 3;
+        cfg.agent.crossover_prob = 0.25;
+        let parsed = RunConfig::parse(&config_text(&cfg)).unwrap();
+        assert_eq!(parsed.seed, 77);
+        assert_eq!(parsed.target_commits, 9);
+        assert_eq!(parsed.workload, "gqa:4");
+        assert_eq!(parsed.operator_mix, cfg.operator_mix);
+        assert_eq!(parsed.topology.islands, 3);
+        assert_eq!(parsed.topology.scheduling, SchedulingMode::SteadyState);
+        assert_eq!(parsed.agent.lookahead, 3);
+        assert_eq!(parsed.agent.crossover_prob, 0.25);
+    }
+
+    #[test]
+    fn overlay_config_restores_search_keys_and_keeps_paths() {
+        let dir = tempdir("overlay");
+        let mut saved = RunConfig::default();
+        saved.seed = 31;
+        saved.topology.islands = 2;
+        saved.topology.migrate_every = 3;
+        let mut ledger = RunLedger::create(&dir, &saved, 9).unwrap();
+        ledger.commit(&sample_snapshot()).unwrap();
+
+        let mut cfg = RunConfig::default();
+        cfg.lineage_path = Some(PathBuf::from("out/lineage.json"));
+        overlay_config(&dir, &mut cfg).unwrap();
+        assert_eq!(cfg.seed, 31);
+        assert_eq!(cfg.topology.islands, 2);
+        assert_eq!(cfg.topology.migrate_every, 3);
+        // CLI-controlled output path is untouched by the overlay.
+        assert_eq!(cfg.lineage_path.as_deref(), Some(Path::new("out/lineage.json")));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn steady_residue_round_trips() {
+        let eval = crate::score::Evaluator::new(crate::score::mha_suite());
+        let spec = KernelSpec::naive();
+        let score = eval.evaluate(&spec);
+        let migrant = Migrant {
+            from_island: 1,
+            commit: CommitId(0xFEED),
+            spec: spec.clone(),
+            score: score.clone(),
+        };
+        let snap = RunSnapshot {
+            mode: SchedulingMode::SteadyState,
+            generation: 2,
+            mig_rng: [9, 9, 9, 9],
+            islands: vec![
+                IslandState {
+                    id: 0,
+                    lineage: seeded_lineage(),
+                    operator: Json::Null,
+                    supervisor: Json::obj([]),
+                    steps: 1,
+                    migrate_every: 4,
+                    stall_epochs: 0,
+                    best_at_barrier: 0.0,
+                    interventions: Vec::new(),
+                },
+                IslandState {
+                    id: 1,
+                    lineage: seeded_lineage(),
+                    operator: Json::Null,
+                    supervisor: Json::obj([]),
+                    steps: 2,
+                    migrate_every: 4,
+                    stall_epochs: 0,
+                    best_at_barrier: 0.0,
+                    interventions: Vec::new(),
+                },
+            ],
+            steady: Some(SteadyState {
+                queue: vec![1],
+                finished: vec![0],
+                rngs: vec![[1, 0, 0, 2], [3, 0, 0, 4]],
+                scoreboard: vec![10, 20],
+                mailboxes: vec![Vec::new(), vec![(migrant, "donor msg".to_string())]],
+            }),
+        };
+        let dir = tempdir("steady");
+        let mut ledger = RunLedger::create(&dir, &RunConfig::default(), 7).unwrap();
+        ledger.commit(&snap).unwrap();
+        let loaded = load(&dir, 7).unwrap();
+        let steady = loaded.steady.expect("steady residue");
+        assert_eq!(steady.queue, vec![1]);
+        assert_eq!(steady.finished, vec![0]);
+        assert_eq!(steady.rngs, vec![[1, 0, 0, 2], [3, 0, 0, 4]]);
+        assert_eq!(steady.scoreboard, vec![10, 20]);
+        assert_eq!(steady.mailboxes[0].len(), 0);
+        assert_eq!(steady.mailboxes[1].len(), 1);
+        let (m, msg) = &steady.mailboxes[1][0];
+        assert_eq!(m.commit, CommitId(0xFEED));
+        assert_eq!(m.from_island, 1);
+        assert_eq!(msg, "donor msg");
+        assert_eq!(m.score.per_config, score.per_config);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn barrier_snapshot_with_steady_residue_is_rejected() {
+        let dir = tempdir("modecheck");
+        let mut snap = sample_snapshot();
+        snap.steady = Some(SteadyState {
+            queue: vec![0],
+            finished: Vec::new(),
+            rngs: vec![[1, 0, 0, 0]],
+            scoreboard: vec![0],
+            mailboxes: vec![Vec::new()],
+        });
+        let mut ledger = RunLedger::create(&dir, &RunConfig::default(), 3).unwrap();
+        ledger.commit(&snap).unwrap();
+        let err = load(&dir, 3).unwrap_err();
+        assert!(err.contains("does not match mode"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,13 +1,33 @@
-//! Self-supervision (§3.3): detects the two failure modes of long-running
-//! autonomous optimization — *stalls* (the agent exhausts its current line
-//! of exploration) and *unproductive cycles* (repeated edits that fail to
-//! improve) — and intervenes by reviewing the trajectory and steering the
-//! search toward fresh candidate directions.
+//! Run supervision: per-step self-supervision plus the durable run
+//! services built on top of it.
+//!
+//! * [`Supervisor`] — self-supervision (§3.3): detects the two failure
+//!   modes of long-running autonomous optimization — *stalls* (the agent
+//!   exhausts its current line of exploration) and *unproductive cycles*
+//!   (repeated edits that fail to improve) — and intervenes by reviewing
+//!   the trajectory and steering the search toward fresh candidate
+//!   directions.
+//! * [`checkpoint`] — the crash-safe run ledger behind `avo evolve
+//!   --checkpoint-dir <dir>` / `--resume <dir>`: each completed generation
+//!   commits an atomically-renamed JSON snapshot of the full search state
+//!   (archives, PRNG cursors, island/migration/mailbox state), keyed by
+//!   the same `suite_tag ^ MachineSpec::fingerprint()` the persistent eval
+//!   cache uses, so a resumed run continues byte-identically to an
+//!   uninterrupted one.
+//! * [`serve`] — the minimal search-as-a-service job queue behind `avo
+//!   serve` / `avo job`: submit/status/cancel of named runs over the same
+//!   length-prefixed JSON framing as [`crate::eval::remote`], executed
+//!   one at a time through the archipelago with live metrics folded into a
+//!   per-run [`crate::telemetry::MetricsHub`].
+
+pub mod checkpoint;
+pub mod serve;
 
 use std::collections::HashMap;
 
 use crate::agent::StepOutcome;
 use crate::evolution::Lineage;
+use crate::json::{Json, ToJson};
 use crate::kernelspec::Direction;
 
 /// An intervention: the supervisor's steering message to the agent.
@@ -117,6 +137,48 @@ impl Supervisor {
                 boost
             ),
         })
+    }
+
+    /// Serialize the supervision windows for the run checkpoint ledger
+    /// (`config` is rebuilt from the run configuration on resume).  Map
+    /// keys are direction `Display` names; [`Json`] objects sort them, so
+    /// snapshot bytes are deterministic.
+    pub fn snapshot(&self) -> Json {
+        let dir_map = |m: &HashMap<Direction, usize>| {
+            Json::obj_from(m.iter().map(|(d, n)| (d.to_string(), n.to_json())))
+        };
+        Json::obj([
+            ("steps_since_commit", self.steps_since_commit.to_json()),
+            ("barren_streak", dir_map(&self.barren_streak)),
+            ("explored", dir_map(&self.explored)),
+            ("interventions", self.interventions.to_json()),
+        ])
+    }
+
+    /// Overlay a [`Self::snapshot`] onto a freshly built supervisor.
+    pub fn restore(&mut self, snap: &Json) -> Result<(), String> {
+        let count = |j: Option<&Json>, what: &str| -> Result<usize, String> {
+            j.and_then(Json::as_u64)
+                .map(|v| v as usize)
+                .ok_or_else(|| format!("checkpoint: bad supervisor {what}"))
+        };
+        let dir_map = |j: Option<&Json>, what: &str| -> Result<HashMap<Direction, usize>, String> {
+            let mut out = HashMap::new();
+            if let Some(obj) = j.and_then(Json::as_obj) {
+                for (name, n) in obj {
+                    let d = Direction::from_name(name).ok_or_else(|| {
+                        format!("checkpoint: unknown direction '{name}' in supervisor {what}")
+                    })?;
+                    out.insert(d, count(Some(n), what)?);
+                }
+            }
+            Ok(out)
+        };
+        self.steps_since_commit = count(snap.get("steps_since_commit"), "steps_since_commit")?;
+        self.barren_streak = dir_map(snap.get("barren_streak"), "barren_streak")?;
+        self.explored = dir_map(snap.get("explored"), "explored")?;
+        self.interventions = count(snap.get("interventions"), "interventions")?;
+        Ok(())
     }
 }
 

@@ -1,0 +1,531 @@
+//! Search-as-a-service: the minimal job queue behind `avo serve` and
+//! `avo job` — submit, watch, cancel, and fetch named evolution runs over
+//! the wire, executed one at a time through the archipelago.
+//!
+//! # Wire format
+//!
+//! The same zero-dependency length-prefixed JSON framing as
+//! [`crate::eval::remote`] (`u32` big-endian payload length, then a UTF-8
+//! JSON object with a `"type"` field).  One request frame per connection;
+//! the server replies with one frame and closes.
+//!
+//! | direction | message | fields |
+//! |-----------|---------|--------|
+//! | c → s | `submit`    | `name`, `config` ([`RunConfig::parse`] text), `metrics`? (bool: bind a live [`crate::telemetry::MetricsHub`] endpoint on port 0) |
+//! | s → c | `submitted` | `name`, `position` (queued jobs ahead of it) |
+//! | c → s | `status`    | `name` |
+//! | s → c | `status`    | `name`, `state` (`queued` \| `running` \| `done` \| `failed` \| `cancelled`), `commits`?, `best_geomean`?, `steps`?, `metrics_addr`?, `error`? |
+//! | c → s | `cancel`    | `name` |
+//! | s → c | `cancelled` | `name`, `state` (resulting state — idempotent on settled jobs) |
+//! | c → s | `archive`   | `name` |
+//! | s → c | `archive`   | `name`, `archive` ([`crate::evolution::Lineage`] JSON — loadable by `--warm-start` tooling) |
+//! | c → s | `shutdown`  | — (server replies `ok`, finishes the running job, exits) |
+//! | s → c | `error`     | `message` |
+//!
+//! Jobs execute FIFO on a single executor thread — the queue is a
+//! sequencing primitive, not a scheduler; parallelism belongs to the
+//! archipelago inside each run.  A `submit` is validated by
+//! [`RunConfig::parse`] before it is accepted, so a typo fails at submit
+//! time, not minutes later.  `cancel` sets the run's cooperative
+//! [`RunConfig::cancel`] flag, which the archipelago checks at generation
+//! boundaries — a cancelled run stops cleanly with its partial archive
+//! still fetchable.  With `metrics: true` the job's live counters stream
+//! from a per-run metrics endpoint whose bound address `status` reports
+//! while the job runs.
+//!
+//! Submitting a config with `checkpoint_dir` set makes the hosted run
+//! durable too: a killed server can be restarted and the run resubmitted
+//! with the same directory to continue from its last committed generation.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::config::RunConfig;
+use crate::coordinator::driver::EvolutionDriver;
+use crate::eval::remote::{read_frame, write_frame};
+use crate::json::{Json, ToJson};
+use crate::telemetry::AddrCell;
+
+/// Stdout announcement prefix for the bound address (port 0 in the bind
+/// address picks a free port) — mirrors `AVO_METRICS_LISTENING`.
+pub const SERVE_LINE_PREFIX: &str = "AVO_SERVE_LISTENING ";
+
+/// Lifecycle of a submitted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl std::fmt::Display for JobState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        })
+    }
+}
+
+struct Job {
+    name: String,
+    config: String,
+    metrics_wanted: bool,
+    state: JobState,
+    error: String,
+    /// `{commits, best_geomean, steps}` once the run settles.
+    summary: Option<Json>,
+    /// The run's archive ([`crate::evolution::Lineage`] JSON) once settled.
+    archive: Option<Json>,
+    cancel: Arc<AtomicBool>,
+    /// Bound address of the job's live metrics endpoint (if requested).
+    metrics: AddrCell,
+}
+
+#[derive(Default)]
+struct Queue {
+    jobs: Vec<Job>,
+    stop: bool,
+}
+
+type Shared = Arc<(Mutex<Queue>, Condvar)>;
+
+/// Run the job-queue server on `addr` until a `shutdown` frame arrives.
+/// The bound address is announced on stdout (`AVO_SERVE_LISTENING <addr>`)
+/// and written into `bound` for in-process callers (tests).
+pub fn serve(addr: &str, bound: &AddrCell) -> Result<(), String> {
+    let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+    let local = listener
+        .local_addr()
+        .map_err(|e| format!("local_addr: {e}"))?
+        .to_string();
+    println!("{SERVE_LINE_PREFIX}{local}");
+    bound.set(local);
+
+    let shared: Shared = Arc::new((Mutex::new(Queue::default()), Condvar::new()));
+    let executor = {
+        let shared = Arc::clone(&shared);
+        std::thread::spawn(move || executor_loop(&shared))
+    };
+
+    for stream in listener.incoming() {
+        let mut stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        stream.set_read_timeout(Some(Duration::from_secs(60))).ok();
+        let request = match read_frame(&mut stream) {
+            Ok(r) => r,
+            Err(_) => continue, // torn or empty connection: drop it
+        };
+        let ty = request.get("type").and_then(Json::as_str).unwrap_or("");
+        let reply = handle(&shared, ty, &request);
+        write_frame(&mut stream, &reply).ok();
+        if ty == "shutdown" {
+            break;
+        }
+    }
+
+    // Let the executor finish the in-flight job, then join it.
+    {
+        let (queue, wake) = &*shared;
+        if let Ok(mut q) = queue.lock() {
+            q.stop = true;
+        }
+        wake.notify_all();
+    }
+    executor.join().map_err(|_| "executor thread panicked".to_string())
+}
+
+fn error_frame(message: String) -> Json {
+    Json::obj([
+        ("type", Json::Str("error".to_string())),
+        ("message", Json::Str(message)),
+    ])
+}
+
+fn handle(shared: &Shared, ty: &str, request: &Json) -> Json {
+    let name = request.get("name").and_then(Json::as_str).unwrap_or("");
+    match ty {
+        "submit" => submit(shared, name, request),
+        "status" => with_job(shared, name, |job| {
+            let mut fields = vec![
+                ("type", Json::Str("status".to_string())),
+                ("name", Json::Str(job.name.clone())),
+                ("state", Json::Str(job.state.to_string())),
+            ];
+            if let Some(Json::Obj(summary)) = &job.summary {
+                for (k, v) in summary {
+                    match k.as_str() {
+                        "commits" => fields.push(("commits", v.clone())),
+                        "best_geomean" => fields.push(("best_geomean", v.clone())),
+                        "steps" => fields.push(("steps", v.clone())),
+                        _ => {}
+                    }
+                }
+            }
+            if job.state == JobState::Running {
+                if let Some(addr) = job.metrics.get() {
+                    fields.push(("metrics_addr", Json::Str(addr)));
+                }
+            }
+            if !job.error.is_empty() {
+                fields.push(("error", Json::Str(job.error.clone())));
+            }
+            Json::obj(fields)
+        }),
+        "cancel" => with_job_mut(shared, name, |job| {
+            job.cancel.store(true, Ordering::SeqCst);
+            if job.state == JobState::Queued {
+                job.state = JobState::Cancelled;
+            }
+            Json::obj([
+                ("type", Json::Str("cancelled".to_string())),
+                ("name", Json::Str(job.name.clone())),
+                ("state", Json::Str(job.state.to_string())),
+            ])
+        }),
+        "archive" => with_job(shared, name, |job| match &job.archive {
+            Some(archive) => Json::obj([
+                ("type", Json::Str("archive".to_string())),
+                ("name", Json::Str(job.name.clone())),
+                ("archive", archive.clone()),
+            ]),
+            None => error_frame(format!("job '{}' has no archive yet ({})", job.name, job.state)),
+        }),
+        "shutdown" => Json::obj([("type", Json::Str("ok".to_string()))]),
+        other => error_frame(format!("unknown request type '{other}'")),
+    }
+}
+
+fn submit(shared: &Shared, name: &str, request: &Json) -> Json {
+    if name.is_empty() {
+        return error_frame("submit requires a non-empty name".to_string());
+    }
+    let config = match request.get("config").and_then(Json::as_str) {
+        Some(c) => c.to_string(),
+        None => return error_frame("submit requires a config".to_string()),
+    };
+    // Fail a typo at submit time, not minutes into the queue.
+    if let Err(e) = RunConfig::parse(&config) {
+        return error_frame(format!("config rejected: {e}"));
+    }
+    let metrics_wanted = matches!(request.get("metrics"), Some(Json::Bool(true)));
+    let (queue, wake) = &**shared;
+    let mut q = match queue.lock() {
+        Ok(q) => q,
+        Err(p) => p.into_inner(),
+    };
+    if q.stop {
+        return error_frame("server is shutting down".to_string());
+    }
+    if q.jobs.iter().any(|j| j.name == name) {
+        return error_frame(format!("job '{name}' already exists"));
+    }
+    let position = q.jobs.iter().filter(|j| j.state == JobState::Queued).count();
+    q.jobs.push(Job {
+        name: name.to_string(),
+        config,
+        metrics_wanted,
+        state: JobState::Queued,
+        error: String::new(),
+        summary: None,
+        archive: None,
+        cancel: Arc::new(AtomicBool::new(false)),
+        metrics: AddrCell::default(),
+    });
+    drop(q);
+    wake.notify_all();
+    Json::obj([
+        ("type", Json::Str("submitted".to_string())),
+        ("name", Json::Str(name.to_string())),
+        ("position", position.to_json()),
+    ])
+}
+
+fn with_job(shared: &Shared, name: &str, f: impl FnOnce(&Job) -> Json) -> Json {
+    let q = match shared.0.lock() {
+        Ok(q) => q,
+        Err(p) => p.into_inner(),
+    };
+    match q.jobs.iter().find(|j| j.name == name) {
+        Some(job) => f(job),
+        None => error_frame(format!("unknown job '{name}'")),
+    }
+}
+
+fn with_job_mut(shared: &Shared, name: &str, f: impl FnOnce(&mut Job) -> Json) -> Json {
+    let mut q = match shared.0.lock() {
+        Ok(q) => q,
+        Err(p) => p.into_inner(),
+    };
+    match q.jobs.iter_mut().find(|j| j.name == name) {
+        Some(job) => f(job),
+        None => error_frame(format!("unknown job '{name}'")),
+    }
+}
+
+/// FIFO executor: claim the oldest queued job, run it to completion,
+/// settle its state, repeat.  Exits once `stop` is set and nothing is
+/// queued.
+fn executor_loop(shared: &Shared) {
+    let (queue, wake) = &**shared;
+    loop {
+        // Claim the next job (or wait / exit).
+        let claimed = {
+            let mut q = match queue.lock() {
+                Ok(q) => q,
+                Err(p) => p.into_inner(),
+            };
+            loop {
+                if let Some(job) = q.jobs.iter_mut().find(|j| j.state == JobState::Queued) {
+                    job.state = JobState::Running;
+                    break Some((
+                        job.name.clone(),
+                        job.config.clone(),
+                        job.metrics_wanted,
+                        Arc::clone(&job.cancel),
+                        job.metrics.clone(),
+                    ));
+                }
+                if q.stop {
+                    break None;
+                }
+                q = match wake.wait(q) {
+                    Ok(q) => q,
+                    Err(p) => p.into_inner(),
+                };
+            }
+        };
+        let Some((name, config, metrics_wanted, cancel, metrics)) = claimed else {
+            return;
+        };
+
+        let outcome = run_job(&config, &cancel, metrics_wanted, metrics);
+
+        let mut q = match queue.lock() {
+            Ok(q) => q,
+            Err(p) => p.into_inner(),
+        };
+        if let Some(job) = q.jobs.iter_mut().find(|j| j.name == name) {
+            match outcome {
+                Ok((summary, archive)) => {
+                    job.state = if cancel.load(Ordering::SeqCst) {
+                        JobState::Cancelled
+                    } else {
+                        JobState::Done
+                    };
+                    job.summary = Some(summary);
+                    job.archive = Some(archive);
+                }
+                Err(e) => {
+                    job.state = JobState::Failed;
+                    job.error = e;
+                }
+            }
+        }
+    }
+}
+
+/// Execute one job through the normal driver → archipelago path.  Returns
+/// `(summary, archive)` on success.
+fn run_job(
+    config: &str,
+    cancel: &Arc<AtomicBool>,
+    metrics_wanted: bool,
+    metrics: AddrCell,
+) -> Result<(Json, Json), String> {
+    let mut cfg = RunConfig::parse(config)?;
+    cfg.cancel = Some(Arc::clone(cancel));
+    if metrics_wanted {
+        cfg.telemetry.metrics_addr = Some("127.0.0.1:0".to_string());
+        cfg.telemetry.bound_addr = metrics;
+    }
+    let driver = EvolutionDriver::try_new(cfg)?;
+    // A panicking run (impossible workload budget, poisoned eval stack)
+    // fails the job, not the whole server.
+    let report = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| driver.run()))
+        .map_err(|p| {
+            p.downcast_ref::<String>()
+                .cloned()
+                .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "run panicked".to_string())
+        })?;
+    let summary = Json::obj([
+        ("commits", report.lineage.len().saturating_sub(1).to_json()),
+        ("best_geomean", report.lineage.best_geomean().to_json()),
+        ("steps", report.steps.to_json()),
+    ]);
+    Ok((summary, report.lineage.to_json()))
+}
+
+/// One request/reply round-trip against a running server — the client
+/// side of `avo job`.
+pub fn request(addr: &str, msg: &Json) -> Result<Json, String> {
+    let mut stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(120)))
+        .map_err(|e| format!("socket: {e}"))?;
+    write_frame(&mut stream, msg).map_err(|e| format!("send: {e}"))?;
+    read_frame(&mut stream).map_err(|e| format!("recv: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn start_server() -> String {
+        let cell = AddrCell::default();
+        let server_cell = cell.clone();
+        std::thread::spawn(move || serve("127.0.0.1:0", &server_cell).unwrap());
+        for _ in 0..200 {
+            if let Some(addr) = cell.get() {
+                return addr;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        panic!("server did not bind");
+    }
+
+    fn frame(fields: Vec<(&'static str, Json)>) -> Json {
+        Json::obj(fields)
+    }
+
+    const TINY_CONFIG: &str = "operator = single_turn\nseed = 5\ntarget_commits = 1\nmax_steps = 6\nworkload = mha\n";
+
+    #[test]
+    fn submit_status_archive_shutdown_round_trip() {
+        let addr = start_server();
+        let reply = request(
+            &addr,
+            &frame(vec![
+                ("type", Json::Str("submit".to_string())),
+                ("name", Json::Str("tiny".to_string())),
+                ("config", Json::Str(TINY_CONFIG.to_string())),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(reply.get("type").and_then(Json::as_str), Some("submitted"));
+        assert_eq!(reply.get("position").and_then(Json::as_u64), Some(0));
+
+        // Poll status until the job settles.
+        let mut state = String::new();
+        for _ in 0..600 {
+            let s = request(
+                &addr,
+                &frame(vec![
+                    ("type", Json::Str("status".to_string())),
+                    ("name", Json::Str("tiny".to_string())),
+                ]),
+            )
+            .unwrap();
+            state = s.get("state").and_then(Json::as_str).unwrap_or("").to_string();
+            if state == "done" || state == "failed" {
+                assert_eq!(s.get("type").and_then(Json::as_str), Some("status"));
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(state, "done");
+
+        let archive = request(
+            &addr,
+            &frame(vec![
+                ("type", Json::Str("archive".to_string())),
+                ("name", Json::Str("tiny".to_string())),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(archive.get("type").and_then(Json::as_str), Some("archive"));
+        let lineage =
+            crate::evolution::Lineage::from_json(archive.get("archive").unwrap()).unwrap();
+        assert!(lineage.len() >= 1, "archive must at least hold the seed");
+
+        let ok = request(&addr, &frame(vec![("type", Json::Str("shutdown".to_string()))]))
+            .unwrap();
+        assert_eq!(ok.get("type").and_then(Json::as_str), Some("ok"));
+    }
+
+    #[test]
+    fn bad_submit_and_unknown_job_are_rejected() {
+        let addr = start_server();
+        let reply = request(
+            &addr,
+            &frame(vec![
+                ("type", Json::Str("submit".to_string())),
+                ("name", Json::Str("broken".to_string())),
+                ("config", Json::Str("no_such_key = 1\n".to_string())),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(reply.get("type").and_then(Json::as_str), Some("error"));
+
+        let reply = request(
+            &addr,
+            &frame(vec![
+                ("type", Json::Str("status".to_string())),
+                ("name", Json::Str("ghost".to_string())),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(reply.get("type").and_then(Json::as_str), Some("error"));
+
+        request(&addr, &frame(vec![("type", Json::Str("shutdown".to_string()))])).unwrap();
+    }
+
+    #[test]
+    fn cancel_before_execution_marks_job_cancelled() {
+        // Two submits back to back: the second is still queued while the
+        // first runs, so cancelling it must settle it without executing.
+        let addr = start_server();
+        for name in ["first", "second"] {
+            let reply = request(
+                &addr,
+                &frame(vec![
+                    ("type", Json::Str("submit".to_string())),
+                    ("name", Json::Str(name.to_string())),
+                    ("config", Json::Str(TINY_CONFIG.to_string())),
+                ]),
+            )
+            .unwrap();
+            assert_eq!(reply.get("type").and_then(Json::as_str), Some("submitted"));
+        }
+        let reply = request(
+            &addr,
+            &frame(vec![
+                ("type", Json::Str("cancel".to_string())),
+                ("name", Json::Str("second".to_string())),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(reply.get("type").and_then(Json::as_str), Some("cancelled"));
+        // Either it was still queued (now cancelled) or had already started
+        // (cancelled at the next generation boundary) — both settle as
+        // cancelled or done-with-cancel-flag; assert it never fails.
+        let mut state = String::new();
+        for _ in 0..600 {
+            let s = request(
+                &addr,
+                &frame(vec![
+                    ("type", Json::Str("status".to_string())),
+                    ("name", Json::Str("second".to_string())),
+                ]),
+            )
+            .unwrap();
+            state = s.get("state").and_then(Json::as_str).unwrap_or("").to_string();
+            if state == "cancelled" || state == "done" || state == "failed" {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert_ne!(state, "failed");
+        request(&addr, &frame(vec![("type", Json::Str("shutdown".to_string()))])).unwrap();
+    }
+}

@@ -41,6 +41,8 @@
 //! | `migrant_dropped`  | `island`, `from`                         | —               | steady scheduler |
 //! | `mailbox_drained`  | `island`, `received`, `accepted`         | —               | steady scheduler |
 //! | `intervention`     | `island`, `note`                         | —               | supervisor site |
+//! | `run_checkpointed` | `generation`, `bytes`                    | —               | run ledger |
+//! | `run_resumed`      | `generation`, `islands`                  | —               | run ledger |
 //! | `run_finished`     | `commits`, `best_geomean`, `steps`       | —               | archipelago |
 //!
 //! Cache keys and commit ids print as 16-digit lowercase hex strings (they
@@ -105,6 +107,11 @@ pub enum Event {
     MigrantDropped { island: usize, from: usize },
     MailboxDrained { island: usize, received: usize, accepted: usize },
     Intervention { island: usize, note: String },
+    /// The run ledger committed generation `generation` (`bytes` snapshot
+    /// bytes atomically renamed into place).
+    RunCheckpointed { generation: u64, bytes: u64 },
+    /// The run restarted from a committed checkpoint at `generation`.
+    RunResumed { generation: u64, islands: usize },
     RunFinished { commits: usize, best_geomean: f64, steps: usize },
 }
 
@@ -141,6 +148,8 @@ impl Event {
             Event::MigrantDropped { .. } => "migrant_dropped",
             Event::MailboxDrained { .. } => "mailbox_drained",
             Event::Intervention { .. } => "intervention",
+            Event::RunCheckpointed { .. } => "run_checkpointed",
+            Event::RunResumed { .. } => "run_resumed",
             Event::RunFinished { .. } => "run_finished",
         }
     }
@@ -228,6 +237,14 @@ impl Event {
             Event::Intervention { island, note } => {
                 fields.push(("island", num(*island as f64)));
                 fields.push(("note", Json::Str(note.clone())));
+            }
+            Event::RunCheckpointed { generation, bytes } => {
+                fields.push(("generation", num(*generation as f64)));
+                fields.push(("bytes", num(*bytes as f64)));
+            }
+            Event::RunResumed { generation, islands } => {
+                fields.push(("generation", num(*generation as f64)));
+                fields.push(("islands", num(*islands as f64)));
             }
             Event::RunFinished { commits, best_geomean, steps } => {
                 fields.push(("commits", num(*commits as f64)));
@@ -360,15 +377,28 @@ impl TelemetrySink for JournalSink {
 /// `--trace-deterministic` steady-state runs therefore merge to
 /// byte-identical streams even when their raw journals interleaved
 /// islands differently.  Non-JSON lines (a torn final write from a
-/// crashed run) are dropped.
+/// crashed run) are dropped — [`merge_journal_lines_counting`] reports
+/// how many, so `avo journal-merge` can warn (or fail, under `--strict`)
+/// instead of losing them silently.
 pub fn merge_journal_lines(inputs: &[Vec<String>]) -> Vec<String> {
+    merge_journal_lines_counting(inputs).0
+}
+
+/// Like [`merge_journal_lines`], additionally returning the number of
+/// non-empty lines dropped because they failed to parse as JSON (torn
+/// tails from killed runs, truncated copies).
+pub fn merge_journal_lines_counting(inputs: &[Vec<String>]) -> (Vec<String>, usize) {
     let mut keyed: Vec<(usize, u64, usize, usize, String)> = Vec::new();
+    let mut torn = 0usize;
     for (input_idx, lines) in inputs.iter().enumerate() {
         for (line_idx, line) in lines.iter().enumerate() {
             if line.trim().is_empty() {
                 continue;
             }
-            let Ok(json) = crate::json::parse(line) else { continue };
+            let Ok(json) = crate::json::parse(line) else {
+                torn += 1;
+                continue;
+            };
             let lane = journal_lane(&json);
             let seq = json
                 .get("seq")
@@ -378,18 +408,24 @@ pub fn merge_journal_lines(inputs: &[Vec<String>]) -> Vec<String> {
         }
     }
     keyed.sort_by(|a, b| (a.0, a.1, a.2, a.3).cmp(&(b.0, b.1, b.2, b.3)));
-    keyed.into_iter().map(|(_, _, _, _, line)| line).collect()
+    (keyed.into_iter().map(|(_, _, _, _, line)| line).collect(), torn)
 }
 
 /// File-level wrapper over [`merge_journal_lines`].
 pub fn merge_journals(paths: &[PathBuf]) -> Result<Vec<String>, String> {
+    Ok(merge_journals_counting(paths)?.0)
+}
+
+/// File-level wrapper over [`merge_journal_lines_counting`]: returns the
+/// merged stream plus the dropped-line count.
+pub fn merge_journals_counting(paths: &[PathBuf]) -> Result<(Vec<String>, usize), String> {
     let mut inputs = Vec::with_capacity(paths.len());
     for p in paths {
         let body = std::fs::read_to_string(p)
             .map_err(|e| format!("journal {}: {e}", p.display()))?;
         inputs.push(body.lines().map(str::to_string).collect());
     }
-    Ok(merge_journal_lines(&inputs))
+    Ok(merge_journal_lines_counting(&inputs))
 }
 
 /// Fan-out to several sinks (journal + live metrics hub).
@@ -671,6 +707,8 @@ mod tests {
             Event::MigrantDropped { island: 2, from: 0 },
             Event::MailboxDrained { island: 2, received: 2, accepted: 1 },
             Event::Intervention { island: 0, note: "stall".into() },
+            Event::RunCheckpointed { generation: 4, bytes: 20_480 },
+            Event::RunResumed { generation: 4, islands: 3 },
             Event::RunFinished { commits: 12, best_geomean: 800.5, steps: 240 },
         ]
     }

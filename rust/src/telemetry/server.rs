@@ -52,6 +52,9 @@ struct HubState {
     coalesced_batches: u64,
     coalesced_specs: u64,
     dispatch_queue_depth_max: u64,
+    checkpoints: u64,
+    checkpoint_generation: u64,
+    resumed_from: Option<u64>,
     done: bool,
 }
 
@@ -205,6 +208,27 @@ impl MetricsHub {
             ),
             ("interventions", Json::Num(state.interventions as f64)),
             ("fallback_specs", Json::Num(state.fallback_specs as f64)),
+            (
+                "ledger",
+                if state.checkpoints > 0 || state.resumed_from.is_some() {
+                    Json::obj([
+                        ("checkpoints", Json::Num(state.checkpoints as f64)),
+                        (
+                            "generation",
+                            Json::Num(state.checkpoint_generation as f64),
+                        ),
+                        (
+                            "resumed_from",
+                            match state.resumed_from {
+                                Some(g) => Json::Num(g as f64),
+                                None => Json::Null,
+                            },
+                        ),
+                    ])
+                } else {
+                    Json::Null
+                },
+            ),
         ])
     }
 }
@@ -264,6 +288,13 @@ impl TelemetrySink for MetricsHub {
                 }
             }
             Event::Intervention { .. } => state.interventions += 1,
+            Event::RunCheckpointed { generation, .. } => {
+                state.checkpoints += 1;
+                state.checkpoint_generation = *generation;
+            }
+            Event::RunResumed { generation, .. } => {
+                state.resumed_from = Some(*generation);
+            }
             Event::RunFinished { .. } => state.done = true,
         }
     }

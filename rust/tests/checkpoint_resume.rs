@@ -1,0 +1,208 @@
+//! Kill-and-resume suite for the durable run ledger (`--checkpoint-dir`
+//! / `--resume`).
+//!
+//! The contract under test: a run interrupted between generations and
+//! resumed from its ledger finishes with an archive and trajectory
+//! byte-identical to the same-seed run that was never interrupted.  The
+//! interruption is `halt_after_checkpoints`, which returns right after
+//! the n-th atomic ledger commit — exactly the on-disk state a SIGKILL
+//! between generations would leave (the rename either happened or it
+//! didn't; there is no torn snapshot).  Both checkpointable regimes are
+//! covered: barrier mode with multiple islands, and steady-state on the
+//! serial (`--island-workers 1`) scheduler.  Corrupt, mismatched, and
+//! wrongly-shaped checkpoints must be rejected loudly, never resumed
+//! into a silently different search.
+
+use std::path::PathBuf;
+
+use avo::coordinator::{EvolutionDriver, RunConfig, SchedulingMode};
+use avo::supervisor::checkpoint::{self, CHECKPOINT_FILE};
+
+fn tempdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("avo_resume_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Two barrier islands, one commit per epoch: several generations (and
+/// so several ledger commits) before the run finishes.
+fn barrier_cfg(seed: u64) -> RunConfig {
+    let mut cfg = RunConfig {
+        seed,
+        target_commits: 3,
+        max_steps: 15,
+        workload: "mha".to_string(),
+        ..RunConfig::default()
+    };
+    cfg.topology.islands = 2;
+    cfg.topology.migrate_every = 1;
+    cfg
+}
+
+/// The same search on the steady-state serial scheduler — the one
+/// steady regime whose archives are seed-deterministic, and therefore
+/// the one the ledger accepts.
+fn steady_cfg(seed: u64) -> RunConfig {
+    let mut cfg = barrier_cfg(seed);
+    cfg.topology.scheduling = SchedulingMode::SteadyState;
+    cfg.topology.workers = 1;
+    cfg
+}
+
+/// Interrupt `cfg`'s run after `halt_after` ledger commits, resume it
+/// from the same directory, and assert the finished archive and
+/// trajectory are byte-identical to the uninterrupted same-seed run.
+fn assert_kill_and_resume_is_byte_identical(
+    tag: &str,
+    make_cfg: &dyn Fn(u64) -> RunConfig,
+    halt_after: usize,
+) {
+    let dir = tempdir(tag);
+    let ckpt = dir.join("ckpt");
+
+    // Ground truth: the same seed, never interrupted, no ledger.
+    let mut cold_cfg = make_cfg(23);
+    cold_cfg.lineage_path = Some(dir.join("cold_lineage.json"));
+    let cold = EvolutionDriver::new(cold_cfg).run();
+    let cold_bytes = std::fs::read(dir.join("cold_lineage.json")).unwrap();
+    assert!(!cold_bytes.is_empty());
+
+    // Interrupted: the ledger commits every generation, and the run
+    // returns right after commit `halt_after` — a SIGKILL stand-in.
+    let mut halted_cfg = make_cfg(23);
+    halted_cfg.checkpoint_dir = Some(ckpt.clone());
+    halted_cfg.halt_after_checkpoints = Some(halt_after);
+    halted_cfg.telemetry.journal = Some(dir.join("halted_journal.jsonl"));
+    let halted = EvolutionDriver::new(halted_cfg).run();
+    assert!(
+        halted.lineage.len() < cold.lineage.len(),
+        "{tag}: the halted run was not actually interrupted"
+    );
+    let snap_text = std::fs::read_to_string(ckpt.join(CHECKPOINT_FILE)).unwrap();
+    let snap = avo::json::parse(&snap_text).unwrap();
+    assert_eq!(
+        snap.get("generation").and_then(avo::json::Json::as_u64),
+        Some(halt_after as u64),
+        "{tag}: ledger left the wrong generation behind"
+    );
+    let halted_journal = std::fs::read_to_string(dir.join("halted_journal.jsonl")).unwrap();
+    assert!(
+        halted_journal.contains("\"event\":\"run_checkpointed\""),
+        "{tag}: journal missing run_checkpointed"
+    );
+
+    // The snapshot carries the search config: `--resume <dir>` needs no
+    // flags repeated.  Overlay onto defaults and spot-check the subset.
+    let mut overlaid = RunConfig::default();
+    checkpoint::overlay_config(&ckpt, &mut overlaid).unwrap();
+    assert_eq!(overlaid.seed, 23);
+    assert_eq!(overlaid.target_commits, 3);
+    assert_eq!(overlaid.topology.islands, 2);
+    assert_eq!(overlaid.topology.scheduling, make_cfg(23).topology.scheduling);
+
+    // Resume to completion from the ledger.
+    let mut resumed_cfg = make_cfg(23);
+    resumed_cfg.checkpoint_dir = Some(ckpt.clone());
+    resumed_cfg.resume = true;
+    resumed_cfg.lineage_path = Some(dir.join("resumed_lineage.json"));
+    resumed_cfg.telemetry.journal = Some(dir.join("resumed_journal.jsonl"));
+    let resumed = EvolutionDriver::new(resumed_cfg).run();
+
+    let resumed_bytes = std::fs::read(dir.join("resumed_lineage.json")).unwrap();
+    assert_eq!(
+        cold_bytes, resumed_bytes,
+        "{tag}: killed+resumed archive diverges from the uninterrupted run"
+    );
+    assert_eq!(
+        cold.lineage.trajectory_json(true).pretty(),
+        resumed.lineage.trajectory_json(true).pretty(),
+        "{tag}: killed+resumed trajectory diverges from the uninterrupted run"
+    );
+    // The resumed run warm-starts from the ledger's cache snapshot: the
+    // generations before the kill are never re-simulated.
+    assert!(
+        resumed.metrics.counter("eval_cache_warm_entries") > 0,
+        "{tag}: resume did not warm-start from the checkpoint cache"
+    );
+    let resumed_journal =
+        std::fs::read_to_string(dir.join("resumed_journal.jsonl")).unwrap();
+    assert!(
+        resumed_journal.contains("\"event\":\"run_resumed\""),
+        "{tag}: journal missing run_resumed"
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn barrier_kill_and_resume_is_byte_identical() {
+    assert_kill_and_resume_is_byte_identical("barrier", &barrier_cfg, 1);
+}
+
+#[test]
+fn steady_serial_kill_and_resume_is_byte_identical() {
+    assert_kill_and_resume_is_byte_identical("steady", &steady_cfg, 2);
+}
+
+#[test]
+#[should_panic(expected = "--resume:")]
+fn resume_rejects_corrupt_checkpoint() {
+    let dir = tempdir("corrupt");
+    std::fs::write(dir.join(CHECKPOINT_FILE), "{not json").unwrap();
+    let mut cfg = barrier_cfg(23);
+    cfg.checkpoint_dir = Some(dir);
+    cfg.resume = true;
+    EvolutionDriver::new(cfg).run();
+}
+
+#[test]
+#[should_panic(expected = "fingerprint mismatch")]
+fn resume_rejects_checkpoint_from_different_workload() {
+    let dir = tempdir("fpr");
+    // Leave a real mha checkpoint behind...
+    let mut halted = RunConfig {
+        seed: 29,
+        target_commits: 2,
+        max_steps: 10,
+        workload: "mha".to_string(),
+        ..RunConfig::default()
+    };
+    halted.checkpoint_dir = Some(dir.clone());
+    halted.halt_after_checkpoints = Some(1);
+    EvolutionDriver::new(halted).run();
+    // ...then try to resume a gqa:4 search from it: the fingerprint
+    // (suite ^ machine model) no longer matches and the load must fail.
+    let mut cfg = RunConfig {
+        seed: 29,
+        target_commits: 2,
+        max_steps: 10,
+        workload: "gqa:4".to_string(),
+        ..RunConfig::default()
+    };
+    cfg.checkpoint_dir = Some(dir);
+    cfg.resume = true;
+    EvolutionDriver::new(cfg).run();
+}
+
+#[test]
+#[should_panic(expected = "islands, this run wants")]
+fn resume_rejects_island_count_mismatch() {
+    let dir = tempdir("shape");
+    let mut halted = barrier_cfg(31);
+    halted.checkpoint_dir = Some(dir.clone());
+    halted.halt_after_checkpoints = Some(1);
+    EvolutionDriver::new(halted).run();
+    let mut cfg = barrier_cfg(31);
+    cfg.topology.islands = 3;
+    cfg.checkpoint_dir = Some(dir);
+    cfg.resume = true;
+    EvolutionDriver::new(cfg).run();
+}
+
+#[test]
+#[should_panic(expected = "--checkpoint-dir requires --island-workers 1")]
+fn steady_multi_worker_checkpointing_is_rejected() {
+    let mut cfg = steady_cfg(37);
+    cfg.topology.workers = 4;
+    cfg.checkpoint_dir = Some(tempdir("multiworker"));
+    EvolutionDriver::new(cfg).run();
+}

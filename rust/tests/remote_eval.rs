@@ -16,7 +16,7 @@ use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 
 use avo::coordinator::{EvolutionDriver, RunConfig};
-use avo::eval::remote::{serve, serve_frozen_v1, WorkerOptions};
+use avo::eval::remote::{serve, serve_frozen_v1, RemoteTopology, WorkerOptions};
 use avo::eval::RemoteBackend;
 use avo::kernelspec::KernelSpec;
 use avo::score::Evaluator;
@@ -402,6 +402,68 @@ fn warm_external_fleet_dedups_a_second_run() {
         assert_eq!(local, bytes, "{tag} fleet run diverges from in-process");
     }
     std::fs::remove_dir_all(dir).ok();
+}
+
+/// Every v2 handshake is authoritative for `cache_cap` — absent field
+/// included.  A long-lived worker first serves a coordinator that caps
+/// its cache at one entry; a second coordinator that ships NO cap then
+/// attaches to the same worker and must see the bound cleared, not
+/// inherit the previous coordinator's stale cap.
+#[test]
+fn reattached_worker_adopts_current_cache_cap() {
+    // Long-lived external worker (once = false): its Cached<Sim> stack —
+    // and any cap a handshake applied to it — outlives each coordinator.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let workload = avo::workload::parse("mha").unwrap();
+        let eval = Evaluator::for_workload(&*workload);
+        let opts = WorkerOptions { eval_workers: 2, ..WorkerOptions::default() };
+        serve(listener, &eval, &opts).unwrap();
+    });
+
+    let eval = Evaluator::for_workload(&*avo::workload::parse("mha").unwrap());
+    let spec_a = KernelSpec::naive();
+    let spec_b = avo::baselines::fa4_genome();
+    // Gossip off: a re-sent spec must be served (or not) by the worker's
+    // own cache, never re-warmed from the coordinator's ledger.
+    let attach = |cache_cap: Option<usize>| {
+        let topo = RemoteTopology {
+            connect: vec![addr.clone()],
+            gossip: false,
+            cache_cap,
+            ..RemoteTopology::default()
+        };
+        RemoteBackend::from_topology(eval.clone(), "mha", &topo).unwrap()
+    };
+
+    // Coordinator #1 caps the worker cache at one entry: B evicts A.
+    let capped = attach(Some(1));
+    for spec in [&spec_a, &spec_b] {
+        assert_eq!(capped.evaluate(spec).per_config, eval.evaluate(spec).per_config);
+    }
+    assert_eq!(capped.stats().fleet_misses.load(Ordering::SeqCst), 2);
+    drop(capped);
+
+    // Coordinator #2 ships no cap.  Its handshake must CLEAR the stale
+    // bound: the re-sent A misses once (B evicted it under cap 1), and
+    // with the cache unbounded again both follow-ups are pure hits.  A
+    // worker still pinned at one entry would miss all three.
+    let uncapped = attach(None);
+    for spec in [&spec_a, &spec_b, &spec_a] {
+        assert_eq!(uncapped.evaluate(spec).per_config, eval.evaluate(spec).per_config);
+    }
+    let stats = uncapped.stats();
+    assert_eq!(
+        stats.fleet_misses.load(Ordering::SeqCst),
+        1,
+        "worker did not adopt the new coordinator's (absent) cache_cap"
+    );
+    assert_eq!(
+        stats.dedup_saved.load(Ordering::SeqCst),
+        2,
+        "worker cache still bound by the previous coordinator's stale cap"
+    );
 }
 
 #[test]
